@@ -1,0 +1,46 @@
+//! Profile the KAT (Algorithm 1) vs FlashKAT (Algorithm 2) backward
+//! kernels on the GPU memory-hierarchy simulator, reproducing the paper's
+//! Section 3 diagnosis: Table 2 (FLOPs insensitivity), Figures 2-3
+//! (warp-state statistics), and Table 3 (kernel comparison).
+//!
+//!     cargo run --release --example kernel_profile [batch] [gpu]
+
+use flashkat::gpusim::kernels::RationalDims;
+use flashkat::gpusim::GpuConfig;
+use flashkat::report;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let batch: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let gpu = match args.get(2).map(String::as_str) {
+        Some("h200") => GpuConfig::h200(),
+        _ => GpuConfig::rtx4060ti(),
+    };
+    let dims = RationalDims { batch, ..RationalDims::paper() };
+    println!(
+        "simulating group-wise rational kernels at B={batch} N=197 d=768 on {} \
+         (paper uses B=1024; pass a batch arg to change)",
+        gpu.name
+    );
+    print!("{}", report::table2(&gpu, dims));
+    print!("{}", report::fig2_fig3(&gpu, dims));
+    print!("{}", report::table3(&gpu, dims));
+
+    // Ablation (DESIGN.md §8): group count vs atomic contention.  More
+    // groups spread Algorithm 1's atomics over more addresses — contention
+    // (and the paper's whole bottleneck) scales ~1/n_g.
+    println!("\nn_g ablation (Algorithm 1 backward, simulated):");
+    for n_groups in [1u32, 2, 4, 8, 16, 32] {
+        let mut d = dims;
+        d.n_groups = n_groups;
+        let r = flashkat::gpusim::simulate(
+            &gpu,
+            &flashkat::gpusim::kernels::RationalBwdKatKernel::new(d),
+        );
+        println!(
+            "  n_g={n_groups:<3} elapsed {:>9.1} ms  (addresses: {})",
+            r.elapsed_secs * 1e3,
+            n_groups * d.coeffs_per_group()
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! Quickstart: load an AOT-compiled Pallas kernel and run it from Rust.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This is the minimal tour of the three-layer architecture: the
+//! group-wise rational kernel was written in Pallas (L1), lowered through
+//! a jitted JAX function (L2) into `artifacts/rational_fwd.hlo.txt`, and
+//! here the Rust coordinator (L3) compiles and executes it via PJRT —
+//! python is not involved at runtime.
+
+use anyhow::{Context, Result};
+use flashkat::runtime::{HostTensor, Runtime};
+use flashkat::util::rng::Pcg64;
+
+fn main() -> Result<()> {
+    let rt = Runtime::cpu("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let module = rt.load("rational_fwd").context(
+        "run `make artifacts` first — this example needs the AOT kernels",
+    )?;
+    println!(
+        "loaded {} ({} inputs -> {} outputs, compiled in {:.2}s)",
+        module.name,
+        module.input_count(),
+        module.output_count(),
+        module.compile_secs
+    );
+
+    // Problem dims come from the artifact manifest.
+    let dims: Vec<usize> = module.manifest.raw.get("dims").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_usize().unwrap()).collect();
+    let (b, n, d) = (dims[0], dims[1], dims[2]);
+    println!("kernel dims: X in R^({b}x{n}x{d}), 8 groups, m+1=6, n=4");
+
+    // Swish-like coefficients for every group; x ~ N(0,1).
+    let mut rng = Pcg64::new(0);
+    let x: Vec<f32> = (0..b * n * d).map(|_| rng.normal_f32()).collect();
+    let a_row =
+        [-0.0052296527f32, 0.5027744533, 0.4403392560, 0.5826427290, 0.2196305065, 0.0256087044];
+    let b_row = [0.3131766296f32, 1.0135363041, 0.0271426279, 0.0494586222];
+    let a: Vec<f32> = (0..8).flat_map(|_| a_row).collect();
+    let bc: Vec<f32> = (0..8).flat_map(|_| b_row).collect();
+
+    let t0 = std::time::Instant::now();
+    let outs = module.execute(&[
+        HostTensor::F32 { shape: vec![b, n, d], data: x.clone() },
+        HostTensor::F32 { shape: vec![8, 6], data: a },
+        HostTensor::F32 { shape: vec![8, 4], data: bc },
+    ])?;
+    let dt = t0.elapsed();
+    let y = outs[0].as_f32()?;
+
+    // With swish coefficients, F(x) ~ silu(x).
+    let mut max_dev = 0f32;
+    for (xi, yi) in x.iter().zip(y).take(10_000) {
+        let silu = xi / (1.0 + (-xi).exp());
+        max_dev = max_dev.max((yi - silu).abs());
+    }
+    println!(
+        "executed {} elements in {:.1} ms; max |F(x) - silu(x)| on first 10k = {:.3}",
+        y.len(),
+        dt.as_secs_f64() * 1e3,
+        max_dev
+    );
+    println!("quickstart OK");
+    Ok(())
+}

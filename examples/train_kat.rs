@@ -1,0 +1,89 @@
+//! End-to-end validation driver (DESIGN.md §6): train KAT-micro and
+//! ViT-micro through the full three-layer stack — synthetic data +
+//! augmentations + cosine schedule + EMA in Rust (L3), AdamW + model
+//! fwd/bwd through the Pallas rational kernels as one AOT HLO module
+//! (L2/L1) — and report loss curves, throughput with 95% CIs, and
+//! held-out accuracy.
+//!
+//!     make artifacts && cargo run --release --example train_kat [steps]
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use anyhow::{Context, Result};
+use flashkat::config::TrainConfig;
+use flashkat::coordinator::Trainer;
+use flashkat::runtime::Runtime;
+
+fn sparkline(losses: &[f32]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = losses.iter().cloned().fold(f32::INFINITY, f32::min);
+    let hi = losses.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let span = (hi - lo).max(1e-6);
+    // downsample to at most 60 columns
+    let stride = losses.len().div_ceil(60).max(1);
+    losses
+        .chunks(stride)
+        .map(|c| {
+            let m = c.iter().sum::<f32>() / c.len() as f32;
+            BARS[(((m - lo) / span) * 7.0).round().clamp(0.0, 7.0) as usize]
+        })
+        .collect()
+}
+
+fn main() -> Result<()> {
+    let steps: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let rt = Runtime::cpu("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let mut rows = Vec::new();
+    for tag in ["vit_micro", "kat_micro"] {
+        let cfg = TrainConfig {
+            model: tag.to_string(),
+            steps,
+            log_every: (steps / 10).max(1),
+            ..Default::default()
+        };
+        let trainer = Trainer::new(&rt, tag, cfg)
+            .context("run `make artifacts` first")?;
+        println!(
+            "\n== training {tag}: {} leaves, batch {}, {} steps ==",
+            trainer.param_leaves(),
+            trainer.batch_size(),
+            steps
+        );
+        let ckpt = std::path::PathBuf::from(format!("/tmp/flashkat_{tag}.ckpt"));
+        let rep = trainer.train(Some(&ckpt))?;
+        println!("loss curve: {}", sparkline(&rep.losses));
+        println!(
+            "{tag}: loss {:.3} -> {:.3}, {:.2} (± {:.2}) img/s, host overhead {:.2}%, \
+             held-out top-1 {:.3} (EMA {:.3}; chance 0.100), ckpt {}",
+            rep.first_loss(),
+            rep.final_loss(),
+            rep.throughput_mean,
+            rep.throughput_ci95,
+            100.0 * rep.host_overhead,
+            rep.final_eval_acc.unwrap_or(f64::NAN),
+            rep.ema_eval_acc.unwrap_or(f64::NAN),
+            ckpt.display()
+        );
+        rows.push((tag, rep));
+    }
+
+    println!("\n== summary (CPU, interpret-mode Pallas — speed is NOT a GPU claim) ==");
+    println!("model       thp img/s (±CI)    final loss   top-1");
+    for (tag, rep) in &rows {
+        println!(
+            "{tag:<11} {:>8.2} (±{:.2})    {:>8.3}   {:.3}",
+            rep.throughput_mean,
+            rep.throughput_ci95,
+            rep.final_loss(),
+            rep.final_eval_acc.unwrap_or(f64::NAN)
+        );
+    }
+    println!(
+        "(the paper's GPU speed comparison is reproduced by the gpusim benches;\n \
+         this driver proves all three layers compose and the models learn)"
+    );
+    Ok(())
+}

@@ -1,0 +1,189 @@
+"""AOT compile path: lower L2 functions to HLO *text* + JSON manifests.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Every artifact ``<name>.hlo.txt`` is accompanied by ``<name>.manifest.json``
+describing the flat input/output signature (leaf paths, shapes, dtypes) so
+the Rust runtime can marshal literals without guessing pytree order.
+
+Run ``python -m compile.aot --out-dir ../artifacts`` (the Makefile does).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .kernels import rational as rk
+
+TRAIN_BATCH = 32
+EVAL_BATCH = 32
+# Paper kernel-benchmark dims are (1024, 197, 768); batch is scaled for CPU.
+KERNEL_DIMS = (8, 197, 768)
+KERNEL_GROUPS, KERNEL_M1, KERNEL_N = 8, 6, 4
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_str(dt) -> str:
+    return {
+        "float32": "f32", "float64": "f64", "int32": "i32", "int64": "i64",
+        "uint32": "u32", "bfloat16": "bf16",
+    }[jnp.dtype(dt).name]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _signature(tree):
+    """Flatten a pytree of arrays/ShapeDtypeStructs into manifest entries."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [
+        {"name": _path_str(p), "shape": list(v.shape), "dtype": _dtype_str(v.dtype)}
+        for p, v in flat
+    ]
+
+
+def emit(out_dir: str, name: str, lowered, in_tree, out_tree, extra=None):
+    os.makedirs(out_dir, exist_ok=True)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    manifest = {
+        "name": name,
+        "inputs": _signature(in_tree),
+        "outputs": _signature(out_tree),
+    }
+    if extra:
+        manifest.update(extra)
+    with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {name}: {len(text)/1e6:.2f} MB hlo, {len(manifest['inputs'])} in / "
+          f"{len(manifest['outputs'])} out")
+
+
+def _spec_like(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Artifact builders.
+# ---------------------------------------------------------------------------
+
+def build_model_artifacts(out_dir: str, cfg: M.ModelConfig, batch: int, tag: str):
+    """init / train_step / eval artifacts for one model config."""
+    key = jax.random.PRNGKey(0)
+    params = M.init_model(key, cfg)
+    n_params = M.count_params(params)
+    print(f"model {cfg.name} [{tag}]: {n_params/1e6:.2f}M params")
+
+    cfg_extra = {
+        "model": cfg.name, "params": n_params, "batch": batch,
+        "img_size": cfg.img_size, "n_classes": cfg.n_classes,
+        "backward": cfg.backward, "ffn": cfg.ffn,
+    }
+
+    # init: () -> params (seed baked in)
+    def init_fn():
+        return M.init_model(jax.random.PRNGKey(0), cfg)
+
+    lowered = jax.jit(init_fn).lower()
+    emit(out_dir, f"{tag}_init", lowered, (), params, cfg_extra)
+
+    # train_step
+    m, v = T.init_opt_state(params)
+    step = jnp.zeros((), jnp.int32)
+    lr = jnp.zeros((), jnp.float32)
+    key_bits = jnp.zeros((2,), jnp.uint32)
+    images = jax.ShapeDtypeStruct((batch, cfg.img_size, cfg.img_size, cfg.in_ch), jnp.float32)
+    labels = jax.ShapeDtypeStruct((batch, cfg.n_classes), jnp.float32)
+
+    args = (_spec_like(params), _spec_like(m), _spec_like(v),
+            _spec_like(step), _spec_like(lr), _spec_like(key_bits), images, labels)
+    ts = T.make_train_step(cfg)
+    lowered = jax.jit(ts).lower(*args)
+    loss_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    emit(out_dir, f"{tag}_train_step", lowered, args,
+         (_spec_like(params), _spec_like(m), _spec_like(v), loss_spec), cfg_extra)
+
+    # eval: (params, images) -> logits
+    ev = T.make_eval_step(cfg)
+    eimages = jax.ShapeDtypeStruct((EVAL_BATCH, cfg.img_size, cfg.img_size, cfg.in_ch), jnp.float32)
+    lowered = jax.jit(ev).lower(_spec_like(params), eimages)
+    logits = jax.ShapeDtypeStruct((EVAL_BATCH, cfg.n_classes), jnp.float32)
+    emit(out_dir, f"{tag}_eval", lowered, (_spec_like(params), eimages), logits,
+         dict(cfg_extra, batch=EVAL_BATCH))
+
+
+def build_kernel_artifacts(out_dir: str, dims=KERNEL_DIMS):
+    """Standalone rational-kernel artifacts at (scaled) paper dims."""
+    b, n_rows, d = dims
+    x = jax.ShapeDtypeStruct((b, n_rows, d), jnp.float32)
+    do = jax.ShapeDtypeStruct((b, n_rows, d), jnp.float32)
+    a = jax.ShapeDtypeStruct((KERNEL_GROUPS, KERNEL_M1), jnp.float32)
+    bc = jax.ShapeDtypeStruct((KERNEL_GROUPS, KERNEL_N), jnp.float32)
+    extra = {"dims": list(dims), "n_groups": KERNEL_GROUPS, "m1": KERNEL_M1, "n": KERNEL_N}
+
+    lowered = jax.jit(lambda x, a, b: rk.rational_fwd(x, a, b)).lower(x, a, bc)
+    emit(out_dir, "rational_fwd", lowered, (x, a, bc), x, extra)
+
+    lowered = jax.jit(lambda x, do, a, b: rk.rational_bwd_flash(x, do, a, b)).lower(x, do, a, bc)
+    emit(out_dir, "rational_bwd_flash", lowered, (x, do, a, bc), (x, a, bc), extra)
+
+    lowered = jax.jit(
+        lambda x, do, a, b: rk.rational_bwd_kat(x, do, a, b, s_rows=16)
+    ).lower(x, do, a, bc)
+    emit(out_dir, "rational_bwd_kat", lowered, (x, do, a, bc), (x, a, bc), extra)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=TRAIN_BATCH)
+    ap.add_argument("--only", choices=["kernels", "models"], default=None)
+    args = ap.parse_args()
+
+    if args.only in (None, "kernels"):
+        print("== kernel artifacts ==")
+        build_kernel_artifacts(args.out_dir)
+    if args.only in (None, "models"):
+        print("== model artifacts ==")
+        build_model_artifacts(args.out_dir, M.kat_micro(), args.batch, "kat_micro")
+        build_model_artifacts(args.out_dir, M.vit_micro(), args.batch, "vit_micro")
+        build_model_artifacts(
+            args.out_dir, M.kat_micro(backward="kat"), args.batch, "kat_micro_katbwd"
+        )
+    # stamp file for `make`
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("artifacts done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Multi-head self-attention with Mimetic initialization.
+
+The paper's training recipe applies Mimetic initialization (Trockman &
+Kolter 2023) to the attention layers: W_q W_k^T ~ alpha*I + beta*Z, which
+makes random-init attention behave like a (noisy) identity/self-token
+mixer and stabilizes early training.
+
+Implementation note: the textbook construction factors the target matrix
+with an SVD, but ``jnp.linalg.svd`` lowers to a typed-FFI LAPACK
+custom-call that the AOT consumer (xla_extension 0.5.1) rejects.  We use
+an SVD-free construction instead: W_q = W_k = sqrt(alpha)*I +
+sqrt(beta/d)*G with shared Gaussian G, giving W_q W_k^T = alpha*I +
+sqrt(alpha*beta/d)*(G+G^T) + (beta/d)*G G^T — diagonally dominant with a
+shared symmetric noise term, which is the property mimetic init needs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mimetic_qk(key, d: int, alpha: float = 0.7, beta: float = 0.7, dtype=jnp.float32):
+    """Return (W_q, W_k) with W_q W_k^T ≈ alpha*I + noise(beta) (SVD-free)."""
+    g = jax.random.normal(key, (d, d), jnp.float32)
+    w = (alpha**0.5) * jnp.eye(d, dtype=jnp.float32) + (beta / d) ** 0.5 * g
+    return w.astype(dtype), w.astype(dtype)
+
+
+def init_attention(key, d: int, heads: int, mimetic: bool = True, dtype=jnp.float32):
+    assert d % heads == 0
+    kq, kv, kp = jax.random.split(key, 3)
+    if mimetic:
+        wq, wk = mimetic_qk(kq, d, dtype=dtype)
+    else:
+        s = (1.0 / d) ** 0.5
+        wq = jax.random.normal(kq, (d, d), dtype) * s
+        wk = jax.random.normal(jax.random.fold_in(kq, 1), (d, d), dtype) * s
+    s = (1.0 / d) ** 0.5
+    return {
+        "wq": wq,
+        "wk": wk,
+        "wv": jax.random.normal(kv, (d, d), dtype) * s,
+        "wo": jax.random.normal(kp, (d, d), dtype) * s,
+        "bq": jnp.zeros((d,), dtype),
+        "bk": jnp.zeros((d,), dtype),
+        "bv": jnp.zeros((d,), dtype),
+        "bo": jnp.zeros((d,), dtype),
+    }
+
+
+def attention(p, x, heads: int):
+    """x: (B, N, d) -> (B, N, d). Standard pre-softmax 1/sqrt(d_h) scaling."""
+    B, N, d = x.shape
+    dh = d // heads
+
+    def split(t):
+        return t.reshape(B, N, heads, dh).transpose(0, 2, 1, 3)  # (B, h, N, dh)
+
+    q = split(x @ p["wq"] + p["bq"])
+    k = split(x @ p["wk"] + p["bk"])
+    v = split(x @ p["wv"] + p["bv"])
+
+    logits = jnp.einsum("bhnd,bhmd->bhnm", q, k) / jnp.sqrt(jnp.asarray(dh, x.dtype))
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhnm,bhmd->bhnd", w, v)
+    o = o.transpose(0, 2, 1, 3).reshape(B, N, d)
+    return o @ p["wo"] + p["bo"]

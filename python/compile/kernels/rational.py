@@ -1,0 +1,407 @@
+"""Pallas kernels for the group-wise rational function (safe PAU).
+
+Three kernels, mirroring the paper:
+
+* ``rational_fwd``        — forward F(x) = P(x)/Q(x), grouped coefficients.
+* ``rational_bwd_kat``    — the *baseline* backward pass with the access
+  structure of paper Algorithm 1: a 1-D grid over rows where every grid step
+  re-loads the full coefficient tensors and accumulates its contribution
+  into the full ``dA``/``dB`` outputs.  On a GPU this accumulation is a
+  per-element atomic add; on TPU (and in interpret mode) the sequential
+  grid expresses the same long, contention-shaped accumulation chain.
+* ``rational_bwd_flash``  — the FlashKAT backward pass (paper Algorithm 2):
+  a 2-D grid ``(T, n_g)`` where each block loads *one* group's coefficients,
+  reduces its ``(S_block, d_g)`` tile of contributions locally in VMEM, and
+  performs a single accumulation into ``dA[j]``/``dB[j]`` per block.
+
+Hardware adaptation (see DESIGN.md §2): CUDA threadblocks -> Pallas grid +
+BlockSpec; shared-memory block reduction -> VMEM tile reduction
+(``jnp.sum``); atomic adds -> revisiting the same output block across the
+sequential TPU grid (``@pl.when(i == 0)`` initialize, else accumulate).
+
+All kernels run with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.  Correctness is anchored on
+``ref.py`` via pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module docstring.
+
+DEFAULT_S_BLOCK = 128
+
+
+# ---------------------------------------------------------------------------
+# Shared in-kernel math (operates on one tile with one coefficient vector).
+# ---------------------------------------------------------------------------
+
+def _horner(coeffs_1d, x, k):
+    """sum_i coeffs_1d[i] * x**i for i in [0, k) via Horner. coeffs_1d: (k,)."""
+    acc = jnp.full_like(x, coeffs_1d[k - 1])
+    for i in range(k - 2, -1, -1):
+        acc = acc * x + coeffs_1d[i]
+    return acc
+
+
+def _pq_sign(x, a, b, m1, n):
+    """P, Q, sign(A) for a tile x with coefficient vectors a:(m1,), b:(n,)."""
+    p = _horner(a, x, m1)
+    A = x * _horner(b, x, n)
+    q = 1.0 + jnp.abs(A)
+    return p, q, jnp.sign(A)
+
+
+def _grads(x, do, a, b, m1, n):
+    """Per-element dx plus *unreduced* coefficient contributions.
+
+    Returns (dx, da_terms, db_terms) where da_terms[k] = do * x^k / Q and
+    db_terms[j] = -do * x^(j+1) * sign(A) * P/Q^2, each with x's shape.
+    """
+    p, q, sgn = _pq_sign(x, a, b, m1, n)
+    inv_q = 1.0 / q
+    p_over_q2 = p * inv_q * inv_q
+
+    # P'(x) and A'(x) by Horner on the derivative coefficients.
+    if m1 > 1:
+        dp = jnp.full_like(x, a[m1 - 1] * (m1 - 1))
+        for i in range(m1 - 2, 0, -1):
+            dp = dp * x + a[i] * i
+    else:
+        dp = jnp.zeros_like(x)
+    acc = jnp.full_like(x, b[n - 1] * n)
+    for j in range(n - 2, -1, -1):
+        acc = acc * x + b[j] * (j + 1)
+    dadx = acc
+
+    dx = do * (dp * inv_q - sgn * dadx * p_over_q2)
+
+    do_q = do * inv_q
+    neg_do_spq2 = -do * sgn * p_over_q2
+    da_terms = []
+    db_terms = []
+    pw = jnp.ones_like(x)
+    for k in range(m1):
+        da_terms.append(do_q * pw)
+        pw = pw * x
+    pw = x
+    for j in range(n):
+        db_terms.append(neg_do_spq2 * pw)
+        pw = pw * x
+    return dx, da_terms, db_terms
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel.
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(x_ref, a_ref, b_ref, o_ref, *, m1, n):
+    x = x_ref[...]
+    a = a_ref[0, :]
+    b = b_ref[0, :]
+    p, q, _ = _pq_sign(x, a, b, m1, n)
+    o_ref[...] = p / q
+
+
+def _pad_rows(x2d, s_block):
+    r = x2d.shape[0]
+    t = -(-r // s_block)  # ceil div
+    pad = t * s_block - r
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    return x2d, t, r
+
+
+@functools.partial(jax.jit, static_argnames=("s_block",))
+def rational_fwd(x, a, b, s_block: int = DEFAULT_S_BLOCK):
+    """Group-wise rational forward via Pallas.
+
+    x: (..., d); a: (n_g, m+1); b: (n_g, n).  ``d % n_g == 0`` required.
+    Rows (the flattened leading axes) are padded to a multiple of s_block.
+    """
+    n_g, m1 = a.shape
+    n = b.shape[1]
+    d = x.shape[-1]
+    d_g = d // n_g
+    assert d % n_g == 0, f"d={d} not divisible by n_g={n_g}"
+
+    x2d = x.reshape(-1, d)
+    x2d, t, r = _pad_rows(x2d, s_block)
+
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, m1=m1, n=n),
+        grid=(t, n_g),
+        in_specs=[
+            pl.BlockSpec((s_block, d_g), lambda i, j: (i, j)),
+            pl.BlockSpec((1, m1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((s_block, d_g), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x.dtype),
+        interpret=INTERPRET,
+    )(x2d, a, b)
+    return out[:r].reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# FlashKAT backward kernel (paper Algorithm 2).
+# ---------------------------------------------------------------------------
+
+def _bwd_flash_kernel(x_ref, do_ref, a_ref, b_ref, dx_ref, da_ref, db_ref, *, m1, n):
+    i = pl.program_id(0)
+    x = x_ref[...]
+    do = do_ref[...]
+    a = a_ref[0, :]
+    b = b_ref[0, :]
+
+    dx, da_terms, db_terms = _grads(x, do, a, b, m1, n)
+    dx_ref[...] = dx
+
+    # Block-local reduction in VMEM — the FlashKAT trick: one accumulation
+    # per (S_block x d_g) tile instead of one atomic per element.
+    da_local = jnp.stack([jnp.sum(t, dtype=x.dtype) for t in da_terms])[None, :]
+    db_local = jnp.stack([jnp.sum(t, dtype=x.dtype) for t in db_terms])[None, :]
+
+    @pl.when(i == 0)
+    def _init():
+        da_ref[...] = da_local
+        db_ref[...] = db_local
+
+    @pl.when(i > 0)
+    def _accum():
+        da_ref[...] += da_local
+        db_ref[...] += db_local
+
+
+@functools.partial(jax.jit, static_argnames=("s_block",))
+def rational_bwd_flash(x, dout, a, b, s_block: int = DEFAULT_S_BLOCK):
+    """FlashKAT backward pass (Algorithm 2): 2-D grid, block-local reduction.
+
+    Returns (dx, da, db).
+    """
+    n_g, m1 = a.shape
+    n = b.shape[1]
+    d = x.shape[-1]
+    d_g = d // n_g
+    assert d % n_g == 0
+
+    x2d = x.reshape(-1, d)
+    do2d = dout.reshape(-1, d)
+    x2d, t, r = _pad_rows(x2d, s_block)
+    do2d, _, _ = _pad_rows(do2d, s_block)
+
+    dx, da, db = pl.pallas_call(
+        functools.partial(_bwd_flash_kernel, m1=m1, n=n),
+        grid=(t, n_g),
+        in_specs=[
+            pl.BlockSpec((s_block, d_g), lambda i, j: (i, j)),
+            pl.BlockSpec((s_block, d_g), lambda i, j: (i, j)),
+            pl.BlockSpec((1, m1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((s_block, d_g), lambda i, j: (i, j)),
+            pl.BlockSpec((1, m1), lambda i, j: (j, 0)),   # revisited over i
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),    # revisited over i
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x2d.shape, x.dtype),
+            jax.ShapeDtypeStruct(a.shape, x.dtype),
+            jax.ShapeDtypeStruct(b.shape, x.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x2d, do2d, a, b)
+    return dx[:r].reshape(x.shape), da, db
+
+
+# ---------------------------------------------------------------------------
+# KAT baseline backward kernel (paper Algorithm 1 access structure).
+# ---------------------------------------------------------------------------
+
+def _bwd_kat_kernel(x_ref, do_ref, a_ref, b_ref, dx_ref, da_ref, db_ref, *, m1, n, n_g):
+    i = pl.program_id(0)
+    x = x_ref[...]           # (s_rows, d)
+    do = do_ref[...]
+    a = a_ref[...]           # (n_g, m1) — the FULL coefficient tensor, re-read
+    b = b_ref[...]           # every grid step, as Algorithm 1 re-reads per thread
+
+    s_rows, d = x.shape
+    d_g = d // n_g
+    xg = x.reshape(s_rows, n_g, d_g)
+    dog = do.reshape(s_rows, n_g, d_g)
+
+    # Broadcast per-group coefficients over the tile: (1, n_g, 1) per power.
+    def coeff(c, k):
+        return c[:, k][None, :, None]
+
+    p = jnp.broadcast_to(coeff(a, m1 - 1), xg.shape)
+    for k in range(m1 - 2, -1, -1):
+        p = p * xg + coeff(a, k)
+    Ax = jnp.broadcast_to(coeff(b, n - 1), xg.shape)
+    for k in range(n - 2, -1, -1):
+        Ax = Ax * xg + coeff(b, k)
+    A = xg * Ax
+    q = 1.0 + jnp.abs(A)
+    sgn = jnp.sign(A)
+    inv_q = 1.0 / q
+    p_over_q2 = p * inv_q * inv_q
+
+    dp = jnp.broadcast_to(coeff(a, m1 - 1) * (m1 - 1), xg.shape)
+    for k in range(m1 - 2, 0, -1):
+        dp = dp * xg + coeff(a, k) * k
+    dadx = jnp.broadcast_to(coeff(b, n - 1) * n, xg.shape)
+    for k in range(n - 2, -1, -1):
+        dadx = dadx * xg + coeff(b, k) * (k + 1)
+
+    dx = dog * (dp * inv_q - sgn * dadx * p_over_q2)
+    dx_ref[...] = dx.reshape(s_rows, d)
+
+    do_q = dog * inv_q
+    neg_do_spq2 = -dog * sgn * p_over_q2
+    da_terms = []
+    pw = jnp.ones_like(xg)
+    for k in range(m1):
+        da_terms.append(jnp.sum(do_q * pw, axis=(0, 2)))
+        pw = pw * xg
+    db_terms = []
+    pw = xg
+    for j in range(n):
+        db_terms.append(jnp.sum(neg_do_spq2 * pw, axis=(0, 2)))
+        pw = pw * xg
+    da_local = jnp.stack(da_terms, axis=-1)   # (n_g, m1)
+    db_local = jnp.stack(db_terms, axis=-1)   # (n_g, n)
+
+    # Sequential accumulation into the full dA/dB every step — the long
+    # contention-shaped chain of Algorithm 1's atomic adds.
+    @pl.when(i == 0)
+    def _init():
+        da_ref[...] = da_local
+        db_ref[...] = db_local
+
+    @pl.when(i > 0)
+    def _accum():
+        da_ref[...] += da_local
+        db_ref[...] += db_local
+
+
+@functools.partial(jax.jit, static_argnames=("s_rows",))
+def rational_bwd_kat(x, dout, a, b, s_rows: int = 1):
+    """Baseline backward pass with Algorithm 1's access structure.
+
+    1-D grid over row-blocks; the full coefficient tensors are re-read and
+    the full dA/dB outputs re-accumulated at every grid step.  ``s_rows=1``
+    gives one grid step per (token) row — the longest accumulation chain the
+    sequential-grid adaptation can express.  Returns (dx, da, db).
+    """
+    n_g, m1 = a.shape
+    n = b.shape[1]
+    d = x.shape[-1]
+    assert d % n_g == 0
+
+    x2d = x.reshape(-1, d)
+    do2d = dout.reshape(-1, d)
+    x2d, t, r = _pad_rows(x2d, s_rows)
+    do2d, _, _ = _pad_rows(do2d, s_rows)
+
+    dx, da, db = pl.pallas_call(
+        functools.partial(_bwd_kat_kernel, m1=m1, n=n, n_g=n_g),
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((s_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((s_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((n_g, m1), lambda i: (0, 0)),
+            pl.BlockSpec((n_g, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((s_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((n_g, m1), lambda i: (0, 0)),   # revisited every step
+            pl.BlockSpec((n_g, n), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x2d.shape, x.dtype),
+            jax.ShapeDtypeStruct(a.shape, x.dtype),
+            jax.ShapeDtypeStruct(b.shape, x.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x2d, do2d, a, b)
+    return dx[:r].reshape(x.shape), da, db
+
+
+# ---------------------------------------------------------------------------
+# Analytic global-memory access model (paper Section 4).
+# ---------------------------------------------------------------------------
+
+def kat_global_accesses(bnd: int, m1: int, n: int) -> int:
+    """Algorithm 1 access count: 3*(m+n+2) * B*N*d.
+
+    ``bnd`` is B*N*d; ``m1`` is m+1.  Derivation in paper §4: 3*B*N*d for
+    X/dO/dX plus 3*(m+n+1)*B*N*d for per-element coefficient reads and
+    atomic read-modify-writes.
+    """
+    m_plus_n_plus_1 = (m1 - 1) + n + 1
+    return 3 * (m_plus_n_plus_1 + 1) * bnd
+
+
+def flash_global_accesses(bnd: int, m1: int, n: int, s_block: int, d_g: int) -> int:
+    """Algorithm 2 access count: 3*((m+n+1)/(S_block*d_g) + 1) * B*N*d."""
+    m_plus_n_plus_1 = (m1 - 1) + n + 1
+    per_block = 3 * (s_block * d_g + m_plus_n_plus_1)
+    blocks = bnd // (s_block * d_g)
+    return blocks * per_block
+
+
+# ---------------------------------------------------------------------------
+# TPU performance model (interpret=True gives no TPU timing; the kernel's
+# real-hardware efficiency is governed by the BlockSpec memory schedule).
+# ---------------------------------------------------------------------------
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM on current TPU generations
+
+
+def flash_bwd_vmem_bytes(s_block: int, d_g: int, m1: int, n: int, dtype_bytes: int = 4) -> int:
+    """Resident VMEM per grid step of the FlashKAT backward kernel:
+    X tile + dO tile + dX tile + coefficient rows + dA/dB accumulators.
+    """
+    tiles = 3 * s_block * d_g * dtype_bytes
+    coeffs = 2 * (m1 + n) * dtype_bytes
+    return tiles + coeffs
+
+
+def flash_bwd_hbm_bytes(rows: int, d: int, m1: int, n: int, n_g: int,
+                        s_block: int, dtype_bytes: int = 4) -> int:
+    """Total HBM traffic of the FlashKAT backward: streams X, dO, dX once
+    plus one dA/dB revisit per (T x n_g) block — the paper's §4 count in
+    bytes."""
+    d_g = d // n_g
+    t = -(-rows // s_block)
+    stream = 3 * rows * d * dtype_bytes
+    acc = t * n_g * 2 * (m1 + n) * dtype_bytes
+    return stream + acc
+
+
+def flash_bwd_arithmetic_intensity(rows: int, d: int, m1: int, n: int, n_g: int,
+                                   s_block: int) -> float:
+    """FLOPs per HBM byte — the roofline coordinate.  The backward does
+    ~(6m + 6n + 12) FLOPs/element; the kernel is bandwidth-bound on every
+    current TPU (intensity << ridge), so minimizing HBM bytes (what
+    Algorithm 2 does) IS the optimization."""
+    flops = (6 * (m1 - 1) + 6 * n + 12) * rows * d
+    return flops / flash_bwd_hbm_bytes(rows, d, m1, n, n_g, s_block)
+
+
+def pick_s_block(rows: int, d: int, n_g: int, m1: int = 6, n: int = 4,
+                 budget: int = VMEM_BYTES // 4) -> int:
+    """Largest power-of-two S_block whose working set fits the VMEM budget
+    (quarter of VMEM leaves room for double-buffering + compiler temps).
+    Larger blocks amortize grid/dispatch overhead and shrink the dA/dB
+    revisit traffic; the stream term is S_block-invariant."""
+    d_g = d // n_g
+    s = 8
+    while s * 2 <= rows and flash_bwd_vmem_bytes(s * 2, d_g, m1, n) <= budget:
+        s *= 2
+    return s

@@ -1,0 +1,132 @@
+"""Pure-jnp oracle for the group-wise rational function (safe PAU).
+
+This is the correctness anchor for the Pallas kernels in ``rational.py``:
+every kernel output is compared against these functions by pytest.
+
+The group-wise rational function (paper Eq. 6) is
+
+    F(x) = P(x) / Q(x)
+    P(x) = a_0 + a_1 x + ... + a_m x^m
+    Q(x) = 1 + |b_1 x + ... + b_n x^n|
+
+with one coefficient set per *group* of ``d_g = d / n_g`` consecutive
+channels (paper Eq. 5).  The backward pass implements paper Eqs. 7-9:
+
+    dF/da_i = x^i / Q(x)
+    dF/db_j = -x^j * sign(A(x)) * P(x) / Q(x)^2          (A = b_1 x + ...)
+    dF/dx   = P'(x)/Q(x) - sign(A(x)) A'(x) P(x)/Q(x)^2
+
+and the coefficient gradients are accumulated over batch, sequence and the
+group dimension (paper Eqs. 10-11).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def group_view(x: jnp.ndarray, n_groups: int) -> jnp.ndarray:
+    """Reshape (..., d) -> (..., n_groups, d_g)."""
+    d = x.shape[-1]
+    assert d % n_groups == 0, f"d={d} not divisible by n_groups={n_groups}"
+    return x.reshape(*x.shape[:-1], n_groups, d // n_groups)
+
+
+def polyval_ascending(coeffs: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Horner evaluation of ``sum_k coeffs[..., k] * x**k``.
+
+    The polynomial axis of ``coeffs`` is last; its leading axes broadcast
+    against ``x`` (e.g. coeffs (n_g, 1, K) against x (..., n_g, d_g)).
+    """
+    k = coeffs.shape[-1]
+    out_shape = jnp.broadcast_shapes(coeffs[..., 0].shape, x.shape)
+    acc = jnp.broadcast_to(coeffs[..., k - 1], out_shape).astype(x.dtype)
+    for i in range(k - 2, -1, -1):
+        acc = acc * x + coeffs[..., i]
+    return acc
+
+
+def rational_pq(xg: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray):
+    """Return (P, Q, A, sign(A)) for grouped input.
+
+    xg: (..., n_g, d_g); a: (n_g, m+1); b: (n_g, n).
+    """
+    p = polyval_ascending(a[:, None, :], xg)
+    # A(x) = x * (b_1 + b_2 x + ... + b_n x^{n-1})
+    A = xg * polyval_ascending(b[:, None, :], xg)
+    q = 1.0 + jnp.abs(A)
+    return p, q, A, jnp.sign(A)
+
+
+def rational_fwd_ref(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Forward group-wise rational function.
+
+    x: (..., d); a: (n_g, m+1); b: (n_g, n).  Returns F(x) with x's shape.
+    """
+    xg = group_view(x, a.shape[0])
+    p, q, _, _ = rational_pq(xg, a, b)
+    return (p / q).reshape(x.shape)
+
+
+def rational_bwd_ref(x: jnp.ndarray, dout: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray):
+    """Backward pass per paper Eqs. 7-11.
+
+    Returns ``(dx, da, db)`` with dx of x's shape, da of a's shape, db of
+    b's shape.  Coefficient gradients are reduced with a single ``jnp.sum``
+    (deterministic tree-like reduction — the numerically 'good' ordering).
+    """
+    n_g, m_plus_1 = a.shape
+    n = b.shape[1]
+    xg = group_view(x, n_g)          # (..., n_g, d_g)
+    dog = group_view(dout, n_g)
+
+    p, q, A, sgn = rational_pq(xg, a, b)
+
+    # P'(x) = a_1 + 2 a_2 x + ... + m a_m x^{m-1}
+    dp_coeff = a[:, 1:] * jnp.arange(1, m_plus_1, dtype=x.dtype)  # (n_g, m)
+    dp = polyval_ascending(dp_coeff[:, None, :], xg)
+    # A'(x) = b_1 + 2 b_2 x + ... + n b_n x^{n-1}
+    dA_coeff = b * jnp.arange(1, n + 1, dtype=x.dtype)            # (n_g, n)
+    dAdx = polyval_ascending(dA_coeff[:, None, :], xg)
+
+    inv_q = 1.0 / q
+    p_over_q2 = p * inv_q * inv_q
+
+    dx = dog * (dp * inv_q - sgn * dAdx * p_over_q2)
+
+    # Powers x^i for i = 0..m and x^j for j = 1..n: (..., n_g, d_g, K).
+    pows_a = jnp.stack([xg**i for i in range(m_plus_1)], axis=-1)
+    pows_b = jnp.stack([xg**j for j in range(1, n + 1)], axis=-1)
+
+    reduce_axes = tuple(range(xg.ndim - 2)) + (xg.ndim - 1,)  # batch dims + d_g
+    da = jnp.sum(dog[..., None] * pows_a * inv_q[..., None], axis=reduce_axes)
+    db = jnp.sum(
+        dog[..., None] * (-pows_b) * (sgn * p_over_q2)[..., None], axis=reduce_axes
+    )
+    return dx.reshape(x.shape), da, db
+
+
+def swish_init_coeffs(dtype=jnp.float32):
+    """PAU coefficients approximating swish/SiLU.
+
+    KAT's variance-preserving init (Yang & Wang 2024) initializes the second
+    GR-KAN layer's rational to swish; these are the published safe-PAU fit
+    coefficients for m=5, n=4 — the paper's 6/4 configuration.
+    """
+    a = jnp.array(
+        [-0.0052296527, 0.5027744533, 0.4403392560, 0.5826427290,
+         0.2196305065, 0.0256087044],
+        dtype=dtype,
+    )
+    b = jnp.array(
+        [0.3131766296, 1.0135363041, 0.0271426279, 0.0494586222], dtype=dtype
+    )
+    return a, b
+
+
+def identity_init_coeffs(dtype=jnp.float32):
+    """PAU coefficients realizing F(x) = x exactly (the paper initializes
+    the first GR-KAN layer's rational to the identity)."""
+    a = jnp.array([0.0, 1.0, 0.0, 0.0, 0.0, 0.0], dtype=dtype)
+    b = jnp.array([0.0, 0.0, 0.0, 0.0], dtype=dtype)
+    return a, b

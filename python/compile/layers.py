@@ -1,0 +1,206 @@
+"""L2 building blocks: GR-KAN, MLP, LayerNorm, patch embedding.
+
+The GR-KAN layer (paper Eq. 5) wraps the L1 Pallas kernels with a
+``jax.custom_vjp`` so the *whole model's* backward pass routes through
+either the FlashKAT kernel (Algorithm 2) or the KAT baseline kernel
+(Algorithm 1 structure), selected at model-build time.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import rational as rk
+from .kernels import ref as kref
+
+Backward = Literal["flash", "kat"]
+
+
+# ---------------------------------------------------------------------------
+# Rational op with custom VJP (dispatches to the Pallas kernels).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def rational_op(x, a, b, backward: Backward = "flash", s_block: int = rk.DEFAULT_S_BLOCK):
+    """Group-wise rational activation F(x) with kernel-backed fwd/bwd."""
+    return rk.rational_fwd(x, a, b, s_block=s_block)
+
+
+def _rational_fwd_rule(x, a, b, backward, s_block):
+    return rk.rational_fwd(x, a, b, s_block=s_block), (x, a, b)
+
+
+def _rational_bwd_rule(backward, s_block, res, dout):
+    x, a, b = res
+    if backward == "flash":
+        dx, da, db = rk.rational_bwd_flash(x, dout, a, b, s_block=s_block)
+    else:
+        # Algorithm-1-structured baseline.  s_rows trades interpret-mode
+        # speed against accumulation-chain fidelity; 16 keeps lowered HLO
+        # loop counts tractable inside full-model train steps.
+        dx, da, db = rk.rational_bwd_kat(x, dout, a, b, s_rows=16)
+    return dx, da, db
+
+
+rational_op.defvjp(_rational_fwd_rule, _rational_bwd_rule)
+
+
+# ---------------------------------------------------------------------------
+# Initializers.
+# ---------------------------------------------------------------------------
+
+def rational_gain(a: jnp.ndarray, b: jnp.ndarray, nsamples: int = 8192) -> float:
+    """KAT's variance-preserving gain alpha = E[F(x)^2] / Var[x], x ~ N(0,1).
+
+    Computed numerically from the coefficient init (paper §2, 'third').
+    """
+    x = jax.random.normal(jax.random.PRNGKey(0), (nsamples,), jnp.float32)
+    n_g = a.shape[0] if a.ndim == 2 else 1
+    a2 = a if a.ndim == 2 else a[None]
+    b2 = b if b.ndim == 2 else b[None]
+    f = kref.rational_fwd_ref(
+        jnp.tile(x[:, None], (1, n_g)), a2, b2
+    )
+    return float(jnp.mean(f * f))
+
+
+def variance_preserving_normal(key, shape, gain: float, d_in: int, dtype=jnp.float32):
+    """W ~ N(0, alpha/d_in) per KAT (Yang & Wang 2024)."""
+    std = (gain / d_in) ** 0.5
+    return jax.random.normal(key, shape, dtype) * std
+
+
+def init_rational_coeffs(kind: str, n_groups: int, dtype=jnp.float32):
+    """Per-group coefficient tensors initialized to a named activation."""
+    if kind == "identity":
+        a, b = kref.identity_init_coeffs(dtype)
+    elif kind == "swish":
+        a, b = kref.swish_init_coeffs(dtype)
+    else:
+        raise ValueError(f"unknown rational init {kind!r}")
+    return jnp.tile(a[None], (n_groups, 1)), jnp.tile(b[None], (n_groups, 1))
+
+
+# ---------------------------------------------------------------------------
+# GR-KAN feed-forward block (the KAT MLP replacement).
+# ---------------------------------------------------------------------------
+
+import functools as _ft
+
+
+@_ft.lru_cache(maxsize=None)
+def _gain_for(kind: str) -> float:
+    """Concrete (non-traced) gain per named coefficient init, cached so
+    ``init_grkan_ffn`` stays jit-traceable (no float() on tracers)."""
+    a, b = init_rational_coeffs(kind, 1)
+    import numpy as _np
+
+    x = _np.asarray(
+        jax.random.normal(jax.random.PRNGKey(0), (8192,), jnp.float32)
+    )
+    f = _np.asarray(kref.rational_fwd_ref(jnp.asarray(x)[:, None], a, b))
+    return float(_np.mean(f * f))
+
+
+def init_grkan_ffn(key, d: int, d_hidden: int, n_groups: int, dtype=jnp.float32):
+    """Two stacked GR-KAN layers: rational(identity) -> fc1 -> rational(swish) -> fc2.
+
+    Mirrors the paper: 'The first layer of GR-KAN has its group-wise rational
+    function initialized to the identity function, and the second layer is
+    initialized to a Swish function.'
+    """
+    k1, k2 = jax.random.split(key)
+    a1, b1 = init_rational_coeffs("identity", n_groups, dtype)
+    a2, b2 = init_rational_coeffs("swish", n_groups, dtype)
+    g1 = _gain_for("identity")
+    g2 = _gain_for("swish")
+    return {
+        "a1": a1,
+        "b1": b1,
+        "fc1_w": variance_preserving_normal(k1, (d, d_hidden), g1, d, dtype),
+        "fc1_b": jnp.zeros((d_hidden,), dtype),
+        "a2": a2,
+        "b2": b2,
+        "fc2_w": variance_preserving_normal(k2, (d_hidden, d), g2, d_hidden, dtype),
+        "fc2_b": jnp.zeros((d,), dtype),
+    }
+
+
+def grkan_ffn(p, x, backward: Backward = "flash", s_block: int = rk.DEFAULT_S_BLOCK):
+    """GR-KAN(x) = W2 F2(W1 F1(x) + b1) + b2 (paper Eq. 5, stacked twice)."""
+    h = rational_op(x, p["a1"], p["b1"], backward, s_block)
+    h = h @ p["fc1_w"] + p["fc1_b"]
+    h = rational_op(h, p["a2"], p["b2"], backward, s_block)
+    return h @ p["fc2_w"] + p["fc2_b"]
+
+
+# ---------------------------------------------------------------------------
+# Standard MLP feed-forward (the ViT baseline).
+# ---------------------------------------------------------------------------
+
+def init_mlp_ffn(key, d: int, d_hidden: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    # GELU baseline, trunc-normal-ish init as in ViT/DeiT.
+    return {
+        "fc1_w": jax.random.normal(k1, (d, d_hidden), dtype) * (2.0 / (d + d_hidden)) ** 0.5,
+        "fc1_b": jnp.zeros((d_hidden,), dtype),
+        "fc2_w": jax.random.normal(k2, (d_hidden, d), dtype) * (2.0 / (d + d_hidden)) ** 0.5,
+        "fc2_b": jnp.zeros((d,), dtype),
+    }
+
+
+def mlp_ffn(p, x):
+    h = jax.nn.gelu(x @ p["fc1_w"] + p["fc1_b"])
+    return h @ p["fc2_w"] + p["fc2_b"]
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm.
+# ---------------------------------------------------------------------------
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# Patch embedding.
+# ---------------------------------------------------------------------------
+
+def init_patch_embed(key, patch: int, in_ch: int, d: int, dtype=jnp.float32):
+    fan_in = patch * patch * in_ch
+    return {
+        "w": jax.random.normal(key, (fan_in, d), dtype) * (1.0 / fan_in) ** 0.5,
+        "b": jnp.zeros((d,), dtype),
+    }
+
+
+def patch_embed(p, images, patch: int):
+    """images: (B, H, W, C) -> tokens (B, H/p * W/p, d)."""
+    B, H, W, C = images.shape
+    gh, gw = H // patch, W // patch
+    x = images.reshape(B, gh, patch, gw, patch, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, gh * gw, patch * patch * C)
+    return x @ p["w"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# Stochastic depth (drop-path) and dropout.
+# ---------------------------------------------------------------------------
+
+def drop_path(key, x, rate: float, train: bool):
+    """Per-sample residual-branch drop (Huang et al. 2016)."""
+    if not train or rate <= 0.0:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, (x.shape[0],) + (1,) * (x.ndim - 1))
+    return x * mask.astype(x.dtype) / keep

@@ -1,0 +1,186 @@
+"""L2: full KAT / ViT models (paper Table 6 variants + a CPU-scale micro).
+
+A model is (init_fn -> params pytree, forward_fn).  The feed-forward block
+is either a GR-KAN (KAT) or an MLP (ViT); the GR-KAN's backward routes
+through the FlashKAT or baseline-KAT Pallas kernel per config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    img_size: int = 224
+    patch: int = 16
+    in_ch: int = 3
+    d: int = 192
+    depth: int = 12
+    heads: int = 3
+    mlp_ratio: int = 4
+    n_classes: int = 1000
+    ffn: str = "grkan"          # "grkan" (KAT) | "mlp" (ViT/DeiT)
+    n_groups: int = 8           # paper: 8 groups
+    backward: str = "flash"     # "flash" | "kat"
+    s_block: int = 128
+    drop_path: float = 0.1      # peak stochastic-depth rate
+    mimetic: bool = True
+
+    @property
+    def n_tokens(self) -> int:
+        return (self.img_size // self.patch) ** 2 + 1  # + cls
+
+    @property
+    def d_hidden(self) -> int:
+        return self.d * self.mlp_ratio
+
+
+# Paper Table 6 variants (identical trunk dims for KAT and ViT/DeiT).
+def kat_tiny(**kw):
+    return ModelConfig(name="kat-t", d=192, heads=3, **kw)
+
+
+def kat_small(**kw):
+    return ModelConfig(name="kat-s", d=384, heads=6, **kw)
+
+
+def kat_base(**kw):
+    kw.setdefault("drop_path", 0.4)
+    return ModelConfig(name="kat-b", d=768, heads=12, **kw)
+
+
+def vit_tiny(**kw):
+    return ModelConfig(name="vit-t", d=192, heads=3, ffn="mlp", **kw)
+
+
+def vit_small(**kw):
+    return ModelConfig(name="vit-s", d=384, heads=6, ffn="mlp", **kw)
+
+
+def vit_base(**kw):
+    return ModelConfig(name="vit-b", d=768, heads=12, ffn="mlp", **kw)
+
+
+# CPU-scale variants for the end-to-end driver (32x32 synthetic images).
+# s_block=512 per the perf pass (EXPERIMENTS.md §Perf): 1.8x faster train
+# step than 128 on CPU interpret (fewer grid iterations), VMEM-safe by
+# kernels.rational.pick_s_block.
+def kat_micro(**kw):
+    return ModelConfig(
+        name="kat-micro", img_size=32, patch=4, d=128, depth=4, heads=4,
+        n_classes=10, s_block=512, drop_path=0.05, **kw,
+    )
+
+
+def vit_micro(**kw):
+    return ModelConfig(
+        name="vit-micro", img_size=32, patch=4, d=128, depth=4, heads=4,
+        n_classes=10, ffn="mlp", drop_path=0.05, **kw,
+    )
+
+
+CONFIGS = {
+    "kat-t": kat_tiny, "kat-s": kat_small, "kat-b": kat_base,
+    "vit-t": vit_tiny, "vit-s": vit_small, "vit-b": vit_base,
+    "kat-micro": kat_micro, "vit-micro": vit_micro,
+}
+
+
+def get_config(name: str, **kw) -> ModelConfig:
+    return CONFIGS[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, dtype=jnp.float32):
+    ka, kf = jax.random.split(key)
+    p = {
+        "ln1": L.init_layernorm(cfg.d, dtype),
+        "attn": attn.init_attention(ka, cfg.d, cfg.heads, cfg.mimetic, dtype),
+        "ln2": L.init_layernorm(cfg.d, dtype),
+    }
+    if cfg.ffn == "grkan":
+        p["ffn"] = L.init_grkan_ffn(kf, cfg.d, cfg.d_hidden, cfg.n_groups, dtype)
+    else:
+        p["ffn"] = L.init_mlp_ffn(kf, cfg.d, cfg.d_hidden, dtype)
+    return p
+
+
+def init_model(key, cfg: ModelConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, cfg.depth + 3)
+    blocks = [init_block(keys[i], cfg, dtype) for i in range(cfg.depth)]
+    n_patches = (cfg.img_size // cfg.patch) ** 2
+    return {
+        "patch": L.init_patch_embed(keys[-3], cfg.patch, cfg.in_ch, cfg.d, dtype),
+        "cls": jnp.zeros((1, 1, cfg.d), dtype),
+        "pos": jax.random.normal(keys[-2], (1, n_patches + 1, cfg.d), dtype) * 0.02,
+        "blocks": blocks,
+        "ln_f": L.init_layernorm(cfg.d, dtype),
+        "head_w": jax.random.normal(keys[-1], (cfg.d, cfg.n_classes), dtype)
+        * (1.0 / cfg.d) ** 0.5,
+        "head_b": jnp.zeros((cfg.n_classes,), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward.
+# ---------------------------------------------------------------------------
+
+def block_forward(p, x, cfg: ModelConfig, *, train: bool, key, dp_rate: float):
+    k1, k2 = (jax.random.split(key) if key is not None else (None, None))
+    h = attn.attention(p["attn"], L.layernorm(p["ln1"], x), cfg.heads)
+    x = x + (L.drop_path(k1, h, dp_rate, train) if train else h)
+    if cfg.ffn == "grkan":
+        h = L.grkan_ffn(p["ffn"], L.layernorm(p["ln2"], x), cfg.backward, cfg.s_block)
+    else:
+        h = L.mlp_ffn(p["ffn"], L.layernorm(p["ln2"], x))
+    x = x + (L.drop_path(k2, h, dp_rate, train) if train else h)
+    return x
+
+
+def forward(params, images, cfg: ModelConfig, *, train: bool = False, key=None):
+    """images: (B, H, W, C) -> logits (B, n_classes)."""
+    x = L.patch_embed(params["patch"], images, cfg.patch)
+    B = x.shape[0]
+    cls = jnp.broadcast_to(params["cls"], (B, 1, cfg.d)).astype(x.dtype)
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"]
+
+    # Linearly ramped stochastic-depth rates, 0 -> cfg.drop_path (DeiT recipe).
+    for i, bp in enumerate(params["blocks"]):
+        dp = cfg.drop_path * i / max(1, cfg.depth - 1)
+        bkey = jax.random.fold_in(key, i) if key is not None else None
+        x = block_forward(bp, x, cfg, train=train, key=bkey, dp_rate=dp)
+
+    x = L.layernorm(params["ln_f"], x)
+    return x[:, 0, :] @ params["head_w"] + params["head_b"]
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+def count_params_analytic(cfg: ModelConfig) -> int:
+    """Closed-form parameter count (cross-checked against init in tests and
+    against the paper's 5.7M / 22.1M / 86.6M in Tables 4/6)."""
+    d, dh = cfg.d, cfg.d_hidden
+    n_patches = (cfg.img_size // cfg.patch) ** 2
+    patch = (cfg.patch * cfg.patch * cfg.in_ch + 1) * d
+    embed = d + (n_patches + 1) * d  # cls + pos
+    attn_p = 4 * d * d + 4 * d
+    ln = 2 * d
+    ffn = d * dh + dh + dh * d + d
+    if cfg.ffn == "grkan":
+        ffn += 2 * cfg.n_groups * (6 + 4)  # two rationals per block
+    block = ln + attn_p + ln + ffn
+    head = d * cfg.n_classes + cfg.n_classes
+    return patch + embed + cfg.depth * block + ln + head

@@ -1,0 +1,105 @@
+"""L2: training step (loss + AdamW) lowered whole into one HLO module.
+
+The Rust coordinator owns the schedule (cosine LR, warmup), the data
+pipeline and augmentations (mixup/cutmix produce *soft* labels, so the loss
+here takes a full label distribution), EMA, and checkpointing.  Everything
+that must be fast and differentiable — forward, backward (through the
+Pallas rational kernels), and the AdamW update — lives in this one graph.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.05  # paper Table 7
+
+
+def soft_xent(logits, soft_labels):
+    """Cross-entropy against a label *distribution* (label smoothing and
+    mixup/cutmix are applied by the coordinator, producing soft labels)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(soft_labels * logp, axis=-1))
+
+
+def loss_fn(params, images, soft_labels, cfg, key):
+    logits = M.forward(params, images, cfg, train=True, key=key)
+    return soft_xent(logits, soft_labels), logits
+
+
+def _no_decay(path_leaf) -> bool:
+    """AdamW decay mask: no decay on norms, biases, cls/pos tokens, or the
+    rational coefficients (they parameterize an activation, not a weight)."""
+    path, _ = path_leaf
+    names = {getattr(k, "key", getattr(k, "idx", None)) for k in path}
+    if names & {"ln1", "ln2", "ln_f", "cls", "pos", "a1", "b1", "a2", "b2"}:
+        return True
+    last = path[-1]
+    return getattr(last, "key", "") in {
+        "b", "bias", "bq", "bk", "bv", "bo", "fc1_b", "fc2_b", "head_b"
+    }
+
+
+def decay_mask(params):
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    return jax.tree.unflatten(treedef, [0.0 if _no_decay(pl) else 1.0 for pl in flat])
+
+
+def adamw_update(params, m, v, grads, step, lr, mask):
+    """One decoupled-weight-decay Adam step (Loshchilov & Hutter 2017).
+
+    ``step`` is the 1-based step count (int32 scalar), ``lr`` a f32 scalar.
+    """
+    step_f = step.astype(jnp.float32)
+    bc1 = 1.0 - ADAM_B1**step_f
+    bc2 = 1.0 - ADAM_B2**step_f
+
+    def upd(p, m_, v_, g, wd):
+        m2 = ADAM_B1 * m_ + (1.0 - ADAM_B1) * g
+        v2 = ADAM_B2 * v_ + (1.0 - ADAM_B2) * g * g
+        mh = m2 / bc1
+        vh = v2 / bc2
+        p2 = p - lr * (mh / (jnp.sqrt(vh) + ADAM_EPS) + WEIGHT_DECAY * wd * p)
+        return p2, m2, v2
+
+    out = jax.tree.map(upd, params, m, v, grads, mask)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, new_m, new_v
+
+
+def make_train_step(cfg: M.ModelConfig):
+    """Returns train_step(params, m, v, step, lr, key_bits, images, labels)
+    -> (params', m', v', loss).  ``key_bits`` is uint32[2]."""
+
+    def train_step(params, m, v, step, lr, key_bits, images, soft_labels):
+        key = jax.random.wrap_key_data(key_bits, impl="threefry2x32")
+        mask = decay_mask(params)
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, images, soft_labels, cfg, key
+        )
+        new_p, new_m, new_v = adamw_update(params, m, v, grads, step, lr, mask)
+        return new_p, new_m, new_v, loss
+
+    return train_step
+
+
+def make_eval_step(cfg: M.ModelConfig):
+    """Returns eval_step(params, images) -> logits (no dropout/drop-path)."""
+
+    def eval_step(params, images):
+        return M.forward(params, images, cfg, train=False, key=None)
+
+    return eval_step
+
+
+def init_opt_state(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return zeros, jax.tree.map(jnp.zeros_like, params)

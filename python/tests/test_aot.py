@@ -1,0 +1,101 @@
+"""AOT path tests: HLO text emission and manifest correctness.
+
+These guard the L2->L3 interchange contract: manifest input order must be
+the jax flatten order, dtypes/shapes must match, and the HLO must be text
+(parsable header) — the exact properties the Rust runtime relies on.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import train as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = M.ModelConfig(
+    name="tiny-aot", img_size=8, patch=4, d=32, depth=1, heads=2,
+    n_classes=3, s_block=8,
+)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.build_model_artifacts(out, TINY, batch=2, tag="tiny")
+    return out
+
+
+def _manifest(out, name):
+    with open(os.path.join(out, f"{name}.manifest.json")) as f:
+        return json.load(f)
+
+
+def test_hlo_is_text(built):
+    with open(os.path.join(built, "tiny_train_step.hlo.txt")) as f:
+        head = f.read(200)
+    assert "HloModule" in head, head
+
+
+def test_train_step_manifest_signature(built):
+    man = _manifest(built, "tiny_train_step")
+    params = M.init_model(jax.random.PRNGKey(0), TINY)
+    n_p = len(jax.tree.leaves(params))
+    assert len(man["inputs"]) == 3 * n_p + 5
+    assert len(man["outputs"]) == 3 * n_p + 1
+    # trailing inputs: step, lr, key, images, labels
+    tail = man["inputs"][-5:]
+    assert tail[0]["dtype"] == "i32" and tail[0]["shape"] == []
+    assert tail[1]["dtype"] == "f32" and tail[1]["shape"] == []
+    assert tail[2]["dtype"] == "u32" and tail[2]["shape"] == [2]
+    assert tail[3]["shape"] == [2, 8, 8, 3]
+    assert tail[4]["shape"] == [2, 3]
+    # loss is the last output, scalar f32
+    assert man["outputs"][-1]["shape"] == []
+    assert man["outputs"][-1]["dtype"] == "f32"
+
+
+def test_manifest_order_matches_flatten_order(built):
+    man = _manifest(built, "tiny_init")
+    params = M.init_model(jax.random.PRNGKey(0), TINY)
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    assert len(man["outputs"]) == len(flat)
+    for spec, (path, leaf) in zip(man["outputs"], flat):
+        assert spec["shape"] == list(leaf.shape), spec["name"]
+        name = aot._path_str(path)
+        assert spec["name"] == name
+
+
+def test_metadata_fields(built):
+    man = _manifest(built, "tiny_train_step")
+    assert man["batch"] == 2
+    assert man["img_size"] == 8
+    assert man["n_classes"] == 3
+    assert man["model"] == "tiny-aot"
+    assert man["params"] == M.count_params_analytic(TINY)
+
+
+def test_eval_manifest(built):
+    man = _manifest(built, "tiny_eval")
+    assert man["outputs"][0]["shape"] == [aot.EVAL_BATCH, 3]
+
+
+def test_train_step_numerics_via_python_exec(built):
+    """The exact lowered function reduces loss when iterated (the Rust
+    trainer does the same through PJRT)."""
+    params = M.init_model(jax.random.PRNGKey(0), TINY)
+    m, v = T.init_opt_state(params)
+    ts = jax.jit(T.make_train_step(TINY))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    y = jax.nn.one_hot(jnp.array([0, 1]), 3)
+    key = jnp.zeros((2,), jnp.uint32)
+    first = None
+    for step in range(1, 9):
+        params, m, v, loss = ts(params, m, v, jnp.int32(step), jnp.float32(3e-3), key, x, y)
+        first = first if first is not None else float(loss)
+    assert float(loss) < first

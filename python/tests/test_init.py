@@ -1,0 +1,103 @@
+"""Initialization tests: variance preservation, mimetic attention, AdamW."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import attention as A
+from compile import layers as L
+from compile import train as T
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_variance_preserving_gain_identity():
+    """F = identity => alpha = E[x^2] = 1."""
+    assert abs(L._gain_for("identity") - 1.0) < 0.05
+
+
+def test_variance_preserving_gain_swish():
+    """F = swish => alpha = E[silu(x)^2] ~ 0.355 for x ~ N(0,1)."""
+    x = np.random.RandomState(0).randn(200000).astype(np.float32)
+    silu = x / (1 + np.exp(-x))
+    want = float(np.mean(silu * silu))
+    assert abs(L._gain_for("swish") - want) < 0.05, (L._gain_for("swish"), want)
+
+
+def test_grkan_layer_preserves_variance():
+    """With variance-preserving init, Var[GR-KAN fc1 output] ~ Var[input]."""
+    key = jax.random.PRNGKey(0)
+    d, dh, n_g = 64, 256, 8
+    p = L.init_grkan_ffn(key, d, dh, n_g)
+    x = jax.random.normal(jax.random.PRNGKey(1), (512, d))
+    h = L.rational_op(x, p["a1"], p["b1"], "flash", 64)
+    h = h @ p["fc1_w"]
+    ratio = float(jnp.var(h) / jnp.var(x))
+    assert 0.5 < ratio < 2.0, ratio
+
+
+def test_mimetic_qk_product_near_identity_plus_noise():
+    wq, wk = A.mimetic_qk(jax.random.PRNGKey(0), 64, alpha=0.7, beta=0.0)
+    prod = np.asarray(wq @ wk.T)
+    np.testing.assert_allclose(prod, 0.7 * np.eye(64), atol=1e-5)
+
+
+def test_mimetic_qk_with_noise_has_positive_diagonal_bias():
+    wq, wk = A.mimetic_qk(jax.random.PRNGKey(0), 64, alpha=0.7, beta=0.7)
+    prod = np.asarray(wq @ wk.T)
+    diag = np.mean(np.diag(prod))
+    off = np.mean(np.abs(prod - np.diag(np.diag(prod))))
+    assert diag > 3 * off, (diag, off)
+
+
+def test_attention_output_shape_and_finite():
+    p = A.init_attention(jax.random.PRNGKey(0), 32, 4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 32))
+    o = A.attention(p, x, 4)
+    assert o.shape == (2, 9, 32)
+    assert np.all(np.isfinite(np.asarray(o)))
+
+
+def test_adamw_decoupled_weight_decay():
+    """Weight decay applies even with zero gradient (decoupled)."""
+    p = {"w": jnp.ones((4,)), "ln": jnp.ones((4,))}
+    m = jax.tree.map(jnp.zeros_like, p)
+    v = jax.tree.map(jnp.zeros_like, p)
+    g = jax.tree.map(jnp.zeros_like, p)
+    mask = {"w": 1.0, "ln": 0.0}
+    p2, _, _ = T.adamw_update(p, m, v, g, jnp.int32(1), jnp.float32(0.1), mask)
+    assert float(p2["w"][0]) < 1.0          # decayed
+    assert float(p2["ln"][0]) == 1.0        # masked out
+
+
+def test_adamw_step_direction():
+    p = {"w": jnp.zeros((2,))}
+    m = {"w": jnp.zeros((2,))}
+    v = {"w": jnp.zeros((2,))}
+    g = {"w": jnp.array([1.0, -1.0])}
+    mask = {"w": 0.0}
+    p2, m2, v2 = T.adamw_update(p, m, v, g, jnp.int32(1), jnp.float32(0.01), mask)
+    got = np.asarray(p2["w"])
+    assert got[0] < 0 and got[1] > 0
+    np.testing.assert_allclose(np.abs(got), 0.01, rtol=1e-3)  # ~ lr * sign(g)
+
+
+def test_drop_path_scales_kept_samples():
+    x = jnp.ones((1000, 3))
+    y = L.drop_path(jax.random.PRNGKey(0), x, 0.25, train=True)
+    vals = np.unique(np.asarray(y).round(4))
+    assert set(vals.tolist()) <= {0.0, np.float32(1 / 0.75).round(4)}
+    # expectation preserved
+    assert abs(float(jnp.mean(y)) - 1.0) < 0.1
+
+
+def test_patch_embed_roundtrip_geometry():
+    p = L.init_patch_embed(jax.random.PRNGKey(0), 4, 3, 16)
+    img = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    t = L.patch_embed(p, img, 4)
+    assert t.shape == (2, 4, 16)
+    # identical patches map to identical tokens
+    tile = jnp.tile(img[:, :4, :4, :], (1, 2, 2, 1))
+    tt = L.patch_embed(p, tile, 4)
+    np.testing.assert_allclose(np.asarray(tt[:, 0]), np.asarray(tt[:, 3]), rtol=1e-5)

@@ -1,0 +1,164 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps shapes / dtypes / block sizes; every property asserts
+allclose against ``ref.py`` (and, for gradients, against jax autodiff of
+the reference forward).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import rational as rk
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _tols(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+def make_case(seed, b, n_rows, n_g, d_g, m1, n, dtype):
+    d = n_g * d_g
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = _rand(ks[0], (b, n_rows, d), dtype)
+    do = _rand(ks[1], (b, n_rows, d), dtype)
+    a = _rand(ks[2], (n_g, m1), dtype, 0.5)
+    bco = _rand(ks[3], (n_g, n), dtype, 0.5)
+    return x, do, a, bco
+
+
+shape_strategy = st.tuples(
+    st.integers(1, 3),       # batch
+    st.integers(1, 9),       # rows (sequence)
+    st.sampled_from([1, 2, 4, 8]),   # n_g
+    st.sampled_from([1, 2, 8, 16]),  # d_g
+    st.integers(2, 6),       # m+1
+    st.integers(1, 4),       # n
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**16), s_block=st.sampled_from([1, 4, 8, 32]))
+def test_fwd_matches_ref(shape, seed, s_block):
+    b, rows, n_g, d_g, m1, n = shape
+    x, _, a, bco = make_case(seed, b, rows, n_g, d_g, m1, n, jnp.float32)
+    got = rk.rational_fwd(x, a, bco, s_block=s_block)
+    want = ref.rational_fwd_ref(x, a, bco)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tols(jnp.float32))
+
+
+@settings(max_examples=12, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**16), s_block=st.sampled_from([1, 8, 32]))
+def test_bwd_flash_matches_ref(shape, seed, s_block):
+    b, rows, n_g, d_g, m1, n = shape
+    x, do, a, bco = make_case(seed, b, rows, n_g, d_g, m1, n, jnp.float32)
+    dx, da, db = rk.rational_bwd_flash(x, do, a, bco, s_block=s_block)
+    dx_r, da_r, db_r = ref.rational_bwd_ref(x, do, a, bco)
+    scale = max(1.0, float(jnp.max(jnp.abs(da_r))), float(jnp.max(jnp.abs(db_r))))
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_r), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(da) / scale, np.asarray(da_r) / scale, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(db) / scale, np.asarray(db_r) / scale, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(shape=shape_strategy, seed=st.integers(0, 2**16))
+def test_bwd_kat_matches_ref(shape, seed):
+    b, rows, n_g, d_g, m1, n = shape
+    x, do, a, bco = make_case(seed, b, rows, n_g, d_g, m1, n, jnp.float32)
+    dx, da, db = rk.rational_bwd_kat(x, do, a, bco, s_rows=1)
+    dx_r, da_r, db_r = ref.rational_bwd_ref(x, do, a, bco)
+    scale = max(1.0, float(jnp.max(jnp.abs(da_r))), float(jnp.max(jnp.abs(db_r))))
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_r), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(da) / scale, np.asarray(da_r) / scale, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(db) / scale, np.asarray(db_r) / scale, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fwd_dtypes(dtype):
+    x, _, a, bco = make_case(7, 2, 5, 8, 16, 6, 4, dtype)
+    got = rk.rational_fwd(x, a, bco, s_block=8)
+    want = ref.rational_fwd_ref(x, a, bco)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tols(dtype)
+    )
+
+
+def test_bwd_matches_autodiff():
+    """Kernel backward == jax.grad of the reference forward."""
+    x, do, a, bco = make_case(3, 2, 7, 4, 8, 6, 4, jnp.float32)
+    dx, da, db = rk.rational_bwd_flash(x, do, a, bco, s_block=8)
+    g = jax.grad(
+        lambda x, a, b: jnp.vdot(ref.rational_fwd_ref(x, a, b), do), argnums=(0, 1, 2)
+    )(x, a, bco)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(g[0]), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(g[1]), rtol=1e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(g[2]), rtol=1e-3, atol=2e-3)
+
+
+def test_padding_rows_not_multiple_of_block():
+    """Row counts that don't divide S_block exercise the zero-padding path."""
+    x, do, a, bco = make_case(11, 1, 13, 4, 8, 6, 4, jnp.float32)  # 13 rows, s_block 8
+    f = rk.rational_fwd(x, a, bco, s_block=8)
+    np.testing.assert_allclose(
+        np.asarray(f), np.asarray(ref.rational_fwd_ref(x, a, bco)), rtol=2e-4, atol=2e-4
+    )
+    dx, da, db = rk.rational_bwd_flash(x, do, a, bco, s_block=8)
+    dx_r, da_r, db_r = ref.rational_bwd_ref(x, do, a, bco)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(da_r), rtol=1e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_r), rtol=1e-3, atol=2e-3)
+
+
+def test_identity_init_is_identity():
+    a, b = ref.identity_init_coeffs()
+    a = jnp.tile(a[None], (8, 1))
+    b = jnp.tile(b[None], (8, 1))
+    x = jnp.linspace(-3, 3, 64, dtype=jnp.float32).reshape(1, 1, 64)
+    np.testing.assert_allclose(
+        np.asarray(rk.rational_fwd(x, a, b, s_block=1)), np.asarray(x), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_swish_init_approximates_silu():
+    a, b = ref.swish_init_coeffs()
+    a = jnp.tile(a[None], (4, 1))
+    b = jnp.tile(b[None], (4, 1))
+    x = jnp.linspace(-3, 3, 128, dtype=jnp.float32).reshape(1, 1, 128)
+    got = np.asarray(rk.rational_fwd(x, a, b, s_block=1))
+    want = np.asarray(jax.nn.silu(x))
+    assert np.max(np.abs(got - want)) < 0.12, np.max(np.abs(got - want))
+
+
+def test_safe_pau_no_nan_at_poles():
+    """Q = 1 + |A| >= 1 guarantees no poles — even at A(x) = 0 and huge x."""
+    a = jnp.ones((2, 6), jnp.float32)
+    b = jnp.ones((2, 4), jnp.float32) * -5.0
+    x = jnp.array([[[-1e2, 0.0, 1e-30, 1e2, -1e-30, 2.0, -2.0, 0.5]]], jnp.float32)
+    f = rk.rational_fwd(x, a, b, s_block=1)
+    assert np.all(np.isfinite(np.asarray(f)))
+    dx, da, db = rk.rational_bwd_flash(x, jnp.ones_like(x), a, b, s_block=1)
+    assert np.all(np.isfinite(np.asarray(dx)))
+    assert np.all(np.isfinite(np.asarray(da)))
+    assert np.all(np.isfinite(np.asarray(db)))
+
+
+def test_access_count_model():
+    """The analytic access-count model matches the paper's §4 formulas and
+    the claimed 1/(S_block*d_g) reduction factor."""
+    bnd = 1024 * 197 * 768
+    m1, n = 6, 4
+    kat = rk.kat_global_accesses(bnd, m1, n)
+    assert kat == 3 * (5 + 4 + 2) * bnd
+    s_block, d_g = 128, 96
+    fl = rk.flash_global_accesses(bnd, m1, n, s_block, d_g)
+    expect = round(3 * (1 + (5 + 4 + 1) / (s_block * d_g)) * bnd)
+    assert abs(fl - expect) <= 3 * (bnd // (s_block * d_g))
+    assert kat / fl > 10.0  # an order of magnitude fewer accesses

@@ -1,0 +1,136 @@
+"""Model-level tests: shapes, parameter counts, learning, KAT-vs-ViT wiring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = M.ModelConfig(
+    name="tiny-test", img_size=8, patch=4, d=32, depth=2, heads=2,
+    n_classes=5, s_block=8, drop_path=0.1,
+)
+TINY_VIT = M.ModelConfig(
+    name="tiny-vit-test", img_size=8, patch=4, d=32, depth=2, heads=2,
+    n_classes=5, ffn="mlp",
+)
+
+
+def test_forward_shapes():
+    params = M.init_model(jax.random.PRNGKey(0), TINY)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 8, 8, 3))
+    logits = M.forward(params, x, TINY)
+    assert logits.shape == (3, 5)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_param_count_analytic_matches_init():
+    for cfg in (TINY, TINY_VIT):
+        params = M.init_model(jax.random.PRNGKey(0), cfg)
+        assert M.count_params(params) == M.count_params_analytic(cfg)
+
+
+@pytest.mark.parametrize(
+    "name,expect_m",
+    [("kat-t", 5.7), ("kat-s", 22.1), ("kat-b", 86.6),
+     ("vit-t", 5.7), ("vit-s", 22.1), ("vit-b", 86.6)],
+)
+def test_paper_param_counts(name, expect_m):
+    """Paper Tables 4/6: 5.7M / 22.1M / 86.6M parameters."""
+    got = M.count_params_analytic(M.get_config(name)) / 1e6
+    assert abs(got - expect_m) / expect_m < 0.01, got
+
+
+def test_kat_and_vit_same_trunk_size():
+    """KAT adds only the rational coefficients over ViT (paper Table 1)."""
+    kat = M.count_params_analytic(M.get_config("kat-t"))
+    vit = M.count_params_analytic(M.get_config("vit-t"))
+    # 12 blocks x 2 rationals x 8 groups x 10 coeffs
+    assert kat - vit == 12 * 2 * 8 * 10
+
+
+def test_train_step_decreases_loss():
+    params = M.init_model(jax.random.PRNGKey(0), TINY)
+    m, v = T.init_opt_state(params)
+    ts = jax.jit(T.make_train_step(TINY))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 8, 3))
+    y = jax.nn.one_hot(jnp.array([0, 1, 2, 3]), 5)
+    key = jnp.zeros((2,), jnp.uint32)
+    losses = []
+    for step in range(1, 6):
+        params, m, v, loss = ts(params, m, v, jnp.int32(step), jnp.float32(3e-3), key, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    assert all(np.isfinite(losses))
+
+
+def test_kat_backward_variant_grads_agree():
+    """Both backward kernels produce (numerically close) model gradients.
+
+    Note: comparing *post-AdamW params* instead would be flaky — at step 1
+    AdamW reduces to lr*sign(g), amplifying ~1e-7 kernel differences on
+    near-zero gradients to full-lr differences.
+    """
+    cfg_kat = M.ModelConfig(**{**TINY.__dict__, "name": "tiny-katbwd", "backward": "kat"})
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    y = jax.nn.one_hot(jnp.array([0, 1]), 5)
+    grads = []
+    for cfg in (TINY, cfg_kat):
+        params = M.init_model(jax.random.PRNGKey(0), cfg)
+        g = jax.grad(lambda p: T.loss_fn(p, x, y, cfg, jax.random.PRNGKey(0))[0])(params)
+        grads.append(g)
+    for a, b in zip(jax.tree.leaves(grads[0]), jax.tree.leaves(grads[1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-5)
+
+
+def test_eval_deterministic_no_droppath():
+    params = M.init_model(jax.random.PRNGKey(0), TINY)
+    ev = jax.jit(T.make_eval_step(TINY))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    a = np.asarray(ev(params, x))
+    b = np.asarray(ev(params, x))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_droppath_changes_training_forward():
+    params = M.init_model(jax.random.PRNGKey(0), TINY)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 8, 8, 3))
+    k1 = jax.random.PRNGKey(2)
+    k2 = jax.random.PRNGKey(3)
+    a = np.asarray(M.forward(params, x, TINY, train=True, key=k1))
+    b = np.asarray(M.forward(params, x, TINY, train=True, key=k2))
+    assert not np.allclose(a, b)
+
+
+def test_grkan_vs_mlp_forward_differs():
+    pk = M.init_model(jax.random.PRNGKey(0), TINY)
+    pv = M.init_model(jax.random.PRNGKey(0), TINY_VIT)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    a = np.asarray(M.forward(pk, x, TINY))
+    b = np.asarray(M.forward(pv, x, TINY_VIT))
+    assert not np.allclose(a, b)
+
+
+def test_soft_xent_matches_hard_labels():
+    logits = jnp.array([[2.0, 0.0, -1.0], [0.0, 1.0, 0.0]])
+    hard = jax.nn.one_hot(jnp.array([0, 1]), 3)
+    want = -jnp.mean(
+        jnp.take_along_axis(jax.nn.log_softmax(logits), jnp.array([[0], [1]]), axis=1)
+    )
+    np.testing.assert_allclose(float(T.soft_xent(logits, hard)), float(want), rtol=1e-6)
+
+
+def test_decay_mask_excludes_norms_and_rationals():
+    params = M.init_model(jax.random.PRNGKey(0), TINY)
+    mask = T.decay_mask(params)
+    flat, _ = jax.tree_util.tree_flatten_with_path(mask)
+    for path, val in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", ""))) for k in path)
+        if any(t in name for t in ("ln1", "ln2", "ln_f", "cls", "pos", "a1", "b1", "a2", "b2")):
+            assert val == 0.0, name
+        if name.endswith(("fc1_w", "fc2_w", "head_w", "wq", "wk", "wv", "wo")):
+            assert val == 1.0, name

@@ -1,0 +1,49 @@
+"""TPU performance-model tests (L1 §Perf): VMEM footprint, HBM traffic,
+S_block selection, and the paper's access-reduction formula."""
+
+from compile.kernels import rational as rk
+
+
+def test_vmem_footprint_fits_paper_dims():
+    # Paper dims: d=768, 8 groups -> d_g=96; S_block=128.
+    bytes_ = rk.flash_bwd_vmem_bytes(128, 96, 6, 4)
+    assert bytes_ == 3 * 128 * 96 * 4 + 2 * 10 * 4
+    assert bytes_ < rk.VMEM_BYTES // 4  # comfortable double-buffer headroom
+
+
+def test_hbm_traffic_dominated_by_streaming():
+    rows, d = 1024 * 197, 768
+    total = rk.flash_bwd_hbm_bytes(rows, d, 6, 4, 8, 128)
+    stream = 3 * rows * d * 4
+    # the dA/dB revisit term is < 0.1% of traffic — Algorithm 2's point.
+    assert (total - stream) / total < 1e-3
+
+
+def test_access_reduction_factor_matches_paper():
+    rows, d, n_g, s_block = 1024 * 197, 768, 8, 128
+    d_g = d // n_g
+    kat = rk.kat_global_accesses(rows * d, 6, 4)
+    flash = rk.flash_global_accesses(rows * d, 6, 4, s_block, d_g)
+    # paper §4: reduction ~ (m+n+2) / (1 + (m+n+1)/(S_block*d_g)) ~ 11x in
+    # accesses, and the *atomic* count drops by S_block*d_g = 12288x.
+    assert 10.5 < kat / flash < 11.5
+    atomics_kat = rows * d * 10
+    atomics_flash = -(-rows // s_block) * n_g * 10
+    assert abs(atomics_kat / atomics_flash - s_block * d_g) / (s_block * d_g) < 0.01
+
+
+def test_kernel_is_bandwidth_bound_on_tpu():
+    # Arithmetic intensity << any TPU ridge point (~100+ FLOPs/byte).
+    ai = rk.flash_bwd_arithmetic_intensity(1024 * 197, 768, 6, 4, 8, 128)
+    assert ai < 10.0, ai
+
+
+def test_pick_s_block_scales_with_vmem():
+    # Small d_g -> huge blocks allowed; big d_g -> smaller blocks.
+    s_small = rk.pick_s_block(rows=10_000, d=128, n_g=8)    # d_g=16
+    s_big = rk.pick_s_block(rows=10_000, d=3072, n_g=8)     # d_g=384
+    assert s_small >= s_big
+    assert rk.flash_bwd_vmem_bytes(s_small, 16, 6, 4) <= rk.VMEM_BYTES // 4
+    assert rk.flash_bwd_vmem_bytes(s_big, 384, 6, 4) <= rk.VMEM_BYTES // 4
+    # never exceeds the row count
+    assert rk.pick_s_block(rows=64, d=128, n_g=8) <= 64

@@ -1,0 +1,35 @@
+//! Shared mini bench harness (offline environment: no criterion).
+//!
+//! Each `cargo bench` target regenerates one paper table/figure and, where
+//! a hot code path is involved, reports wall-clock statistics over
+//! repeated runs (mean ± 95% CI, min) in a criterion-like format.
+
+use std::time::Instant;
+
+use flashkat::util::stats::OnlineStats;
+
+/// Time `f` for `reps` measured runs after `warmup` runs.
+pub fn bench<F: FnMut()>(label: &str, warmup: usize, reps: usize, mut f: F) -> OnlineStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut st = OnlineStats::new();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        st.push(t0.elapsed().as_secs_f64());
+    }
+    println!(
+        "bench {label:<40} {:>10.3} ms (± {:.3})  min {:.3} ms  n={}",
+        st.mean() * 1e3,
+        st.ci95() * 1e3,
+        st.min() * 1e3,
+        st.count()
+    );
+    st
+}
+
+/// Artifacts present? Benches that need the AOT path skip gracefully.
+pub fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/.stamp").exists()
+}

@@ -1,0 +1,36 @@
+//! Bench: paper Figure 1 — ViT vs KAT vs FlashKAT fwd+bwd step time for
+//! the T/S/B model sizes (simulated H200, batch-scaled projection).
+//!
+//!     cargo bench --bench fig1_training_time
+
+mod bench_util;
+
+use flashkat::gpusim::model_cost::{paper_models, train_step_cost};
+use flashkat::gpusim::GpuConfig;
+use flashkat::report;
+
+fn main() {
+    let cfg = GpuConfig::h200();
+    // The figure itself:
+    print!("{}", report::fig1(&cfg, 16));
+
+    // And the per-op breakdown for the most interesting pair (T size),
+    // showing where the 10^2x gap lives (the rational bwd ops).
+    for name in ["vit-t", "kat-t", "flashkat-t"] {
+        let shape = paper_models().into_iter().find(|m| m.name == name).unwrap();
+        let cost = train_step_cost(&cfg, &shape, 16);
+        println!("\n{name}: fwd {:.1} ms, bwd {:.1} ms; top ops:", cost.fwd_secs * 1e3, cost.bwd_secs * 1e3);
+        let mut ops = cost.ops.clone();
+        ops.sort_by(|a, b| b.secs.partial_cmp(&a.secs).unwrap());
+        for op in ops.iter().take(5) {
+            println!("  {:<28} {:>9.2} ms", op.label, op.secs * 1e3);
+        }
+    }
+
+    // Timing of the estimator itself (the "bench" part).
+    bench_util::bench("fig1 cost model (9 models)", 1, 3, || {
+        for m in paper_models() {
+            let _ = train_step_cost(&cfg, &m, 8);
+        }
+    });
+}

@@ -1,0 +1,32 @@
+//! Bench: paper Table 1 — parameter/FLOP formulas for MLP, KAN, GR-KAN.
+//!
+//!     cargo bench --bench table1_flops
+
+mod bench_util;
+
+use flashkat::flops::{self, LayerDims};
+use flashkat::report;
+
+fn main() {
+    print!("{}", report::table1());
+
+    // Sweep: GR-KAN/MLP FLOP ratio across ViT layer widths — the paper's
+    // Insight-2 argument holds at every size.
+    println!("\nGR-KAN : MLP flops ratio across widths");
+    for d in [192usize, 384, 768, 1536] {
+        let dims = LayerDims { d_in: d, d_out: 4 * d };
+        let r = flops::grkan_flops(dims, 5, 4) as f64 / flops::mlp_flops(dims, 14) as f64;
+        println!("  d={d:<5} ratio {r:.4}");
+    }
+
+    bench_util::bench("table1 formulas (1k evaluations)", 2, 5, || {
+        let mut acc = 0u64;
+        for i in 1..1000usize {
+            let dims = LayerDims { d_in: i, d_out: 4 * i };
+            acc = acc
+                .wrapping_add(flops::grkan_flops(dims, 5, 4))
+                .wrapping_add(flops::kan_flops(dims, 8, 3, 14));
+        }
+        std::hint::black_box(acc);
+    });
+}

@@ -1,0 +1,41 @@
+//! Bench: paper Table 2 — artificial FLOP-loop sweep (1x..8x) over the
+//! group-wise rational forward and backward kernels; cycles/time must
+//! stay flat because the kernels are memory/atomic-bound.
+//!
+//!     cargo bench --bench table2_flops_scaling [--full]
+//!
+//! Default batch is 256 (a few seconds); `--full` uses the paper's 1024.
+
+mod bench_util;
+
+use flashkat::gpusim::kernels::{RationalBwdKatKernel, RationalDims};
+use flashkat::gpusim::{simulate, GpuConfig};
+use flashkat::report;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let dims = RationalDims {
+        batch: if full { 1024 } else { 256 },
+        ..RationalDims::paper()
+    };
+    let cfg = GpuConfig::rtx4060ti();
+    print!("{}", report::table2(&cfg, dims));
+
+    // Verify the flatness claim numerically.
+    let mut d1 = dims;
+    d1.flop_loops = 1;
+    let mut d8 = dims;
+    d8.flop_loops = 8;
+    let r1 = simulate(&cfg, &RationalBwdKatKernel::new(d1));
+    let r8 = simulate(&cfg, &RationalBwdKatKernel::new(d8));
+    let ratio = r8.elapsed_cycles as f64 / r1.elapsed_cycles as f64;
+    println!(
+        "\nbwd elapsed ratio 8x/1x FLOPs = {ratio:.4} (paper: 1.0000 — \"Cycles\" identical)"
+    );
+    assert!(ratio < 1.1, "backward should be FLOPs-insensitive");
+
+    bench_util::bench("simulate kat_bwd @ B=64", 1, 3, || {
+        let d = RationalDims { batch: 64, ..RationalDims::paper() };
+        let _ = simulate(&cfg, &RationalBwdKatKernel::new(d));
+    });
+}

@@ -1,0 +1,67 @@
+//! Bench: paper Table 3 + Figures 2-3 — KAT (Algorithm 1) vs FlashKAT
+//! (Algorithm 2) backward kernel, on the GPU simulator at paper dims,
+//! plus a CPU wall-clock sanity run of the actual AOT-compiled Pallas
+//! kernels through the PJRT runtime (structure check, NOT a GPU claim).
+//!
+//!     cargo bench --bench table3_kernel_compare [--full]
+
+mod bench_util;
+
+use flashkat::gpusim::kernels::RationalDims;
+use flashkat::gpusim::GpuConfig;
+use flashkat::report;
+use flashkat::runtime::{HostTensor, Runtime};
+use flashkat::util::rng::Pcg64;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let dims = RationalDims {
+        batch: if full { 1024 } else { 256 },
+        ..RationalDims::paper()
+    };
+    let cfg = GpuConfig::rtx4060ti();
+    print!("{}", report::table3(&cfg, dims));
+    print!("{}", report::fig2_fig3(&cfg, dims));
+
+    // S_block ablation (DESIGN.md §8): the access model says the atomic
+    // reduction factor is S_block * d_g.
+    println!("\nS_block ablation (flash bwd, simulated):");
+    for s in [32u64, 64, 128, 256, 512] {
+        let k = flashkat::gpusim::kernels::RationalBwdFlashKernel { dims, s_block: s };
+        let r = flashkat::gpusim::simulate(&cfg, &k);
+        println!(
+            "  S_block={s:<4} elapsed {:>9.2} ms  atomics {}",
+            r.elapsed_secs * 1e3,
+            r.atomic_lanes
+        );
+    }
+
+    if !bench_util::artifacts_available() {
+        println!("\n(artifacts/ missing — skipping AOT kernel wall-clock sanity)");
+        return;
+    }
+    let rt = Runtime::cpu("artifacts").expect("pjrt cpu");
+    let flash = rt.load("rational_bwd_flash").expect("flash artifact");
+    let kat = rt.load("rational_bwd_kat").expect("kat artifact");
+    let d: Vec<usize> = flash.manifest.raw.get("dims").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_usize().unwrap()).collect();
+    let n_el = d.iter().product::<usize>();
+    let mut rng = Pcg64::new(0);
+    let x: Vec<f32> = (0..n_el).map(|_| rng.normal_f32()).collect();
+    let dout: Vec<f32> = (0..n_el).map(|_| rng.normal_f32()).collect();
+    let a: Vec<f32> = (0..48).map(|_| rng.normal_f32()).collect();
+    let b: Vec<f32> = (0..32).map(|_| rng.normal_f32()).collect();
+    let inputs = [
+        HostTensor::F32 { shape: d.clone(), data: x },
+        HostTensor::F32 { shape: d.clone(), data: dout },
+        HostTensor::F32 { shape: vec![8, 6], data: a },
+        HostTensor::F32 { shape: vec![8, 4], data: b },
+    ];
+    println!("\nAOT kernel wall-clock on CPU PJRT (interpret-lowered; structure sanity only):");
+    bench_util::bench("rational_bwd_flash (AOT, CPU)", 1, 3, || {
+        let _ = flash.execute(&inputs).unwrap();
+    });
+    bench_util::bench("rational_bwd_kat   (AOT, CPU)", 1, 3, || {
+        let _ = kat.execute(&inputs).unwrap();
+    });
+}

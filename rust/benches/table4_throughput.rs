@@ -1,0 +1,43 @@
+//! Bench: paper Table 4 — training throughput (images/s) for the nine
+//! model variants on the simulated H200, with the paper's reference
+//! numbers side by side; plus the *measured* CPU throughput of the real
+//! micro-model train step through the full stack (3 steps, ±CI).
+//!
+//!     cargo bench --bench table4_throughput [--steps N]
+
+mod bench_util;
+
+use flashkat::config::TrainConfig;
+use flashkat::coordinator::Trainer;
+use flashkat::gpusim::GpuConfig;
+use flashkat::report;
+use flashkat::runtime::Runtime;
+
+fn main() {
+    print!("{}", report::table4(&GpuConfig::h200(), 16));
+
+    if !bench_util::artifacts_available() {
+        println!("(artifacts/ missing — skipping measured micro-model throughput)");
+        return;
+    }
+    let steps: usize = std::env::args()
+        .skip_while(|a| a != "--steps")
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    println!("\nmeasured end-to-end micro-model training throughput (CPU, full stack):");
+    let rt = Runtime::cpu("artifacts").expect("pjrt");
+    for tag in ["vit_micro", "kat_micro"] {
+        let cfg = TrainConfig { model: tag.into(), steps, log_every: 0, ..Default::default() };
+        let tr = Trainer::new(&rt, tag, cfg).expect("artifacts");
+        let rep = tr.train(None).expect("train");
+        println!(
+            "  {tag:<12} {:>8.2} (± {:.2}) img/s over {steps} steps, loss {:.3} -> {:.3}",
+            rep.throughput_mean,
+            rep.throughput_ci95,
+            rep.first_loss(),
+            rep.final_loss()
+        );
+    }
+    println!("(CPU interpret-mode numbers validate plumbing; GPU claims live in the sim rows)");
+}

@@ -1,0 +1,50 @@
+//! Bench: paper Tables 5/8 — gradient rounding error of Algorithm 1 vs
+//! Algorithm 2 accumulation (f32 vs f64 oracle), with the chain-length
+//! scaling study that connects our CPU-scaled dims to the paper's.
+//!
+//!     cargo bench --bench table5_rounding [--full]
+
+mod bench_util;
+
+use flashkat::rational::accumulate::{backward, Strategy};
+use flashkat::rational::experiment::{run, RoundingConfig};
+use flashkat::rational::Coeffs;
+use flashkat::report;
+use flashkat::util::rng::Pcg64;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let cfg = RoundingConfig {
+        rows: if full { 96 * 768 } else { 24 * 768 },
+        passes: if full { 10 } else { 4 },
+        ..Default::default()
+    };
+    print!("{}", report::table5(&cfg));
+
+    // Chain-length scaling: the improvement ratio grows with rows toward
+    // the paper's ~100x at rows = 201,728.
+    println!("\nimprovement vs accumulation chain length (2 passes each):");
+    for rows in [2048usize, 8192, 24 * 768] {
+        let c = RoundingConfig { rows, passes: 2, ..Default::default() };
+        let rep = run(&c);
+        println!(
+            "  rows={rows:<7} dA {:>6.1}x   dB {:>5.1}x",
+            rep.improvement_da(),
+            rep.improvement_db()
+        );
+    }
+
+    // Hot-path timing of both accumulation strategies.
+    let rows = 8192;
+    let d = 768;
+    let mut rng = Pcg64::new(0);
+    let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+    let dout: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+    let coeffs = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+    bench_util::bench("bwd sequential (Alg1 order) 8192x768", 1, 3, || {
+        let _ = backward(&x, &dout, rows, d, &coeffs, Strategy::Sequential);
+    });
+    bench_util::bench("bwd block-tree  (Alg2)      8192x768", 1, 3, || {
+        let _ = backward(&x, &dout, rows, d, &coeffs, Strategy::BlockTree { s_block: 128 });
+    });
+}

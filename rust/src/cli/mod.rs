@@ -1,0 +1,125 @@
+//! Minimal CLI argument parser (offline environment: no clap).
+//!
+//! Grammar: `flashkat <command> [positional...] [--flag value | --flag]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut args = Args { command, ..Default::default() };
+        while let Some(a) = it.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                if flag.is_empty() {
+                    bail!("empty flag");
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.flags.insert(flag.to_string(), v);
+                } else {
+                    args.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn flag_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn commands_positional_flags() {
+        let a = parse("report table3 --gpu h200 --b-sim=32 --verbose");
+        assert_eq!(a.command, "report");
+        assert_eq!(a.positional, vec!["table3"]);
+        assert_eq!(a.flag("gpu"), Some("h200"));
+        assert_eq!(a.flag_usize("b-sim", 8).unwrap(), 32);
+        assert!(a.flag_bool("verbose"));
+        assert!(!a.flag_bool("quiet"));
+        assert_eq!(a.flag_str("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn flag_value_styles_equivalent() {
+        let a = parse("t --x=1");
+        let b = parse("t --x 1");
+        assert_eq!(a.flag("x"), b.flag("x"));
+    }
+
+    #[test]
+    fn numeric_errors() {
+        let a = parse("t --n abc");
+        assert!(a.flag_usize("n", 0).is_err());
+        assert!(a.flag_f64("n", 0.0).is_err());
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "");
+    }
+
+    #[test]
+    fn negative_numbers_not_eaten_as_flags() {
+        let a = parse("t --lr 0.5 pos1");
+        assert_eq!(a.flag_f64("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+}

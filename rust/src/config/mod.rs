@@ -1,0 +1,302 @@
+//! Configuration system: model variants (paper Table 6), training
+//! hyperparameters (paper Table 7), and JSON (de)serialization so runs are
+//! reproducible from config files.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Model architecture variant (paper Table 6 + CPU-scale micro).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub img_size: usize,
+    pub patch: usize,
+    pub in_ch: usize,
+    pub d: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub mlp_ratio: usize,
+    pub n_classes: usize,
+    /// "grkan" (KAT) or "mlp" (ViT/DeiT).
+    pub ffn: String,
+    pub n_groups: usize,
+    /// "flash" (Algorithm 2) or "kat" (Algorithm 1).
+    pub backward: String,
+    pub drop_path: f64,
+}
+
+impl ModelConfig {
+    pub fn preset(name: &str) -> Result<Self> {
+        let base = Self {
+            name: name.to_string(),
+            img_size: 224,
+            patch: 16,
+            in_ch: 3,
+            d: 192,
+            depth: 12,
+            heads: 3,
+            mlp_ratio: 4,
+            n_classes: 1000,
+            ffn: "grkan".into(),
+            n_groups: 8,
+            backward: "flash".into(),
+            drop_path: 0.1,
+        };
+        Ok(match name {
+            "kat-t" => base,
+            "kat-s" => Self { d: 384, heads: 6, ..base },
+            "kat-b" => Self { d: 768, heads: 12, drop_path: 0.4, ..base },
+            "vit-t" => Self { ffn: "mlp".into(), ..base },
+            "vit-s" => Self { d: 384, heads: 6, ffn: "mlp".into(), ..base },
+            "vit-b" => Self { d: 768, heads: 12, ffn: "mlp".into(), ..base },
+            "kat-micro" => Self {
+                img_size: 32,
+                patch: 4,
+                d: 128,
+                depth: 4,
+                heads: 4,
+                n_classes: 10,
+                drop_path: 0.05,
+                ..base
+            },
+            "vit-micro" => Self {
+                img_size: 32,
+                patch: 4,
+                d: 128,
+                depth: 4,
+                heads: 4,
+                n_classes: 10,
+                ffn: "mlp".into(),
+                drop_path: 0.05,
+                ..base
+            },
+            other => return Err(anyhow!("unknown model preset {other:?}")),
+        })
+    }
+
+    pub fn n_patches(&self) -> usize {
+        (self.img_size / self.patch).pow(2)
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.n_patches() + 1
+    }
+
+    /// Analytic parameter count (mirrors python `count_params_analytic`).
+    pub fn param_count(&self) -> usize {
+        let (d, dh) = (self.d, self.d * self.mlp_ratio);
+        let patch = (self.patch * self.patch * self.in_ch + 1) * d;
+        let embed = d + self.n_tokens() * d;
+        let attn = 4 * d * d + 4 * d;
+        let ln = 2 * d;
+        let mut ffn = d * dh + dh + dh * d + d;
+        if self.ffn == "grkan" {
+            ffn += 2 * self.n_groups * 10;
+        }
+        let block = ln + attn + ln + ffn;
+        let head = d * self.n_classes + self.n_classes;
+        patch + embed + self.depth * block + ln + head
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("img_size".into(), Json::Int(self.img_size as i64)),
+            ("patch".into(), Json::Int(self.patch as i64)),
+            ("in_ch".into(), Json::Int(self.in_ch as i64)),
+            ("d".into(), Json::Int(self.d as i64)),
+            ("depth".into(), Json::Int(self.depth as i64)),
+            ("heads".into(), Json::Int(self.heads as i64)),
+            ("mlp_ratio".into(), Json::Int(self.mlp_ratio as i64)),
+            ("n_classes".into(), Json::Int(self.n_classes as i64)),
+            ("ffn".into(), Json::Str(self.ffn.clone())),
+            ("n_groups".into(), Json::Int(self.n_groups as i64)),
+            ("backward".into(), Json::Str(self.backward.clone())),
+            ("drop_path".into(), Json::Num(self.drop_path)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let s = |k: &str| -> Result<String> {
+            Ok(v.get(k).and_then(Json::as_str).ok_or_else(|| anyhow!("missing {k}"))?.to_string())
+        };
+        let u = |k: &str| -> Result<usize> {
+            v.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("missing {k}"))
+        };
+        Ok(Self {
+            name: s("name")?,
+            img_size: u("img_size")?,
+            patch: u("patch")?,
+            in_ch: u("in_ch")?,
+            d: u("d")?,
+            depth: u("depth")?,
+            heads: u("heads")?,
+            mlp_ratio: u("mlp_ratio")?,
+            n_classes: u("n_classes")?,
+            ffn: s("ffn")?,
+            n_groups: u("n_groups")?,
+            backward: s("backward")?,
+            drop_path: v.get("drop_path").and_then(Json::as_f64).unwrap_or(0.1),
+        })
+    }
+}
+
+/// Training hyperparameters (paper Table 7 defaults, scaled knobs for the
+/// CPU-scale end-to-end runs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    pub model: String,
+    pub steps: usize,
+    pub batch: usize,
+    pub base_lr: f64,
+    pub warmup_steps: usize,
+    pub weight_decay: f64,
+    pub label_smoothing: f64,
+    pub mixup_alpha: f64,
+    pub cutmix_alpha: f64,
+    pub mix_switch_prob: f64,
+    pub erase_prob: f64,
+    pub ema_decay: f64,
+    pub seed: u64,
+    /// Evaluate every N steps (0 = only at end).
+    pub eval_every: usize,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        // Paper Table 7, with steps scaled for CPU runs.
+        Self {
+            model: "kat-micro".into(),
+            steps: 300,
+            batch: 32,
+            base_lr: 1e-3,
+            warmup_steps: 25,
+            weight_decay: 0.05,
+            label_smoothing: 0.1,
+            mixup_alpha: 0.8,
+            cutmix_alpha: 1.0,
+            mix_switch_prob: 0.5,
+            erase_prob: 0.25,
+            ema_decay: 0.9999,
+            seed: 0,
+            eval_every: 0,
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("model".into(), Json::Str(self.model.clone())),
+            ("steps".into(), Json::Int(self.steps as i64)),
+            ("batch".into(), Json::Int(self.batch as i64)),
+            ("base_lr".into(), Json::Num(self.base_lr)),
+            ("warmup_steps".into(), Json::Int(self.warmup_steps as i64)),
+            ("weight_decay".into(), Json::Num(self.weight_decay)),
+            ("label_smoothing".into(), Json::Num(self.label_smoothing)),
+            ("mixup_alpha".into(), Json::Num(self.mixup_alpha)),
+            ("cutmix_alpha".into(), Json::Num(self.cutmix_alpha)),
+            ("mix_switch_prob".into(), Json::Num(self.mix_switch_prob)),
+            ("erase_prob".into(), Json::Num(self.erase_prob)),
+            ("ema_decay".into(), Json::Num(self.ema_decay)),
+            ("seed".into(), Json::Int(self.seed as i64)),
+            ("eval_every".into(), Json::Int(self.eval_every as i64)),
+            ("log_every".into(), Json::Int(self.log_every as i64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = Self::default();
+        let f = |k: &str, dv: f64| v.get(k).and_then(Json::as_f64).unwrap_or(dv);
+        let u = |k: &str, dv: usize| v.get(k).and_then(Json::as_usize).unwrap_or(dv);
+        Ok(Self {
+            model: v
+                .get("model")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .unwrap_or(d.model.clone()),
+            steps: u("steps", d.steps),
+            batch: u("batch", d.batch),
+            base_lr: f("base_lr", d.base_lr),
+            warmup_steps: u("warmup_steps", d.warmup_steps),
+            weight_decay: f("weight_decay", d.weight_decay),
+            label_smoothing: f("label_smoothing", d.label_smoothing),
+            mixup_alpha: f("mixup_alpha", d.mixup_alpha),
+            cutmix_alpha: f("cutmix_alpha", d.cutmix_alpha),
+            mix_switch_prob: f("mix_switch_prob", d.mix_switch_prob),
+            erase_prob: f("erase_prob", d.erase_prob),
+            ema_decay: f("ema_decay", d.ema_decay),
+            seed: v.get("seed").and_then(Json::as_i64).unwrap_or(0) as u64,
+            eval_every: u("eval_every", d.eval_every),
+            log_every: u("log_every", d.log_every),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text).map_err(|e| anyhow!("{e}"))?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_param_counts() {
+        // Paper Tables 4/6: 5.7M / 22.1M / 86.6M.
+        for (name, want_m) in
+            [("kat-t", 5.7), ("kat-s", 22.1), ("kat-b", 86.6), ("vit-b", 86.6)]
+        {
+            let c = ModelConfig::preset(name).unwrap();
+            let got = c.param_count() as f64 / 1e6;
+            assert!((got - want_m).abs() / want_m < 0.01, "{name}: {got}M");
+        }
+    }
+
+    #[test]
+    fn unknown_preset_errors() {
+        assert!(ModelConfig::preset("kat-xxl").is_err());
+    }
+
+    #[test]
+    fn model_json_roundtrip() {
+        let c = ModelConfig::preset("kat-micro").unwrap();
+        let back = ModelConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn train_json_roundtrip_and_defaults() {
+        let c = TrainConfig { steps: 42, ..Default::default() };
+        let back = TrainConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, back);
+        // Missing keys fall back to defaults.
+        let sparse = TrainConfig::from_json(
+            &Json::parse(r#"{"model":"vit-micro","steps":7}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(sparse.model, "vit-micro");
+        assert_eq!(sparse.steps, 7);
+        assert_eq!(sparse.batch, TrainConfig::default().batch);
+    }
+
+    #[test]
+    fn token_geometry() {
+        let c = ModelConfig::preset("kat-t").unwrap();
+        assert_eq!(c.n_patches(), 196);
+        assert_eq!(c.n_tokens(), 197); // the paper's N=197
+        let m = ModelConfig::preset("kat-micro").unwrap();
+        assert_eq!(m.n_tokens(), 65);
+    }
+}

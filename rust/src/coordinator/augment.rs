@@ -1,0 +1,288 @@
+//! Data augmentation (paper Table 7 recipe): label smoothing, Mixup,
+//! CutMix (with 0.5 switch probability), and Random Erasing.  All operate
+//! on flat (B,H,W,C) image buffers and produce *soft* label distributions,
+//! which is why the L2 loss takes a full distribution per sample.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct AugmentConfig {
+    pub n_classes: usize,
+    pub img_size: usize,
+    pub channels: usize,
+    pub label_smoothing: f64,
+    pub mixup_alpha: f64,
+    pub cutmix_alpha: f64,
+    /// Probability of choosing CutMix over Mixup when mixing (paper: 0.5).
+    pub switch_prob: f64,
+    /// Probability of applying any mix at all.
+    pub mix_prob: f64,
+    pub erase_prob: f64,
+}
+
+impl AugmentConfig {
+    pub fn from_paper(n_classes: usize, img_size: usize) -> Self {
+        Self {
+            n_classes,
+            img_size,
+            channels: 3,
+            label_smoothing: 0.1,
+            mixup_alpha: 0.8,
+            cutmix_alpha: 1.0,
+            switch_prob: 0.5,
+            mix_prob: 1.0,
+            erase_prob: 0.25,
+        }
+    }
+
+    fn img_elems(&self) -> usize {
+        self.img_size * self.img_size * self.channels
+    }
+}
+
+/// Smooth hard labels into a distribution: 1-eps on the target,
+/// eps/(K-1) elsewhere.
+pub fn smooth_labels(labels: &[usize], n_classes: usize, eps: f64) -> Vec<f32> {
+    let off = (eps / (n_classes - 1) as f64) as f32;
+    let on = (1.0 - eps) as f32;
+    let mut out = vec![off; labels.len() * n_classes];
+    for (b, &y) in labels.iter().enumerate() {
+        debug_assert!(y < n_classes);
+        out[b * n_classes + y] = on;
+    }
+    out
+}
+
+/// Mixup (Zhang et al. 2017): convex combination of sample pairs.
+/// Pairs sample b with `perm[b]`; labels mix with the same lambda.
+pub fn mixup(
+    images: &mut [f32],
+    soft_labels: &mut [f32],
+    n_classes: usize,
+    img_elems: usize,
+    perm: &[usize],
+    lam: f32,
+) {
+    let b = perm.len();
+    let src_img = images.to_vec();
+    let src_lab = soft_labels.to_vec();
+    for i in 0..b {
+        let j = perm[i];
+        for k in 0..img_elems {
+            images[i * img_elems + k] =
+                lam * src_img[i * img_elems + k] + (1.0 - lam) * src_img[j * img_elems + k];
+        }
+        for k in 0..n_classes {
+            soft_labels[i * n_classes + k] =
+                lam * src_lab[i * n_classes + k] + (1.0 - lam) * src_lab[j * n_classes + k];
+        }
+    }
+}
+
+/// CutMix (Yun et al. 2019): paste a random rectangle from the paired
+/// sample; label weight = pasted-area fraction.  Returns the box used.
+#[allow(clippy::too_many_arguments)]
+pub fn cutmix(
+    images: &mut [f32],
+    soft_labels: &mut [f32],
+    n_classes: usize,
+    img_size: usize,
+    channels: usize,
+    perm: &[usize],
+    lam: f32,
+    rng: &mut Pcg64,
+) -> (usize, usize, usize, usize) {
+    let b = perm.len();
+    let img_elems = img_size * img_size * channels;
+    // Box with area (1-lam), centered uniformly (the paper's recipe).
+    let cut = ((1.0 - lam) as f64).sqrt();
+    let ch = ((img_size as f64 * cut).round() as usize).min(img_size);
+    let cw = ch;
+    let cy = rng.below(img_size.max(1));
+    let cx = rng.below(img_size.max(1));
+    let y0 = cy.saturating_sub(ch / 2);
+    let y1 = (cy + ch.div_ceil(2)).min(img_size);
+    let x0 = cx.saturating_sub(cw / 2);
+    let x1 = (cx + cw.div_ceil(2)).min(img_size);
+    let area = ((y1 - y0) * (x1 - x0)) as f32;
+    let lam_adj = 1.0 - area / (img_size * img_size) as f32;
+
+    let src_img = images.to_vec();
+    let src_lab = soft_labels.to_vec();
+    for i in 0..b {
+        let j = perm[i];
+        for y in y0..y1 {
+            for x in x0..x1 {
+                for c in 0..channels {
+                    let off = (y * img_size + x) * channels + c;
+                    images[i * img_elems + off] = src_img[j * img_elems + off];
+                }
+            }
+        }
+        for k in 0..n_classes {
+            soft_labels[i * n_classes + k] = lam_adj * src_lab[i * n_classes + k]
+                + (1.0 - lam_adj) * src_lab[j * n_classes + k];
+        }
+    }
+    (y0, y1, x0, x1)
+}
+
+/// Random Erasing (Zhong et al. 2020): per-image, with probability p,
+/// replace a random rectangle with Gaussian noise.
+pub fn random_erase(
+    images: &mut [f32],
+    batch: usize,
+    img_size: usize,
+    channels: usize,
+    prob: f64,
+    rng: &mut Pcg64,
+) -> usize {
+    let img_elems = img_size * img_size * channels;
+    let mut erased = 0;
+    for i in 0..batch {
+        if !rng.bernoulli(prob) {
+            continue;
+        }
+        erased += 1;
+        let area = rng.uniform_range(0.02, 0.33);
+        let aspect = rng.uniform_range(0.3, 3.3);
+        let h = (((img_size * img_size) as f64 * area * aspect).sqrt().round() as usize)
+            .clamp(1, img_size);
+        let w = (((img_size * img_size) as f64 * area / aspect).sqrt().round() as usize)
+            .clamp(1, img_size);
+        let y0 = rng.below(img_size - h + 1);
+        let x0 = rng.below(img_size - w + 1);
+        for y in y0..y0 + h {
+            for x in x0..x0 + w {
+                for c in 0..channels {
+                    images[i * img_elems + (y * img_size + x) * channels + c] =
+                        rng.normal_f32();
+                }
+            }
+        }
+    }
+    erased
+}
+
+/// Apply the paper's full augmentation recipe to a batch in place;
+/// returns the soft labels.
+pub fn apply(
+    cfg: &AugmentConfig,
+    images: &mut [f32],
+    labels: &[usize],
+    rng: &mut Pcg64,
+) -> Vec<f32> {
+    let b = labels.len();
+    let mut soft = smooth_labels(labels, cfg.n_classes, cfg.label_smoothing);
+
+    if b > 1 && rng.bernoulli(cfg.mix_prob) {
+        let mut perm: Vec<usize> = (0..b).collect();
+        rng.shuffle(&mut perm);
+        if rng.bernoulli(cfg.switch_prob) {
+            let lam = rng.beta_symmetric(cfg.cutmix_alpha) as f32;
+            cutmix(
+                images,
+                &mut soft,
+                cfg.n_classes,
+                cfg.img_size,
+                cfg.channels,
+                &perm,
+                lam,
+                rng,
+            );
+        } else {
+            let lam = rng.beta_symmetric(cfg.mixup_alpha) as f32;
+            mixup(images, &mut soft, cfg.n_classes, cfg.img_elems(), &perm, lam);
+        }
+    }
+    random_erase(images, b, cfg.img_size, cfg.channels, cfg.erase_prob, rng);
+    soft
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoothing_sums_to_one() {
+        let soft = smooth_labels(&[0, 3], 5, 0.1);
+        for b in 0..2 {
+            let s: f32 = soft[b * 5..(b + 1) * 5].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!((soft[0] - 0.9).abs() < 1e-6);
+        assert!((soft[1] - 0.025).abs() < 1e-6);
+        assert!((soft[5 + 3] - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mixup_preserves_label_mass_and_mixes_pixels() {
+        let mut images = vec![0.0f32; 2 * 4]; // 2 samples, 4 "pixels"
+        images[4..].fill(1.0);
+        let mut soft = smooth_labels(&[0, 1], 2, 0.0);
+        mixup(&mut images, &mut soft, 2, 4, &[1, 0], 0.25);
+        // sample 0 = 0.25*zeros + 0.75*ones
+        assert!((images[0] - 0.75).abs() < 1e-6);
+        assert!((images[4] - 0.25).abs() < 1e-6);
+        for b in 0..2 {
+            let s: f32 = soft[b * 2..(b + 1) * 2].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!((soft[0] - 0.25).abs() < 1e-6); // P(class0 | sample0)
+    }
+
+    #[test]
+    fn cutmix_label_weight_matches_area() {
+        let mut rng = Pcg64::new(3);
+        let img_size = 8;
+        let mut images = vec![0.0f32; 2 * 8 * 8 * 1];
+        images[64..].fill(1.0);
+        let mut soft = smooth_labels(&[0, 1], 2, 0.0);
+        let (y0, y1, x0, x1) =
+            cutmix(&mut images, &mut soft, 2, img_size, 1, &[1, 0], 0.5, &mut rng);
+        let area = ((y1 - y0) * (x1 - x0)) as f32 / 64.0;
+        // sample 0's pasted pixels came from sample 1 (ones)
+        let pasted: f32 = images[..64].iter().sum();
+        assert!((pasted - area * 64.0).abs() < 1e-4);
+        assert!((soft[1] - area).abs() < 1e-5); // P(class1 | sample0)
+    }
+
+    #[test]
+    fn erase_respects_probability_extremes() {
+        let mut rng = Pcg64::new(5);
+        let mut images = vec![0.5f32; 4 * 8 * 8 * 3];
+        assert_eq!(random_erase(&mut images, 4, 8, 3, 0.0, &mut rng), 0);
+        assert!(images.iter().all(|&v| v == 0.5));
+        let n = random_erase(&mut images, 4, 8, 3, 1.0, &mut rng);
+        assert_eq!(n, 4);
+        assert!(images.iter().any(|&v| v != 0.5));
+    }
+
+    #[test]
+    fn apply_full_recipe_outputs_valid_distributions() {
+        let cfg = AugmentConfig::from_paper(10, 8);
+        let mut rng = Pcg64::new(7);
+        let mut images = vec![0.1f32; 4 * 8 * 8 * 3];
+        let soft = apply(&cfg, &mut images, &[0, 1, 2, 3], &mut rng);
+        assert_eq!(soft.len(), 4 * 10);
+        for b in 0..4 {
+            let s: f32 = soft[b * 10..(b + 1) * 10].iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "{s}");
+            assert!(soft[b * 10..(b + 1) * 10].iter().all(|&p| p >= 0.0));
+        }
+        assert!(images.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn apply_without_mixing_keeps_smoothed_labels() {
+        let cfg = AugmentConfig {
+            mix_prob: 0.0,
+            erase_prob: 0.0,
+            ..AugmentConfig::from_paper(5, 4)
+        };
+        let mut rng = Pcg64::new(11);
+        let mut images = vec![0.0f32; 2 * 4 * 4 * 3];
+        let soft = apply(&cfg, &mut images, &[2, 4], &mut rng);
+        assert_eq!(soft, smooth_labels(&[2, 4], 5, 0.1));
+    }
+}

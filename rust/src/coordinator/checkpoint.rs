@@ -1,0 +1,129 @@
+//! Checkpointing: parameters + step to a simple self-describing binary
+//! format (magic, version, tensor table).  No external serde available in
+//! this environment, so the format is defined here and round-trip tested.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::HostTensor;
+
+const MAGIC: &[u8; 8] = b"FLSHKAT\x01";
+
+pub struct Checkpoint {
+    pub step: u64,
+    pub params: Vec<(String, HostTensor)>,
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = std::io::BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        write_u64(&mut w, self.step)?;
+        write_u64(&mut w, self.params.len() as u64)?;
+        for (name, t) in &self.params {
+            let data = t.as_f32().context("checkpoint supports f32 leaves")?;
+            write_u64(&mut w, name.len() as u64)?;
+            w.write_all(name.as_bytes())?;
+            write_u64(&mut w, t.shape().len() as u64)?;
+            for &d in t.shape() {
+                write_u64(&mut w, d as u64)?;
+            }
+            for &v in data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let f =
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let mut r = std::io::BufReader::new(f);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not a FlashKAT checkpoint", path.display());
+        }
+        let step = read_u64(&mut r)?;
+        let count = read_u64(&mut r)? as usize;
+        let mut params = Vec::with_capacity(count);
+        for _ in 0..count {
+            let name_len = read_u64(&mut r)? as usize;
+            if name_len > 1 << 16 {
+                bail!("corrupt checkpoint: name length {name_len}");
+            }
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let ndim = read_u64(&mut r)? as usize;
+            if ndim > 16 {
+                bail!("corrupt checkpoint: ndim {ndim}");
+            }
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut r)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            let mut buf = vec![0u8; n * 4];
+            r.read_exact(&mut buf)?;
+            for (i, c) in buf.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            params.push((String::from_utf8(name)?, HostTensor::F32 { shape, data }));
+        }
+        Ok(Self { step, params })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("fk_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ckpt");
+        let ck = Checkpoint {
+            step: 123,
+            params: vec![
+                ("a/w".into(), HostTensor::F32 { shape: vec![2, 3], data: vec![1.5; 6] }),
+                ("b".into(), HostTensor::F32 { shape: vec![], data: vec![-2.0] }),
+            ],
+        };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 123);
+        assert_eq!(back.params.len(), 2);
+        assert_eq!(back.params[0].0, "a/w");
+        assert_eq!(back.params[0].1.shape(), &[2, 3]);
+        assert_eq!(back.params[0].1.as_f32().unwrap(), &[1.5; 6]);
+        assert_eq!(back.params[1].1.as_f32().unwrap(), &[-2.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("fk_ckpt_g_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,77 @@
+//! Exponential moving average of model parameters (paper: decay 0.9999).
+//!
+//! Kept on the host (L3) — the coordinator owns parameter lifecycle; the
+//! device graph only computes the step.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::HostTensor;
+
+pub struct Ema {
+    pub decay: f32,
+    shadow: Vec<HostTensor>,
+}
+
+impl Ema {
+    pub fn new(params: &[HostTensor], decay: f32) -> Self {
+        Self { decay, shadow: params.to_vec() }
+    }
+
+    /// shadow = decay*shadow + (1-decay)*params  (f32 leaves only).
+    pub fn update(&mut self, params: &[HostTensor]) -> Result<()> {
+        if params.len() != self.shadow.len() {
+            bail!("EMA: {} leaves vs shadow {}", params.len(), self.shadow.len());
+        }
+        let d = self.decay;
+        for (s, p) in self.shadow.iter_mut().zip(params) {
+            let (s_data, p_data) = (s.as_f32_mut()?, p.as_f32()?);
+            if s_data.len() != p_data.len() {
+                bail!("EMA leaf size mismatch");
+            }
+            for (a, &b) in s_data.iter_mut().zip(p_data) {
+                *a = d * *a + (1.0 - d) * b;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn shadow(&self) -> &[HostTensor] {
+        &self.shadow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn leaf(v: f32, n: usize) -> HostTensor {
+        HostTensor::F32 { shape: vec![n], data: vec![v; n] }
+    }
+
+    #[test]
+    fn ema_tracks_target() {
+        let init = vec![leaf(0.0, 4)];
+        let mut ema = Ema::new(&init, 0.99);
+        let target = vec![leaf(1.0, 4)];
+        for _ in 0..1000 {
+            ema.update(&target).unwrap();
+        }
+        let v = ema.shadow()[0].as_f32().unwrap()[0];
+        assert!((v - 1.0).abs() < 1e-3, "{v}");
+    }
+
+    #[test]
+    fn single_update_formula() {
+        let mut ema = Ema::new(&[leaf(1.0, 1)], 0.9);
+        ema.update(&[leaf(2.0, 1)]).unwrap();
+        let v = ema.shadow()[0].as_f32().unwrap()[0];
+        assert!((v - 1.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mismatched_leaves_error() {
+        let mut ema = Ema::new(&[leaf(0.0, 2)], 0.9);
+        assert!(ema.update(&[leaf(0.0, 2), leaf(0.0, 2)]).is_err());
+        assert!(ema.update(&[leaf(0.0, 3)]).is_err());
+    }
+}

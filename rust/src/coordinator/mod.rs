@@ -1,0 +1,14 @@
+//! L3 training coordinator: the orchestration layer that drives the AOT
+//! train-step executable with the paper's full training recipe — data
+//! pipeline, Mixup/CutMix/Random-Erasing augmentation producing soft
+//! labels, label smoothing, cosine LR schedule with warmup, EMA of
+//! parameters, checkpointing, and throughput metrics with 95% CIs
+//! (paper Tables 4/7).
+
+pub mod augment;
+pub mod checkpoint;
+pub mod ema;
+pub mod schedule;
+pub mod trainer;
+
+pub use trainer::{TrainReport, Trainer};

@@ -1,0 +1,69 @@
+//! Learning-rate schedule: linear warmup then cosine decay (paper Table 7).
+
+#[derive(Clone, Copy, Debug)]
+pub struct CosineSchedule {
+    pub base_lr: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub min_lr: f64,
+}
+
+impl CosineSchedule {
+    pub fn new(base_lr: f64, warmup_steps: usize, total_steps: usize) -> Self {
+        Self { base_lr, warmup_steps, total_steps, min_lr: base_lr * 1e-2 }
+    }
+
+    /// LR at 1-based step `step`.
+    pub fn lr(&self, step: usize) -> f64 {
+        if self.total_steps == 0 {
+            return self.base_lr;
+        }
+        if step <= self.warmup_steps && self.warmup_steps > 0 {
+            return self.base_lr * step as f64 / self.warmup_steps as f64;
+        }
+        let t = (step - self.warmup_steps) as f64;
+        let total = (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f64;
+        let frac = (t / total).min(1.0);
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * frac).cos());
+        self.min_lr + (self.base_lr - self.min_lr) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = CosineSchedule::new(1e-3, 10, 100);
+        assert!((s.lr(1) - 1e-4).abs() < 1e-12);
+        assert!((s.lr(5) - 5e-4).abs() < 1e-12);
+        assert!((s.lr(10) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_decays_to_min() {
+        let s = CosineSchedule::new(1e-3, 10, 100);
+        assert!(s.lr(11) > s.lr(50));
+        assert!(s.lr(50) > s.lr(99));
+        assert!((s.lr(100) - s.min_lr).abs() < 1e-9);
+        // beyond the horizon stays at min
+        assert!((s.lr(200) - s.min_lr).abs() < 1e-9);
+    }
+
+    #[test]
+    fn halfway_is_half_amplitude() {
+        let s = CosineSchedule::new(2e-3, 0, 100);
+        let mid = s.lr(50);
+        let expect = s.min_lr + (2e-3 - s.min_lr) * 0.5;
+        assert!((mid - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_warmup_no_nan() {
+        let s = CosineSchedule::new(1e-3, 0, 10);
+        for step in 1..=10 {
+            assert!(s.lr(step).is_finite());
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! The training loop: drives the AOT `*_train_step` executable with the
+//! paper's recipe and measures throughput the way Table 4 does
+//! (images/second, mean ± 95% CI over step samples, loader excluded —
+//! here the loader is prefetched on a worker thread and timed separately).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::augment::{self, AugmentConfig};
+use super::checkpoint::Checkpoint;
+use super::ema::Ema;
+use super::schedule::CosineSchedule;
+use crate::config::TrainConfig;
+use crate::data::loader::Prefetcher;
+use crate::data::SynthSpec;
+use crate::runtime::{HostTensor, LoadedModule, Runtime};
+use crate::util::rng::Pcg64;
+use crate::util::stats::OnlineStats;
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    init: LoadedModule,
+    step_mod: LoadedModule,
+    eval_mod: LoadedModule,
+    /// Artifact tag, e.g. "kat_micro".
+    pub tag: String,
+    img_size: usize,
+    n_classes: usize,
+    batch: usize,
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub tag: String,
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    /// images/second, step time only (paper's metric).
+    pub throughput_mean: f64,
+    pub throughput_ci95: f64,
+    /// Fraction of wall time spent outside device execution (marshal+aug).
+    pub host_overhead: f64,
+    /// Held-out accuracy of the final raw parameters.
+    pub final_eval_acc: Option<f64>,
+    /// Held-out accuracy of the EMA shadow.  NOTE: at the paper's decay
+    /// (0.9999) the shadow needs >> 10k steps to move away from init —
+    /// for short runs judge `final_eval_acc`.
+    pub ema_eval_acc: Option<f64>,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+
+    pub fn first_loss(&self) -> f32 {
+        *self.losses.first().unwrap_or(&f32::NAN)
+    }
+}
+
+impl Trainer {
+    /// Load the `<tag>_init` / `<tag>_train_step` / `<tag>_eval` artifacts.
+    pub fn new(rt: &Runtime, tag: &str, cfg: TrainConfig) -> Result<Self> {
+        let init = rt.load(&format!("{tag}_init"))?;
+        let step_mod = rt.load(&format!("{tag}_train_step"))?;
+        let eval_mod = rt.load(&format!("{tag}_eval"))?;
+        let n_p = init.output_count();
+        if step_mod.input_count() != 3 * n_p + 5 {
+            bail!(
+                "{tag}: train_step has {} inputs, expected 3*{n_p}+5 (params,m,v,step,lr,key,x,y)",
+                step_mod.input_count()
+            );
+        }
+        let img_size = step_mod.manifest.meta_usize("img_size").context("img_size meta")?;
+        let n_classes = step_mod.manifest.meta_usize("n_classes").context("n_classes meta")?;
+        let batch = step_mod.manifest.meta_usize("batch").context("batch meta")?;
+        Ok(Self { cfg, init, step_mod, eval_mod, tag: tag.to_string(), img_size, n_classes, batch })
+    }
+
+    pub fn param_leaves(&self) -> usize {
+        self.init.output_count()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Initialize parameters on device (executes the `_init` artifact) and
+    /// zeroed optimizer state.
+    pub fn init_state(&self) -> Result<(Vec<HostTensor>, Vec<HostTensor>, Vec<HostTensor>)> {
+        let params = self.init.execute(&[])?;
+        let zeros: Vec<HostTensor> = self
+            .init
+            .manifest
+            .outputs
+            .iter()
+            .map(HostTensor::zeros)
+            .collect::<Result<_>>()?;
+        Ok((params, zeros.clone(), zeros))
+    }
+
+    /// One optimizer step; returns (new params, m, v, loss).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &self,
+        params: Vec<HostTensor>,
+        m: Vec<HostTensor>,
+        v: Vec<HostTensor>,
+        step: i32,
+        lr: f32,
+        key: [u32; 2],
+        images: Vec<f32>,
+        soft_labels: Vec<f32>,
+    ) -> Result<(Vec<HostTensor>, Vec<HostTensor>, Vec<HostTensor>, f32)> {
+        let n_p = self.param_leaves();
+        let mut inputs = Vec::with_capacity(3 * n_p + 5);
+        inputs.extend(params);
+        inputs.extend(m);
+        inputs.extend(v);
+        inputs.push(HostTensor::scalar_i32(step));
+        inputs.push(HostTensor::scalar_f32(lr));
+        inputs.push(HostTensor::key(key));
+        inputs.push(HostTensor::F32 {
+            shape: vec![self.batch, self.img_size, self.img_size, 3],
+            data: images,
+        });
+        inputs.push(HostTensor::F32 { shape: vec![self.batch, self.n_classes], data: soft_labels });
+
+        let mut outs = self.step_mod.execute(&inputs)?;
+        let loss = match outs.pop().context("loss output")? {
+            HostTensor::F32 { data, .. } => data[0],
+            other => bail!("loss has dtype {:?}", other.dtype()),
+        };
+        let v_new = outs.split_off(2 * n_p);
+        let m_new = outs.split_off(n_p);
+        Ok((outs, m_new, v_new, loss))
+    }
+
+    /// Top-1 accuracy of `params` on `n_batches` held-out synthetic batches.
+    ///
+    /// The dataset seed must match training (it defines the *classes*:
+    /// blob layouts and textures); held-out-ness comes from a sample-index
+    /// range no training run can reach.
+    pub fn evaluate(&self, params: &[HostTensor], n_batches: usize) -> Result<f64> {
+        const HELD_OUT_BASE: u64 = 1 << 40;
+        let eval_batch = self.eval_mod.manifest.meta_usize("batch").context("eval batch")?;
+        let ds = crate::data::SynthDataset::new(SynthSpec {
+            img_size: self.img_size,
+            n_classes: self.n_classes,
+            seed: self.cfg.seed,
+            ..Default::default()
+        });
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for bi in 0..n_batches {
+            let (images, labels) = ds.batch(HELD_OUT_BASE + (bi * eval_batch) as u64, eval_batch);
+            let mut inputs: Vec<HostTensor> = params.to_vec();
+            inputs.push(HostTensor::F32 {
+                shape: vec![eval_batch, self.img_size, self.img_size, 3],
+                data: images,
+            });
+            let outs = self.eval_mod.execute(&inputs)?;
+            let logits = outs[0].as_f32()?;
+            for (b, &y) in labels.iter().enumerate() {
+                let row = &logits[b * self.n_classes..(b + 1) * self.n_classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                correct += usize::from(pred == y);
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+
+    /// Run the full training loop.  `ckpt_path` saves final params if set.
+    pub fn train(&self, ckpt_path: Option<&Path>) -> Result<TrainReport> {
+        let cfg = &self.cfg;
+        let sched = CosineSchedule::new(cfg.base_lr, cfg.warmup_steps, cfg.steps);
+        let aug = AugmentConfig {
+            label_smoothing: cfg.label_smoothing,
+            mixup_alpha: cfg.mixup_alpha,
+            cutmix_alpha: cfg.cutmix_alpha,
+            switch_prob: cfg.mix_switch_prob,
+            erase_prob: cfg.erase_prob,
+            ..AugmentConfig::from_paper(self.n_classes, self.img_size)
+        };
+        let mut rng = Pcg64::new(cfg.seed);
+        let prefetch = Prefetcher::new(
+            SynthSpec { img_size: self.img_size, n_classes: self.n_classes, seed: cfg.seed, ..Default::default() },
+            self.batch,
+            2,
+        );
+
+        let (mut params, mut m, mut v) = self.init_state()?;
+        let mut ema = Ema::new(&params, cfg.ema_decay as f32);
+
+        let mut losses = Vec::with_capacity(cfg.steps);
+        let mut thp = OnlineStats::new();
+        let mut host_secs = 0.0f64;
+        let mut total_secs = 0.0f64;
+
+        for step in 1..=cfg.steps {
+            let t_host = Instant::now();
+            let mut batch = prefetch.next();
+            let soft = augment::apply(&aug, &mut batch.images, &batch.labels, &mut rng);
+            let lr = sched.lr(step) as f32;
+            let key = [rng.next_u32(), rng.next_u32()];
+            host_secs += t_host.elapsed().as_secs_f64();
+
+            let t_step = Instant::now();
+            let (p2, m2, v2, loss) =
+                self.step(params, m, v, step as i32, lr, key, batch.images, soft)?;
+            let dt = t_step.elapsed().as_secs_f64();
+            total_secs += dt;
+            thp.push(self.batch as f64 / dt);
+
+            params = p2;
+            m = m2;
+            v = v2;
+            if !loss.is_finite() {
+                bail!("{}: loss diverged at step {step}", self.tag);
+            }
+            losses.push(loss);
+
+            let t_host = Instant::now();
+            ema.update(&params)?;
+            host_secs += t_host.elapsed().as_secs_f64();
+
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                eprintln!(
+                    "[{}] step {step:>5}/{} loss {loss:.4} lr {lr:.2e} {:.1} img/s",
+                    self.tag,
+                    cfg.steps,
+                    self.batch as f64 / dt
+                );
+            }
+        }
+
+        let final_eval_acc = Some(self.evaluate(&params, 4)?);
+        let ema_eval_acc = Some(self.evaluate(ema.shadow(), 4)?);
+
+        if let Some(path) = ckpt_path {
+            let named: Vec<(String, HostTensor)> = self
+                .init
+                .manifest
+                .outputs
+                .iter()
+                .zip(ema.shadow())
+                .map(|(s, t)| (s.name.clone(), t.clone()))
+                .collect();
+            Checkpoint { step: cfg.steps as u64, params: named }.save(path)?;
+        }
+
+        Ok(TrainReport {
+            tag: self.tag.clone(),
+            steps: cfg.steps,
+            losses,
+            throughput_mean: thp.mean(),
+            throughput_ci95: thp.ci95(),
+            host_overhead: host_secs / (host_secs + total_secs).max(1e-9),
+            final_eval_acc,
+            ema_eval_acc,
+        })
+    }
+}

@@ -1,0 +1,144 @@
+//! Analytic parameter / FLOP counts (paper Table 1) for MLP, KAN, GR-KAN.
+//!
+//! These are the closed-form expressions the paper uses to argue that
+//! GR-KAN's FLOPs are within a hair of MLP's — which is exactly why FLOPs
+//! cannot explain the 123x slowdown (paper Insight 2).
+
+/// Layer dimensioning shared by all three layer types.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerDims {
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+/// MLP (ViT) layer: params = d_in*d_out; flops = FuncFLOPs*d_out + 2*d_in*d_out.
+pub fn mlp_params(d: LayerDims) -> u64 {
+    (d.d_in * d.d_out) as u64
+}
+
+pub fn mlp_flops(d: LayerDims, func_flops: u64) -> u64 {
+    func_flops * d.d_out as u64 + 2 * (d.d_in * d.d_out) as u64
+}
+
+/// B-spline KAN layer (Liu et al. 2024): G intervals, K spline order.
+/// params = d_in*d_out*(G+K+3);
+/// flops  = FuncFLOPs*d_in + d_in*d_out*[9K*(G+1.5K) + 2G - 2.5K + 3].
+pub fn kan_params(d: LayerDims, g: usize, k: usize) -> u64 {
+    (d.d_in * d.d_out) as u64 * (g + k + 3) as u64
+}
+
+pub fn kan_flops(d: LayerDims, g: usize, k: usize, func_flops: u64) -> u64 {
+    let gf = g as f64;
+    let kf = k as f64;
+    let per_edge = 9.0 * kf * (gf + 1.5 * kf) + 2.0 * gf - 2.5 * kf + 3.0;
+    func_flops * d.d_in as u64 + ((d.d_in * d.d_out) as f64 * per_edge) as u64
+}
+
+/// GR-KAN (KAT) layer: m/n polynomial degrees, g groups.
+/// params = d_in*d_out + (m + n*g + 1);
+/// flops  = (2m + 2n + 3)*d_in + 2*d_in*d_out.
+pub fn grkan_params(d: LayerDims, m: usize, n: usize, groups: usize) -> u64 {
+    (d.d_in * d.d_out) as u64 + (m + n * groups + 1) as u64
+}
+
+pub fn grkan_flops(d: LayerDims, m: usize, n: usize) -> u64 {
+    (2 * m + 2 * n + 3) as u64 * d.d_in as u64 + 2 * (d.d_in * d.d_out) as u64
+}
+
+/// One row of the reproduced Table 1.
+#[derive(Clone, Debug)]
+pub struct TableRow {
+    pub name: &'static str,
+    pub params: u64,
+    pub flops: u64,
+}
+
+/// Reproduce paper Table 1 for a given layer size with the paper's
+/// defaults: KAN G=8 intervals, K=3 order; GR-KAN m=5, n=4, 8 groups;
+/// activation FuncFLOPs ~= 14 (GELU-class estimate used by KAT).
+pub fn table1(d: LayerDims, func_flops: u64) -> Vec<TableRow> {
+    vec![
+        TableRow {
+            name: "MLP (ViT)",
+            params: mlp_params(d),
+            flops: mlp_flops(d, func_flops),
+        },
+        TableRow {
+            name: "KAN",
+            params: kan_params(d, 8, 3),
+            flops: kan_flops(d, 8, 3, func_flops),
+        },
+        TableRow {
+            name: "GR-KAN (KAT)",
+            params: grkan_params(d, 5, 4, 8),
+            flops: grkan_flops(d, 5, 4),
+        },
+    ]
+}
+
+/// Paper Insight 2: GR-KAN's activation FLOPs, (2m+2n+3)*d_in, are
+/// negligible next to the matmul term 2*d_in*d_out.
+pub fn grkan_activation_fraction(d: LayerDims, m: usize, n: usize) -> f64 {
+    let act = (2 * m + 2 * n + 3) as f64 * d.d_in as f64;
+    act / grkan_flops(d, m, n) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const D: LayerDims = LayerDims { d_in: 768, d_out: 3072 };
+
+    #[test]
+    fn mlp_formulas() {
+        assert_eq!(mlp_params(D), 768 * 3072);
+        assert_eq!(mlp_flops(D, 14), 14 * 3072 + 2 * 768 * 3072);
+    }
+
+    #[test]
+    fn kan_is_orders_of_magnitude_more_flops() {
+        // Paper: a KAN edge may require up to ~204 FLOPs vs MLP's 2.
+        let kan = kan_flops(D, 8, 3, 14);
+        let mlp = mlp_flops(D, 14);
+        let ratio = kan as f64 / mlp as f64;
+        assert!(ratio > 50.0, "ratio {ratio}");
+        // per-edge cost: 9K(G+1.5K)+2G-2.5K+3 with G=8,K=3 = 9*3*12.5+16-7.5+3 = 349
+        let per_edge = (kan - 14 * 768) / (768 * 3072);
+        assert_eq!(per_edge, 349);
+    }
+
+    #[test]
+    fn grkan_flops_close_to_mlp() {
+        // Paper Insight 2: GR-KAN ~= MLP in FLOPs (within ~1%).
+        let gr = grkan_flops(D, 5, 4) as f64;
+        let ml = mlp_flops(D, 14) as f64;
+        assert!((gr / ml - 1.0).abs() < 0.01, "{}", gr / ml);
+    }
+
+    #[test]
+    fn grkan_activation_share_is_negligible() {
+        let frac = grkan_activation_fraction(D, 5, 4);
+        assert!(frac < 0.005, "{frac}");
+    }
+
+    #[test]
+    fn grkan_params_close_to_mlp() {
+        let gr = grkan_params(D, 5, 4, 8);
+        let ml = mlp_params(D);
+        assert_eq!(gr - ml, 5 + 4 * 8 + 1);
+    }
+
+    #[test]
+    fn kan_param_blowup() {
+        // (G+K+3) = 14x MLP params with the defaults.
+        assert_eq!(kan_params(D, 8, 3), 14 * mlp_params(D));
+    }
+
+    #[test]
+    fn table1_rows() {
+        let rows = table1(D, 14);
+        assert_eq!(rows.len(), 3);
+        assert!(rows[1].flops > 10 * rows[0].flops); // KAN >> MLP
+        assert!(rows[2].flops < rows[0].flops * 102 / 100); // GR-KAN ~ MLP
+    }
+}

@@ -1,0 +1,275 @@
+//! Whole-model training-step cost composition (paper Fig 1 and Table 4).
+//!
+//! A transformer train step is decomposed into kernel launches (GEMMs,
+//! streaming ops, and the rational kernels), each simulated once per
+//! distinct shape and summed.  Backward GEMMs cost ~2x forward (dX and dW);
+//! the rational backward uses Algorithm 1 or Algorithm 2 per the variant.
+//!
+//! To keep simulation affordable the batch is scaled down to `b_sim` and
+//! elapsed time scaled back linearly — valid because every regime involved
+//! (HBM bandwidth, atomic serialization, issue throughput) is linear in
+//! the element count at these sizes; the latency floor is negligible.
+
+use super::config::GpuConfig;
+use super::engine::{simulate, Kernel};
+use super::kernels::{
+    GemmKernel, RationalBwdFlashKernel, RationalBwdKatKernel, RationalDims, RationalFwdKernel,
+    StreamKernel,
+};
+
+/// Which feed-forward the model uses, and (for GR-KAN) which backward.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ffn {
+    Mlp,
+    GrkanKat,
+    GrkanFlash,
+}
+
+/// Transformer shape for cost estimation (paper Table 6 variants).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelShape {
+    pub name: &'static str,
+    pub batch: u64,
+    pub tokens: u64,
+    pub d: u64,
+    pub depth: u64,
+    pub heads: u64,
+    pub mlp_ratio: u64,
+    pub n_groups: u32,
+    pub ffn: Ffn,
+}
+
+impl ModelShape {
+    pub fn kat(name: &'static str, d: u64, heads: u64, ffn: Ffn) -> Self {
+        Self { name, batch: 1024, tokens: 197, d, depth: 12, heads, mlp_ratio: 4, n_groups: 8, ffn }
+    }
+}
+
+/// The six Fig-1 models plus the FlashKAT variants of Table 4.
+pub fn paper_models() -> Vec<ModelShape> {
+    vec![
+        ModelShape::kat("vit-t", 192, 3, Ffn::Mlp),
+        ModelShape::kat("kat-t", 192, 3, Ffn::GrkanKat),
+        ModelShape::kat("flashkat-t", 192, 3, Ffn::GrkanFlash),
+        ModelShape::kat("vit-s", 384, 6, Ffn::Mlp),
+        ModelShape::kat("kat-s", 384, 6, Ffn::GrkanKat),
+        ModelShape::kat("flashkat-s", 384, 6, Ffn::GrkanFlash),
+        ModelShape::kat("vit-b", 768, 12, Ffn::Mlp),
+        ModelShape::kat("kat-b", 768, 12, Ffn::GrkanKat),
+        ModelShape::kat("flashkat-b", 768, 12, Ffn::GrkanFlash),
+    ]
+}
+
+/// Per-op cost line.
+#[derive(Clone, Debug)]
+pub struct OpCost {
+    pub label: String,
+    pub secs: f64,
+}
+
+/// Full train-step estimate (forward + backward, optimizer excluded like
+/// the paper's Fwd+Bwd measurement).
+#[derive(Clone, Debug)]
+pub struct StepCost {
+    pub model: &'static str,
+    pub fwd_secs: f64,
+    pub bwd_secs: f64,
+    pub ops: Vec<OpCost>,
+}
+
+impl StepCost {
+    pub fn total_secs(&self) -> f64 {
+        self.fwd_secs + self.bwd_secs
+    }
+
+    /// Training throughput in images/second (paper Table 4's metric).
+    pub fn throughput(&self, batch: u64) -> f64 {
+        batch as f64 / self.total_secs()
+    }
+}
+
+struct Estimator<'a> {
+    cfg: &'a GpuConfig,
+    scale: f64,
+    ops: Vec<OpCost>,
+    fwd: f64,
+    bwd: f64,
+}
+
+impl<'a> Estimator<'a> {
+    fn sim(&mut self, label: &str, kernel: &dyn Kernel, reps: f64, is_fwd: bool) -> f64 {
+        let r = simulate(self.cfg, kernel);
+        let secs = r.elapsed_secs * self.scale * reps;
+        self.ops.push(OpCost { label: format!("{label} x{reps:.0}"), secs });
+        if is_fwd {
+            self.fwd += secs;
+        } else {
+            self.bwd += secs;
+        }
+        secs
+    }
+}
+
+/// Estimate one fwd+bwd step of `shape` on `cfg`, simulating at batch
+/// `b_sim` and scaling elapsed time by `batch / b_sim`.
+pub fn train_step_cost(cfg: &GpuConfig, shape: &ModelShape, b_sim: u64) -> StepCost {
+    let b_sim = b_sim.min(shape.batch).max(1);
+    let scale = shape.batch as f64 / b_sim as f64;
+    let mut est = Estimator { cfg, scale, ops: Vec::new(), fwd: 0.0, bwd: 0.0 };
+
+    let (bn, d, n, h) = (b_sim * shape.tokens, shape.d, shape.tokens, shape.heads);
+    let dh = d / h;
+    let d_ff = d * shape.mlp_ratio;
+    let depth = shape.depth as f64;
+    let f32b = 4;
+
+    // --- attention + norms, per layer (identical for all variants) ---
+    // LayerNorm x2 per layer, fwd and bwd.
+    let ln = StreamKernel {
+        label: "layernorm".into(),
+        bytes_read: bn * d * f32b,
+        bytes_write: bn * d * f32b,
+        alu_per_elem: 8,
+    };
+    est.sim("ln fwd", &ln, 2.0 * depth, true);
+    est.sim("ln bwd", &ln, 2.0 * depth, false);
+
+    // QKV projection (one fused gemm), output projection.
+    let qkv = GemmKernel { m: bn, n: 3 * d, k: d, count: 1 };
+    let proj = GemmKernel { m: bn, n: d, k: d, count: 1 };
+    est.sim("qkv fwd", &qkv, depth, true);
+    est.sim("qkv bwd", &qkv, 2.0 * depth, false);
+    est.sim("proj fwd", &proj, depth, true);
+    est.sim("proj bwd", &proj, 2.0 * depth, false);
+
+    // Attention scores and weighted sum (batched over B*heads).
+    let scores = GemmKernel { m: n, n, k: dh, count: b_sim * h };
+    let av = GemmKernel { m: n, n: dh, k: n, count: b_sim * h };
+    est.sim("scores fwd", &scores, depth, true);
+    est.sim("scores bwd", &scores, 2.0 * depth, false);
+    est.sim("attn-v fwd", &av, depth, true);
+    est.sim("attn-v bwd", &av, 2.0 * depth, false);
+    let softmax = StreamKernel {
+        label: "softmax".into(),
+        bytes_read: b_sim * h * n * n * f32b,
+        bytes_write: b_sim * h * n * n * f32b,
+        alu_per_elem: 12,
+    };
+    est.sim("softmax fwd", &softmax, depth, true);
+    est.sim("softmax bwd", &softmax, depth, false);
+
+    // --- feed-forward ---
+    let fc1 = GemmKernel { m: bn, n: d_ff, k: d, count: 1 };
+    let fc2 = GemmKernel { m: bn, n: d, k: d_ff, count: 1 };
+    est.sim("fc1 fwd", &fc1, depth, true);
+    est.sim("fc1 bwd", &fc1, 2.0 * depth, false);
+    est.sim("fc2 fwd", &fc2, depth, true);
+    est.sim("fc2 bwd", &fc2, 2.0 * depth, false);
+
+    match shape.ffn {
+        Ffn::Mlp => {
+            let gelu = StreamKernel {
+                label: "gelu".into(),
+                bytes_read: bn * d_ff * f32b,
+                bytes_write: bn * d_ff * f32b,
+                alu_per_elem: 16,
+            };
+            est.sim("gelu fwd", &gelu, depth, true);
+            est.sim("gelu bwd", &gelu, depth, false);
+        }
+        Ffn::GrkanKat | Ffn::GrkanFlash => {
+            // Two rationals per block: on d (pre-fc1) and on d_ff (pre-fc2).
+            for (label, width) in [("rational(d)", d), ("rational(4d)", d_ff)] {
+                let dims = RationalDims {
+                    batch: b_sim,
+                    seq: shape.tokens,
+                    d: width,
+                    n_groups: shape.n_groups,
+                    m1: 6,
+                    n: 4,
+                    flop_loops: 1,
+                };
+                est.sim(&format!("{label} fwd"), &RationalFwdKernel::new(dims), depth, true);
+                if shape.ffn == Ffn::GrkanKat {
+                    est.sim(
+                        &format!("{label} bwd[alg1]"),
+                        &RationalBwdKatKernel::new(dims),
+                        depth,
+                        false,
+                    );
+                } else {
+                    est.sim(
+                        &format!("{label} bwd[alg2]"),
+                        &RationalBwdFlashKernel::new(dims),
+                        depth,
+                        false,
+                    );
+                }
+            }
+        }
+    }
+
+    StepCost { model: shape.name, fwd_secs: est.fwd, bwd_secs: est.bwd, ops: est.ops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn h200() -> GpuConfig {
+        GpuConfig::h200()
+    }
+
+    #[test]
+    fn kat_orders_of_magnitude_slower_than_vit() {
+        // Paper Fig 1: KAT-T is ~102x slower than ViT-T per fwd+bwd step.
+        let cfg = h200();
+        let vit = train_step_cost(&cfg, &ModelShape::kat("vit-t", 192, 3, Ffn::Mlp), 16);
+        let kat = train_step_cost(&cfg, &ModelShape::kat("kat-t", 192, 3, Ffn::GrkanKat), 16);
+        let ratio = kat.total_secs() / vit.total_secs();
+        assert!(ratio > 20.0, "ratio {ratio:.1}");
+    }
+
+    #[test]
+    fn flashkat_closes_most_of_the_gap() {
+        // Paper Table 4 / Limitations: FlashKAT within ~25-50% of ViT.
+        let cfg = h200();
+        let vit = train_step_cost(&cfg, &ModelShape::kat("vit-t", 192, 3, Ffn::Mlp), 16);
+        let flash = train_step_cost(&cfg, &ModelShape::kat("fk-t", 192, 3, Ffn::GrkanFlash), 16);
+        let ratio = flash.total_secs() / vit.total_secs();
+        assert!(ratio < 3.0, "ratio {ratio:.2}");
+        assert!(ratio > 1.0, "FlashKAT shouldn't be faster than ViT ({ratio:.2})");
+    }
+
+    #[test]
+    fn backward_dominates_kat_step() {
+        // Paper Insight 3: the backward pass dominates KAT training time.
+        let cfg = h200();
+        let kat = train_step_cost(&cfg, &ModelShape::kat("kat-t", 192, 3, Ffn::GrkanKat), 16);
+        assert!(kat.bwd_secs > 10.0 * kat.fwd_secs);
+    }
+
+    #[test]
+    fn bigger_models_slower() {
+        let cfg = h200();
+        let t = train_step_cost(&cfg, &ModelShape::kat("vit-t", 192, 3, Ffn::Mlp), 8);
+        let b = train_step_cost(&cfg, &ModelShape::kat("vit-b", 768, 12, Ffn::Mlp), 8);
+        assert!(b.total_secs() > 2.0 * t.total_secs());
+    }
+
+    #[test]
+    fn throughput_metric() {
+        let sc = StepCost { model: "x", fwd_secs: 0.05, bwd_secs: 0.05, ops: vec![] };
+        assert!((sc.throughput(1024) - 10240.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batch_scaling_roughly_linear() {
+        // The b_sim scaling assumption: per-image cost stable across b_sim.
+        let cfg = h200();
+        let a = train_step_cost(&cfg, &ModelShape::kat("kat-t", 192, 3, Ffn::GrkanKat), 8);
+        let b = train_step_cost(&cfg, &ModelShape::kat("kat-t", 192, 3, Ffn::GrkanKat), 32);
+        let ratio = a.total_secs() / b.total_secs();
+        assert!((0.7..1.4).contains(&ratio), "{ratio}");
+    }
+}

@@ -1,0 +1,167 @@
+//! Warp-state accounting and the simulation report.
+
+use crate::util::stats::{human_count, human_time};
+
+/// Nsight Compute warp-state vocabulary (the paper's Figures 2-3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WarpState {
+    /// "Computing - Selected": the warp issues an instruction.
+    Selected,
+    /// Waiting on a global-memory (L2/HBM) dependency — the paper's
+    /// dominant stall for KAT's backward pass.
+    LongScoreboard,
+    /// Waiting on a shared-memory dependency.
+    ShortScoreboard,
+    /// Waiting on a fixed-latency ALU dependency.
+    Wait,
+    /// Ready but another warp was selected (issue-port contention).
+    NotSelected,
+    /// Issue blocked because the load/store unit queue is full.
+    LgThrottle,
+    /// Memory-IO pipe throttled (we fold texture/special into this).
+    MioThrottle,
+    /// Waiting to drain stores at exit.
+    Drain,
+    /// Waiting at a block barrier.
+    Barrier,
+}
+
+pub const ALL_STATES: [WarpState; 9] = [
+    WarpState::Selected,
+    WarpState::LongScoreboard,
+    WarpState::ShortScoreboard,
+    WarpState::Wait,
+    WarpState::NotSelected,
+    WarpState::LgThrottle,
+    WarpState::MioThrottle,
+    WarpState::Drain,
+    WarpState::Barrier,
+];
+
+impl WarpState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            WarpState::Selected => "Computing - Selected",
+            WarpState::LongScoreboard => "Stall Long Scoreboard",
+            WarpState::ShortScoreboard => "Stall Short Scoreboard",
+            WarpState::Wait => "Stall Wait",
+            WarpState::NotSelected => "Stall Not Selected",
+            WarpState::LgThrottle => "Stall LG Throttle",
+            WarpState::MioThrottle => "Stall MIO Throttle",
+            WarpState::Drain => "Stall Drain",
+            WarpState::Barrier => "Stall Barrier",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        ALL_STATES.iter().position(|s| s == self).unwrap()
+    }
+}
+
+/// Aggregate simulation result for one kernel launch.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    pub kernel: String,
+    /// Wall clock of the launch (max SM completion), cycles and seconds.
+    pub elapsed_cycles: u64,
+    pub elapsed_secs: f64,
+    /// Sum over warps of resident cycles — the Nsight-style "Cycles"
+    /// aggregate the paper reports (2.4T for KAT bwd).
+    pub warp_cycles: u64,
+    pub instructions: u64,
+    pub flops: u64,
+    /// Cycles spent per warp state (summed over warps).
+    pub state_cycles: [u64; 9],
+    /// Bytes that transited each level.
+    pub bytes_l1: u64,
+    pub bytes_l2: u64,
+    pub bytes_hbm: u64,
+    pub bytes_shared: u64,
+    /// Count of atomic lane-updates (serialized RMWs).
+    pub atomic_lanes: u64,
+    /// Throughput utilization (0-100%).
+    pub sm_thp: f64,
+    pub l1_thp: f64,
+    pub l2_thp: f64,
+    pub hbm_thp: f64,
+}
+
+impl SimReport {
+    /// Average cycles each warp spends in `state` per issued instruction —
+    /// the y-axis of the paper's Figures 2-3.
+    pub fn cycles_per_instr(&self, state: WarpState) -> f64 {
+        if self.instructions == 0 {
+            return 0.0;
+        }
+        self.state_cycles[state.index()] as f64 / self.instructions as f64
+    }
+
+    /// Ratio of Long-Scoreboard stall to Selected (paper quotes 412x).
+    pub fn lsb_over_selected(&self) -> f64 {
+        let sel = self.state_cycles[WarpState::Selected.index()].max(1);
+        self.state_cycles[WarpState::LongScoreboard.index()] as f64 / sel as f64
+    }
+
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:<22} {:>8} {:>10} {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+            self.kernel,
+            human_count(self.warp_cycles as f64),
+            human_time(self.elapsed_secs),
+            self.sm_thp,
+            self.l1_thp,
+            self.l2_thp,
+            self.hbm_thp,
+        )
+    }
+
+    pub fn warp_state_figure(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("warp states for {} (cycles per issued instruction)\n", self.kernel));
+        let max = ALL_STATES
+            .iter()
+            .map(|s| self.cycles_per_instr(*s))
+            .fold(0.0f64, f64::max)
+            .max(1e-9);
+        for s in ALL_STATES {
+            let v = self.cycles_per_instr(s);
+            let bar = "#".repeat(((v / max) * 50.0).round() as usize);
+            out.push_str(&format!("  {:<24} {:>10.2} |{}\n", s.label(), v, bar));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_indexing_consistent() {
+        for (i, s) in ALL_STATES.iter().enumerate() {
+            assert_eq!(s.index(), i);
+        }
+    }
+
+    #[test]
+    fn cycles_per_instr_and_ratio() {
+        let mut r = SimReport::default();
+        r.instructions = 100;
+        r.state_cycles[WarpState::Selected.index()] = 100;
+        r.state_cycles[WarpState::LongScoreboard.index()] = 41_200;
+        assert!((r.cycles_per_instr(WarpState::Selected) - 1.0).abs() < 1e-12);
+        assert!((r.lsb_over_selected() - 412.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn figure_renders_all_states() {
+        let mut r = SimReport::default();
+        r.kernel = "k".into();
+        r.instructions = 10;
+        r.state_cycles = [10, 20, 0, 5, 1, 0, 0, 0, 0];
+        let fig = r.warp_state_figure();
+        for s in ALL_STATES {
+            assert!(fig.contains(s.label()));
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! FlashKAT reproduction library.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - **L1** (Pallas, build-time python): group-wise rational kernels.
+//! - **L2** (JAX, build-time python): KAT / ViT models + AdamW train step,
+//!   AOT-lowered to HLO text in `artifacts/`.
+//! - **L3** (this crate): training coordinator, PJRT runtime, and every
+//!   substrate the paper's evaluation needs — most notably a GPU
+//!   memory-hierarchy simulator (`gpusim`) that reproduces the paper's
+//!   Nsight-style measurements, and a bit-faithful gradient-accumulation
+//!   model (`rational`) for the rounding-error study.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod flops;
+pub mod gpusim;
+pub mod rational;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

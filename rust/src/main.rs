@@ -1,0 +1,236 @@
+//! FlashKAT leader binary.
+//!
+//! Subcommands:
+//!   report <fig1|table1|table2|fig2|fig3|table3|table4|table5|configs|all>
+//!          [--gpu 4060ti|h200] [--batch N] [--b-sim N] [--rows N] [--passes N]
+//!   train  [--model kat_micro|vit_micro|kat_micro_katbwd] [--steps N]
+//!          [--seed N] [--ckpt PATH] [--artifacts DIR]
+//!   profile [--kernel fwd|kat|flash] [--loops N] [--gpu 4060ti|h200] [--batch N]
+//!   selfcheck [--artifacts DIR]   -- runtime vs Rust-oracle numerics
+//!   flops
+//!
+//! See DESIGN.md §5 for the table/figure -> command mapping.
+
+use anyhow::{bail, Context, Result};
+
+use flashkat::cli::Args;
+use flashkat::config::TrainConfig;
+use flashkat::coordinator::Trainer;
+use flashkat::gpusim::kernels::{
+    RationalBwdFlashKernel, RationalBwdKatKernel, RationalDims, RationalFwdKernel,
+};
+use flashkat::gpusim::{simulate, GpuConfig};
+use flashkat::rational::experiment::RoundingConfig;
+use flashkat::report;
+use flashkat::runtime::Runtime;
+
+fn gpu_from(args: &Args) -> Result<GpuConfig> {
+    Ok(match args.flag_str("gpu", "4060ti") {
+        "4060ti" => GpuConfig::rtx4060ti(),
+        "h200" => GpuConfig::h200(),
+        other => bail!("unknown --gpu {other:?} (4060ti|h200)"),
+    })
+}
+
+fn dims_from(args: &Args) -> Result<RationalDims> {
+    let mut d = RationalDims::paper();
+    d.batch = args.flag_u64("batch", d.batch)?;
+    Ok(d)
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    let gpu = gpu_from(args)?;
+    let b_sim = args.flag_u64("b-sim", 32)?;
+    let dims = dims_from(args)?;
+    let rounding = RoundingConfig {
+        rows: args.flag_usize("rows", 32 * 768)?,
+        passes: args.flag_usize("passes", 5)?,
+        ..Default::default()
+    };
+    let all = which == "all";
+    if all || which == "table1" {
+        print!("{}", report::table1());
+    }
+    if all || which == "fig1" {
+        print!("{}", report::fig1(&GpuConfig::h200(), b_sim.min(16)));
+    }
+    if all || which == "table2" {
+        print!("{}", report::table2(&gpu, dims));
+    }
+    if all || which == "fig2" || which == "fig3" {
+        print!("{}", report::fig2_fig3(&gpu, dims));
+    }
+    if all || which == "table3" {
+        print!("{}", report::table3(&gpu, dims));
+    }
+    if all || which == "table4" {
+        print!("{}", report::table4(&GpuConfig::h200(), b_sim.min(16)));
+    }
+    if all || which == "table5" {
+        print!("{}", report::table5(&rounding));
+    }
+    if all || which == "configs" {
+        print!("{}", report::configs());
+    }
+    if !all
+        && !matches!(
+            which,
+            "table1" | "fig1" | "table2" | "fig2" | "fig3" | "table3" | "table4" | "table5"
+                | "configs"
+        )
+    {
+        bail!("unknown report {which:?}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let tag = args.flag_str("model", "kat_micro").to_string();
+    let mut cfg = TrainConfig { model: tag.clone(), ..Default::default() };
+    cfg.steps = args.flag_usize("steps", cfg.steps)?;
+    cfg.seed = args.flag_u64("seed", cfg.seed)?;
+    cfg.log_every = args.flag_usize("log-every", cfg.log_every)?;
+    let artifacts = args.flag_str("artifacts", "artifacts");
+    let rt = Runtime::cpu(artifacts)?;
+    eprintln!("platform: {}", rt.platform());
+    let trainer = Trainer::new(&rt, &tag, cfg).context("loading artifacts")?;
+    eprintln!(
+        "model {tag}: {} parameter leaves, batch {}",
+        trainer.param_leaves(),
+        trainer.batch_size()
+    );
+    let ckpt = args.flag("ckpt").map(std::path::PathBuf::from);
+    let rep = trainer.train(ckpt.as_deref())?;
+    println!(
+        "{}: {} steps, loss {:.4} -> {:.4}, {:.1} (± {:.1}) img/s, host overhead {:.1}%, eval acc {:.3} (EMA {:.3})",
+        rep.tag,
+        rep.steps,
+        rep.first_loss(),
+        rep.final_loss(),
+        rep.throughput_mean,
+        rep.throughput_ci95,
+        100.0 * rep.host_overhead,
+        rep.final_eval_acc.unwrap_or(f64::NAN),
+        rep.ema_eval_acc.unwrap_or(f64::NAN)
+    );
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let gpu = gpu_from(args)?;
+    let mut dims = dims_from(args)?;
+    dims.flop_loops = args.flag_u64("loops", 1)? as u32;
+    let rep = match args.flag_str("kernel", "kat") {
+        "fwd" => simulate(&gpu, &RationalFwdKernel::new(dims)),
+        "kat" => simulate(&gpu, &RationalBwdKatKernel::new(dims)),
+        "flash" => simulate(&gpu, &RationalBwdFlashKernel::new(dims)),
+        other => bail!("unknown --kernel {other:?} (fwd|kat|flash)"),
+    };
+    println!("kernel                    cycles       time   SM%      L1%      L2%     HBM%");
+    println!("{}", rep.table_row());
+    print!("{}", rep.warp_state_figure());
+    Ok(())
+}
+
+/// Runtime integration check: run the standalone rational kernels through
+/// PJRT and compare against the Rust-side oracle.
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    use flashkat::rational::accumulate::{backward, Strategy};
+    use flashkat::rational::Coeffs;
+    use flashkat::runtime::HostTensor;
+    use flashkat::util::rng::Pcg64;
+
+    let artifacts = args.flag_str("artifacts", "artifacts");
+    let rt = Runtime::cpu(artifacts)?;
+    println!("platform: {}", rt.platform());
+
+    let m = rt.load("rational_fwd")?;
+    let dims: Vec<usize> = m
+        .manifest
+        .raw
+        .get("dims")
+        .and_then(|d| d.as_arr())
+        .context("dims meta")?
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    let (b, n, d) = (dims[0], dims[1], dims[2]);
+    let rows = b * n;
+    let mut rng = Pcg64::new(7);
+    let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+    let coeffs = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+
+    let inputs = [
+        HostTensor::F32 { shape: vec![b, n, d], data: x.clone() },
+        HostTensor::F32 { shape: vec![8, 6], data: coeffs.a.clone() },
+        HostTensor::F32 { shape: vec![8, 4], data: coeffs.b.clone() },
+    ];
+    let outs = m.execute(&inputs)?;
+    let got = outs[0].as_f32()?;
+    let want = flashkat::rational::forward(&x, rows, d, &coeffs);
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0, f64::max);
+    println!(
+        "rational_fwd: max |pallas - rust oracle| = {max_err:.3e} over {} elements",
+        got.len()
+    );
+    if max_err > 1e-3 {
+        bail!("forward mismatch");
+    }
+
+    let mb = rt.load("rational_bwd_flash")?;
+    let dout: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+    let inputs = [
+        HostTensor::F32 { shape: vec![b, n, d], data: x.clone() },
+        HostTensor::F32 { shape: vec![b, n, d], data: dout.clone() },
+        HostTensor::F32 { shape: vec![8, 6], data: coeffs.a.clone() },
+        HostTensor::F32 { shape: vec![8, 4], data: coeffs.b.clone() },
+    ];
+    let outs = mb.execute(&inputs)?;
+    let (_, da_r, db_r) =
+        backward(&x, &dout, rows, d, &coeffs, Strategy::BlockTree { s_block: 128 });
+    let da = outs[1].as_f32()?;
+    let db = outs[2].as_f32()?;
+    let scale = da_r.iter().map(|v| v.abs() as f64).fold(1.0, f64::max);
+    let err_a =
+        da.iter().zip(&da_r).map(|(a, b)| (a - b).abs() as f64).fold(0.0, f64::max) / scale;
+    let scale_b = db_r.iter().map(|v| v.abs() as f64).fold(1.0, f64::max);
+    let err_b =
+        db.iter().zip(&db_r).map(|(a, b)| (a - b).abs() as f64).fold(0.0, f64::max) / scale_b;
+    println!("rational_bwd_flash: rel dA err {err_a:.3e}, rel dB err {err_b:.3e}");
+    if err_a > 1e-3 || err_b > 1e-3 {
+        bail!("backward mismatch");
+    }
+    println!("selfcheck OK");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "report" => cmd_report(&args),
+        "train" => cmd_train(&args),
+        "profile" => cmd_profile(&args),
+        "selfcheck" => cmd_selfcheck(&args),
+        "flops" => {
+            print!("{}", report::table1());
+            Ok(())
+        }
+        "" | "help" | "--help" => {
+            println!(
+                "flashkat — FlashKAT reproduction (see DESIGN.md)\n\n\
+                 usage: flashkat <report|train|profile|selfcheck|flops> [flags]\n\
+                 \x20 report <fig1|table1|table2|fig2|fig3|table3|table4|table5|configs|all>\n\
+                 \x20 train  [--model kat_micro|vit_micro|kat_micro_katbwd] [--steps N] [--ckpt PATH]\n\
+                 \x20 profile [--kernel fwd|kat|flash] [--loops N] [--gpu 4060ti|h200]\n\
+                 \x20 selfcheck [--artifacts DIR]"
+            );
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} — try `flashkat help`"),
+    }
+}

@@ -1,0 +1,396 @@
+//! Gradient-accumulation strategies — the experiment variable behind the
+//! paper's rounding-error study (Tables 5/8).
+//!
+//! Algorithm 1 (KAT) accumulates every element's coefficient-gradient
+//! contribution with an individual atomic add: a summation chain of length
+//! B*N*d_g per coefficient.  Algorithm 2 (FlashKAT) reduces each
+//! (S_block x d_g) tile in fast memory (a tree reduction) and performs one
+//! global add per block: chain length ~ T + log2(S_block*d_g).  Floating-
+//! point summation error grows with chain length, hence the ~2 orders of
+//! magnitude MAE gap the paper reports.
+
+use super::{backward_elem, Coeffs, Float};
+use crate::util::parallel::par_map;
+
+/// How coefficient-gradient contributions are reduced into dA / dB.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Per-element global adds in flat memory order (paper Algorithm 1's
+    /// atomic-add schedule; GPU order is nondeterministic, this is a
+    /// representative member of the same error class).
+    Sequential,
+    /// FlashKAT: pairwise-tree reduction within each block of
+    /// `s_block` rows, then one global add per block (paper Algorithm 2).
+    BlockTree { s_block: usize },
+    /// Ablation: block-local *sequential* reduction, then one global add
+    /// per block.  Isolates "fewer global adds" from "tree reduction".
+    BlockSequential { s_block: usize },
+    /// Ablation: full pairwise-tree reduction over every contribution —
+    /// the best ordering a reduction could achieve.
+    PairwiseFull,
+}
+
+/// Full backward over (rows, d): returns (dx, dA, dB) with the coefficient
+/// gradients accumulated per `strategy`.
+pub fn backward<T: Float>(
+    x: &[T],
+    dout: &[T],
+    rows: usize,
+    d: usize,
+    c: &Coeffs<T>,
+    strategy: Strategy,
+) -> (Vec<T>, Vec<T>, Vec<T>) {
+    assert_eq!(x.len(), rows * d);
+    assert_eq!(dout.len(), rows * d);
+    assert_eq!(d % c.n_groups, 0);
+    match strategy {
+        Strategy::Sequential => backward_sequential(x, dout, rows, d, c),
+        Strategy::BlockTree { s_block } => backward_block(x, dout, rows, d, c, s_block, true),
+        Strategy::BlockSequential { s_block } => {
+            backward_block(x, dout, rows, d, c, s_block, false)
+        }
+        Strategy::PairwiseFull => backward_pairwise_full(x, dout, rows, d, c),
+    }
+}
+
+fn backward_sequential<T: Float>(
+    x: &[T],
+    dout: &[T],
+    rows: usize,
+    d: usize,
+    c: &Coeffs<T>,
+) -> (Vec<T>, Vec<T>, Vec<T>) {
+    let d_g = d / c.n_groups;
+    let (m1, n) = (c.m1, c.n);
+    let mut dx = vec![T::ZERO; x.len()];
+    let mut da = vec![T::ZERO; c.n_groups * m1];
+    let mut db = vec![T::ZERO; c.n_groups * n];
+    let mut da_e = vec![T::ZERO; m1];
+    let mut db_e = vec![T::ZERO; n];
+    for r in 0..rows {
+        for g in 0..c.n_groups {
+            let a = c.a_row(g);
+            let b = c.b_row(g);
+            for k in 0..d_g {
+                let idx = r * d + g * d_g + k;
+                dx[idx] = backward_elem(x[idx], dout[idx], a, b, &mut da_e, &mut db_e);
+                // one "atomic add" per coefficient per element
+                for i in 0..m1 {
+                    da[g * m1 + i] = T::from_f64(da[g * m1 + i].to_f64() + da_e[i].to_f64());
+                }
+                for j in 0..n {
+                    db[g * n + j] = T::from_f64(db[g * n + j].to_f64() + db_e[j].to_f64());
+                }
+            }
+        }
+    }
+    (dx, da, db)
+}
+
+/// Streaming pairwise (tree) accumulator: maintains a carry stack of
+/// power-of-two partial sums, O(log n) state, no materialized buffer.
+/// This is the register-level shape of a block tree reduction (§Perf: it
+/// replaced a materialize-then-reduce implementation, 1.8x faster, and is
+/// numerically a pairwise tree like the kernel's `tl.sum`).
+#[derive(Clone, Debug)]
+pub struct PairwiseAcc<T: Float> {
+    stack: [(T, u32); 48],
+    len: usize,
+}
+
+impl<T: Float> Default for PairwiseAcc<T> {
+    fn default() -> Self {
+        Self { stack: [(T::ZERO, 0); 48], len: 0 }
+    }
+}
+
+impl<T: Float> PairwiseAcc<T> {
+    #[inline]
+    pub fn push(&mut self, v: T) {
+        let mut v = v;
+        let mut count = 1u32;
+        while self.len > 0 && self.stack[self.len - 1].1 == count {
+            self.len -= 1;
+            v = T::from_f64(v.to_f64() + self.stack[self.len].0.to_f64());
+            count *= 2;
+        }
+        self.stack[self.len] = (v, count);
+        self.len += 1;
+    }
+
+    /// Fold remaining partials (smallest first) into the total.
+    pub fn finish(&self) -> T {
+        let mut s = T::ZERO;
+        for i in (0..self.len).rev() {
+            s = T::from_f64(s.to_f64() + self.stack[i].0.to_f64());
+        }
+        s
+    }
+}
+
+/// Pairwise-tree sum of a scratch buffer (in T precision), in place.
+pub fn tree_sum<T: Float>(buf: &mut [T]) -> T {
+    let mut len = buf.len();
+    if len == 0 {
+        return T::ZERO;
+    }
+    while len > 1 {
+        let half = len / 2;
+        for i in 0..half {
+            buf[i] = T::from_f64(buf[i].to_f64() + buf[len - 1 - i].to_f64());
+        }
+        len -= half;
+    }
+    buf[0]
+}
+
+fn backward_block<T: Float>(
+    x: &[T],
+    dout: &[T],
+    rows: usize,
+    d: usize,
+    c: &Coeffs<T>,
+    s_block: usize,
+    tree: bool,
+) -> (Vec<T>, Vec<T>, Vec<T>) {
+    let d_g = d / c.n_groups;
+    let (m1, n, n_g) = (c.m1, c.n, c.n_groups);
+    let s_block = s_block.max(1);
+    let n_blocks = rows.div_ceil(s_block);
+
+    // Per-(block, group) partials computed in parallel (mirrors the 2-D
+    // grid of Algorithm 2), then accumulated over blocks in block order
+    // (the serialized atomic adds).
+    let jobs: Vec<(usize, usize)> = (0..n_blocks)
+        .flat_map(|blk| (0..n_g).map(move |g| (blk, g)))
+        .collect();
+
+    struct Partial<T> {
+        blk: usize,
+        g: usize,
+        da: Vec<T>,
+        db: Vec<T>,
+        dx: Vec<T>, // tile dx, (rows_in_block * d_g)
+    }
+
+    let partials: Vec<Partial<T>> = par_map(&jobs, |&(blk, g)| {
+        let a = c.a_row(g);
+        let b = c.b_row(g);
+        let r0 = blk * s_block;
+        let r1 = (r0 + s_block).min(rows);
+        let tile = (r1 - r0) * d_g;
+        let mut dx_tile = Vec::with_capacity(tile);
+        let mut da_e = vec![T::ZERO; m1];
+        let mut db_e = vec![T::ZERO; n];
+        // Streaming accumulation, O(log) state per coefficient: pairwise
+        // carry-stacks for the tree variant, plain sums for the ablation.
+        let mut tree_a: Vec<PairwiseAcc<T>> = vec![PairwiseAcc::default(); m1];
+        let mut tree_b: Vec<PairwiseAcc<T>> = vec![PairwiseAcc::default(); n];
+        let mut seq_a = vec![T::ZERO; m1];
+        let mut seq_b = vec![T::ZERO; n];
+        // Chunked pairwise (numpy-style): sequential runs of RUN elements
+        // feed the carry stack — register-speed, tree-class rounding.
+        const RUN: usize = 64;
+        let mut run = 0usize;
+        for r in r0..r1 {
+            for k in 0..d_g {
+                let idx = r * d + g * d_g + k;
+                let dxv = backward_elem(x[idx], dout[idx], a, b, &mut da_e, &mut db_e);
+                dx_tile.push(dxv);
+                for i in 0..m1 {
+                    seq_a[i] = T::from_f64(seq_a[i].to_f64() + da_e[i].to_f64());
+                }
+                for j in 0..n {
+                    seq_b[j] = T::from_f64(seq_b[j].to_f64() + db_e[j].to_f64());
+                }
+                run += 1;
+                if tree && run == RUN {
+                    for i in 0..m1 {
+                        tree_a[i].push(seq_a[i]);
+                        seq_a[i] = T::ZERO;
+                    }
+                    for j in 0..n {
+                        tree_b[j].push(seq_b[j]);
+                        seq_b[j] = T::ZERO;
+                    }
+                    run = 0;
+                }
+            }
+        }
+        let (da, db) = if tree {
+            if run > 0 {
+                for i in 0..m1 {
+                    tree_a[i].push(seq_a[i]);
+                }
+                for j in 0..n {
+                    tree_b[j].push(seq_b[j]);
+                }
+            }
+            (
+                tree_a.iter().map(PairwiseAcc::finish).collect(),
+                tree_b.iter().map(PairwiseAcc::finish).collect(),
+            )
+        } else {
+            (seq_a, seq_b)
+        };
+        Partial { blk, g, da, db, dx: dx_tile }
+    });
+
+    // Scatter dx tiles and accumulate the per-block partials in block order.
+    let mut dx = vec![T::ZERO; x.len()];
+    let mut da = vec![T::ZERO; n_g * m1];
+    let mut db = vec![T::ZERO; n_g * n];
+    for p in &partials {
+        let r0 = p.blk * s_block;
+        let r1 = (r0 + s_block).min(rows);
+        for (t, r) in (r0..r1).enumerate() {
+            let src = &p.dx[t * d_g..(t + 1) * d_g];
+            let dst = &mut dx[r * d + p.g * d_g..r * d + (p.g + 1) * d_g];
+            dst.copy_from_slice(src);
+        }
+    }
+    let mut ordered: Vec<&Partial<T>> = partials.iter().collect();
+    ordered.sort_by_key(|p| (p.g, p.blk));
+    for p in ordered {
+        for i in 0..m1 {
+            da[p.g * m1 + i] = T::from_f64(da[p.g * m1 + i].to_f64() + p.da[i].to_f64());
+        }
+        for j in 0..n {
+            db[p.g * n + j] = T::from_f64(db[p.g * n + j].to_f64() + p.db[j].to_f64());
+        }
+    }
+    (dx, da, db)
+}
+
+fn backward_pairwise_full<T: Float>(
+    x: &[T],
+    dout: &[T],
+    rows: usize,
+    d: usize,
+    c: &Coeffs<T>,
+) -> (Vec<T>, Vec<T>, Vec<T>) {
+    let d_g = d / c.n_groups;
+    let (m1, n, n_g) = (c.m1, c.n, c.n_groups);
+    let mut dx = vec![T::ZERO; x.len()];
+    let mut da = vec![T::ZERO; n_g * m1];
+    let mut db = vec![T::ZERO; n_g * n];
+    let mut da_e = vec![T::ZERO; m1];
+    let mut db_e = vec![T::ZERO; n];
+    for g in 0..n_g {
+        let a = c.a_row(g);
+        let b = c.b_row(g);
+        let tile = rows * d_g;
+        let mut contrib_a: Vec<Vec<T>> = (0..m1).map(|_| Vec::with_capacity(tile)).collect();
+        let mut contrib_b: Vec<Vec<T>> = (0..n).map(|_| Vec::with_capacity(tile)).collect();
+        for r in 0..rows {
+            for k in 0..d_g {
+                let idx = r * d + g * d_g + k;
+                dx[idx] = backward_elem(x[idx], dout[idx], a, b, &mut da_e, &mut db_e);
+                for i in 0..m1 {
+                    contrib_a[i].push(da_e[i]);
+                }
+                for j in 0..n {
+                    contrib_b[j].push(db_e[j]);
+                }
+            }
+        }
+        for i in 0..m1 {
+            da[g * m1 + i] = tree_sum(&mut contrib_a[i]);
+        }
+        for j in 0..n {
+            db[g * n + j] = tree_sum(&mut contrib_b[j]);
+        }
+    }
+    (dx, da, db)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn case(rows: usize, d: usize, n_g: usize, seed: u64) -> (Vec<f64>, Vec<f64>, Coeffs<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let x: Vec<f64> = (0..rows * d).map(|_| rng.normal()).collect();
+        let dout: Vec<f64> = (0..rows * d).map(|_| rng.normal()).collect();
+        let c = Coeffs::<f64>::randn(n_g, 6, 4, &mut rng);
+        (x, dout, c)
+    }
+
+    #[test]
+    fn tree_sum_matches_sequential_in_f64() {
+        let mut rng = Pcg64::new(1);
+        let vals: Vec<f64> = (0..1000).map(|_| rng.normal()).collect();
+        let seq: f64 = vals.iter().sum();
+        let mut buf = vals.clone();
+        assert!((tree_sum(&mut buf) - seq).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_strategies_agree_in_f64() {
+        let (x, dout, c) = case(37, 32, 4, 2);
+        let (dx0, da0, db0) = backward(&x, &dout, 37, 32, &c, Strategy::Sequential);
+        for strat in [
+            Strategy::BlockTree { s_block: 8 },
+            Strategy::BlockSequential { s_block: 8 },
+            Strategy::PairwiseFull,
+        ] {
+            let (dx, da, db) = backward(&x, &dout, 37, 32, &c, strat);
+            for (u, v) in dx.iter().zip(&dx0) {
+                assert!((u - v).abs() < 1e-12);
+            }
+            for (u, v) in da.iter().zip(&da0) {
+                assert!((u - v).abs() * 1e9 < da0.iter().map(|z| z.abs()).fold(1.0, f64::max), "{strat:?}");
+            }
+            for (u, v) in db.iter().zip(&db0) {
+                assert!((u - v).abs() * 1e9 < db0.iter().map(|z| z.abs()).fold(1.0, f64::max), "{strat:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_block_tree_closer_to_f64_than_sequential() {
+        // The paper's Table 5/8 effect, in miniature.
+        let rows = 2048;
+        let d = 64;
+        let n_g = 8;
+        let (x, dout, c) = case(rows, d, n_g, 3);
+        let (_, da64, _) = backward(&x, &dout, rows, d, &c, Strategy::Sequential);
+
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let dof: Vec<f32> = dout.iter().map(|&v| v as f32).collect();
+        let cf = c.cast::<f32>();
+        let (_, da_seq, _) = backward(&xf, &dof, rows, d, &cf, Strategy::Sequential);
+        let (_, da_blk, _) = backward(&xf, &dof, rows, d, &cf, Strategy::BlockTree { s_block: 64 });
+
+        let mae = |da: &[f32]| -> f64 {
+            da.iter().zip(&da64).map(|(&a, &b)| (a as f64 - b).abs()).sum::<f64>() / da.len() as f64
+        };
+        let (e_seq, e_blk) = (mae(&da_seq), mae(&da_blk));
+        assert!(e_blk < e_seq, "block {e_blk} !< seq {e_seq}");
+    }
+
+    #[test]
+    fn block_sizes_cover_remainders() {
+        let (x, dout, c) = case(13, 16, 2, 4);
+        for s_block in [1, 2, 5, 13, 64] {
+            let (_, da, _) = backward(&x, &dout, 13, 16, &c, Strategy::BlockTree { s_block });
+            let (_, da0, _) = backward(&x, &dout, 13, 16, &c, Strategy::Sequential);
+            for (u, v) in da.iter().zip(&da0) {
+                assert!((u - v).abs() < 1e-9, "s_block={s_block}");
+            }
+        }
+    }
+
+    #[test]
+    fn dx_identical_across_strategies_f32() {
+        // dx has no accumulation — strategies must not change it at all.
+        let (x, dout, c) = case(19, 32, 4, 5);
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let dof: Vec<f32> = dout.iter().map(|&v| v as f32).collect();
+        let cf = c.cast::<f32>();
+        let (dx_a, _, _) = backward(&xf, &dof, 19, 32, &cf, Strategy::Sequential);
+        let (dx_b, _, _) = backward(&xf, &dof, 19, 32, &cf, Strategy::BlockTree { s_block: 4 });
+        assert_eq!(dx_a, dx_b);
+    }
+}

@@ -1,0 +1,235 @@
+//! The rounding-error experiment (paper Tables 5/8).
+//!
+//! Generate X, dO ~ N(0,1) and coefficients ~ N(0,1); compute dA/dB with
+//! the KAT schedule (f32, sequential atomic order), the FlashKAT schedule
+//! (f32, block tree reduction), and the f64 oracle; report the MAE between
+//! each f32 result and the oracle over `passes` independent passes, with
+//! 95% confidence intervals and variances — the exact columns of Table 8.
+
+use super::accumulate::{backward, Strategy};
+use super::Coeffs;
+use crate::util::rng::Pcg64;
+use crate::util::stats::OnlineStats;
+
+#[derive(Clone, Debug)]
+pub struct RoundingConfig {
+    pub rows: usize,      // B*N collapsed (paper: 1024*197)
+    pub d: usize,         // paper: 768
+    pub n_groups: usize,  // paper: 8
+    pub m1: usize,        // paper: 6
+    pub n: usize,         // paper: 4
+    pub s_block: usize,   // FlashKAT block rows
+    pub passes: usize,    // paper: 100
+    pub seed: u64,
+}
+
+impl Default for RoundingConfig {
+    fn default() -> Self {
+        // CPU-scaled dims (paper used 1024x197x768 on a 4060 Ti); the MAE
+        // *ratio* between schedules is what must reproduce.
+        Self { rows: 96 * 197, d: 768, n_groups: 8, m1: 6, n: 4, s_block: 128, passes: 10, seed: 0 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GradError {
+    pub mae_mean: f64,
+    pub mae_ci95: f64,
+    pub variance: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RoundingReport {
+    pub cfg_desc: String,
+    pub kat_da: GradError,
+    pub kat_db: GradError,
+    pub flash_da: GradError,
+    pub flash_db: GradError,
+}
+
+impl RoundingReport {
+    /// Ratio of KAT to FlashKAT dA MAE — the paper's "~2 orders" headline.
+    pub fn improvement_da(&self) -> f64 {
+        self.kat_da.mae_mean / self.flash_da.mae_mean
+    }
+
+    pub fn improvement_db(&self) -> f64 {
+        self.kat_db.mae_mean / self.flash_db.mae_mean
+    }
+}
+
+fn mae(f32s: &[f32], f64s: &[f64]) -> f64 {
+    f32s.iter().zip(f64s).map(|(&a, &b)| (a as f64 - b).abs()).sum::<f64>() / f32s.len() as f64
+}
+
+fn grad_error(maes: &[f64]) -> GradError {
+    let mut st = OnlineStats::new();
+    for &m in maes {
+        st.push(m);
+    }
+    GradError { mae_mean: st.mean(), mae_ci95: st.ci95(), variance: st.var() }
+}
+
+/// Run the full experiment.  Returns the per-strategy MAE statistics.
+pub fn run(cfg: &RoundingConfig) -> RoundingReport {
+    let mut kat_da_maes = Vec::with_capacity(cfg.passes);
+    let mut kat_db_maes = Vec::with_capacity(cfg.passes);
+    let mut flash_da_maes = Vec::with_capacity(cfg.passes);
+    let mut flash_db_maes = Vec::with_capacity(cfg.passes);
+
+    for pass in 0..cfg.passes {
+        let mut rng = Pcg64::new(cfg.seed.wrapping_add(pass as u64));
+        let n_el = cfg.rows * cfg.d;
+        let x64: Vec<f64> = (0..n_el).map(|_| rng.normal()).collect();
+        let do64: Vec<f64> = (0..n_el).map(|_| rng.normal()).collect();
+        let c64 = Coeffs::<f64>::randn(cfg.n_groups, cfg.m1, cfg.n, &mut rng);
+
+        let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        let do32: Vec<f32> = do64.iter().map(|&v| v as f32).collect();
+        let c32 = c64.cast::<f32>();
+
+        // f64 oracle (the paper computes the KAT method in float64).
+        let (_, da64, db64) = backward(&x64, &do64, cfg.rows, cfg.d, &c64, Strategy::Sequential);
+
+        let (_, da_kat, db_kat) =
+            backward(&x32, &do32, cfg.rows, cfg.d, &c32, Strategy::Sequential);
+        let (_, da_fl, db_fl) = backward(
+            &x32,
+            &do32,
+            cfg.rows,
+            cfg.d,
+            &c32,
+            Strategy::BlockTree { s_block: cfg.s_block },
+        );
+
+        kat_da_maes.push(mae(&da_kat, &da64));
+        kat_db_maes.push(mae(&db_kat, &db64));
+        flash_da_maes.push(mae(&da_fl, &da64));
+        flash_db_maes.push(mae(&db_fl, &db64));
+    }
+
+    RoundingReport {
+        cfg_desc: format!(
+            "X,dO in R^({}x{}), A in R^({}x{}), B in R^({}x{}), {} passes",
+            cfg.rows, cfg.d, cfg.n_groups, cfg.m1, cfg.n_groups, cfg.n, cfg.passes
+        ),
+        kat_da: grad_error(&kat_da_maes),
+        kat_db: grad_error(&kat_db_maes),
+        flash_da: grad_error(&flash_da_maes),
+        flash_db: grad_error(&flash_db_maes),
+    }
+}
+
+/// Low-precision extension (the paper's Appendix hypothesis): rerun the
+/// study with **bfloat16** gradients, where accumulation order matters far
+/// more (8-bit mantissa).  Returns (kat_da, flash_da) MAE statistics.
+pub fn run_bf16(cfg: &RoundingConfig) -> (GradError, GradError) {
+    use super::Bf16;
+    use crate::tensor::Scalar;
+    let mut kat_maes = Vec::with_capacity(cfg.passes);
+    let mut flash_maes = Vec::with_capacity(cfg.passes);
+    for pass in 0..cfg.passes {
+        let mut rng = Pcg64::new(cfg.seed.wrapping_add(0xbf16 + pass as u64));
+        let n_el = cfg.rows * cfg.d;
+        let x64: Vec<f64> = (0..n_el).map(|_| rng.normal()).collect();
+        let do64: Vec<f64> = (0..n_el).map(|_| rng.normal()).collect();
+        let c64 = Coeffs::<f64>::randn(cfg.n_groups, cfg.m1, cfg.n, &mut rng);
+        let (_, da64, _) = backward(&x64, &do64, cfg.rows, cfg.d, &c64, Strategy::Sequential);
+
+        let xb: Vec<Bf16> = x64.iter().map(|&v| Bf16::from_f32(v as f32)).collect();
+        let dob: Vec<Bf16> = do64.iter().map(|&v| Bf16::from_f32(v as f32)).collect();
+        let cb = c64.cast::<Bf16>();
+        let (_, da_kat, _) = backward(&xb, &dob, cfg.rows, cfg.d, &cb, Strategy::Sequential);
+        let (_, da_fl, _) = backward(
+            &xb,
+            &dob,
+            cfg.rows,
+            cfg.d,
+            &cb,
+            Strategy::BlockTree { s_block: cfg.s_block },
+        );
+        let mae_b = |da: &[Bf16]| -> f64 {
+            da.iter().zip(&da64).map(|(&a, &b)| (a.to_f64() - b).abs()).sum::<f64>()
+                / da.len() as f64
+        };
+        kat_maes.push(mae_b(&da_kat));
+        flash_maes.push(mae_b(&da_fl));
+    }
+    (grad_error(&kat_maes), grad_error(&flash_maes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flash_reduces_rounding_error_by_an_order_of_magnitude() {
+        // Scaled-down Table 8: the effect direction and scale must hold.
+        let cfg = RoundingConfig {
+            rows: 4096,
+            d: 96,
+            n_groups: 8,
+            m1: 6,
+            n: 4,
+            s_block: 64,
+            passes: 3,
+            seed: 7,
+        };
+        let rep = run(&cfg);
+        assert!(
+            rep.improvement_da() > 5.0,
+            "dA improvement only {:.2}x (kat {:.3e} flash {:.3e})",
+            rep.improvement_da(),
+            rep.kat_da.mae_mean,
+            rep.flash_da.mae_mean
+        );
+        // dB carries heavy-tailed P/Q^2 * x^j terms whose element-level f32
+        // error is a shared floor; the accumulation-order gap grows with
+        // chain length (see benches/table5_rounding at larger dims: >14x).
+        assert!(rep.improvement_db() > 1.1, "dB improvement {:.2}x", rep.improvement_db());
+        // sanity: errors are positive and finite
+        for e in [&rep.kat_da, &rep.kat_db, &rep.flash_da, &rep.flash_db] {
+            assert!(e.mae_mean.is_finite() && e.mae_mean > 0.0);
+        }
+    }
+
+    #[test]
+    fn bf16_rounding_gap_persists_at_low_precision() {
+        // Paper Appendix hypothesis: the ordering benefit should matter for
+        // low-precision training.  In bf16 both schedules get worse, and
+        // tree accumulation remains meaningfully better.
+        let cfg = RoundingConfig {
+            rows: 2048,
+            d: 96,
+            n_groups: 8,
+            m1: 6,
+            n: 4,
+            s_block: 64,
+            passes: 3,
+            seed: 11,
+        };
+        let (kat, flash) = run_bf16(&cfg);
+        assert!(kat.mae_mean.is_finite() && flash.mae_mean.is_finite());
+        assert!(kat.mae_mean > 1.5 * flash.mae_mean, "kat {} flash {}", kat.mae_mean, flash.mae_mean);
+        // and bf16 errors dwarf the f32 ones at the same dims
+        let f32rep = run(&cfg);
+        assert!(kat.mae_mean > 5.0 * f32rep.kat_da.mae_mean);
+    }
+
+    #[test]
+    fn bf16_scalar_semantics() {
+        use crate::rational::{Bf16, Float};
+        use crate::tensor::Scalar;
+        assert_eq!(Bf16::from_f32(1.0).to_f32(), 1.0);
+        assert_eq!(Bf16::ONE.to_f32(), 1.0);
+        assert_eq!(Bf16::from_f32(-2.5).abs().to_f32(), 2.5);
+        assert_eq!(Bf16::from_f32(0.0).signum0().to_f32(), 0.0);
+        assert_eq!(Bf16::from_f32(-7.0).signum0().to_f32(), -1.0);
+        // round-to-nearest-even: 1 + 2^-9 rounds back to 1 in bf16
+        let x = 1.0f32 + 2f32.powi(-9);
+        assert_eq!(Bf16::from_f32(x).to_f32(), 1.0);
+        // ~3 decimal digits of precision survive
+        let y = Bf16::from_f32(3.14159).to_f32();
+        assert!((y - 3.14159).abs() < 0.01);
+    }
+}

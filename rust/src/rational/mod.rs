@@ -1,0 +1,367 @@
+//! Group-wise rational function (safe PAU) on the host — the Rust-side
+//! oracle and the substrate for the rounding-error study (paper Tables 5/8).
+//!
+//! The math mirrors `python/compile/kernels/ref.py` (paper Eqs. 6-11); the
+//! *accumulation strategies* in [`accumulate`] mirror the memory schedules
+//! of paper Algorithms 1 and 2, whose floating-point summation orders are
+//! what produce the paper's rounding-error gap.
+
+pub mod accumulate;
+pub mod experiment;
+
+use crate::tensor::Scalar;
+
+/// Per-group PAU coefficients: `a` has m+1 entries (x^0..x^m), `b` has n
+/// entries (x^1..x^n).  The paper's configuration is m+1 = 6, n = 4.
+#[derive(Clone, Debug)]
+pub struct Coeffs<T: Scalar> {
+    pub n_groups: usize,
+    pub a: Vec<T>, // [n_groups][m1] row-major
+    pub b: Vec<T>, // [n_groups][n]
+    pub m1: usize,
+    pub n: usize,
+}
+
+impl<T: Scalar> Coeffs<T> {
+    pub fn new(n_groups: usize, m1: usize, n: usize, a: Vec<T>, b: Vec<T>) -> Self {
+        assert_eq!(a.len(), n_groups * m1);
+        assert_eq!(b.len(), n_groups * n);
+        Self { n_groups, a, b, m1, n }
+    }
+
+    pub fn randn(n_groups: usize, m1: usize, n: usize, rng: &mut crate::util::rng::Pcg64) -> Self {
+        let a = (0..n_groups * m1).map(|_| T::from_f64(rng.normal())).collect();
+        let b = (0..n_groups * n).map(|_| T::from_f64(rng.normal())).collect();
+        Self { n_groups, a, b, m1, n }
+    }
+
+    #[inline]
+    pub fn a_row(&self, g: usize) -> &[T] {
+        &self.a[g * self.m1..(g + 1) * self.m1]
+    }
+
+    #[inline]
+    pub fn b_row(&self, g: usize) -> &[T] {
+        &self.b[g * self.n..(g + 1) * self.n]
+    }
+
+    pub fn cast<U: Scalar>(&self) -> Coeffs<U> {
+        Coeffs {
+            n_groups: self.n_groups,
+            a: self.a.iter().map(|x| U::from_f64(x.to_f64())).collect(),
+            b: self.b.iter().map(|x| U::from_f64(x.to_f64())).collect(),
+            m1: self.m1,
+            n: self.n,
+        }
+    }
+}
+
+/// Arithmetic needed beyond `Scalar` for the rational math.
+pub trait Float: Scalar {
+    fn abs(self) -> Self;
+    fn signum0(self) -> Self; // sign with signum0(0) == 0, matching jnp.sign
+    fn mul_add2(self, a: Self, b: Self) -> Self;
+}
+
+impl Float for f32 {
+    #[inline]
+    fn abs(self) -> Self {
+        self.abs()
+    }
+    #[inline]
+    fn signum0(self) -> Self {
+        if self > 0.0 {
+            1.0
+        } else if self < 0.0 {
+            -1.0
+        } else {
+            0.0
+        }
+    }
+    #[inline]
+    fn mul_add2(self, a: Self, b: Self) -> Self {
+        self * a + b
+    }
+}
+
+impl Float for f64 {
+    #[inline]
+    fn abs(self) -> Self {
+        self.abs()
+    }
+    #[inline]
+    fn signum0(self) -> Self {
+        if self > 0.0 {
+            1.0
+        } else if self < 0.0 {
+            -1.0
+        } else {
+            0.0
+        }
+    }
+    #[inline]
+    fn mul_add2(self, a: Self, b: Self) -> Self {
+        self * a + b
+    }
+}
+
+/// Software bfloat16 (round-to-nearest-even via f32 truncation with carry),
+/// used to test the paper's low-precision hypothesis: "the reduction in
+/// rounding errors from FlashKAT could be helpful for low-precision
+/// training where gradient updates are more unstable" (Appendix).
+#[derive(Clone, Copy, Debug, Default, PartialEq, PartialOrd)]
+pub struct Bf16(pub u16);
+
+impl Bf16 {
+    #[inline]
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        // round-to-nearest-even on the truncated 16 bits
+        let rounded = bits.wrapping_add(0x7fff + ((bits >> 16) & 1));
+        Bf16((rounded >> 16) as u16)
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+impl crate::tensor::Scalar for Bf16 {
+    fn from_f64(x: f64) -> Self {
+        Bf16::from_f32(x as f32)
+    }
+    fn to_f64(self) -> f64 {
+        self.to_f32() as f64
+    }
+    const ZERO: Self = Bf16(0);
+    const ONE: Self = Bf16(0x3f80);
+}
+
+impl Float for Bf16 {
+    #[inline]
+    fn abs(self) -> Self {
+        Bf16(self.0 & 0x7fff)
+    }
+    #[inline]
+    fn signum0(self) -> Self {
+        let f = self.to_f32();
+        if f > 0.0 {
+            Bf16::from_f32(1.0)
+        } else if f < 0.0 {
+            Bf16::from_f32(-1.0)
+        } else {
+            Bf16(0)
+        }
+    }
+    #[inline]
+    fn mul_add2(self, a: Self, b: Self) -> Self {
+        Bf16::from_f32(self.to_f32() * a.to_f32() + b.to_f32())
+    }
+}
+
+/// Forward value F(x) = P(x) / (1 + |A(x)|) for one element.
+#[inline]
+pub fn forward_elem<T: Float>(x: T, a: &[T], b: &[T]) -> T {
+    let (p, q, _) = pq_elem(x, a, b);
+    T::from_f64(p.to_f64() / q.to_f64())
+}
+
+/// (P, Q, sign(A)) for one element; Horner throughout.
+#[inline]
+pub fn pq_elem<T: Float>(x: T, a: &[T], b: &[T]) -> (T, T, T) {
+    let m1 = a.len();
+    let mut p = a[m1 - 1];
+    for i in (0..m1 - 1).rev() {
+        p = p.mul_add2(x, a[i]);
+    }
+    let n = b.len();
+    let mut h = b[n - 1];
+    for j in (0..n - 1).rev() {
+        h = h.mul_add2(x, b[j]);
+    }
+    let abig = T::from_f64(x.to_f64() * h.to_f64());
+    let q = T::from_f64(1.0 + abig.abs().to_f64());
+    (p, q, abig.signum0())
+}
+
+/// Per-element gradients (paper Eqs. 7-9), scaled by the upstream grad.
+///
+/// Returns `dx` and writes the m+1 dA contributions and n dB contributions
+/// into the provided buffers (unreduced — accumulation order is the
+/// experiment variable, see [`accumulate`]).
+#[inline]
+pub fn backward_elem<T: Float>(
+    x: T,
+    dout: T,
+    a: &[T],
+    b: &[T],
+    da_out: &mut [T],
+    db_out: &mut [T],
+) -> T {
+    let m1 = a.len();
+    let n = b.len();
+    debug_assert_eq!(da_out.len(), m1);
+    debug_assert_eq!(db_out.len(), n);
+
+    let (p, q, sgn) = pq_elem(x, a, b);
+    let inv_q = T::from_f64(1.0 / q.to_f64());
+    let p_over_q2 = T::from_f64(p.to_f64() * inv_q.to_f64() * inv_q.to_f64());
+
+    // P'(x)
+    let mut dp = T::ZERO;
+    if m1 > 1 {
+        dp = T::from_f64(a[m1 - 1].to_f64() * (m1 - 1) as f64);
+        for i in (1..m1 - 1).rev() {
+            dp = T::from_f64(dp.to_f64() * x.to_f64() + a[i].to_f64() * i as f64);
+        }
+    }
+    // A'(x)
+    let mut dadx = T::from_f64(b[n - 1].to_f64() * n as f64);
+    for j in (0..n - 1).rev() {
+        dadx = T::from_f64(dadx.to_f64() * x.to_f64() + b[j].to_f64() * (j + 1) as f64);
+    }
+
+    let dx = T::from_f64(
+        dout.to_f64() * (dp.to_f64() * inv_q.to_f64() - sgn.to_f64() * dadx.to_f64() * p_over_q2.to_f64()),
+    );
+
+    let do_q = T::from_f64(dout.to_f64() * inv_q.to_f64());
+    let neg_do_spq2 = T::from_f64(-dout.to_f64() * sgn.to_f64() * p_over_q2.to_f64());
+    let mut pw = T::ONE;
+    for item in da_out.iter_mut().take(m1) {
+        *item = T::from_f64(do_q.to_f64() * pw.to_f64());
+        pw = T::from_f64(pw.to_f64() * x.to_f64());
+    }
+    let mut pw = x;
+    for item in db_out.iter_mut().take(n) {
+        *item = T::from_f64(neg_do_spq2.to_f64() * pw.to_f64());
+        pw = T::from_f64(pw.to_f64() * x.to_f64());
+    }
+    dx
+}
+
+/// Forward over a (rows, d) buffer with grouped coefficients.
+pub fn forward<T: Float>(x: &[T], rows: usize, d: usize, c: &Coeffs<T>) -> Vec<T> {
+    assert_eq!(x.len(), rows * d);
+    assert_eq!(d % c.n_groups, 0);
+    let d_g = d / c.n_groups;
+    let mut out = vec![T::ZERO; x.len()];
+    for r in 0..rows {
+        for g in 0..c.n_groups {
+            let a = c.a_row(g);
+            let b = c.b_row(g);
+            for k in 0..d_g {
+                let idx = r * d + g * d_g + k;
+                out[idx] = forward_elem(x[idx], a, b);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn swish_coeffs() -> (Vec<f64>, Vec<f64>) {
+        (
+            vec![-0.0052296527, 0.5027744533, 0.4403392560, 0.5826427290, 0.2196305065, 0.0256087044],
+            vec![0.3131766296, 1.0135363041, 0.0271426279, 0.0494586222],
+        )
+    }
+
+    #[test]
+    fn identity_coeffs_give_identity() {
+        let a = [0.0f64, 1.0, 0.0, 0.0, 0.0, 0.0];
+        let b = [0.0f64, 0.0, 0.0, 0.0];
+        for x in [-3.0, -0.5, 0.0, 0.7, 2.0] {
+            assert!((forward_elem(x, &a, &b) - x).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn swish_coeffs_approximate_silu() {
+        let (a, b) = swish_coeffs();
+        for i in 0..61 {
+            let x = -3.0 + 0.1 * i as f64;
+            let silu = x / (1.0 + (-x).exp());
+            assert!((forward_elem(x, &a, &b) - silu).abs() < 0.02, "x={x}");
+        }
+    }
+
+    #[test]
+    fn q_is_always_at_least_one() {
+        let mut rng = Pcg64::new(0);
+        let a: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        for _ in 0..1000 {
+            let x = rng.normal() * 10.0;
+            let (_, q, _) = pq_elem(x, &a, &b);
+            assert!(q >= 1.0);
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Pcg64::new(3);
+        let a: Vec<f64> = (0..6).map(|_| rng.normal() * 0.5).collect();
+        let b: Vec<f64> = (0..4).map(|_| rng.normal() * 0.5).collect();
+        let mut da = [0.0f64; 6];
+        let mut db = [0.0f64; 4];
+        let eps = 1e-6;
+        for _ in 0..50 {
+            let x = rng.normal();
+            let dout = rng.normal();
+            let dx = backward_elem(x, dout, &a, &b, &mut da, &mut db);
+
+            // d/dx
+            let fd = (forward_elem(x + eps, &a, &b) - forward_elem(x - eps, &a, &b)) / (2.0 * eps);
+            assert!((dx - dout * fd).abs() < 1e-5, "dx {dx} vs {}", dout * fd);
+
+            // d/da_i
+            for i in 0..6 {
+                let mut ap = a.clone();
+                ap[i] += eps;
+                let mut am = a.clone();
+                am[i] -= eps;
+                let fd = (forward_elem(x, &ap, &b) - forward_elem(x, &am, &b)) / (2.0 * eps);
+                assert!((da[i] - dout * fd).abs() < 1e-5, "da[{i}]");
+            }
+            // d/db_j
+            for j in 0..4 {
+                let mut bp = b.clone();
+                bp[j] += eps;
+                let mut bm = b.clone();
+                bm[j] -= eps;
+                let fd = (forward_elem(x, &a, &bp) - forward_elem(x, &a, &bm)) / (2.0 * eps);
+                assert!((db[j] - dout * fd).abs() < 2e-5, "db[{j}] {} vs {}", db[j], dout * fd);
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_forward_uses_right_group() {
+        // two groups: identity and 2x (a1=2)
+        let c = Coeffs::<f64>::new(
+            2,
+            2,
+            1,
+            vec![0.0, 1.0, /* g1 */ 0.0, 2.0],
+            vec![0.0, /* g1 */ 0.0],
+        );
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // one row, d=4, d_g=2
+        let out = forward(&x, 1, 4, &c);
+        assert_eq!(out, vec![1.0, 2.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn sign_zero_at_a_zero() {
+        let a = [1.0f64, 1.0, 0.0, 0.0, 0.0, 0.0];
+        let b = [1.0f64, 0.0, 0.0, 0.0];
+        let (_, q, sgn) = pq_elem(0.0, &a, &b);
+        assert_eq!(q, 1.0);
+        assert_eq!(sgn, 0.0);
+    }
+}

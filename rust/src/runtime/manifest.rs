@@ -1,0 +1,182 @@
+//! Artifact manifests: the flat input/output signature emitted by
+//! `python/compile/aot.py` next to each `<name>.hlo.txt`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+    I64,
+    U32,
+    Bf16,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "f64" => DType::F64,
+            "i32" => DType::I32,
+            "i64" => DType::I64,
+            "u32" => DType::U32,
+            "bf16" => DType::Bf16,
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::F64 | DType::I64 => 8,
+            DType::Bf16 => 2,
+        }
+    }
+}
+
+/// One flat input or output slot.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    /// Pytree key path, e.g. `0/blocks/3/ffn/fc1_w` (manifest order == HLO
+    /// parameter order).
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Extra metadata (batch, model, img_size, ...) for coordinators.
+    pub raw: Json,
+}
+
+fn parse_specs(v: &Json, which: &str) -> Result<Vec<TensorSpec>> {
+    let arr = v
+        .get(which)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("manifest missing {which:?} array"))?;
+    arr.iter()
+        .map(|e| {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("spec missing name"))?
+                .to_string();
+            let shape = e
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("spec {name} missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim in {name}")))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = DType::parse(
+                e.get("dtype").and_then(Json::as_str).ok_or_else(|| anyhow!("missing dtype"))?,
+            )?;
+            Ok(TensorSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing name"))?
+            .to_string();
+        Ok(Self {
+            name,
+            inputs: parse_specs(&v, "inputs")?,
+            outputs: parse_specs(&v, "outputs")?,
+            raw: v,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Index of the input slot whose key path is exactly `name`.
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+
+    /// Metadata accessors.
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.raw.get(key).and_then(Json::as_usize)
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.raw.get(key).and_then(Json::as_str)
+    }
+
+    pub fn total_input_bytes(&self) -> usize {
+        self.inputs.iter().map(|s| s.elements() * s.dtype.size_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "toy_train_step",
+      "inputs": [
+        {"name": "0/w", "shape": [4, 8], "dtype": "f32"},
+        {"name": "3", "shape": [], "dtype": "i32"},
+        {"name": "5", "shape": [2], "dtype": "u32"}
+      ],
+      "outputs": [
+        {"name": "loss", "shape": [], "dtype": "f32"}
+      ],
+      "batch": 32,
+      "model": "kat-micro"
+    }"#;
+
+    #[test]
+    fn parse_roundtrip() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "toy_train_step");
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.inputs[0].shape, vec![4, 8]);
+        assert_eq!(m.inputs[0].dtype, DType::F32);
+        assert_eq!(m.inputs[0].elements(), 32);
+        assert_eq!(m.inputs[1].shape, Vec::<usize>::new());
+        assert_eq!(m.inputs[2].dtype, DType::U32);
+        assert_eq!(m.outputs.len(), 1);
+        assert_eq!(m.meta_usize("batch"), Some(32));
+        assert_eq!(m.meta_str("model"), Some("kat-micro"));
+        assert_eq!(m.input_index("3"), Some(1));
+        assert_eq!(m.input_index("nope"), None);
+        assert_eq!(m.total_input_bytes(), 32 * 4 + 4 + 8);
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("\"f32\"", "\"f16\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"name":"x"}"#).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client.  Python never runs on this path — the Rust binary is
+//! self-contained once `make artifacts` has produced `artifacts/`.
+
+pub mod manifest;
+pub mod module;
+pub mod values;
+
+pub use manifest::{DType, Manifest, TensorSpec};
+pub use module::{LoadedModule, Runtime};
+pub use values::HostTensor;

@@ -1,0 +1,114 @@
+//! Loaded executables: HLO text -> PJRT compile -> execute.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::values::HostTensor;
+
+/// Shared PJRT CPU client + artifact directory.
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU runtime rooted at `artifacts_dir` (usually `artifacts/`).
+    pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client: Arc::new(client), artifacts_dir: artifacts_dir.into() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load `<name>.hlo.txt` + `<name>.manifest.json` and compile.
+    pub fn load(&self, name: &str) -> Result<LoadedModule> {
+        let hlo = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let man = self.artifacts_dir.join(format!("{name}.manifest.json"));
+        if !hlo.exists() {
+            bail!(
+                "artifact {} not found — run `make artifacts` first",
+                hlo.display()
+            );
+        }
+        let manifest = Manifest::load(&man)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        Ok(LoadedModule { name: name.to_string(), exe, manifest, compile_secs: t0.elapsed().as_secs_f64() })
+    }
+}
+
+/// A compiled module with its manifest-described signature.
+pub struct LoadedModule {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+    pub compile_secs: f64,
+}
+
+impl LoadedModule {
+    /// Execute with raw literals in manifest order; returns the flattened
+    /// output literals (aot.py lowers with `return_tuple=True`).
+    pub fn execute_literals(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "{}: {} inputs provided, manifest wants {}",
+                self.name,
+                inputs.len(),
+                self.manifest.inputs.len()
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("{}: empty execution result", self.name))?
+            .to_literal_sync()?;
+        let outs = lit.to_tuple()?;
+        if outs.len() != self.manifest.outputs.len() {
+            bail!(
+                "{}: {} outputs returned, manifest wants {}",
+                self.name,
+                outs.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Execute with host tensors (validated against the manifest).
+    pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        for (t, spec) in inputs.iter().zip(&self.manifest.inputs) {
+            t.check(spec).with_context(|| format!("input to {}", self.name))?;
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let outs = self.execute_literals(&lits)?;
+        outs.iter()
+            .zip(&self.manifest.outputs)
+            .map(|(l, spec)| HostTensor::from_literal(l, spec))
+            .collect()
+    }
+
+    pub fn input_count(&self) -> usize {
+        self.manifest.inputs.len()
+    }
+
+    pub fn output_count(&self) -> usize {
+        self.manifest.outputs.len()
+    }
+}

@@ -1,0 +1,151 @@
+//! Host-side tensor values and Literal marshalling.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// A host tensor paired with its dtype — the coordinator's currency for
+/// feeding and reading XLA executables.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn key(bits: [u32; 2]) -> Self {
+        HostTensor::U32 { shape: vec![2], data: bits.to_vec() }
+    }
+
+    pub fn zeros(spec: &TensorSpec) -> Result<Self> {
+        let n = spec.elements();
+        Ok(match spec.dtype {
+            DType::F32 => HostTensor::F32 { shape: spec.shape.clone(), data: vec![0.0; n] },
+            DType::I32 => HostTensor::I32 { shape: spec.shape.clone(), data: vec![0; n] },
+            DType::U32 => HostTensor::U32 { shape: spec.shape.clone(), data: vec![0; n] },
+            other => bail!("zeros: unsupported dtype {other:?}"),
+        })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. }
+            | HostTensor::I32 { shape, .. }
+            | HostTensor::U32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+            HostTensor::U32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+            HostTensor::U32 { .. } => DType::U32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    /// Build an xla Literal (reshaped to the tensor's shape).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::U32 { data, .. } => xla::Literal::vec1(data),
+        };
+        lit.reshape(&dims).context("reshape literal")
+    }
+
+    /// Read a Literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
+        Ok(match spec.dtype {
+            DType::F32 => {
+                HostTensor::F32 { shape: spec.shape.clone(), data: lit.to_vec::<f32>()? }
+            }
+            DType::I32 => {
+                HostTensor::I32 { shape: spec.shape.clone(), data: lit.to_vec::<i32>()? }
+            }
+            DType::U32 => {
+                HostTensor::U32 { shape: spec.shape.clone(), data: lit.to_vec::<u32>()? }
+            }
+            other => bail!("from_literal: unsupported dtype {other:?}"),
+        })
+    }
+
+    /// Validate against a manifest slot.
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.shape() != spec.shape.as_slice() {
+            bail!("slot {}: shape {:?} != manifest {:?}", spec.name, self.shape(), spec.shape);
+        }
+        if self.dtype() != spec.dtype {
+            bail!("slot {}: dtype {:?} != manifest {:?}", spec.name, self.dtype(), spec.dtype);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(shape: &[usize], dtype: DType) -> TensorSpec {
+        TensorSpec { name: "t".into(), shape: shape.to_vec(), dtype }
+    }
+
+    #[test]
+    fn zeros_and_shapes() {
+        let t = HostTensor::zeros(&spec(&[2, 3], DType::F32)).unwrap();
+        assert_eq!(t.elements(), 6);
+        assert_eq!(t.shape(), &[2, 3]);
+        t.check(&spec(&[2, 3], DType::F32)).unwrap();
+        assert!(t.check(&spec(&[3, 2], DType::F32)).is_err());
+        assert!(t.check(&spec(&[2, 3], DType::I32)).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::F32 { shape: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] };
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &spec(&[2, 2], DType::F32)).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar_and_key() {
+        let s = HostTensor::scalar_i32(7);
+        let lit = s.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7]);
+        let k = HostTensor::key([1, 2]);
+        let lit = k.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<u32>().unwrap(), vec![1, 2]);
+    }
+}

@@ -1,0 +1,229 @@
+//! Minimal dense tensor (row-major) used by the coordinator's host-side
+//! compute: data pipeline, augmentations, EMA, rounding-error experiments.
+//!
+//! Deliberately small: shape + flat Vec, elementwise ops, no broadcasting
+//! beyond what the coordinator needs.  Device compute is XLA's job.
+
+use crate::util::rng::Pcg64;
+
+pub trait Scalar: Copy + Default + PartialOrd + std::fmt::Debug + Send + Sync + 'static {
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+    const ZERO: Self;
+    const ONE: Self;
+}
+
+impl Scalar for f32 {
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+}
+
+impl Scalar for f64 {
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T: Scalar = f32> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: Scalar> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![T::ZERO; n] }
+    }
+
+    pub fn full(shape: &[usize], v: T) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> T) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: (0..n).map(&mut f).collect() }
+    }
+
+    pub fn randn(shape: &[usize], rng: &mut Pcg64) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| T::from_f64(rng.normal())).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Flat index from a multi-dimensional index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&ix, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(ix < dim, "index {ix} out of bounds for dim {i} ({dim})");
+            off = off * dim + ix;
+        }
+        off
+    }
+
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let off = self.offset(idx);
+        self.data[off] = v;
+    }
+
+    pub fn map(&self, f: impl Fn(T) -> T) -> Self {
+        Self { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn zip_mut(&mut self, other: &Self, f: impl Fn(T, T) -> T) {
+        assert_eq!(self.shape, other.shape);
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a = f(*a, b);
+        }
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for a in self.data.iter_mut() {
+            *a = T::from_f64(a.to_f64() * s);
+        }
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|x| x.to_f64()).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            f64::NAN
+        } else {
+            self.sum() / self.data.len() as f64
+        }
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().map(|x| x.to_f64().abs()).fold(0.0, f64::max)
+    }
+
+    pub fn cast<U: Scalar>(&self) -> Tensor<U> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|x| U::from_f64(x.to_f64())).collect(),
+        }
+    }
+}
+
+impl Tensor<f32> {
+    /// EMA update: self = decay*self + (1-decay)*other  (paper: decay 0.9999).
+    pub fn ema_update(&mut self, other: &Self, decay: f32) {
+        assert_eq!(self.shape, other.shape);
+        let om = 1.0 - decay;
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a = decay * *a + om * b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::<f32>::from_fn(&[2, 3, 4], |i| i as f32);
+        assert_eq!(t.at(&[0, 0, 0]), 0.0);
+        assert_eq!(t.at(&[1, 2, 3]), 23.0);
+        assert_eq!(t.at(&[1, 0, 2]), 14.0);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::<f32>::from_vec(&[2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn reshape_and_ops() {
+        let mut t = Tensor::<f32>::full(&[4], 2.0).reshape(&[2, 2]);
+        t.scale(0.5);
+        assert_eq!(t.data(), &[1.0; 4]);
+        let u = t.map(|x| x + 1.0);
+        assert_eq!(u.sum(), 8.0);
+        t.zip_mut(&u, |a, b| a * b);
+        assert_eq!(t.sum(), 8.0);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Pcg64::new(0);
+        let t = Tensor::<f32>::randn(&[10_000], &mut rng);
+        assert!(t.mean().abs() < 0.05);
+        let var = t.data().iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / 10_000.0;
+        assert!((var - 1.0).abs() < 0.08, "{var}");
+    }
+
+    #[test]
+    fn ema_converges_toward_target() {
+        let mut ema = Tensor::<f32>::zeros(&[8]);
+        let target = Tensor::<f32>::full(&[8], 1.0);
+        for _ in 0..1000 {
+            ema.ema_update(&target, 0.99);
+        }
+        assert!((ema.mean() - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cast_f32_f64_roundtrip() {
+        let t = Tensor::<f32>::from_vec(&[3], vec![0.1, -2.5, 7.0]);
+        let d: Tensor<f64> = t.cast();
+        let back: Tensor<f32> = d.cast();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,7 @@
+//! Small self-contained substrates (this build environment is offline, so
+//! JSON, RNG, statistics, and parallel helpers are implemented in-repo).
+
+pub mod json;
+pub mod parallel;
+pub mod rng;
+pub mod stats;

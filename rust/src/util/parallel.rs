@@ -1,0 +1,96 @@
+//! Scoped-thread parallel helpers (offline environment: no rayon).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (cores, capped).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Parallel map over a slice with work-stealing via an atomic index.
+/// Results are returned in input order.
+pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = default_threads().min(n);
+    if threads <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots: Vec<_> = out.iter_mut().map(|s| SendPtr(s as *mut Option<R>)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let slots = &slots;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                // SAFETY: each index i is claimed by exactly one thread and
+                // the Vec outlives the scope.
+                unsafe { slots[i].0.write(Some(r)) };
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker filled slot")).collect()
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Parallel for over disjoint mutable chunks of a buffer.
+pub fn par_chunks_mut<T: Send>(
+    buf: &mut [T],
+    chunk: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    if buf.is_empty() || chunk == 0 {
+        return;
+    }
+    std::thread::scope(|scope| {
+        for (idx, c) in buf.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(idx, c));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let xs: Vec<u64> = (0..1000).collect();
+        let ys = par_map(&xs, |x| x * x);
+        for (i, y) in ys.iter().enumerate() {
+            assert_eq!(*y, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        assert!(par_map::<u32, u32>(&[], |x| *x).is_empty());
+        assert_eq!(par_map(&[7], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_disjoint() {
+        let mut buf = vec![0u32; 100];
+        par_chunks_mut(&mut buf, 7, |idx, c| {
+            for v in c.iter_mut() {
+                *v = idx as u32;
+            }
+        });
+        assert_eq!(buf[0], 0);
+        assert_eq!(buf[7], 1);
+        assert_eq!(buf[99], (99 / 7) as u32);
+    }
+}

@@ -1,0 +1,179 @@
+//! Summary statistics: mean / variance (Welford), 95% confidence intervals.
+//!
+//! Used for the paper's ± CI columns (Tables 4, 5/8) and the bench harness.
+
+/// Online mean/variance accumulator (Welford's algorithm).
+#[derive(Clone, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Half-width of the 95% confidence interval on the mean.
+    /// Uses the t-distribution critical value (Welch-style, df = n-1).
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            return f64::NAN;
+        }
+        t_crit95((self.n - 1) as usize) * self.std() / (self.n as f64).sqrt()
+    }
+
+    pub fn summary(&self) -> String {
+        format!("{:.4} (± {:.4})", self.mean(), self.ci95())
+    }
+}
+
+/// Two-sided 95% t critical values; converges to 1.96 for large df.
+pub fn t_crit95(df: usize) -> f64 {
+    const TABLE: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228,
+        2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086,
+        2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    match df {
+        0 => f64::NAN,
+        d if d <= 30 => TABLE[d - 1],
+        d if d <= 60 => 2.000,
+        d if d <= 120 => 1.980,
+        _ => 1.960,
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Human formatting for big counts: 11.3M, 2.4T, ...
+pub fn human_count(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e12 {
+        format!("{:.1}T", x / 1e12)
+    } else if ax >= 1e9 {
+        format!("{:.1}G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.1}M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.1}K", x / 1e3)
+    } else {
+        format!("{x:.0}")
+    }
+}
+
+/// Human formatting for seconds: 7.33 ms, 1.03 s ...
+pub fn human_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.2} s")
+    } else if secs >= 1e-3 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.2} us", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut s = OnlineStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        let direct_var = xs.iter().map(|x| (x - 5.0) * (x - 5.0)).sum::<f64>() / 7.0;
+        assert!((s.var() - direct_var).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let mut small = OnlineStats::new();
+        let mut big = OnlineStats::new();
+        let mut rng = crate::util::rng::Pcg64::new(1);
+        for i in 0..1000 {
+            let x = rng.normal();
+            if i < 10 {
+                small.push(x);
+            }
+            big.push(x);
+        }
+        assert!(big.ci95() < small.ci95());
+        // 95% CI of 1000 N(0,1) samples ~ 1.96/sqrt(1000) ~ 0.062
+        assert!((big.ci95() - 0.062).abs() < 0.02, "{}", big.ci95());
+    }
+
+    #[test]
+    fn t_table_monotone() {
+        assert!(t_crit95(1) > t_crit95(5));
+        assert!(t_crit95(5) > t_crit95(100));
+        assert_eq!(t_crit95(10_000), 1.960);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human_count(11_300_000.0), "11.3M");
+        assert_eq!(human_count(2.4e12), "2.4T");
+        assert_eq!(human_time(1.03), "1.03 s");
+        assert_eq!(human_time(0.00733), "7.33 ms");
+    }
+}

@@ -1,0 +1,150 @@
+//! Integration: AOT artifacts -> PJRT runtime -> numerics vs Rust oracle.
+//!
+//! Requires `make artifacts` (the Makefile's `test` target guarantees it).
+//! Tests skip gracefully when artifacts are absent so a clean checkout
+//! still passes `cargo test`.
+
+use flashkat::rational::accumulate::{backward, Strategy};
+use flashkat::rational::Coeffs;
+use flashkat::runtime::{HostTensor, Runtime};
+use flashkat::util::rng::Pcg64;
+
+fn artifacts() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/.stamp").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::cpu("artifacts").expect("PJRT CPU client"))
+}
+
+fn kernel_case(n_el: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Coeffs<f32>) {
+    let mut rng = Pcg64::new(seed);
+    let x = (0..n_el).map(|_| rng.normal_f32()).collect();
+    let dout = (0..n_el).map(|_| rng.normal_f32()).collect();
+    (x, dout, Coeffs::<f32>::randn(8, 6, 4, &mut rng))
+}
+
+#[test]
+fn rational_fwd_artifact_matches_rust_oracle() {
+    let Some(rt) = artifacts() else { return };
+    let m = rt.load("rational_fwd").unwrap();
+    let dims: Vec<usize> = m.manifest.raw.get("dims").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_usize().unwrap()).collect();
+    let n_el: usize = dims.iter().product();
+    let (x, _, c) = kernel_case(n_el, 1);
+    let outs = m
+        .execute(&[
+            HostTensor::F32 { shape: dims.clone(), data: x.clone() },
+            HostTensor::F32 { shape: vec![8, 6], data: c.a.clone() },
+            HostTensor::F32 { shape: vec![8, 4], data: c.b.clone() },
+        ])
+        .unwrap();
+    let got = outs[0].as_f32().unwrap();
+    let want = flashkat::rational::forward(&x, dims[0] * dims[1], dims[2], &c);
+    let max_err = got.iter().zip(&want).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "max err {max_err}");
+}
+
+#[test]
+fn rational_bwd_artifacts_match_oracle_and_each_other() {
+    let Some(rt) = artifacts() else { return };
+    let flash = rt.load("rational_bwd_flash").unwrap();
+    let kat = rt.load("rational_bwd_kat").unwrap();
+    let dims: Vec<usize> = flash.manifest.raw.get("dims").unwrap().as_arr().unwrap()
+        .iter().map(|v| v.as_usize().unwrap()).collect();
+    let n_el: usize = dims.iter().product();
+    let (x, dout, c) = kernel_case(n_el, 2);
+    let inputs = [
+        HostTensor::F32 { shape: dims.clone(), data: x.clone() },
+        HostTensor::F32 { shape: dims.clone(), data: dout.clone() },
+        HostTensor::F32 { shape: vec![8, 6], data: c.a.clone() },
+        HostTensor::F32 { shape: vec![8, 4], data: c.b.clone() },
+    ];
+    let of = flash.execute(&inputs).unwrap();
+    let ok = kat.execute(&inputs).unwrap();
+
+    // dX from both kernels must agree with the oracle.
+    let (dx_r, da_r, _) = backward(
+        &x,
+        &dout,
+        dims[0] * dims[1],
+        dims[2],
+        &c,
+        Strategy::BlockTree { s_block: 128 },
+    );
+    let dx_scale = dx_r.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+    for (label, outs) in [("flash", &of), ("kat", &ok)] {
+        let dx = outs[0].as_f32().unwrap();
+        let max_err =
+            dx.iter().zip(&dx_r).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max_err / dx_scale < 1e-4, "{label} rel dX err {}", max_err / dx_scale);
+    }
+    // Coefficient gradients: flash vs kat agree to accumulation tolerance.
+    let da_f = of[1].as_f32().unwrap();
+    let da_k = ok[1].as_f32().unwrap();
+    let scale = da_r.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+    for (a, b) in da_f.iter().zip(da_k) {
+        assert!((a - b).abs() / scale < 1e-3, "flash {a} vs kat {b}");
+    }
+}
+
+#[test]
+fn init_artifact_is_deterministic_and_counts_match_config() {
+    let Some(rt) = artifacts() else { return };
+    let m = rt.load("kat_micro_init").unwrap();
+    let p1 = m.execute(&[]).unwrap();
+    let p2 = m.execute(&[]).unwrap();
+    let n1: usize = p1.iter().map(|t| t.elements()).sum();
+    let n2: usize = p2.iter().map(|t| t.elements()).sum();
+    assert_eq!(n1, n2);
+    // matches the Rust config system's analytic count
+    let cfg = flashkat::config::ModelConfig::preset("kat-micro").unwrap();
+    assert_eq!(n1, cfg.param_count(), "init params vs analytic");
+    // determinism (seed baked into the artifact)
+    for (a, b) in p1.iter().zip(&p2) {
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+    }
+}
+
+#[test]
+fn eval_artifact_runs_and_is_deterministic() {
+    let Some(rt) = artifacts() else { return };
+    let init = rt.load("kat_micro_init").unwrap();
+    let eval = rt.load("kat_micro_eval").unwrap();
+    let params = init.execute(&[]).unwrap();
+    let batch = eval.manifest.meta_usize("batch").unwrap();
+    let img = eval.manifest.meta_usize("img_size").unwrap();
+    let mut rng = Pcg64::new(3);
+    let images: Vec<f32> = (0..batch * img * img * 3).map(|_| rng.normal_f32()).collect();
+    let mut inputs = params.clone();
+    inputs.push(HostTensor::F32 { shape: vec![batch, img, img, 3], data: images });
+    let a = eval.execute(&inputs).unwrap();
+    let b = eval.execute(&inputs).unwrap();
+    assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+    assert!(a[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn manifest_shapes_are_enforced() {
+    let Some(rt) = artifacts() else { return };
+    let m = rt.load("rational_fwd").unwrap();
+    // Wrong shape must be rejected before reaching XLA.
+    let bad = [
+        HostTensor::F32 { shape: vec![2, 2], data: vec![0.0; 4] },
+        HostTensor::F32 { shape: vec![8, 6], data: vec![0.0; 48] },
+        HostTensor::F32 { shape: vec![8, 4], data: vec![0.0; 32] },
+    ];
+    assert!(m.execute(&bad).is_err());
+    // Wrong arity too.
+    assert!(m.execute(&bad[..2]).is_err());
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let Some(rt) = artifacts() else { return };
+    let err = match rt.load("no_such_artifact") {
+        Ok(_) => panic!("load of missing artifact succeeded"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("make artifacts"), "{err}");
+}

@@ -1,0 +1,89 @@
+//! Integration: the full training coordinator over real artifacts —
+//! train-step semantics, loss trajectory, checkpoint roundtrip.
+//! Skips gracefully when artifacts/ hasn't been built.
+
+use flashkat::config::TrainConfig;
+use flashkat::coordinator::checkpoint::Checkpoint;
+use flashkat::coordinator::Trainer;
+use flashkat::runtime::Runtime;
+
+fn artifacts() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/.stamp").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Runtime::cpu("artifacts").expect("PJRT CPU client"))
+}
+
+fn quick_cfg(tag: &str, steps: usize) -> TrainConfig {
+    TrainConfig { model: tag.into(), steps, log_every: 0, ..Default::default() }
+}
+
+#[test]
+fn vit_micro_short_training_reduces_loss() {
+    let Some(rt) = artifacts() else { return };
+    let trainer = Trainer::new(&rt, "vit_micro", quick_cfg("vit_micro", 8)).unwrap();
+    let rep = trainer.train(None).unwrap();
+    assert_eq!(rep.losses.len(), 8);
+    assert!(rep.losses.iter().all(|l| l.is_finite()));
+    assert!(
+        rep.final_loss() < rep.first_loss(),
+        "loss {} -> {}",
+        rep.first_loss(),
+        rep.final_loss()
+    );
+    assert!(rep.throughput_mean > 0.0);
+}
+
+#[test]
+fn train_step_is_deterministic_given_state_and_seed() {
+    let Some(rt) = artifacts() else { return };
+    let trainer = Trainer::new(&rt, "vit_micro", quick_cfg("vit_micro", 1)).unwrap();
+    let (p, m, v) = trainer.init_state().unwrap();
+    let images = vec![0.1f32; trainer.batch_size() * 32 * 32 * 3];
+    let labels = vec![0.1f32; trainer.batch_size() * 10];
+    let (_, _, _, l1) = trainer
+        .step(p.clone(), m.clone(), v.clone(), 1, 1e-3, [7, 9], images.clone(), labels.clone())
+        .unwrap();
+    let (_, _, _, l2) =
+        trainer.step(p, m, v, 1, 1e-3, [7, 9], images, labels).unwrap();
+    assert_eq!(l1, l2);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_training() {
+    let Some(rt) = artifacts() else { return };
+    let dir = std::env::temp_dir().join(format!("fk_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("train.ckpt");
+    let trainer = Trainer::new(&rt, "vit_micro", quick_cfg("vit_micro", 2)).unwrap();
+    let rep = trainer.train(Some(&path)).unwrap();
+    assert_eq!(rep.steps, 2);
+    let ck = Checkpoint::load(&path).unwrap();
+    assert_eq!(ck.step, 2);
+    assert_eq!(ck.params.len(), trainer.param_leaves());
+    // Leaf names follow the manifest pytree paths.
+    assert!(ck.params.iter().any(|(n, _)| n.contains("blocks")));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn kat_and_vit_micro_have_comparable_losses_at_init() {
+    // Both models start near ln(10) on 10-way soft labels.
+    let Some(rt) = artifacts() else { return };
+    for tag in ["vit_micro", "kat_micro"] {
+        let trainer = Trainer::new(&rt, tag, quick_cfg(tag, 1)).unwrap();
+        let rep = trainer.train(None).unwrap();
+        let l0 = rep.first_loss();
+        assert!((1.5..4.5).contains(&l0), "{tag} initial loss {l0}");
+    }
+}
+
+#[test]
+fn evaluate_runs_on_initial_params() {
+    let Some(rt) = artifacts() else { return };
+    let trainer = Trainer::new(&rt, "vit_micro", quick_cfg("vit_micro", 1)).unwrap();
+    let (p, _, _) = trainer.init_state().unwrap();
+    let acc = trainer.evaluate(&p, 2).unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}

@@ -1,0 +1,174 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! The offline registry has no proptest, so this file uses a seeded
+//! random-case runner (`cases`) with shrink-free minimal reporting — each
+//! property is exercised over many generated configurations.
+
+use flashkat::coordinator::augment::{self, AugmentConfig};
+use flashkat::coordinator::schedule::CosineSchedule;
+use flashkat::rational::accumulate::{backward, Strategy};
+use flashkat::rational::Coeffs;
+use flashkat::util::json::Json;
+use flashkat::util::rng::Pcg64;
+
+fn cases(n: usize, mut f: impl FnMut(u64, &mut Pcg64)) {
+    for seed in 0..n as u64 {
+        let mut rng = Pcg64::new(seed * 7919 + 13);
+        f(seed, &mut rng);
+    }
+}
+
+#[test]
+fn prop_augment_preserves_label_mass() {
+    // For ANY augmentation config and batch, soft labels remain valid
+    // probability distributions.
+    cases(40, |seed, rng| {
+        let n_classes = 2 + rng.below(20);
+        let img_size = 4 + 2 * rng.below(7);
+        let batch = 1 + rng.below(9);
+        let cfg = AugmentConfig {
+            n_classes,
+            img_size,
+            channels: 3,
+            label_smoothing: rng.uniform_range(0.0, 0.3),
+            mixup_alpha: rng.uniform_range(0.1, 2.0),
+            cutmix_alpha: rng.uniform_range(0.1, 2.0),
+            switch_prob: rng.uniform(),
+            mix_prob: rng.uniform(),
+            erase_prob: rng.uniform(),
+        };
+        let mut images = vec![0.3f32; batch * img_size * img_size * 3];
+        let labels: Vec<usize> = (0..batch).map(|_| rng.below(n_classes)).collect();
+        let soft = augment::apply(&cfg, &mut images, &labels, rng);
+        for b in 0..batch {
+            let row = &soft[b * n_classes..(b + 1) * n_classes];
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3, "seed {seed}: mass {sum}");
+            assert!(row.iter().all(|&p| (0.0..=1.0001).contains(&p)), "seed {seed}");
+        }
+        assert!(images.iter().all(|v| v.is_finite()), "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_schedule_bounded_and_warmup_monotone() {
+    cases(60, |seed, rng| {
+        let base = rng.uniform_range(1e-5, 1e-1);
+        let warmup = rng.below(50);
+        let total = warmup + 1 + rng.below(500);
+        let s = CosineSchedule::new(base, warmup, total);
+        let mut prev = 0.0;
+        for step in 1..=total {
+            let lr = s.lr(step);
+            assert!(lr.is_finite() && lr > 0.0, "seed {seed} step {step}");
+            assert!(lr <= base * 1.0001, "seed {seed}: lr {lr} > base {base}");
+            if step <= warmup {
+                assert!(lr >= prev, "seed {seed}: warmup not monotone");
+            }
+            prev = lr;
+        }
+    });
+}
+
+#[test]
+fn prop_accumulation_strategies_agree_in_f64() {
+    // In f64 every accumulation order gives (numerically) the same result
+    // — the strategies differ ONLY in rounding behaviour.
+    cases(15, |seed, rng| {
+        let n_g = 1 << rng.below(3);
+        let d_g = 1 + rng.below(12);
+        let d = n_g * d_g;
+        let rows = 1 + rng.below(40);
+        let x: Vec<f64> = (0..rows * d).map(|_| rng.normal()).collect();
+        let dout: Vec<f64> = (0..rows * d).map(|_| rng.normal()).collect();
+        let c = Coeffs::<f64>::randn(n_g, 2 + rng.below(5), 1 + rng.below(4), rng);
+        let (_, da0, db0) = backward(&x, &dout, rows, d, &c, Strategy::Sequential);
+        let s_block = 1 + rng.below(rows + 4);
+        for strat in
+            [Strategy::BlockTree { s_block }, Strategy::PairwiseFull, Strategy::BlockSequential { s_block }]
+        {
+            let (_, da, db) = backward(&x, &dout, rows, d, &c, strat);
+            let scale = da0.iter().map(|v| v.abs()).fold(1.0, f64::max);
+            for (u, v) in da.iter().zip(&da0) {
+                assert!((u - v).abs() / scale < 1e-9, "seed {seed} {strat:?}");
+            }
+            let scale = db0.iter().map(|v| v.abs()).fold(1.0, f64::max);
+            for (u, v) in db.iter().zip(&db0) {
+                assert!((u - v).abs() / scale < 1e-9, "seed {seed} {strat:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => Json::Int(rng.next_u64() as i64 >> rng.below(40)),
+            3 => {
+                let s: String = (0..rng.below(12))
+                    .map(|_| char::from_u32(32 + rng.below(90) as u32).unwrap())
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5)).map(|i| (format!("k{i}"), gen(rng, depth - 1))).collect(),
+            ),
+        }
+    }
+    cases(200, |seed, rng| {
+        let v = gen(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(v, back, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_gpusim_work_monotone_in_blocks() {
+    // More blocks of identical work never finish earlier.
+    use flashkat::gpusim::engine::{Instr, Kernel, MemLevel};
+    use flashkat::gpusim::{simulate, GpuConfig};
+    struct K(u64);
+    impl Kernel for K {
+        fn name(&self) -> String {
+            "prop".into()
+        }
+        fn num_blocks(&self) -> u64 {
+            self.0
+        }
+        fn warps_per_block(&self) -> u32 {
+            2
+        }
+        fn warp_program(&self, _b: u64, _w: u32, out: &mut Vec<Instr>) {
+            out.push(Instr::Load { level: MemLevel::Hbm, bytes: 128 });
+            out.push(Instr::Compute { n: 4, flops: 128 });
+            out.push(Instr::Store { level: MemLevel::Hbm, bytes: 128 });
+        }
+    }
+    let cfg = GpuConfig::rtx4060ti();
+    let mut prev = 0;
+    for blocks in [10u64, 100, 1000, 5000, 20000] {
+        let r = simulate(&cfg, &K(blocks));
+        assert!(r.elapsed_cycles >= prev, "blocks {blocks}");
+        prev = r.elapsed_cycles;
+    }
+}
+
+#[test]
+fn prop_rational_forward_finite_for_wild_inputs() {
+    // Safe-PAU property: Q >= 1 means no poles for ANY coefficients/x.
+    cases(30, |seed, rng| {
+        let c = Coeffs::<f32>::randn(4, 6, 4, rng);
+        let rows = 3;
+        let d = 16;
+        let x: Vec<f32> = (0..rows * d)
+            .map(|_| (rng.normal() * 10f64.powi(rng.below(6) as i32 - 3)) as f32)
+            .collect();
+        let y = flashkat::rational::forward(&x, rows, d, &c);
+        assert!(y.iter().all(|v| v.is_finite()), "seed {seed}");
+    });
+}
