@@ -1,0 +1,323 @@
+//! Repeatable host GR-KAN kernel perf harness.
+//!
+//! Times forward and backward for every accumulation strategy at fixed
+//! dims (the acceptance dims: rows=4096, d=768, 8 groups, f32 — plus an
+//! f64 row) and writes `BENCH_rational.json` so the perf trajectory is
+//! tracked across PRs.
+//!
+//! Two baselines quantify the restructured kernel (DESIGN.md §§4, 7, 9):
+//! - **seed impl**: a faithful copy of the seed's `backward_block` —
+//!   scoped thread spawns per call, per-element heap scratch, f64
+//!   round-trip element math, dx tile materialize+scatter.  The
+//!   `speedup_block_tree_vs_seed` field is the acceptance metric (≥3x).
+//! - **round-trip elem math**: the current tiled/pooled structure but
+//!   with a `Scalar` that has no native fast paths, isolating the
+//!   monomorphized native-precision win from the structural wins.
+//!
+//!     cargo bench --bench bench_rational_host -- [--rows N] [--reps N]
+
+mod bench_util;
+
+use flashkat::rational::accumulate::{backward, PairwiseAcc, Strategy};
+use flashkat::rational::{backward_elem_ref, Coeffs, Float};
+use flashkat::tensor::Scalar;
+use flashkat::util::json::Json;
+use flashkat::util::parallel::default_threads;
+use flashkat::util::rng::Pcg64;
+
+// ---------------- seed implementation (frozen copy) ----------------
+
+/// The seed's scoped-spawn parallel map (one thread batch per call).
+fn seed_par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = default_threads().min(n);
+    if threads <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    struct SendPtr<T>(*mut T);
+    unsafe impl<T> Send for SendPtr<T> {}
+    unsafe impl<T> Sync for SendPtr<T> {}
+    let slots: Vec<_> = out.iter_mut().map(|s| SendPtr(s as *mut Option<R>)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let slots = &slots;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                unsafe { slots[i].0.write(Some(r)) };
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("worker filled slot")).collect()
+}
+
+/// Faithful copy of the seed's BlockTree backward (heap accumulators,
+/// f64 round-trip element math via `backward_elem_ref`, dx tiles
+/// materialized then scattered).
+fn seed_backward_block_tree(
+    x: &[f32],
+    dout: &[f32],
+    rows: usize,
+    d: usize,
+    c: &Coeffs<f32>,
+    s_block: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let d_g = d / c.n_groups;
+    let (m1, n, n_g) = (c.m1, c.n, c.n_groups);
+    let s_block = s_block.max(1);
+    let n_blocks = rows.div_ceil(s_block);
+    let jobs: Vec<(usize, usize)> =
+        (0..n_blocks).flat_map(|blk| (0..n_g).map(move |g| (blk, g))).collect();
+
+    struct Partial {
+        blk: usize,
+        g: usize,
+        da: Vec<f32>,
+        db: Vec<f32>,
+        dx: Vec<f32>,
+    }
+
+    let partials: Vec<Partial> = seed_par_map(&jobs, |&(blk, g)| {
+        let a = c.a_row(g);
+        let b = c.b_row(g);
+        let r0 = blk * s_block;
+        let r1 = (r0 + s_block).min(rows);
+        let mut dx_tile = Vec::with_capacity((r1 - r0) * d_g);
+        let mut da_e = vec![0f32; m1];
+        let mut db_e = vec![0f32; n];
+        let mut tree_a: Vec<PairwiseAcc<f32>> = vec![PairwiseAcc::default(); m1];
+        let mut tree_b: Vec<PairwiseAcc<f32>> = vec![PairwiseAcc::default(); n];
+        let mut seq_a = vec![0f32; m1];
+        let mut seq_b = vec![0f32; n];
+        const RUN: usize = 64;
+        let mut run = 0usize;
+        for r in r0..r1 {
+            for k in 0..d_g {
+                let idx = r * d + g * d_g + k;
+                let dxv = backward_elem_ref(x[idx], dout[idx], a, b, &mut da_e, &mut db_e);
+                dx_tile.push(dxv);
+                for i in 0..m1 {
+                    seq_a[i] = f32::from_f64(seq_a[i].to_f64() + da_e[i].to_f64());
+                }
+                for j in 0..n {
+                    seq_b[j] = f32::from_f64(seq_b[j].to_f64() + db_e[j].to_f64());
+                }
+                run += 1;
+                if run == RUN {
+                    for i in 0..m1 {
+                        tree_a[i].push(seq_a[i]);
+                        seq_a[i] = 0.0;
+                    }
+                    for j in 0..n {
+                        tree_b[j].push(seq_b[j]);
+                        seq_b[j] = 0.0;
+                    }
+                    run = 0;
+                }
+            }
+        }
+        if run > 0 {
+            for i in 0..m1 {
+                tree_a[i].push(seq_a[i]);
+            }
+            for j in 0..n {
+                tree_b[j].push(seq_b[j]);
+            }
+        }
+        Partial {
+            blk,
+            g,
+            da: tree_a.iter().map(PairwiseAcc::finish).collect(),
+            db: tree_b.iter().map(PairwiseAcc::finish).collect(),
+            dx: dx_tile,
+        }
+    });
+
+    let mut dx = vec![0f32; x.len()];
+    let mut da = vec![0f32; n_g * m1];
+    let mut db = vec![0f32; n_g * n];
+    for p in &partials {
+        let r0 = p.blk * s_block;
+        let r1 = (r0 + s_block).min(rows);
+        for (t, r) in (r0..r1).enumerate() {
+            let src = &p.dx[t * d_g..(t + 1) * d_g];
+            dx[r * d + p.g * d_g..r * d + (p.g + 1) * d_g].copy_from_slice(src);
+        }
+    }
+    let mut ordered: Vec<&Partial> = partials.iter().collect();
+    ordered.sort_by_key(|p| (p.g, p.blk));
+    for p in ordered {
+        for i in 0..m1 {
+            da[p.g * m1 + i] = f32::from_f64(da[p.g * m1 + i].to_f64() + p.da[i].to_f64());
+        }
+        for j in 0..n {
+            db[p.g * n + j] = f32::from_f64(db[p.g * n + j].to_f64() + p.db[j].to_f64());
+        }
+    }
+    (dx, da, db)
+}
+
+// -------- round-trip scalar (no native fast paths) --------
+
+/// f32 twin without the `Float` fast-path overrides: same bits, same
+/// semantics, but every op goes through the generic f64 round-trip —
+/// isolates the native-math win on the current structure.
+#[derive(Clone, Copy, Debug, Default, PartialEq, PartialOrd)]
+struct RtF32(f32);
+
+impl Scalar for RtF32 {
+    fn from_f64(x: f64) -> Self {
+        RtF32(x as f32)
+    }
+    fn to_f64(self) -> f64 {
+        self.0 as f64
+    }
+    const ZERO: Self = RtF32(0.0);
+    const ONE: Self = RtF32(1.0);
+}
+
+impl Float for RtF32 {
+    fn abs(self) -> Self {
+        RtF32(self.0.abs())
+    }
+    fn signum0(self) -> Self {
+        RtF32(if self.0 > 0.0 {
+            1.0
+        } else if self.0 < 0.0 {
+            -1.0
+        } else {
+            0.0
+        })
+    }
+    fn mul_add2(self, a: Self, b: Self) -> Self {
+        RtF32(self.0 * a.0 + b.0)
+    }
+}
+
+fn arg_usize(name: &str, default: usize) -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    // Acceptance dims: rows=4096, d=768, 8 groups (m+1=6, n=4), f32.
+    let rows = arg_usize("--rows", 4096);
+    let reps = arg_usize("--reps", 5);
+    let d = 768;
+    let (n_g, m1, n) = (8, 6, 4);
+    let s_block = 128;
+    let n_el = rows * d;
+
+    let mut rng = Pcg64::new(0);
+    let x: Vec<f32> = (0..n_el).map(|_| rng.normal_f32()).collect();
+    let dout: Vec<f32> = (0..n_el).map(|_| rng.normal_f32()).collect();
+    let coeffs = Coeffs::<f32>::randn(n_g, m1, n, &mut rng);
+    let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    let do64: Vec<f64> = dout.iter().map(|&v| v as f64).collect();
+    let c64 = coeffs.cast::<f64>();
+    let xr: Vec<RtF32> = x.iter().map(|&v| RtF32(v)).collect();
+    let dor: Vec<RtF32> = dout.iter().map(|&v| RtF32(v)).collect();
+    let cr = coeffs.cast::<RtF32>();
+
+    println!(
+        "host GR-KAN kernel @ rows={rows} d={d} groups={n_g} (threads={})",
+        default_threads()
+    );
+    let mut rec = bench_util::Records::new("bench_rational_host");
+    rec.meta(
+        "dims",
+        Json::Obj(vec![
+            ("rows".into(), Json::Int(rows as i64)),
+            ("d".into(), Json::Int(d as i64)),
+            ("n_groups".into(), Json::Int(n_g as i64)),
+            ("m1".into(), Json::Int(m1 as i64)),
+            ("n".into(), Json::Int(n as i64)),
+            ("s_block".into(), Json::Int(s_block as i64)),
+        ]),
+    );
+    rec.meta("threads", Json::Int(default_threads() as i64));
+
+    // Sanity before timing: the restructured kernel must agree with the
+    // frozen seed copy (identical accumulation order; dA bit-identical,
+    // dB/dx within per-element fused-rounding tolerance).
+    let (dx_new, da_new, _) =
+        backward(&x, &dout, rows, d, &coeffs, Strategy::BlockTree { s_block });
+    let (dx_seed, da_seed, _) = seed_backward_block_tree(&x, &dout, rows, d, &coeffs, s_block);
+    let da_scale = da_seed.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+    for (a, b) in da_new.iter().zip(&da_seed) {
+        assert!(
+            (a - b).abs() / da_scale < 1e-5,
+            "dA diverged from seed: {a} vs {b}"
+        );
+    }
+    let dx_scale = dx_seed.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+    for (a, b) in dx_new.iter().zip(&dx_seed) {
+        assert!((a - b).abs() / dx_scale < 1e-5, "dx diverged from seed: {a} vs {b}");
+    }
+    drop((dx_new, da_new, dx_seed, da_seed));
+
+    let st = bench_util::bench("fwd f32", 1, reps, || {
+        let _ = flashkat::rational::forward(&x, rows, d, &coeffs);
+    });
+    rec.add("forward_f32", &st, n_el);
+
+    let st_seed = bench_util::bench("bwd block-tree f32 (seed impl)", 1, reps, || {
+        let _ = seed_backward_block_tree(&x, &dout, rows, d, &coeffs, s_block);
+    });
+    rec.add("backward_f32_block_tree_seed", &st_seed, n_el);
+
+    let st_rt = bench_util::bench("bwd block-tree f32 (round-trip elem)", 1, reps, || {
+        let _ = backward(&xr, &dor, rows, d, &cr, Strategy::BlockTree { s_block });
+    });
+    rec.add("backward_f32_block_tree_roundtrip", &st_rt, n_el);
+
+    let st_fast = bench_util::bench("bwd block-tree f32 (fast)", 1, reps, || {
+        let _ = backward(&x, &dout, rows, d, &coeffs, Strategy::BlockTree { s_block });
+    });
+    rec.add("backward_f32_block_tree", &st_fast, n_el);
+
+    for (label, json_label, strat) in [
+        (
+            "bwd block-seq f32 (fast)",
+            "backward_f32_block_sequential",
+            Strategy::BlockSequential { s_block },
+        ),
+        ("bwd sequential f32 (fast)", "backward_f32_sequential", Strategy::Sequential),
+        ("bwd pairwise-full f32 (fast)", "backward_f32_pairwise_full", Strategy::PairwiseFull),
+    ] {
+        let st = bench_util::bench(label, 1, reps, || {
+            let _ = backward(&x, &dout, rows, d, &coeffs, strat);
+        });
+        rec.add(json_label, &st, n_el);
+    }
+
+    let st64 = bench_util::bench("bwd block-tree f64 (fast)", 1, reps, || {
+        let _ = backward(&x64, &do64, rows, d, &c64, Strategy::BlockTree { s_block });
+    });
+    rec.add("backward_f64_block_tree", &st64, n_el);
+
+    let speedup_seed = st_seed.mean() / st_fast.mean();
+    let speedup_rt = st_rt.mean() / st_fast.mean();
+    rec.meta("speedup_block_tree_vs_seed", Json::Num(speedup_seed));
+    rec.meta("speedup_block_tree_vs_roundtrip_elem", Json::Num(speedup_rt));
+    println!(
+        "block-tree backward speedup: {speedup_seed:.2}x vs seed impl \
+         ({speedup_rt:.2}x of it from native elem math)"
+    );
+    rec.write("BENCH_rational.json");
+}

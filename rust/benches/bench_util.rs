@@ -3,12 +3,16 @@
 //! Each `cargo bench` target regenerates one paper table/figure and, where
 //! a hot code path is involved, reports wall-clock statistics over
 //! repeated runs (mean ± 95% CI, min) in a criterion-like format.
+//! [`Records`] additionally persists results as JSON so the perf
+//! trajectory is tracked across PRs (BENCH_rational.json).
 
 use std::time::Instant;
 
+use flashkat::util::json::Json;
 use flashkat::util::stats::OnlineStats;
 
 /// Time `f` for `reps` measured runs after `warmup` runs.
+#[allow(dead_code)] // each bench target compiles its own copy of this module
 pub fn bench<F: FnMut()>(label: &str, warmup: usize, reps: usize, mut f: F) -> OnlineStats {
     for _ in 0..warmup {
         f();
@@ -30,6 +34,59 @@ pub fn bench<F: FnMut()>(label: &str, warmup: usize, reps: usize, mut f: F) -> O
 }
 
 /// Artifacts present? Benches that need the AOT path skip gracefully.
+#[allow(dead_code)]
 pub fn artifacts_available() -> bool {
     std::path::Path::new("artifacts/.stamp").exists()
+}
+
+/// Accumulates labelled timing records and writes them as one JSON file —
+/// the machine-readable counterpart of [`bench`]'s stdout lines.
+#[allow(dead_code)]
+pub struct Records {
+    bench: String,
+    meta: Vec<(String, Json)>,
+    results: Vec<Json>,
+}
+
+#[allow(dead_code)]
+impl Records {
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), meta: Vec::new(), results: Vec::new() }
+    }
+
+    /// Attach a top-level metadata field (dims, thread count, ...).
+    pub fn meta(&mut self, key: &str, value: Json) {
+        self.meta.push((key.to_string(), value));
+    }
+
+    /// Record one timed result; `elements` (if nonzero) adds a
+    /// melem-per-second throughput column derived from the mean.
+    pub fn add(&mut self, label: &str, st: &OnlineStats, elements: usize) {
+        let mut obj = vec![
+            ("label".to_string(), Json::Str(label.to_string())),
+            ("mean_ms".to_string(), Json::Num(st.mean() * 1e3)),
+            ("ci95_ms".to_string(), Json::Num(st.ci95() * 1e3)),
+            ("min_ms".to_string(), Json::Num(st.min() * 1e3)),
+            ("reps".to_string(), Json::Int(st.count() as i64)),
+        ];
+        if elements > 0 && st.mean() > 0.0 {
+            obj.push((
+                "melem_per_s".to_string(),
+                Json::Num(elements as f64 / st.mean() / 1e6),
+            ));
+        }
+        self.results.push(Json::Obj(obj));
+    }
+
+    /// Serialize to `path` (pretty enough for diffs: one top-level object).
+    pub fn write(&self, path: &str) {
+        let mut top = vec![("bench".to_string(), Json::Str(self.bench.clone()))];
+        top.extend(self.meta.iter().cloned());
+        top.push(("results".to_string(), Json::Arr(self.results.clone())));
+        let text = Json::Obj(top).to_string();
+        match std::fs::write(path, &text) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
+        }
+    }
 }

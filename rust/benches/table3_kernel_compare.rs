@@ -36,6 +36,27 @@ fn main() {
         );
     }
 
+    // Host GR-KAN kernel wall-clock at the same per-row shape (the
+    // restructured fused path of DESIGN.md §4; CPU substrate, so this
+    // contextualizes — not reproduces — the GPU numbers above).
+    {
+        use flashkat::rational::accumulate::{backward, Strategy};
+        use flashkat::rational::Coeffs;
+        let rows = 2048;
+        let d = 768;
+        let mut rng = Pcg64::new(1);
+        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+        let dout: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+        let coeffs = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+        println!("\nhost kernel wall-clock (fused, {rows}x{d}):");
+        bench_util::bench("host bwd kat-order  (Alg1)", 1, 3, || {
+            let _ = backward(&x, &dout, rows, d, &coeffs, Strategy::Sequential);
+        });
+        bench_util::bench("host bwd block-tree (Alg2)", 1, 3, || {
+            let _ = backward(&x, &dout, rows, d, &coeffs, Strategy::BlockTree { s_block: 128 });
+        });
+    }
+
     if !bench_util::artifacts_available() {
         println!("\n(artifacts/ missing — skipping AOT kernel wall-clock sanity)");
         return;

@@ -34,17 +34,28 @@ fn main() {
         );
     }
 
-    // Hot-path timing of both accumulation strategies.
+    // Hot-path timing of both accumulation strategies (the fused native
+    // kernel; bench_rational_host tracks the full strategy matrix and the
+    // seed-vs-restructured speedup in BENCH_rational.json).
     let rows = 8192;
     let d = 768;
     let mut rng = Pcg64::new(0);
     let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
     let dout: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
     let coeffs = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+    bench_util::bench("fwd (fused)                 8192x768", 1, 3, || {
+        let _ = flashkat::rational::forward(&x, rows, d, &coeffs);
+    });
     bench_util::bench("bwd sequential (Alg1 order) 8192x768", 1, 3, || {
         let _ = backward(&x, &dout, rows, d, &coeffs, Strategy::Sequential);
     });
     bench_util::bench("bwd block-tree  (Alg2)      8192x768", 1, 3, || {
         let _ = backward(&x, &dout, rows, d, &coeffs, Strategy::BlockTree { s_block: 128 });
+    });
+    let x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    let do64: Vec<f64> = dout.iter().map(|&v| v as f64).collect();
+    let c64 = coeffs.cast::<f64>();
+    bench_util::bench("bwd block-tree  f64 oracle  8192x768", 1, 3, || {
+        let _ = backward(&x64, &do64, rows, d, &c64, Strategy::BlockTree { s_block: 128 });
     });
 }

@@ -9,8 +9,9 @@
 //! point summation error grows with chain length, hence the ~2 orders of
 //! magnitude MAE gap the paper reports.
 
+use super::kernel::{self, SpillAcc, TileAcc};
 use super::{backward_elem, Coeffs, Float};
-use crate::util::parallel::par_map;
+use crate::util::parallel::{default_threads, par_map, par_map_capped, SendPtr};
 
 /// How coefficient-gradient contributions are reduced into dA / dB.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -53,6 +54,10 @@ pub fn backward<T: Float>(
     }
 }
 
+/// Algorithm 1's schedule.  Deliberately serial: this strategy *is* the
+/// bit-exact global-ordering reference the experiment measures against.
+/// The element math and the single-rounded adds go through the fast-path
+/// hooks (bit-identical to the seed's f64 round-trips for f32/f64 adds).
 fn backward_sequential<T: Float>(
     x: &[T],
     dout: &[T],
@@ -65,21 +70,30 @@ fn backward_sequential<T: Float>(
     let mut dx = vec![T::ZERO; x.len()];
     let mut da = vec![T::ZERO; c.n_groups * m1];
     let mut db = vec![T::ZERO; c.n_groups * n];
-    let mut da_e = vec![T::ZERO; m1];
-    let mut db_e = vec![T::ZERO; n];
+    let mut da_stack = [T::ZERO; kernel::MAX_M1];
+    let mut db_stack = [T::ZERO; kernel::MAX_N];
+    let mut da_heap;
+    let mut db_heap;
+    let (da_e, db_e): (&mut [T], &mut [T]) = if kernel::fits_registers(m1, n) {
+        (&mut da_stack[..m1], &mut db_stack[..n])
+    } else {
+        da_heap = vec![T::ZERO; m1];
+        db_heap = vec![T::ZERO; n];
+        (&mut da_heap, &mut db_heap)
+    };
     for r in 0..rows {
         for g in 0..c.n_groups {
             let a = c.a_row(g);
             let b = c.b_row(g);
             for k in 0..d_g {
                 let idx = r * d + g * d_g + k;
-                dx[idx] = backward_elem(x[idx], dout[idx], a, b, &mut da_e, &mut db_e);
+                dx[idx] = backward_elem(x[idx], dout[idx], a, b, da_e, db_e);
                 // one "atomic add" per coefficient per element
                 for i in 0..m1 {
-                    da[g * m1 + i] = T::from_f64(da[g * m1 + i].to_f64() + da_e[i].to_f64());
+                    da[g * m1 + i] = da[g * m1 + i].add_r(da_e[i]);
                 }
                 for j in 0..n {
-                    db[g * n + j] = T::from_f64(db[g * n + j].to_f64() + db_e[j].to_f64());
+                    db[g * n + j] = db[g * n + j].add_r(db_e[j]);
                 }
             }
         }
@@ -160,7 +174,10 @@ fn backward_block<T: Float>(
 
     // Per-(block, group) partials computed in parallel (mirrors the 2-D
     // grid of Algorithm 2), then accumulated over blocks in block order
-    // (the serialized atomic adds).
+    // (the serialized atomic adds).  Each tile streams its x/dout exactly
+    // once and writes its dx span directly into the output buffer; the
+    // register accumulators live in `kernel::TileAcc` (spill twin for
+    // coefficient counts above the caps — bit-identical ordering).
     let jobs: Vec<(usize, usize)> = (0..n_blocks)
         .flat_map(|blk| (0..n_g).map(move |g| (blk, g)))
         .collect();
@@ -170,98 +187,72 @@ fn backward_block<T: Float>(
         g: usize,
         da: Vec<T>,
         db: Vec<T>,
-        dx: Vec<T>, // tile dx, (rows_in_block * d_g)
     }
+
+    let mut dx = vec![T::ZERO; x.len()];
+    let dx_base = SendPtr(dx.as_mut_ptr());
+    let use_registers = kernel::fits_registers(m1, n);
 
     let partials: Vec<Partial<T>> = par_map(&jobs, |&(blk, g)| {
         let a = c.a_row(g);
         let b = c.b_row(g);
         let r0 = blk * s_block;
         let r1 = (r0 + s_block).min(rows);
-        let tile = (r1 - r0) * d_g;
-        let mut dx_tile = Vec::with_capacity(tile);
-        let mut da_e = vec![T::ZERO; m1];
-        let mut db_e = vec![T::ZERO; n];
-        // Streaming accumulation, O(log) state per coefficient: pairwise
-        // carry-stacks for the tree variant, plain sums for the ablation.
-        let mut tree_a: Vec<PairwiseAcc<T>> = vec![PairwiseAcc::default(); m1];
-        let mut tree_b: Vec<PairwiseAcc<T>> = vec![PairwiseAcc::default(); n];
-        let mut seq_a = vec![T::ZERO; m1];
-        let mut seq_b = vec![T::ZERO; n];
-        // Chunked pairwise (numpy-style): sequential runs of RUN elements
-        // feed the carry stack — register-speed, tree-class rounding.
-        const RUN: usize = 64;
-        let mut run = 0usize;
-        for r in r0..r1 {
-            for k in 0..d_g {
-                let idx = r * d + g * d_g + k;
-                let dxv = backward_elem(x[idx], dout[idx], a, b, &mut da_e, &mut db_e);
-                dx_tile.push(dxv);
-                for i in 0..m1 {
-                    seq_a[i] = T::from_f64(seq_a[i].to_f64() + da_e[i].to_f64());
-                }
-                for j in 0..n {
-                    seq_b[j] = T::from_f64(seq_b[j].to_f64() + db_e[j].to_f64());
-                }
-                run += 1;
-                if tree && run == RUN {
-                    for i in 0..m1 {
-                        tree_a[i].push(seq_a[i]);
-                        seq_a[i] = T::ZERO;
-                    }
-                    for j in 0..n {
-                        tree_b[j].push(seq_b[j]);
-                        seq_b[j] = T::ZERO;
-                    }
-                    run = 0;
-                }
+        if use_registers {
+            let mut acc = TileAcc::new(m1, n, tree);
+            for r in r0..r1 {
+                let base = r * d + g * d_g;
+                // SAFETY: each (blk, g) job owns a disjoint set of dx
+                // indices (rows r0..r1 of group g's columns) and the dx
+                // Vec outlives par_map.
+                let dx_seg =
+                    unsafe { std::slice::from_raw_parts_mut(dx_base.0.add(base), d_g) };
+                kernel::backward_row_seg(
+                    &x[base..base + d_g],
+                    &dout[base..base + d_g],
+                    dx_seg,
+                    a,
+                    b,
+                    &mut acc,
+                );
             }
-        }
-        let (da, db) = if tree {
-            if run > 0 {
-                for i in 0..m1 {
-                    tree_a[i].push(seq_a[i]);
-                }
-                for j in 0..n {
-                    tree_b[j].push(seq_b[j]);
-                }
-            }
-            (
-                tree_a.iter().map(PairwiseAcc::finish).collect(),
-                tree_b.iter().map(PairwiseAcc::finish).collect(),
-            )
+            let (da, db) = acc.finish();
+            Partial { blk, g, da: da[..m1].to_vec(), db: db[..n].to_vec() }
         } else {
-            (seq_a, seq_b)
-        };
-        Partial { blk, g, da, db, dx: dx_tile }
+            let mut acc = SpillAcc::new(m1, n, tree);
+            for r in r0..r1 {
+                let base = r * d + g * d_g;
+                // SAFETY: as above — disjoint dx spans per job.
+                let dx_seg =
+                    unsafe { std::slice::from_raw_parts_mut(dx_base.0.add(base), d_g) };
+                acc.row_seg(&x[base..base + d_g], &dout[base..base + d_g], dx_seg, a, b);
+            }
+            let (da, db) = acc.finish();
+            Partial { blk, g, da, db }
+        }
     });
 
-    // Scatter dx tiles and accumulate the per-block partials in block order.
-    let mut dx = vec![T::ZERO; x.len()];
+    // Accumulate the per-block partials in block order (the serialized
+    // global adds of Algorithm 2).
     let mut da = vec![T::ZERO; n_g * m1];
     let mut db = vec![T::ZERO; n_g * n];
-    for p in &partials {
-        let r0 = p.blk * s_block;
-        let r1 = (r0 + s_block).min(rows);
-        for (t, r) in (r0..r1).enumerate() {
-            let src = &p.dx[t * d_g..(t + 1) * d_g];
-            let dst = &mut dx[r * d + p.g * d_g..r * d + (p.g + 1) * d_g];
-            dst.copy_from_slice(src);
-        }
-    }
     let mut ordered: Vec<&Partial<T>> = partials.iter().collect();
     ordered.sort_by_key(|p| (p.g, p.blk));
     for p in ordered {
         for i in 0..m1 {
-            da[p.g * m1 + i] = T::from_f64(da[p.g * m1 + i].to_f64() + p.da[i].to_f64());
+            da[p.g * m1 + i] = da[p.g * m1 + i].add_r(p.da[i]);
         }
         for j in 0..n {
-            db[p.g * n + j] = T::from_f64(db[p.g * n + j].to_f64() + p.db[j].to_f64());
+            db[p.g * n + j] = db[p.g * n + j].add_r(p.db[j]);
         }
     }
     (dx, da, db)
 }
 
+/// Best-case ordering ablation: full pairwise tree over every
+/// contribution.  Groups are independent, so they run in parallel on the
+/// worker pool (deterministic: each group's materialize-then-reduce is
+/// self-contained and dx spans are disjoint).
 fn backward_pairwise_full<T: Float>(
     x: &[T],
     dout: &[T],
@@ -272,20 +263,31 @@ fn backward_pairwise_full<T: Float>(
     let d_g = d / c.n_groups;
     let (m1, n, n_g) = (c.m1, c.n, c.n_groups);
     let mut dx = vec![T::ZERO; x.len()];
-    let mut da = vec![T::ZERO; n_g * m1];
-    let mut db = vec![T::ZERO; n_g * n];
-    let mut da_e = vec![T::ZERO; m1];
-    let mut db_e = vec![T::ZERO; n];
-    for g in 0..n_g {
+    let dx_base = SendPtr(dx.as_mut_ptr());
+    let groups: Vec<usize> = (0..n_g).collect();
+    // Each in-flight group materializes (m1+n) buffers of rows*d_g
+    // contributions; cap concurrency so the total stays around ~1 GiB
+    // regardless of scalar width (the seed held one group at a time — at
+    // paper dims this degrades to that, while small ablation dims use the
+    // full pool).
+    let per_group_bytes = rows * d_g * (m1 + n) * std::mem::size_of::<T>();
+    let cap = ((1usize << 30) / per_group_bytes.max(1)).clamp(1, default_threads());
+    let per_group: Vec<(Vec<T>, Vec<T>)> = par_map_capped(&groups, cap, |&g| {
         let a = c.a_row(g);
         let b = c.b_row(g);
         let tile = rows * d_g;
+        let mut da_e = vec![T::ZERO; m1];
+        let mut db_e = vec![T::ZERO; n];
         let mut contrib_a: Vec<Vec<T>> = (0..m1).map(|_| Vec::with_capacity(tile)).collect();
         let mut contrib_b: Vec<Vec<T>> = (0..n).map(|_| Vec::with_capacity(tile)).collect();
         for r in 0..rows {
+            let base = r * d + g * d_g;
+            // SAFETY: group g owns a disjoint set of dx columns; the Vec
+            // outlives par_map.
+            let dx_seg = unsafe { std::slice::from_raw_parts_mut(dx_base.0.add(base), d_g) };
             for k in 0..d_g {
-                let idx = r * d + g * d_g + k;
-                dx[idx] = backward_elem(x[idx], dout[idx], a, b, &mut da_e, &mut db_e);
+                dx_seg[k] =
+                    backward_elem(x[base + k], dout[base + k], a, b, &mut da_e, &mut db_e);
                 for i in 0..m1 {
                     contrib_a[i].push(da_e[i]);
                 }
@@ -294,12 +296,16 @@ fn backward_pairwise_full<T: Float>(
                 }
             }
         }
-        for i in 0..m1 {
-            da[g * m1 + i] = tree_sum(&mut contrib_a[i]);
-        }
-        for j in 0..n {
-            db[g * n + j] = tree_sum(&mut contrib_b[j]);
-        }
+        (
+            contrib_a.iter_mut().map(|buf| tree_sum(buf)).collect(),
+            contrib_b.iter_mut().map(|buf| tree_sum(buf)).collect(),
+        )
+    });
+    let mut da = vec![T::ZERO; n_g * m1];
+    let mut db = vec![T::ZERO; n_g * n];
+    for (g, (da_g, db_g)) in per_group.iter().enumerate() {
+        da[g * m1..(g + 1) * m1].copy_from_slice(da_g);
+        db[g * n..(g + 1) * n].copy_from_slice(db_g);
     }
     (dx, da, db)
 }

@@ -5,11 +5,23 @@
 //! (f32, block tree reduction), and the f64 oracle; report the MAE between
 //! each f32 result and the oracle over `passes` independent passes, with
 //! 95% confidence intervals and variances — the exact columns of Table 8.
+//!
+//! Both the per-pass loop and the f64 oracle use deterministic parallel
+//! schedules (worker pool): passes are RNG-independent, and in f64 the
+//! oracle's ordering noise (~1e-16 relative) is invisible next to the
+//! ~1e-6 f32 accumulation errors under study.
 
 use super::accumulate::{backward, Strategy};
 use super::Coeffs;
+use crate::util::parallel::{default_threads, par_map_capped};
 use crate::util::rng::Pcg64;
 use crate::util::stats::OnlineStats;
+
+/// Upper bound on concurrently-running passes: each in-flight pass holds
+/// ~6 `rows*d` buffers, so full pool width would multiply peak memory by
+/// 16x at the paper-scale dims.  Inner backwards nested inside a pass
+/// worker fall back to serial automatically (see util::parallel).
+const MAX_PASS_WIDTH: usize = 4;
 
 #[derive(Clone, Debug)]
 pub struct RoundingConfig {
@@ -71,13 +83,21 @@ fn grad_error(maes: &[f64]) -> GradError {
 }
 
 /// Run the full experiment.  Returns the per-strategy MAE statistics.
+///
+/// Passes are independent (each derives its own RNG stream from
+/// `seed + pass`) and run on the worker pool with a deterministic
+/// schedule — results are identical to the serial loop at any width.
+/// The f64 oracle uses the block-tree schedule: in f64 the
+/// ordering-induced difference vs. the sequential order is ~1e-16
+/// relative — far below the f32 effects being measured.  Its 2-D job
+/// grid parallelizes when the oracle runs outside pass-level
+/// parallelism (passes == 1); with multiple passes in flight the
+/// nested backward serializes inside each pass worker and the
+/// parallelism comes from the pass level instead.
 pub fn run(cfg: &RoundingConfig) -> RoundingReport {
-    let mut kat_da_maes = Vec::with_capacity(cfg.passes);
-    let mut kat_db_maes = Vec::with_capacity(cfg.passes);
-    let mut flash_da_maes = Vec::with_capacity(cfg.passes);
-    let mut flash_db_maes = Vec::with_capacity(cfg.passes);
-
-    for pass in 0..cfg.passes {
+    let pass_ids: Vec<usize> = (0..cfg.passes).collect();
+    let width = default_threads().min(MAX_PASS_WIDTH);
+    let maes: Vec<[f64; 4]> = par_map_capped(&pass_ids, width, |&pass| {
         let mut rng = Pcg64::new(cfg.seed.wrapping_add(pass as u64));
         let n_el = cfg.rows * cfg.d;
         let x64: Vec<f64> = (0..n_el).map(|_| rng.normal()).collect();
@@ -89,7 +109,14 @@ pub fn run(cfg: &RoundingConfig) -> RoundingReport {
         let c32 = c64.cast::<f32>();
 
         // f64 oracle (the paper computes the KAT method in float64).
-        let (_, da64, db64) = backward(&x64, &do64, cfg.rows, cfg.d, &c64, Strategy::Sequential);
+        let (_, da64, db64) = backward(
+            &x64,
+            &do64,
+            cfg.rows,
+            cfg.d,
+            &c64,
+            Strategy::BlockTree { s_block: cfg.s_block },
+        );
 
         let (_, da_kat, db_kat) =
             backward(&x32, &do32, cfg.rows, cfg.d, &c32, Strategy::Sequential);
@@ -102,11 +129,16 @@ pub fn run(cfg: &RoundingConfig) -> RoundingReport {
             Strategy::BlockTree { s_block: cfg.s_block },
         );
 
-        kat_da_maes.push(mae(&da_kat, &da64));
-        kat_db_maes.push(mae(&db_kat, &db64));
-        flash_da_maes.push(mae(&da_fl, &da64));
-        flash_db_maes.push(mae(&db_fl, &db64));
-    }
+        [
+            mae(&da_kat, &da64),
+            mae(&db_kat, &db64),
+            mae(&da_fl, &da64),
+            mae(&db_fl, &db64),
+        ]
+    });
+    let col = |i: usize| -> Vec<f64> { maes.iter().map(|m| m[i]).collect() };
+    let (kat_da_maes, kat_db_maes) = (col(0), col(1));
+    let (flash_da_maes, flash_db_maes) = (col(2), col(3));
 
     RoundingReport {
         cfg_desc: format!(
@@ -126,15 +158,22 @@ pub fn run(cfg: &RoundingConfig) -> RoundingReport {
 pub fn run_bf16(cfg: &RoundingConfig) -> (GradError, GradError) {
     use super::Bf16;
     use crate::tensor::Scalar;
-    let mut kat_maes = Vec::with_capacity(cfg.passes);
-    let mut flash_maes = Vec::with_capacity(cfg.passes);
-    for pass in 0..cfg.passes {
+    let pass_ids: Vec<usize> = (0..cfg.passes).collect();
+    let width = default_threads().min(MAX_PASS_WIDTH);
+    let maes: Vec<[f64; 2]> = par_map_capped(&pass_ids, width, |&pass| {
         let mut rng = Pcg64::new(cfg.seed.wrapping_add(0xbf16 + pass as u64));
         let n_el = cfg.rows * cfg.d;
         let x64: Vec<f64> = (0..n_el).map(|_| rng.normal()).collect();
         let do64: Vec<f64> = (0..n_el).map(|_| rng.normal()).collect();
         let c64 = Coeffs::<f64>::randn(cfg.n_groups, cfg.m1, cfg.n, &mut rng);
-        let (_, da64, _) = backward(&x64, &do64, cfg.rows, cfg.d, &c64, Strategy::Sequential);
+        let (_, da64, _) = backward(
+            &x64,
+            &do64,
+            cfg.rows,
+            cfg.d,
+            &c64,
+            Strategy::BlockTree { s_block: cfg.s_block },
+        );
 
         let xb: Vec<Bf16> = x64.iter().map(|&v| Bf16::from_f32(v as f32)).collect();
         let dob: Vec<Bf16> = do64.iter().map(|&v| Bf16::from_f32(v as f32)).collect();
@@ -152,9 +191,10 @@ pub fn run_bf16(cfg: &RoundingConfig) -> (GradError, GradError) {
             da.iter().zip(&da64).map(|(&a, &b)| (a.to_f64() - b).abs()).sum::<f64>()
                 / da.len() as f64
         };
-        kat_maes.push(mae_b(&da_kat));
-        flash_maes.push(mae_b(&da_fl));
-    }
+        [mae_b(&da_kat), mae_b(&da_fl)]
+    });
+    let kat_maes: Vec<f64> = maes.iter().map(|m| m[0]).collect();
+    let flash_maes: Vec<f64> = maes.iter().map(|m| m[1]).collect();
     (grad_error(&kat_maes), grad_error(&flash_maes))
 }
 

@@ -1,0 +1,381 @@
+//! Restructured host kernel for the group-wise rational (GR-KAN) layer.
+//!
+//! The paper's diagnosis is that GR-KAN's slowdown is memory traffic and
+//! gradient-accumulation structure, not FLOPs; this module applies the
+//! same lesson to the CPU substrate (DESIGN.md §4):
+//!
+//! - **Monomorphized native-precision fast paths** for f32/f64.  The
+//!   generic `T: Float` reference in [`super`] rounds every op by
+//!   round-tripping through f64 (`from_f64(to_f64() op to_f64())`) so it
+//!   can model arbitrary precisions (e.g. [`super::Bf16`]).  For f32 and
+//!   f64 that round-trip is pure overhead: each single `+`, `*`, `/` via
+//!   f64 is bit-identical to the native op (exact f64 sums/products of
+//!   f32 values; Figueroa's theorem for division), so the hot path can
+//!   run entirely in the scalar's native type.  f64 fast paths are
+//!   bit-identical to the reference everywhere; f32 fused expressions
+//!   that the reference rounds once (e.g. `p*inv_q*inv_q`) round per-op
+//!   here and may differ by ~1 ulp per op (bounds in tests/kernel_parity).
+//! - **Register-resident coefficient-gradient accumulation**: fixed-size
+//!   `[T; MAX_M1]` / `[T; MAX_N]` accumulators ([`TileAcc`]) replace the
+//!   seed's per-element heap scratch, mirroring Algorithm 2's fast-memory
+//!   tile reduction.
+//! - **Tile streaming**: [`backward_row_seg`] fuses dx computation and
+//!   gradient accumulation over one `(row, group)` segment so each tile
+//!   of `x`/`dout` is streamed exactly once.
+
+use super::accumulate::PairwiseAcc;
+use super::Float;
+
+/// Register-accumulator capacity for a-coefficients (paper config m+1=6).
+pub const MAX_M1: usize = 8;
+/// Register-accumulator capacity for b-coefficients (paper config n=4).
+pub const MAX_N: usize = 8;
+/// Sequential run length between pairwise carry-stack pushes.  Must stay
+/// in lock-step with the accumulation semantics documented in
+/// [`super::accumulate`]: changing it changes the rounding experiment.
+pub const RUN: usize = 64;
+
+/// Native arithmetic for the monomorphized fast paths.  Implemented for
+/// f32/f64 only; software formats (Bf16) stay on the generic reference.
+pub trait NativeFloat:
+    Float
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+{
+    /// Exact conversion of a small integer (coefficient degrees).
+    fn from_usize(k: usize) -> Self;
+}
+
+impl NativeFloat for f32 {
+    #[inline]
+    fn from_usize(k: usize) -> Self {
+        k as f32
+    }
+}
+
+impl NativeFloat for f64 {
+    #[inline]
+    fn from_usize(k: usize) -> Self {
+        k as f64
+    }
+}
+
+/// Native-precision `(P, Q, sign(A))`; op-for-op the same expression tree
+/// as [`super::pq_elem`], so the f64 instantiation is bit-identical and
+/// the f32 instantiation is bit-identical too (every step is a single
+/// rounded op in both versions).
+#[inline]
+pub fn pq_elem_native<T: NativeFloat>(x: T, a: &[T], b: &[T]) -> (T, T, T) {
+    let m1 = a.len();
+    let mut p = a[m1 - 1];
+    for i in (0..m1 - 1).rev() {
+        p = p * x + a[i];
+    }
+    let n = b.len();
+    let mut h = b[n - 1];
+    for j in (0..n - 1).rev() {
+        h = h * x + b[j];
+    }
+    let abig = x * h;
+    let q = T::ONE + abig.abs();
+    (p, q, abig.signum0())
+}
+
+/// Native-precision forward value F(x) = P(x) / (1 + |A(x)|).
+#[inline]
+pub fn forward_elem_native<T: NativeFloat>(x: T, a: &[T], b: &[T]) -> T {
+    let (p, q, _) = pq_elem_native(x, a, b);
+    p / q
+}
+
+/// Native-precision fused per-element backward; mirrors
+/// [`super::backward_elem_ref`] expression-for-expression (f64: bitwise
+/// identical; f32: ≤ ~1 ulp per fused expression, and the dA
+/// contributions are bit-identical because they are pure single-product
+/// chains).
+#[inline]
+pub fn backward_elem_native<T: NativeFloat>(
+    x: T,
+    dout: T,
+    a: &[T],
+    b: &[T],
+    da_out: &mut [T],
+    db_out: &mut [T],
+) -> T {
+    let m1 = a.len();
+    let n = b.len();
+    debug_assert_eq!(da_out.len(), m1);
+    debug_assert_eq!(db_out.len(), n);
+
+    let (p, q, sgn) = pq_elem_native(x, a, b);
+    let inv_q = T::ONE / q;
+    let p_over_q2 = p * inv_q * inv_q;
+
+    // P'(x)
+    let mut dp = T::ZERO;
+    if m1 > 1 {
+        dp = a[m1 - 1] * T::from_usize(m1 - 1);
+        for i in (1..m1 - 1).rev() {
+            dp = dp * x + a[i] * T::from_usize(i);
+        }
+    }
+    // A'(x)
+    let mut dadx = b[n - 1] * T::from_usize(n);
+    for j in (0..n - 1).rev() {
+        dadx = dadx * x + b[j] * T::from_usize(j + 1);
+    }
+
+    let dx = dout * (dp * inv_q - sgn * dadx * p_over_q2);
+
+    let do_q = dout * inv_q;
+    let neg_do_spq2 = -dout * sgn * p_over_q2;
+    let mut pw = T::ONE;
+    for item in da_out.iter_mut() {
+        *item = do_q * pw;
+        pw = pw * x;
+    }
+    let mut pw = x;
+    for item in db_out.iter_mut() {
+        *item = neg_do_spq2 * pw;
+        pw = pw * x;
+    }
+    dx
+}
+
+/// Register-resident tile accumulator for one `(block, group)` tile.
+///
+/// Reproduces the accumulation semantics of the seed implementation
+/// bit-for-bit: sequential single-rounded adds within runs of [`RUN`]
+/// elements, each run pushed into a pairwise carry stack (tree variant),
+/// or one plain sequential sum (block-sequential ablation).  The state is
+/// fixed-size stack storage — no per-element heap traffic.
+pub struct TileAcc<T: Float> {
+    m1: usize,
+    n: usize,
+    tree: bool,
+    run: usize,
+    seq_a: [T; MAX_M1],
+    seq_b: [T; MAX_N],
+    tree_a: [PairwiseAcc<T>; MAX_M1],
+    tree_b: [PairwiseAcc<T>; MAX_N],
+}
+
+impl<T: Float> TileAcc<T> {
+    /// Panics if the coefficient counts exceed the register caps; callers
+    /// check [`fits_registers`] and take the heap spill path instead.
+    pub fn new(m1: usize, n: usize, tree: bool) -> Self {
+        assert!(
+            m1 <= MAX_M1 && n <= MAX_N,
+            "TileAcc: m1={m1} n={n} exceed register caps ({MAX_M1}, {MAX_N})"
+        );
+        Self {
+            m1,
+            n,
+            tree,
+            run: 0,
+            seq_a: [T::ZERO; MAX_M1],
+            seq_b: [T::ZERO; MAX_N],
+            tree_a: std::array::from_fn(|_| PairwiseAcc::default()),
+            tree_b: std::array::from_fn(|_| PairwiseAcc::default()),
+        }
+    }
+
+    /// Fold in one element's contributions (first `m1` / `n` entries).
+    #[inline]
+    pub fn push(&mut self, da_e: &[T; MAX_M1], db_e: &[T; MAX_N]) {
+        for i in 0..self.m1 {
+            self.seq_a[i] = self.seq_a[i].add_r(da_e[i]);
+        }
+        for j in 0..self.n {
+            self.seq_b[j] = self.seq_b[j].add_r(db_e[j]);
+        }
+        self.run += 1;
+        if self.tree && self.run == RUN {
+            self.flush_run();
+        }
+    }
+
+    #[inline]
+    fn flush_run(&mut self) {
+        for i in 0..self.m1 {
+            self.tree_a[i].push(self.seq_a[i]);
+            self.seq_a[i] = T::ZERO;
+        }
+        for j in 0..self.n {
+            self.tree_b[j].push(self.seq_b[j]);
+            self.seq_b[j] = T::ZERO;
+        }
+        self.run = 0;
+    }
+
+    /// Reduce to the tile's dA / dB partials (entries past `m1`/`n` are
+    /// zero).
+    pub fn finish(mut self) -> ([T; MAX_M1], [T; MAX_N]) {
+        if self.tree {
+            if self.run > 0 {
+                self.flush_run();
+            }
+            let mut da = [T::ZERO; MAX_M1];
+            let mut db = [T::ZERO; MAX_N];
+            for i in 0..self.m1 {
+                da[i] = self.tree_a[i].finish();
+            }
+            for j in 0..self.n {
+                db[j] = self.tree_b[j].finish();
+            }
+            (da, db)
+        } else {
+            (self.seq_a, self.seq_b)
+        }
+    }
+}
+
+/// Do the coefficient counts fit the register-resident tile path?
+#[inline]
+pub fn fits_registers(m1: usize, n: usize) -> bool {
+    m1 <= MAX_M1 && n <= MAX_N
+}
+
+/// Fused backward over one contiguous row segment (one row × one group,
+/// `d_g` elements): writes `dx` in place and folds every contribution
+/// into `acc`.  The segment's `x`/`dout` are streamed exactly once.
+#[inline]
+pub fn backward_row_seg<T: Float>(
+    x: &[T],
+    dout: &[T],
+    dx: &mut [T],
+    a: &[T],
+    b: &[T],
+    acc: &mut TileAcc<T>,
+) {
+    debug_assert_eq!(x.len(), dout.len());
+    debug_assert_eq!(x.len(), dx.len());
+    let (m1, n) = (a.len(), b.len());
+    let mut da_e = [T::ZERO; MAX_M1];
+    let mut db_e = [T::ZERO; MAX_N];
+    for k in 0..x.len() {
+        dx[k] = T::backward_elem_fast(x[k], dout[k], a, b, &mut da_e[..m1], &mut db_e[..n]);
+        acc.push(&da_e, &db_e);
+    }
+}
+
+/// Heap-accumulator twin of [`TileAcc`] + [`backward_row_seg`] for
+/// coefficient counts above the register caps.  Accumulation order is
+/// identical (sequential runs of [`RUN`] feeding pairwise carry stacks),
+/// so results match the register path bit-for-bit where both apply.
+pub struct SpillAcc<T: Float> {
+    tree: bool,
+    run: usize,
+    seq_a: Vec<T>,
+    seq_b: Vec<T>,
+    tree_a: Vec<PairwiseAcc<T>>,
+    tree_b: Vec<PairwiseAcc<T>>,
+    da_e: Vec<T>,
+    db_e: Vec<T>,
+}
+
+impl<T: Float> SpillAcc<T> {
+    pub fn new(m1: usize, n: usize, tree: bool) -> Self {
+        Self {
+            tree,
+            run: 0,
+            seq_a: vec![T::ZERO; m1],
+            seq_b: vec![T::ZERO; n],
+            tree_a: vec![PairwiseAcc::default(); m1],
+            tree_b: vec![PairwiseAcc::default(); n],
+            da_e: vec![T::ZERO; m1],
+            db_e: vec![T::ZERO; n],
+        }
+    }
+
+    /// Fused backward over one row segment, spill-accumulator variant.
+    pub fn row_seg(&mut self, x: &[T], dout: &[T], dx: &mut [T], a: &[T], b: &[T]) {
+        for k in 0..x.len() {
+            dx[k] =
+                T::backward_elem_fast(x[k], dout[k], a, b, &mut self.da_e, &mut self.db_e);
+            for i in 0..self.seq_a.len() {
+                self.seq_a[i] = self.seq_a[i].add_r(self.da_e[i]);
+            }
+            for j in 0..self.seq_b.len() {
+                self.seq_b[j] = self.seq_b[j].add_r(self.db_e[j]);
+            }
+            self.run += 1;
+            if self.tree && self.run == RUN {
+                self.flush_run();
+            }
+        }
+    }
+
+    fn flush_run(&mut self) {
+        for i in 0..self.seq_a.len() {
+            self.tree_a[i].push(self.seq_a[i]);
+            self.seq_a[i] = T::ZERO;
+        }
+        for j in 0..self.seq_b.len() {
+            self.tree_b[j].push(self.seq_b[j]);
+            self.seq_b[j] = T::ZERO;
+        }
+        self.run = 0;
+    }
+
+    pub fn finish(mut self) -> (Vec<T>, Vec<T>) {
+        if self.tree {
+            if self.run > 0 {
+                self.flush_run();
+            }
+            (
+                self.tree_a.iter().map(PairwiseAcc::finish).collect(),
+                self.tree_b.iter().map(PairwiseAcc::finish).collect(),
+            )
+        } else {
+            (self.seq_a, self.seq_b)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn caps_cover_paper_config() {
+        assert!(fits_registers(6, 4), "paper config must take the register path");
+        assert!(!fits_registers(MAX_M1 + 1, 1));
+    }
+
+    #[test]
+    fn tile_and_spill_accumulators_agree_bitwise() {
+        // Same pushes through both accumulators — totals must be
+        // bit-identical (same adds in the same order), tree and
+        // sequential variants, across run-boundary remainders.
+        let mut rng = Pcg64::new(42);
+        for &count in &[1usize, 63, 64, 65, 200, 1024] {
+            for &tree in &[true, false] {
+                let (m1, n) = (6, 4);
+                let mut reg = TileAcc::<f32>::new(m1, n, tree);
+                let mut spill = SpillAcc::<f32>::new(m1, n, tree);
+                let a: Vec<f32> = (0..m1).map(|_| rng.normal_f32()).collect();
+                let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+                let mut dx1 = vec![0.0f32; count];
+                let mut dx2 = vec![0.0f32; count];
+                let x: Vec<f32> = (0..count).map(|_| rng.normal_f32()).collect();
+                let dout: Vec<f32> = (0..count).map(|_| rng.normal_f32()).collect();
+                backward_row_seg(&x, &dout, &mut dx1, &a, &b, &mut reg);
+                spill.row_seg(&x, &dout, &mut dx2, &a, &b);
+                assert_eq!(dx1, dx2);
+                let (ra, rb) = reg.finish();
+                let (sa, sb) = spill.finish();
+                for i in 0..m1 {
+                    assert_eq!(ra[i].to_bits(), sa[i].to_bits(), "count={count} tree={tree}");
+                }
+                for j in 0..n {
+                    assert_eq!(rb[j].to_bits(), sb[j].to_bits(), "count={count} tree={tree}");
+                }
+            }
+        }
+    }
+}

@@ -5,9 +5,16 @@
 //! *accumulation strategies* in [`accumulate`] mirror the memory schedules
 //! of paper Algorithms 1 and 2, whose floating-point summation orders are
 //! what produce the paper's rounding-error gap.
+//!
+//! Element math is layered (DESIGN.md §4): the `*_ref` functions here are
+//! the generic semantics oracle (every op rounded into `T` by a f64
+//! round-trip, which is what lets [`Bf16`] and any future software format
+//! run the experiment), while [`kernel`] provides monomorphized f32/f64
+//! fast paths that the [`Float`] trait hooks dispatch to.
 
 pub mod accumulate;
 pub mod experiment;
+pub mod kernel;
 
 use crate::tensor::Scalar;
 
@@ -61,6 +68,31 @@ pub trait Float: Scalar {
     fn abs(self) -> Self;
     fn signum0(self) -> Self; // sign with signum0(0) == 0, matching jnp.sign
     fn mul_add2(self, a: Self, b: Self) -> Self;
+
+    /// Per-element forward fast path.  The default is the generic
+    /// round-trip reference; f32/f64 override with the monomorphized
+    /// native kernel in [`kernel`] (f64: bit-identical, f32: bit-identical
+    /// — every forward step is a single rounded op in both versions).
+    #[inline]
+    fn forward_elem_fast(x: Self, a: &[Self], b: &[Self]) -> Self {
+        forward_elem_ref(x, a, b)
+    }
+
+    /// Per-element fused backward fast path; default = reference.  The
+    /// f32 override differs from the reference by ≤ ~1 ulp on fused
+    /// multi-op expressions (dx, dB); dA contributions stay bit-identical
+    /// (see tests/kernel_parity.rs for the enforced bounds).
+    #[inline]
+    fn backward_elem_fast(
+        x: Self,
+        dout: Self,
+        a: &[Self],
+        b: &[Self],
+        da_out: &mut [Self],
+        db_out: &mut [Self],
+    ) -> Self {
+        backward_elem_ref(x, dout, a, b, da_out, db_out)
+    }
 }
 
 impl Float for f32 {
@@ -81,6 +113,21 @@ impl Float for f32 {
     #[inline]
     fn mul_add2(self, a: Self, b: Self) -> Self {
         self * a + b
+    }
+    #[inline]
+    fn forward_elem_fast(x: Self, a: &[Self], b: &[Self]) -> Self {
+        kernel::forward_elem_native(x, a, b)
+    }
+    #[inline]
+    fn backward_elem_fast(
+        x: Self,
+        dout: Self,
+        a: &[Self],
+        b: &[Self],
+        da_out: &mut [Self],
+        db_out: &mut [Self],
+    ) -> Self {
+        kernel::backward_elem_native(x, dout, a, b, da_out, db_out)
     }
 }
 
@@ -103,6 +150,21 @@ impl Float for f64 {
     fn mul_add2(self, a: Self, b: Self) -> Self {
         self * a + b
     }
+    #[inline]
+    fn forward_elem_fast(x: Self, a: &[Self], b: &[Self]) -> Self {
+        kernel::forward_elem_native(x, a, b)
+    }
+    #[inline]
+    fn backward_elem_fast(
+        x: Self,
+        dout: Self,
+        a: &[Self],
+        b: &[Self],
+        da_out: &mut [Self],
+        db_out: &mut [Self],
+    ) -> Self {
+        kernel::backward_elem_native(x, dout, a, b, da_out, db_out)
+    }
 }
 
 /// Software bfloat16 (round-to-nearest-even via f32 truncation with carry),
@@ -116,6 +178,18 @@ impl Bf16 {
     #[inline]
     pub fn from_f32(x: f32) -> Self {
         let bits = x.to_bits();
+        // Non-finite values (exponent all ones) must bypass the rounding
+        // carry: adding 0x7fff to a NaN whose payload lives in the low
+        // bits can overflow the mantissa into the Inf encoding, and plain
+        // truncation of such a NaN silently produces Inf.  Keep Inf exact
+        // and force the quiet bit so every NaN stays a NaN.
+        if bits & 0x7f80_0000 == 0x7f80_0000 {
+            let mut hi = (bits >> 16) as u16;
+            if bits & 0x007f_ffff != 0 {
+                hi |= 0x0040;
+            }
+            return Bf16(hi);
+        }
         // round-to-nearest-even on the truncated 16 bits
         let rounded = bits.wrapping_add(0x7fff + ((bits >> 16) & 1));
         Bf16((rounded >> 16) as u16)
@@ -160,9 +234,19 @@ impl Float for Bf16 {
     }
 }
 
-/// Forward value F(x) = P(x) / (1 + |A(x)|) for one element.
+/// Forward value F(x) = P(x) / (1 + |A(x)|) for one element.  Dispatches
+/// to the type's fast path (native monomorphized kernel for f32/f64, the
+/// round-trip reference otherwise).
 #[inline]
 pub fn forward_elem<T: Float>(x: T, a: &[T], b: &[T]) -> T {
+    T::forward_elem_fast(x, a, b)
+}
+
+/// Reference forward value: every op rounded into `T` via the f64
+/// round-trip.  This is the semantics oracle the fast paths are tested
+/// against.
+#[inline]
+pub fn forward_elem_ref<T: Float>(x: T, a: &[T], b: &[T]) -> T {
     let (p, q, _) = pq_elem(x, a, b);
     T::from_f64(p.to_f64() / q.to_f64())
 }
@@ -189,9 +273,24 @@ pub fn pq_elem<T: Float>(x: T, a: &[T], b: &[T]) -> (T, T, T) {
 ///
 /// Returns `dx` and writes the m+1 dA contributions and n dB contributions
 /// into the provided buffers (unreduced — accumulation order is the
-/// experiment variable, see [`accumulate`]).
+/// experiment variable, see [`accumulate`]).  Dispatches to the type's
+/// fast path.
 #[inline]
 pub fn backward_elem<T: Float>(
+    x: T,
+    dout: T,
+    a: &[T],
+    b: &[T],
+    da_out: &mut [T],
+    db_out: &mut [T],
+) -> T {
+    T::backward_elem_fast(x, dout, a, b, da_out, db_out)
+}
+
+/// Reference per-element backward: every op rounded into `T` via the f64
+/// round-trip (semantics oracle; see [`backward_elem`]).
+#[inline]
+pub fn backward_elem_ref<T: Float>(
     x: T,
     dout: T,
     a: &[T],
@@ -241,22 +340,25 @@ pub fn backward_elem<T: Float>(
     dx
 }
 
-/// Forward over a (rows, d) buffer with grouped coefficients.
+/// Forward over a (rows, d) buffer with grouped coefficients.  Rows are
+/// independent, so the loop runs on the worker pool (elementwise — the
+/// schedule cannot change any value).
 pub fn forward<T: Float>(x: &[T], rows: usize, d: usize, c: &Coeffs<T>) -> Vec<T> {
     assert_eq!(x.len(), rows * d);
     assert_eq!(d % c.n_groups, 0);
     let d_g = d / c.n_groups;
     let mut out = vec![T::ZERO; x.len()];
-    for r in 0..rows {
+    crate::util::parallel::par_chunks_mut(&mut out, d, |r, out_row| {
+        let row = &x[r * d..(r + 1) * d];
         for g in 0..c.n_groups {
             let a = c.a_row(g);
             let b = c.b_row(g);
             for k in 0..d_g {
-                let idx = r * d + g * d_g + k;
-                out[idx] = forward_elem(x[idx], a, b);
+                let idx = g * d_g + k;
+                out_row[idx] = forward_elem(row[idx], a, b);
             }
         }
-    }
+    });
     out
 }
 
@@ -354,6 +456,29 @@ mod tests {
         let x = vec![1.0, 2.0, 3.0, 4.0]; // one row, d=4, d_g=2
         let out = forward(&x, 1, 4, &c);
         assert_eq!(out, vec![1.0, 2.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn bf16_nonfinite_conversions() {
+        // +/-Inf survive exactly.
+        assert_eq!(Bf16::from_f32(f32::INFINITY).to_f32(), f32::INFINITY);
+        assert_eq!(Bf16::from_f32(f32::NEG_INFINITY).to_f32(), f32::NEG_INFINITY);
+        // Every NaN stays a NaN — including ones whose payload lives
+        // entirely in the low 16 bits (truncation alone would yield Inf,
+        // and the seed's rounding carry could too).
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+        let low_payload_nan = f32::from_bits(0x7f80_0001);
+        assert!(low_payload_nan.is_nan());
+        assert!(Bf16::from_f32(low_payload_nan).to_f32().is_nan());
+        let neg_nan = f32::from_bits(0xff80_0001);
+        assert!(Bf16::from_f32(neg_nan).to_f32().is_nan());
+        // Sign of NaN is preserved.
+        assert_eq!(Bf16::from_f32(neg_nan).0 & 0x8000, 0x8000);
+        // Finite values just over bf16's max round to Inf (normal RNE),
+        // and the max finite f32 does too — but stays finite in f32 land.
+        assert_eq!(Bf16::from_f32(f32::MAX).to_f32(), f32::INFINITY);
+        // A value representable in bf16 is exact.
+        assert_eq!(Bf16::from_f32(-0.5).to_f32(), -0.5);
     }
 
     #[test]

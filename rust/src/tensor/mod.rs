@@ -11,6 +11,27 @@ pub trait Scalar: Copy + Default + PartialOrd + std::fmt::Debug + Send + Sync + 
     fn to_f64(self) -> f64;
     const ZERO: Self;
     const ONE: Self;
+
+    /// `self + b` with a single rounding into `Self`'s precision.
+    ///
+    /// The default round-trips through f64, which *is* the definition of
+    /// one correctly-rounded add in `Self` (both operands convert to f64
+    /// exactly for every `Scalar` in this crate, the f64 sum of two f32
+    /// values is exact, and `from_f64` performs the one rounding).  f32
+    /// and f64 override this with the native add — bit-identical, minus
+    /// the conversion traffic (DESIGN.md §4).
+    #[inline]
+    fn add_r(self, b: Self) -> Self {
+        Self::from_f64(self.to_f64() + b.to_f64())
+    }
+
+    /// `self * b` with a single rounding into `Self`'s precision; same
+    /// bit-identity argument as [`Scalar::add_r`] (an f32×f32 product
+    /// needs ≤48 significand bits, exact in f64).
+    #[inline]
+    fn mul_r(self, b: Self) -> Self {
+        Self::from_f64(self.to_f64() * b.to_f64())
+    }
 }
 
 impl Scalar for f32 {
@@ -22,6 +43,15 @@ impl Scalar for f32 {
     }
     const ZERO: Self = 0.0;
     const ONE: Self = 1.0;
+
+    #[inline]
+    fn add_r(self, b: Self) -> Self {
+        self + b
+    }
+    #[inline]
+    fn mul_r(self, b: Self) -> Self {
+        self * b
+    }
 }
 
 impl Scalar for f64 {
@@ -33,6 +63,15 @@ impl Scalar for f64 {
     }
     const ZERO: Self = 0.0;
     const ONE: Self = 1.0;
+
+    #[inline]
+    fn add_r(self, b: Self) -> Self {
+        self + b
+    }
+    #[inline]
+    fn mul_r(self, b: Self) -> Self {
+        self * b
+    }
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -217,6 +256,22 @@ mod tests {
             ema.ema_update(&target, 0.99);
         }
         assert!((ema.mean() - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn native_single_rounding_ops_match_roundtrip() {
+        // The f32 overrides of add_r/mul_r must be bit-identical to the
+        // generic f64 round-trip they replace (the kernel fast paths
+        // depend on this; see DESIGN.md §4).
+        let mut rng = Pcg64::new(9);
+        for _ in 0..10_000 {
+            let a = (rng.normal() * 10f64.powi(rng.below(9) as i32 - 4)) as f32;
+            let b = (rng.normal() * 10f64.powi(rng.below(9) as i32 - 4)) as f32;
+            let add_rt = f32::from_f64(a.to_f64() + b.to_f64());
+            let mul_rt = f32::from_f64(a.to_f64() * b.to_f64());
+            assert_eq!(a.add_r(b).to_bits(), add_rt.to_bits(), "{a} + {b}");
+            assert_eq!(a.mul_r(b).to_bits(), mul_rt.to_bits(), "{a} * {b}");
+        }
     }
 
     #[test]

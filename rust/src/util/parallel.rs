@@ -1,10 +1,224 @@
-//! Scoped-thread parallel helpers (offline environment: no rayon).
+//! Parallel helpers built on a persistent worker pool (offline
+//! environment: no rayon).
+//!
+//! The seed implementation spawned fresh OS threads inside
+//! `thread::scope` on every call — a fixed ~0.1 ms tax per `par_map`
+//! that dominates small tiles, and `par_chunks_mut` spawned one thread
+//! *per chunk* (unbounded).  This version keeps `default_threads() - 1`
+//! workers parked on a condvar and hands them lifetime-erased index
+//! tasks; the submitting thread joins the computation and blocks until
+//! every claimed index has finished, which is what keeps the borrows
+//! alive for the workers' whole run (see DESIGN.md §7).
+//!
+//! Scheduling is work-stealing over an atomic index; results are keyed
+//! by index, so output is deterministic regardless of interleaving.
+//! Nested calls (a `par_map` inside a `par_map` worker) detect the busy
+//! pool and fall back to serial execution instead of deadlocking.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use (cores, capped).
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Raw-pointer wrapper that may cross thread boundaries.  Safety is the
+/// caller's obligation: every user in this crate writes through it at
+/// indices owned exclusively by one task item.
+pub struct SendPtr<T>(pub *mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// A lifetime-erased index task. Workers call `call(data, i)` for every
+/// claimed `i < n`.  The raw pointers stay valid because the submitter
+/// (or its drop guard, on panic) blocks until no worker is still inside
+/// the task before the referents leave scope.
+#[derive(Clone, Copy)]
+struct Task {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    next: *const AtomicUsize,
+    done: *const AtomicUsize,
+    poisoned: *const AtomicBool,
+    n: usize,
+}
+unsafe impl Send for Task {}
+
+struct PoolState {
+    /// Bumped on every submission; workers use it to tell tasks apart.
+    epoch: u64,
+    /// The in-flight task, if any.  `Some` doubles as the busy flag that
+    /// sends nested submissions down the serial path.
+    task: Option<Task>,
+    /// Workers currently executing the in-flight task.
+    active: usize,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+struct Pool {
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+fn worker_main(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        while st.epoch == seen || st.task.is_none() {
+            st = shared.work_cv.wait(st).unwrap();
+        }
+        seen = st.epoch;
+        let task = st.task.unwrap();
+        st.active += 1;
+        drop(st);
+        loop {
+            // SAFETY: `next`/`done`/`poisoned`/`data` live on the
+            // submitter's stack; the submitter cannot return (or unwind
+            // past them) until `active` drops back to zero, which only
+            // happens after this loop exits.
+            let i = unsafe { (*task.next).fetch_add(1, Ordering::Relaxed) };
+            if i >= task.n {
+                break;
+            }
+            let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (task.call)(task.data, i) }))
+                .is_ok();
+            unsafe {
+                if !ok {
+                    (*task.poisoned).store(true, Ordering::Release);
+                }
+                (*task.done).fetch_add(1, Ordering::Release);
+            }
+        }
+        st = shared.state.lock().unwrap();
+        st.active -= 1;
+        shared.done_cv.notify_all();
+    }
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { epoch: 0, task: None, active: 0 }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = default_threads().saturating_sub(1);
+        for _ in 0..workers {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("flashkat-pool".into())
+                .spawn(move || worker_main(shared))
+                .expect("spawn pool worker");
+        }
+        Pool { shared, workers }
+    })
+}
+
+/// Completion guard: even if the submitting thread unwinds, no stack
+/// borrow leaves scope while a worker might still touch it.
+struct SubmitGuard<'a> {
+    shared: &'a Shared,
+    next: &'a AtomicUsize,
+    n: usize,
+}
+
+impl Drop for SubmitGuard<'_> {
+    fn drop(&mut self) {
+        // Stop further claims (workers that already claimed an index will
+        // finish it), then wait until no worker is inside the task and
+        // take the task back.
+        self.next.fetch_add(self.n, Ordering::Relaxed);
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.task = None;
+    }
+}
+
+/// Type-erased trampoline: `data` is a `&F` lent by the submitter, valid
+/// for the task's whole lifetime (see [`SubmitGuard`]).
+unsafe fn call_thunk<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+    unsafe { (*(data as *const F))(i) }
+}
+
+/// Run `f(0..n)` across the pool, blocking until every index completed.
+/// The submitting thread participates, so the pool being empty (or busy
+/// with another task — e.g. a nested call) degrades to serial execution.
+pub fn par_run<F: Fn(usize) + Sync>(n: usize, f: F) {
+    if n == 0 {
+        return;
+    }
+    let p = pool();
+    if n == 1 || p.workers == 0 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+
+    let next = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
+    let poisoned = AtomicBool::new(false);
+
+    let task = Task {
+        data: &f as *const F as *const (),
+        call: call_thunk::<F>,
+        next: &next,
+        done: &done,
+        poisoned: &poisoned,
+        n,
+    };
+
+    {
+        let mut st = p.shared.state.lock().unwrap();
+        if st.task.is_some() {
+            // Nested submission: the pool is committed to an outer task.
+            drop(st);
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        st.epoch = st.epoch.wrapping_add(1);
+        st.task = Some(task);
+        p.shared.work_cv.notify_all();
+    }
+    let guard = SubmitGuard { shared: &p.shared, next: &next, n };
+
+    loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
+        }
+        f(i);
+        done.fetch_add(1, Ordering::Release);
+    }
+    {
+        let mut st = p.shared.state.lock().unwrap();
+        while done.load(Ordering::Acquire) < n || st.active > 0 {
+            st = p.shared.done_cv.wait(st).unwrap();
+        }
+    }
+    drop(guard);
+    if poisoned.load(Ordering::Acquire) {
+        panic!("par_run: a pool worker panicked while executing a task item");
+    }
 }
 
 /// Parallel map over a slice with work-stealing via an atomic index.
@@ -14,38 +228,34 @@ pub fn par_map<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec
     if n == 0 {
         return Vec::new();
     }
-    let threads = default_threads().min(n);
-    if threads <= 1 {
-        return items.iter().map(f).collect();
-    }
-    let next = AtomicUsize::new(0);
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let slots: Vec<_> = out.iter_mut().map(|s| SendPtr(s as *mut Option<R>)).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let next = &next;
-            let f = &f;
-            let slots = &slots;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&items[i]);
-                // SAFETY: each index i is claimed by exactly one thread and
-                // the Vec outlives the scope.
-                unsafe { slots[i].0.write(Some(r)) };
-            });
-        }
+    let slots = SendPtr(out.as_mut_ptr());
+    par_run(n, |i| {
+        let r = f(&items[i]);
+        // SAFETY: each index is claimed by exactly one task item and the
+        // Vec outlives par_run; `None` has nothing to drop.
+        unsafe { slots.0.add(i).write(Some(r)) };
     });
-    out.into_iter().map(|r| r.expect("worker filled slot")).collect()
+    out.into_iter().map(|r| r.expect("pool filled slot")).collect()
 }
 
-struct SendPtr<T>(*mut T);
-unsafe impl<T> Send for SendPtr<T> {}
-unsafe impl<T> Sync for SendPtr<T> {}
+/// `par_map` with at most `cap` items in flight at once (sequential
+/// batches of `cap`).  Used where each item holds large buffers and full
+/// pool width would multiply peak memory.
+pub fn par_map_capped<T: Sync, R: Send>(
+    items: &[T],
+    cap: usize,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    let mut out = Vec::with_capacity(items.len());
+    for chunk in items.chunks(cap.max(1)) {
+        out.extend(par_map(chunk, &f));
+    }
+    out
+}
 
-/// Parallel for over disjoint mutable chunks of a buffer.
+/// Parallel for over disjoint mutable chunks of a buffer.  Thread count
+/// is bounded by the pool (the seed spawned one OS thread per chunk).
 pub fn par_chunks_mut<T: Send>(
     buf: &mut [T],
     chunk: usize,
@@ -54,11 +264,16 @@ pub fn par_chunks_mut<T: Send>(
     if buf.is_empty() || chunk == 0 {
         return;
     }
-    std::thread::scope(|scope| {
-        for (idx, c) in buf.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            scope.spawn(move || f(idx, c));
-        }
+    let len = buf.len();
+    let n_chunks = len.div_ceil(chunk);
+    let base = SendPtr(buf.as_mut_ptr());
+    par_run(n_chunks, |idx| {
+        let start = idx * chunk;
+        let end = (start + chunk).min(len);
+        // SAFETY: chunk index ranges are disjoint and in-bounds, and the
+        // buffer outlives par_run.
+        let slice = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        f(idx, slice);
     });
 }
 
@@ -92,5 +307,51 @@ mod tests {
         assert_eq!(buf[0], 0);
         assert_eq!(buf[7], 1);
         assert_eq!(buf[99], (99 / 7) as u32);
+    }
+
+    #[test]
+    fn par_chunks_mut_is_bounded_for_tiny_chunks() {
+        // 10k single-element chunks: the seed spawned 10k threads here;
+        // the pool must both bound that and stay correct.
+        let mut buf = vec![0u64; 10_000];
+        par_chunks_mut(&mut buf, 1, |idx, c| {
+            c[0] = (idx * 3) as u64;
+        });
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, (i * 3) as u64);
+        }
+    }
+
+    #[test]
+    fn nested_par_map_falls_back_to_serial() {
+        let outer: Vec<usize> = (0..8).collect();
+        let sums = par_map(&outer, |&o| {
+            let inner: Vec<usize> = (0..50).collect();
+            par_map(&inner, |&i| o * 100 + i).into_iter().sum::<usize>()
+        });
+        for (o, s) in sums.iter().enumerate() {
+            let want: usize = (0..50).map(|i| o * 100 + i).sum();
+            assert_eq!(*s, want);
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_calls() {
+        for round in 0..200 {
+            let xs: Vec<u64> = (0..17 + round % 5).collect();
+            let ys = par_map(&xs, |x| x + round);
+            assert_eq!(ys.len(), xs.len());
+            for (x, y) in xs.iter().zip(&ys) {
+                assert_eq!(*y, x + round);
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_capped_matches_par_map() {
+        let xs: Vec<u64> = (0..37).collect();
+        for cap in [1, 2, 4, 100] {
+            assert_eq!(par_map_capped(&xs, cap, |x| x * 7), par_map(&xs, |x| x * 7));
+        }
     }
 }

@@ -1,0 +1,220 @@
+//! Fast-path / oracle parity: the monomorphized native f32/f64 kernels
+//! (rational::kernel) against the generic `T: Float` round-trip reference.
+//!
+//! Contract (DESIGN.md §4):
+//! - f64: bit-identical everywhere (the round-trip *is* native f64).
+//! - f32 forward: bit-identical (every step is one rounded op in both).
+//! - f32 backward: dA contributions bit-identical (pure single-product
+//!   chains); dx/dB within a small per-op rounding envelope of the
+//!   reference (the reference fuses some expressions into one rounding).
+
+use flashkat::rational::accumulate::{backward, Strategy};
+use flashkat::rational::{
+    backward_elem, backward_elem_ref, forward_elem, forward_elem_ref, kernel, Coeffs,
+};
+use flashkat::util::rng::Pcg64;
+
+fn rand_coeffs(rng: &mut Pcg64, m1: usize, n: usize) -> (Vec<f64>, Vec<f64>) {
+    (
+        (0..m1).map(|_| rng.normal()).collect(),
+        (0..n).map(|_| rng.normal()).collect(),
+    )
+}
+
+#[test]
+fn f64_fast_paths_bitwise_identical_to_reference() {
+    let mut rng = Pcg64::new(101);
+    for m1 in 1..=8usize {
+        for n in 1..=8usize {
+            let (a, b) = rand_coeffs(&mut rng, m1, n);
+            let mut da_f = vec![0f64; m1];
+            let mut db_f = vec![0f64; n];
+            let mut da_r = vec![0f64; m1];
+            let mut db_r = vec![0f64; n];
+            for _ in 0..200 {
+                let x = rng.normal() * 3.0;
+                let dout = rng.normal();
+                let yf = forward_elem(x, &a, &b);
+                let yr = forward_elem_ref(x, &a, &b);
+                assert_eq!(yf.to_bits(), yr.to_bits(), "fwd m1={m1} n={n} x={x}");
+                let dxf = backward_elem(x, dout, &a, &b, &mut da_f, &mut db_f);
+                let dxr = backward_elem_ref(x, dout, &a, &b, &mut da_r, &mut db_r);
+                assert_eq!(dxf.to_bits(), dxr.to_bits(), "dx m1={m1} n={n}");
+                for i in 0..m1 {
+                    assert_eq!(da_f[i].to_bits(), da_r[i].to_bits(), "da[{i}]");
+                }
+                for j in 0..n {
+                    assert_eq!(db_f[j].to_bits(), db_r[j].to_bits(), "db[{j}]");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_forward_and_da_bitwise_identical_to_reference() {
+    let mut rng = Pcg64::new(202);
+    for m1 in 1..=8usize {
+        for n in 1..=8usize {
+            let (a64, b64) = rand_coeffs(&mut rng, m1, n);
+            let a: Vec<f32> = a64.iter().map(|&v| v as f32).collect();
+            let b: Vec<f32> = b64.iter().map(|&v| v as f32).collect();
+            let mut da_f = vec![0f32; m1];
+            let mut db_f = vec![0f32; n];
+            let mut da_r = vec![0f32; m1];
+            let mut db_r = vec![0f32; n];
+            for _ in 0..200 {
+                let x = (rng.normal() * 3.0) as f32;
+                let dout = rng.normal_f32();
+                let yf = forward_elem(x, &a, &b);
+                let yr = forward_elem_ref(x, &a, &b);
+                assert_eq!(yf.to_bits(), yr.to_bits(), "fwd m1={m1} n={n} x={x}");
+                backward_elem(x, dout, &a, &b, &mut da_f, &mut db_f);
+                backward_elem_ref(x, dout, &a, &b, &mut da_r, &mut db_r);
+                for i in 0..m1 {
+                    assert_eq!(
+                        da_f[i].to_bits(),
+                        da_r[i].to_bits(),
+                        "da[{i}] m1={m1} n={n} x={x} dout={dout}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Widened (f64) error envelope for dx from f32 inputs.  Uses the
+/// absolute-value (condition) sums of the derivative polynomials rather
+/// than their actual values, so the bound survives cancellation both
+/// inside the Horner evaluations and between the two dx terms.  Note the
+/// P/Q/sign stage is bit-identical between fast and reference paths, so
+/// only the derivative chains and the final combine contribute.
+fn widened_dx_envelope(x: f32, dout: f32, a: &[f32], b: &[f32]) -> f64 {
+    let (m1, n) = (a.len(), b.len());
+    let xe = (x as f64).abs();
+    let mut p_env = 0.0;
+    let mut xp = 1.0;
+    for &ai in a.iter() {
+        p_env += (ai as f64).abs() * xp;
+        xp *= xe;
+    }
+    // Q >= 1 always, so every 1/Q and P/Q^2 factor is bounded by the
+    // corresponding numerator envelope — Q drops out of the bound.
+    let mut dp_env = 0.0;
+    let mut xp = 1.0;
+    for (i, &ai) in a.iter().enumerate().skip(1) {
+        dp_env += (ai as f64).abs() * i as f64 * xp;
+        xp *= xe;
+    }
+    let mut dadx_env = 0.0;
+    let mut xp = 1.0;
+    for (j, &bj) in b.iter().enumerate() {
+        dadx_env += (bj as f64).abs() * (j + 1) as f64 * xp;
+        xp *= xe;
+    }
+    (dout as f64).abs() * (dp_env + dadx_env * p_env)
+}
+
+#[test]
+fn f32_backward_dx_db_within_fused_rounding_envelope() {
+    const EPS: f64 = f32::EPSILON as f64;
+    let mut rng = Pcg64::new(303);
+    for m1 in 1..=8usize {
+        for n in 1..=8usize {
+            let (a64, b64) = rand_coeffs(&mut rng, m1, n);
+            let a: Vec<f32> = a64.iter().map(|&v| v as f32).collect();
+            let b: Vec<f32> = b64.iter().map(|&v| v as f32).collect();
+            let mut da_f = vec![0f32; m1];
+            let mut db_f = vec![0f32; n];
+            let mut da_r = vec![0f32; m1];
+            let mut db_r = vec![0f32; n];
+            for _ in 0..200 {
+                let x = (rng.normal() * 3.0) as f32;
+                let dout = rng.normal_f32();
+                let dxf = backward_elem(x, dout, &a, &b, &mut da_f, &mut db_f) as f64;
+                let dxr = backward_elem_ref(x, dout, &a, &b, &mut da_r, &mut db_r) as f64;
+                let dx_tol = 64.0 * EPS * widened_dx_envelope(x, dout, &a, &b) + 1e-30;
+                assert!(
+                    (dxf - dxr).abs() <= dx_tol,
+                    "dx fast {dxf} vs ref {dxr} (tol {dx_tol:.3e}) m1={m1} n={n} x={x}"
+                );
+                for j in 0..n {
+                    let (f, r) = (db_f[j] as f64, db_r[j] as f64);
+                    let tol = 16.0 * EPS * r.abs() + 1e-30;
+                    assert!(
+                        (f - r).abs() <= tol,
+                        "db[{j}] fast {f} vs ref {r} m1={m1} n={n} x={x}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dx_bitwise_identical_across_strategies_random_shapes_f32() {
+    // All strategies share one dispatched element kernel, so dx must be
+    // bit-identical for any tiling: remainder blocks, group counts, odd
+    // row counts.
+    let mut rng = Pcg64::new(404);
+    for case in 0..12u64 {
+        let n_g = 1usize << (case % 4);
+        let d_g = 1 + rng.below(24);
+        let d = n_g * d_g;
+        let rows = 1 + rng.below(97);
+        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+        let dout: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+        let c = Coeffs::<f32>::randn(n_g, 6, 4, &mut rng);
+        let s_block = 1 + rng.below(rows + 16);
+        let (dx0, _, _) = backward(&x, &dout, rows, d, &c, Strategy::Sequential);
+        for strat in [
+            Strategy::BlockTree { s_block },
+            Strategy::BlockSequential { s_block },
+            Strategy::PairwiseFull,
+        ] {
+            let (dx, _, _) = backward(&x, &dout, rows, d, &c, strat);
+            for (u, v) in dx.iter().zip(&dx0) {
+                assert_eq!(u.to_bits(), v.to_bits(), "case {case} {strat:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn spill_path_above_register_caps_agrees_with_sequential_f64() {
+    // m1/n above the register caps exercise the heap spill twin; in f64
+    // every ordering agrees to ~1e-9 relative.
+    let (m1, n) = (kernel::MAX_M1 + 2, kernel::MAX_N + 1);
+    let mut rng = Pcg64::new(505);
+    let n_g = 2;
+    let d_g = 7;
+    let d = n_g * d_g;
+    let rows = 53;
+    let x: Vec<f64> = (0..rows * d).map(|_| rng.normal()).collect();
+    let dout: Vec<f64> = (0..rows * d).map(|_| rng.normal()).collect();
+    let c = Coeffs::<f64>::randn(n_g, m1, n, &mut rng);
+    let (dx0, da0, db0) = backward(&x, &dout, rows, d, &c, Strategy::Sequential);
+    for strat in [
+        Strategy::BlockTree { s_block: 8 },
+        Strategy::BlockSequential { s_block: 5 },
+    ] {
+        let (dx, da, db) = backward(&x, &dout, rows, d, &c, strat);
+        for (u, v) in dx.iter().zip(&dx0) {
+            assert_eq!(u.to_bits(), v.to_bits(), "{strat:?}");
+        }
+        let scale = da0.iter().map(|v| v.abs()).fold(1.0, f64::max);
+        for (u, v) in da.iter().zip(&da0) {
+            assert!((u - v).abs() / scale < 1e-9, "{strat:?}");
+        }
+        let scale = db0.iter().map(|v| v.abs()).fold(1.0, f64::max);
+        for (u, v) in db.iter().zip(&db0) {
+            assert!((u - v).abs() / scale < 1e-9, "{strat:?}");
+        }
+    }
+}
+
+#[test]
+fn register_caps_cover_the_paper_config() {
+    assert!(kernel::fits_registers(6, 4));
+    assert!(kernel::MAX_M1 >= 6 && kernel::MAX_N >= 4);
+}

@@ -1,0 +1,136 @@
+//! Minimal offline stub of the `anyhow` crate.
+//!
+//! Implements the exact surface this repository uses: [`Error`],
+//! [`Result`], the [`anyhow!`] and [`bail!`] macros, and the [`Context`]
+//! extension trait for `Result` and `Option`.  Like the real crate,
+//! `Error` deliberately does **not** implement `std::error::Error`, which
+//! is what makes the blanket `From<E: std::error::Error>` conversion (and
+//! therefore `?` on any std error) possible.
+
+use std::fmt;
+
+/// A type-erased error: a display message plus an optional chain of
+/// context frames (most recent first, like anyhow's `{:#}` rendering).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context frame, mirroring anyhow's `context` rendering.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error { msg: context.to_string() })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error { msg: f().to_string() })
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/path")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_and_context() {
+        let err = io_fail().unwrap_err();
+        assert!(err.to_string().starts_with("reading config: "));
+    }
+
+    #[test]
+    fn macros_and_option_context() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let x = 3;
+        let e = anyhow!("value {x} bad, want {}", 4);
+        assert_eq!(e.to_string(), "value 3 bad, want 4");
+        let none: Option<u32> = None;
+        let e = none.context("missing slot").unwrap_err();
+        assert_eq!(e.to_string(), "missing slot");
+        fn bails() -> Result<()> {
+            bail!("stop {}", 7);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop 7");
+    }
+
+    #[test]
+    fn with_context_lazily_formats() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.with_context(|| format!("frame {}", 1)).unwrap_err();
+        assert!(e.to_string().starts_with("frame 1: "));
+    }
+}
