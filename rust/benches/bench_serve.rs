@@ -1,0 +1,47 @@
+//! Serve micro-batching bench target: the same deterministic loadgen
+//! behind `flashkat serve-bench`, swept over max-batch so the
+//! amortization curve (1 → 64) is visible in one run.  Writes
+//! `BENCH_serve.json` (the max-batch 64 run vs the max-batch 1
+//! baseline) so the serving-perf trajectory is tracked across PRs like
+//! `BENCH_rational.json` (DESIGN.md §§9-10).
+//!
+//!     cargo bench --bench bench_serve -- [--requests N] [--concurrency C]
+
+use flashkat::cli::Args;
+use flashkat::serve::{loadgen, BatchPolicy, LoadConfig};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))
+        .expect("bench args");
+    let cfg = LoadConfig {
+        requests: args.flag_usize("requests", 2000).expect("--requests"),
+        concurrency: args.flag_usize("concurrency", 16).expect("--concurrency"),
+        ..Default::default()
+    };
+
+    let mut results = Vec::new();
+    for max_batch in [1usize, 4, 16, 64] {
+        let res = loadgen::run(
+            &cfg,
+            BatchPolicy { max_batch, ..Default::default() },
+            &format!("max-batch {max_batch}"),
+        )
+        .expect("serve run");
+        println!(
+            "bench {:<24} {:>10.0} img/s  p50 {:>7.3} ms  p99 {:>7.3} ms  mean batch {:>5.1}",
+            res.label,
+            res.throughput_rps,
+            res.p50_ms,
+            res.p99_ms,
+            res.exec.mean_batch()
+        );
+        results.push(res);
+    }
+
+    let baseline = results.remove(0);
+    let main_res = results.pop().expect("max-batch 64 run");
+    let speedup = main_res.throughput_rps / baseline.throughput_rps.max(1e-9);
+    let json = loadgen::bench_json(&cfg, &main_res, Some(&baseline));
+    std::fs::write("BENCH_serve.json", json.to_string()).expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json (max-batch 64 vs 1: {speedup:.2}x)");
+}

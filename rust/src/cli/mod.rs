@@ -57,6 +57,17 @@ impl Args {
         }
     }
 
+    /// Like [`Self::flag_u64`] but range-checked into `u32`: a value that
+    /// does not fit is an error, not a silent `as u32` truncation.
+    pub fn flag_u32(&self, name: &str, default: u32) -> Result<u32> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a 32-bit unsigned integer, got {v:?}")),
+        }
+    }
+
     pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.flag(name) {
             None => Ok(default),
@@ -108,6 +119,17 @@ mod tests {
         let a = parse("t --n abc");
         assert!(a.flag_usize("n", 0).is_err());
         assert!(a.flag_f64("n", 0.0).is_err());
+    }
+
+    #[test]
+    fn flag_u32_rejects_out_of_range_instead_of_truncating() {
+        let a = parse("t --loops 7");
+        assert_eq!(a.flag_u32("loops", 1).unwrap(), 7);
+        assert_eq!(a.flag_u32("absent", 3).unwrap(), 3);
+        // 2^32 used to truncate to 0 through `flag_u64(..) as u32`.
+        let big = parse("t --loops 4294967296");
+        assert!(big.flag_u32("loops", 1).is_err());
+        assert!(parse("t --loops -1").flag_u32("loops", 1).is_err());
     }
 
     #[test]

@@ -11,6 +11,15 @@ use crate::runtime::HostTensor;
 
 const MAGIC: &[u8; 8] = b"FLSHKAT\x01";
 
+/// Upper bounds on header-declared sizes.  Every length in the header is
+/// corruption- (or attacker-) controlled until the payload reads succeed,
+/// so nothing from the header may reach an allocation or a multiplication
+/// unchecked: a forged dim table must fail with an error, not a huge
+/// `Vec` reservation or an overflow panic.
+const MAX_LEAVES: usize = 1 << 20;
+/// Max elements per tensor leaf (2^28 f32 = 1 GiB of payload).
+const MAX_ELEMS: usize = 1 << 28;
+
 pub struct Checkpoint {
     pub step: u64,
     pub params: Vec<(String, HostTensor)>,
@@ -61,6 +70,9 @@ impl Checkpoint {
         }
         let step = read_u64(&mut r)?;
         let count = read_u64(&mut r)? as usize;
+        if count > MAX_LEAVES {
+            bail!("corrupt checkpoint: {count} parameter leaves (max {MAX_LEAVES})");
+        }
         let mut params = Vec::with_capacity(count);
         for _ in 0..count {
             let name_len = read_u64(&mut r)? as usize;
@@ -75,11 +87,22 @@ impl Checkpoint {
             }
             let mut shape = Vec::with_capacity(ndim);
             for _ in 0..ndim {
-                shape.push(read_u64(&mut r)? as usize);
+                let dim = usize::try_from(read_u64(&mut r)?)
+                    .ok()
+                    .filter(|&d| d <= MAX_ELEMS)
+                    .with_context(|| format!("corrupt checkpoint: dim exceeds {MAX_ELEMS}"))?;
+                shape.push(dim);
             }
-            let n: usize = shape.iter().product();
+            let n = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .filter(|&n| n <= MAX_ELEMS)
+                .with_context(|| {
+                    format!("corrupt checkpoint: shape {shape:?} exceeds {MAX_ELEMS} elements")
+                })?;
+            let bytes = n.checked_mul(4).context("corrupt checkpoint: byte count overflow")?;
             let mut data = vec![0f32; n];
-            let mut buf = vec![0u8; n * 4];
+            let mut buf = vec![0u8; bytes];
             r.read_exact(&mut buf)?;
             for (i, c) in buf.chunks_exact(4).enumerate() {
                 data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
@@ -114,6 +137,55 @@ mod tests {
         assert_eq!(back.params[0].1.shape(), &[2, 3]);
         assert_eq!(back.params[0].1.as_f32().unwrap(), &[1.5; 6]);
         assert_eq!(back.params[1].1.as_f32().unwrap(), &[-2.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_dims() {
+        let dir = std::env::temp_dir().join(format!("fk_ckpt_d_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dims.ckpt");
+
+        // Valid prologue up to one leaf named "w", then a forged dim table.
+        let header = |dims: &[u64], count: u64| {
+            let mut buf = Vec::new();
+            buf.extend_from_slice(MAGIC);
+            buf.extend_from_slice(&0u64.to_le_bytes()); // step
+            buf.extend_from_slice(&count.to_le_bytes()); // leaf count
+            buf.extend_from_slice(&1u64.to_le_bytes()); // name len
+            buf.push(b'w');
+            buf.extend_from_slice(&(dims.len() as u64).to_le_bytes());
+            for &d in dims {
+                buf.extend_from_slice(&d.to_le_bytes());
+            }
+            buf
+        };
+
+        // A single dim beyond the element bound: rejected per-dimension.
+        std::fs::write(&path, header(&[1 << 30], 1)).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt checkpoint"), "{err:#}");
+        std::fs::write(&path, header(&[1 << 40, 1 << 40], 1)).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt checkpoint"), "{err:#}");
+
+        // Every dim individually legal but the product exceeds the
+        // element bound: must trip the checked product, not allocate 4 GiB.
+        std::fs::write(&path, header(&[1 << 15, 1 << 15], 1)).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("shape"), "{err:#}");
+
+        // Dims legal, product overflows usize entirely: `checked_mul`
+        // must catch the wrap, not fold it into a small bogus count.
+        std::fs::write(&path, header(&[1 << 28, 1 << 28, 1 << 28], 1)).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("shape"), "{err:#}");
+
+        // Absurd leaf count: rejected before `Vec::with_capacity`.
+        std::fs::write(&path, header(&[2], u64::MAX)).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("parameter leaves"), "{err:#}");
+
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -60,6 +60,28 @@ impl TrainReport {
     }
 }
 
+/// Index of the largest logit in `row` (ties resolve to the last maximum,
+/// matching `Iterator::max_by`).
+///
+/// A diverged model emits NaN logits; the seed compared with
+/// `partial_cmp(..).unwrap()`, which panicked deep inside the comparator.
+/// NaN now surfaces as an `Err` the caller can report, and finite
+/// comparisons use the total order (`f32::total_cmp`), which cannot fail.
+pub fn predict_top1(row: &[f32]) -> Result<usize> {
+    if row.is_empty() {
+        bail!("empty logit row");
+    }
+    if let Some(i) = row.iter().position(|v| v.is_nan()) {
+        bail!("NaN logit at class {i} — model diverged?");
+    }
+    Ok(row
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .expect("non-empty row"))
+}
+
 impl Trainer {
     /// Load the `<tag>_init` / `<tag>_train_step` / `<tag>_eval` artifacts.
     pub fn new(rt: &Runtime, tag: &str, cfg: TrainConfig) -> Result<Self> {
@@ -165,12 +187,8 @@ impl Trainer {
             let logits = outs[0].as_f32()?;
             for (b, &y) in labels.iter().enumerate() {
                 let row = &logits[b * self.n_classes..(b + 1) * self.n_classes];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap();
+                let pred = predict_top1(row)
+                    .with_context(|| format!("{}: eval batch {bi} sample {b}", self.tag))?;
                 correct += usize::from(pred == y);
                 total += 1;
             }
@@ -267,5 +285,32 @@ impl Trainer {
             final_eval_acc,
             ema_eval_acc,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_top1_picks_max() {
+        assert_eq!(predict_top1(&[0.1, 3.0, -2.0]).unwrap(), 1);
+        assert_eq!(predict_top1(&[5.0]).unwrap(), 0);
+        // Infinities are ordinary values under total_cmp.
+        assert_eq!(predict_top1(&[f32::NEG_INFINITY, -1.0]).unwrap(), 1);
+        assert_eq!(predict_top1(&[2.0, f32::INFINITY, 3.0]).unwrap(), 1);
+        // Ties resolve to the last maximum (max_by semantics).
+        assert_eq!(predict_top1(&[1.0, 1.0, 0.0]).unwrap(), 1);
+    }
+
+    #[test]
+    fn predict_top1_nan_is_error_not_panic() {
+        // Regression: the seed panicked inside the comparator on NaN
+        // logits from a diverged model; it must be a reportable error.
+        assert!(predict_top1(&[0.0, f32::NAN, 1.0]).is_err());
+        assert!(predict_top1(&[f32::NAN]).is_err());
+        assert!(predict_top1(&[]).is_err());
+        let err = predict_top1(&[f32::NAN, 0.5]).unwrap_err();
+        assert!(format!("{err}").contains("NaN logit"), "{err}");
     }
 }

@@ -4,8 +4,10 @@
 //! kernels are dependent chains).  Contended resources — the SM issue port,
 //! the SM LSU, per-level bandwidth, and per-address atomic serialization —
 //! are modeled as *work-conserving accumulators*: a resource tracks the
-//! total work (cycles) enqueued so far, and a request at warp-time `t`
-//! starts at `max(t, accumulated_work)`.  This is order-insensitive (warps
+//! time at which its queued work drains, a request at warp-time `t`
+//! starts at `max(t, drain_time)`, and for temporally-ordered arrivals
+//! the accumulator is advanced past idle gaps so unused cycles are never
+//! banked (see [`Resource::acquire`]).  This stays order-insensitive (warps
 //! are simulated sequentially, not in temporal order) while still
 //! enforcing both the latency bound (dependent chains) and the throughput
 //! bound (total work / rate) — the two regimes the paper's analysis
@@ -75,13 +77,37 @@ pub trait Kernel {
 #[derive(Clone, Copy, Debug, Default)]
 struct Resource {
     busy: f64,
+    /// Latest request time seen, gating the idle credit below.
+    last_t: u64,
 }
 
 impl Resource {
     /// Enqueue `work` cycles of service requested at warp-time `t`.
     /// Returns the service start time.
+    ///
+    /// Idle-gap crediting: when requests arrive in temporal order
+    /// (`t >= last_t`) and the backlog has drained (`busy < t`), the
+    /// accumulator is advanced to `t` before the new work is added — a
+    /// resource cannot bank unused cycles, so a late request queues only
+    /// behind work that is actually still in flight, and a burst arriving
+    /// after an idle gap serializes properly instead of packing at `t`
+    /// for free until the stale work sum catches up (the seed behavior,
+    /// which under-serialized bursty traces and conversely billed late
+    /// requests against long-finished work).
+    ///
+    /// The `t >= last_t` gate matters: warps are simulated sequentially,
+    /// NOT in temporal order, so a temporally-concurrent warp visited
+    /// later re-issues requests at small `t` after its predecessor's
+    /// chain reached large `t`.  Crediting unconditionally would bake the
+    /// predecessor's wall-clock positions into `busy` and serialize
+    /// overlapping warps behind each other's latency; out-of-order
+    /// requests therefore fall back to the pure work-sum rule.
     #[inline]
     fn acquire(&mut self, t: u64, work: f64) -> u64 {
+        if t >= self.last_t && self.busy < t as f64 {
+            self.busy = t as f64;
+        }
+        self.last_t = self.last_t.max(t);
         let start = (self.busy.ceil() as u64).max(t);
         self.busy += work;
         start
@@ -295,6 +321,24 @@ mod tests {
     }
 
     #[test]
+    fn idle_gaps_are_credited_for_ordered_arrivals() {
+        let mut r = Resource::default();
+        // busy [0, 10): first request starts immediately.
+        assert_eq!(r.acquire(0, 10.0), 0);
+        // The 10..1000 idle gap is credited: a late request starts at its
+        // own arrival time, not at the stale work sum.
+        assert_eq!(r.acquire(1000, 10.0), 1000);
+        // ...and a second request at the same instant queues behind the
+        // in-flight 10 cycles (the seed let both start at t=1000).
+        assert_eq!(r.acquire(1000, 10.0), 1010);
+        // An out-of-order request (a later-simulated concurrent warp)
+        // must NOT see the predecessors' wall-clock positions as banked
+        // idle; it falls back to the work-sum rule and queues behind the
+        // 30 enqueued cycles (1020), not behind t=1000 + credit.
+        assert_eq!(r.acquire(100, 10.0), 1020);
+    }
+
+    #[test]
     fn empty_kernel() {
         let r = simulate(&cfg(), &Toy { blocks: 0, loads: 0, comp: 0, atomics: 0, addrs: 1 });
         assert_eq!(r.elapsed_cycles, 0);
@@ -317,7 +361,10 @@ mod tests {
         // be close to a single warp's chain, not 100x it.
         let one = simulate(&cfg(), &Toy { blocks: 1, loads: 4, comp: 2, atomics: 0, addrs: 1 });
         let many = simulate(&cfg(), &Toy { blocks: 100, loads: 4, comp: 2, atomics: 0, addrs: 1 });
-        assert!(many.elapsed_cycles < 2 * one.elapsed_cycles, "{} vs {}", many.elapsed_cycles, one.elapsed_cycles);
+        // Bound is 3x (was 2x): where arrivals are temporally ordered,
+        // idle-crediting serializes same-cycle bursts the seed accumulator
+        // let overlap for free, stretching shared-HBM queueing slightly.
+        assert!(many.elapsed_cycles < 3 * one.elapsed_cycles, "{} vs {}", many.elapsed_cycles, one.elapsed_cycles);
     }
 
     #[test]
@@ -327,8 +374,11 @@ mod tests {
         let r = simulate(&cfg(), &Toy { blocks, loads: 4, comp: 2, atomics: 0, addrs: 1 });
         let ideal = r.bytes_hbm as f64 / cfg().bw_hbm;
         let ratio = r.elapsed_cycles as f64 / ideal;
-        assert!(ratio < 1.5, "elapsed {} vs ideal {}", r.elapsed_cycles, ideal);
-        assert!(r.hbm_thp > 60.0, "{}", r.hbm_thp);
+        // Slightly looser than the seed's 1.5 / 60%: for in-order arrival
+        // runs the idle-credited accumulator no longer lets bursts absorb
+        // their queueing for free, so some warm-up serialization shows up.
+        assert!(ratio < 1.7, "elapsed {} vs ideal {}", r.elapsed_cycles, ideal);
+        assert!(r.hbm_thp > 55.0, "{}", r.hbm_thp);
     }
 
     #[test]
@@ -336,8 +386,9 @@ mod tests {
         // Same work, but all warps hammer one address with atomics.
         let with = simulate(&cfg(), &Toy { blocks: 2000, loads: 1, comp: 2, atomics: 4, addrs: 1 });
         let without = simulate(&cfg(), &Toy { blocks: 2000, loads: 1, comp: 2, atomics: 0, addrs: 1 });
-        // 2000 warps x 4 atomics x 32 lanes x 30 cycles on ONE address
-        // = 7.68M cycles of pure serialization.
+        // 2000 warps x 4 atomics x 32 lanes x `atomic_service` cycles on
+        // ONE address is pure serialization; the 30-cycle floor below is a
+        // conservative lower bound (the preset service interval is 120).
         assert!(with.elapsed_cycles >= 2000 * 4 * 32 * 30);
         assert!(with.elapsed_cycles > 10 * without.elapsed_cycles);
         // and the stall signature flips to Long Scoreboard.

@@ -7,8 +7,10 @@
 //! - **L3** (this crate): training coordinator, PJRT runtime, and every
 //!   substrate the paper's evaluation needs — most notably a GPU
 //!   memory-hierarchy simulator (`gpusim`) that reproduces the paper's
-//!   Nsight-style measurements, and a bit-faithful gradient-accumulation
-//!   model (`rational`) for the rounding-error study.
+//!   Nsight-style measurements, a bit-faithful gradient-accumulation
+//!   model (`rational`) for the rounding-error study, and a dynamic
+//!   micro-batching inference engine (`serve`) that turns the optimized
+//!   host kernels into a traffic-handling system.
 
 pub mod cli;
 pub mod config;
@@ -19,5 +21,6 @@ pub mod gpusim;
 pub mod rational;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

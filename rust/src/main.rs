@@ -6,6 +6,8 @@
 //!   train  [--model kat_micro|vit_micro|kat_micro_katbwd] [--steps N]
 //!          [--seed N] [--ckpt PATH] [--artifacts DIR]
 //!   profile [--kernel fwd|kat|flash] [--loops N] [--gpu 4060ti|h200] [--batch N]
+//!   serve-bench [--requests N] [--concurrency C] [--max-batch B] [--deadline-us D]
+//!          -- dynamic micro-batching inference bench (writes BENCH_serve.json)
 //!   selfcheck [--artifacts DIR]   -- runtime vs Rust-oracle numerics
 //!   flops
 //!
@@ -41,7 +43,25 @@ fn dims_from(args: &Args) -> Result<RationalDims> {
 fn cmd_report(args: &Args) -> Result<()> {
     let which = args.positional.first().map(String::as_str).unwrap_or("all");
     let gpu = gpu_from(args)?;
+    // fig1/table4 reproduce the paper's H200 end-to-end measurements, so
+    // they default to the H200 preset — but an *explicit* --gpu is the
+    // user's call and must be honored, not silently overridden.
+    let gpu_e2e = if args.flag("gpu").is_some() { gpu.clone() } else { GpuConfig::h200() };
     let b_sim = args.flag_u64("b-sim", 32)?;
+    // Simulated-batch cost for fig1/table4 grows superlinearly; clamp
+    // loudly instead of silently — but only when one of those reports is
+    // actually selected, so unrelated reports don't warn about a flag
+    // they never read.
+    let runs_e2e = matches!(which, "all" | "fig1" | "table4");
+    let b_sim_e2e = if b_sim > 16 && runs_e2e {
+        eprintln!(
+            "warning: --b-sim {b_sim} clamped to 16 for fig1/table4 \
+             (whole-model simulation cost; pass --b-sim <= 16 to silence)"
+        );
+        16
+    } else {
+        b_sim.min(16)
+    };
     let dims = dims_from(args)?;
     let rounding = RoundingConfig {
         rows: args.flag_usize("rows", 32 * 768)?,
@@ -53,7 +73,7 @@ fn cmd_report(args: &Args) -> Result<()> {
         print!("{}", report::table1());
     }
     if all || which == "fig1" {
-        print!("{}", report::fig1(&GpuConfig::h200(), b_sim.min(16)));
+        print!("{}", report::fig1(&gpu_e2e, b_sim_e2e));
     }
     if all || which == "table2" {
         print!("{}", report::table2(&gpu, dims));
@@ -65,7 +85,7 @@ fn cmd_report(args: &Args) -> Result<()> {
         print!("{}", report::table3(&gpu, dims));
     }
     if all || which == "table4" {
-        print!("{}", report::table4(&GpuConfig::h200(), b_sim.min(16)));
+        print!("{}", report::table4(&gpu_e2e, b_sim_e2e));
     }
     if all || which == "table5" {
         print!("{}", report::table5(&rounding));
@@ -120,7 +140,9 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_profile(args: &Args) -> Result<()> {
     let gpu = gpu_from(args)?;
     let mut dims = dims_from(args)?;
-    dims.flop_loops = args.flag_u64("loops", 1)? as u32;
+    // Range-checked: a loop count beyond u32 is an error, not a silent
+    // `as u32` truncation to some unrelated small value.
+    dims.flop_loops = args.flag_u32("loops", 1)?;
     let rep = match args.flag_str("kernel", "kat") {
         "fwd" => simulate(&gpu, &RationalFwdKernel::new(dims)),
         "kat" => simulate(&gpu, &RationalBwdKatKernel::new(dims)),
@@ -130,6 +152,55 @@ fn cmd_profile(args: &Args) -> Result<()> {
     println!("kernel                    cycles       time   SM%      L1%      L2%     HBM%");
     println!("{}", rep.table_row());
     print!("{}", rep.warp_state_figure());
+    Ok(())
+}
+
+/// Dynamic micro-batching inference benchmark: drive the serve subsystem
+/// with a seeded workload at the requested policy, compare against an
+/// unbatched (`max-batch 1`) baseline, and persist `BENCH_serve.json`.
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    use flashkat::serve::{loadgen, Arrival, BatchPolicy, LoadConfig};
+
+    let requests = args.flag_usize("requests", 2000)?.max(1);
+    let concurrency = args.flag_usize("concurrency", 16)?.max(1);
+    let max_batch = args.flag_usize("max-batch", 64)?.max(1);
+    let deadline_us = args.flag_u64("deadline-us", 200)?;
+    let queue_depth = args.flag_usize("queue-depth", 1024)?.max(1);
+    let d = args.flag_usize("d", 256)?;
+    let n_groups = args.flag_usize("groups", 8)?.max(1);
+    let arrival = if args.flag_bool("open-loop") {
+        Arrival::Open { rate_rps: args.flag_f64("rate", 5000.0)? }
+    } else {
+        Arrival::Closed
+    };
+    let cfg = LoadConfig {
+        requests,
+        concurrency,
+        d,
+        n_groups,
+        seed: args.flag_u64("seed", 7)?,
+        arrival,
+        ..Default::default()
+    };
+    let policy = BatchPolicy {
+        max_batch,
+        deadline_us,
+        queue_depth,
+        eager: !args.flag_bool("no-eager"),
+    };
+
+    let main_res = loadgen::run(&cfg, policy, &format!("max-batch {max_batch}"))?;
+    let baseline = if max_batch > 1 {
+        Some(loadgen::run(&cfg, BatchPolicy { max_batch: 1, ..policy }, "max-batch 1")?)
+    } else {
+        None
+    };
+    print!("{}", report::serve(&main_res, baseline.as_ref()));
+
+    let out = args.flag_str("out", "BENCH_serve.json");
+    let json = loadgen::bench_json(&cfg, &main_res, baseline.as_ref());
+    std::fs::write(out, json.to_string()).with_context(|| format!("writing {out}"))?;
+    println!("wrote {out}");
     Ok(())
 }
 
@@ -215,6 +286,7 @@ fn main() -> Result<()> {
         "report" => cmd_report(&args),
         "train" => cmd_train(&args),
         "profile" => cmd_profile(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "selfcheck" => cmd_selfcheck(&args),
         "flops" => {
             print!("{}", report::table1());
@@ -223,10 +295,14 @@ fn main() -> Result<()> {
         "" | "help" | "--help" => {
             println!(
                 "flashkat — FlashKAT reproduction (see DESIGN.md)\n\n\
-                 usage: flashkat <report|train|profile|selfcheck|flops> [flags]\n\
+                 usage: flashkat <report|train|profile|serve-bench|selfcheck|flops> [flags]\n\
                  \x20 report <fig1|table1|table2|fig2|fig3|table3|table4|table5|configs|all>\n\
                  \x20 train  [--model kat_micro|vit_micro|kat_micro_katbwd] [--steps N] [--ckpt PATH]\n\
                  \x20 profile [--kernel fwd|kat|flash] [--loops N] [--gpu 4060ti|h200]\n\
+                 \x20 serve-bench [--requests N] [--concurrency C] [--max-batch B] [--deadline-us D]\n\
+                 \x20             [--queue-depth N] [--no-eager] [--open-loop --rate RPS]\n\
+                 \x20             [--d N] [--groups N] [--seed N] [--out PATH]\n\
+                 \x20             (micro-batching inference bench; writes BENCH_serve.json)\n\
                  \x20 selfcheck [--artifacts DIR]"
             );
             Ok(())

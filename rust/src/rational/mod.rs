@@ -344,11 +344,22 @@ pub fn backward_elem_ref<T: Float>(
 /// independent, so the loop runs on the worker pool (elementwise — the
 /// schedule cannot change any value).
 pub fn forward<T: Float>(x: &[T], rows: usize, d: usize, c: &Coeffs<T>) -> Vec<T> {
+    let mut out = Vec::new();
+    forward_into(x, rows, d, c, &mut out);
+    out
+}
+
+/// [`forward`] into a caller-owned buffer (cleared and resized to fit).
+/// Serving-path variant: the executor reuses one output buffer across
+/// batches instead of allocating per call.  Values are identical to
+/// [`forward`] bit for bit.
+pub fn forward_into<T: Float>(x: &[T], rows: usize, d: usize, c: &Coeffs<T>, out: &mut Vec<T>) {
     assert_eq!(x.len(), rows * d);
     assert_eq!(d % c.n_groups, 0);
     let d_g = d / c.n_groups;
-    let mut out = vec![T::ZERO; x.len()];
-    crate::util::parallel::par_chunks_mut(&mut out, d, |r, out_row| {
+    out.clear();
+    out.resize(x.len(), T::ZERO);
+    crate::util::parallel::par_chunks_mut(out, d, |r, out_row| {
         let row = &x[r * d..(r + 1) * d];
         for g in 0..c.n_groups {
             let a = c.a_row(g);
@@ -359,7 +370,6 @@ pub fn forward<T: Float>(x: &[T], rows: usize, d: usize, c: &Coeffs<T>) -> Vec<T
             }
         }
     });
-    out
 }
 
 #[cfg(test)]
@@ -456,6 +466,22 @@ mod tests {
         let x = vec![1.0, 2.0, 3.0, 4.0]; // one row, d=4, d_g=2
         let out = forward(&x, 1, 4, &c);
         assert_eq!(out, vec![1.0, 2.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn forward_into_matches_forward_and_reuses_buffer() {
+        let mut rng = Pcg64::new(4);
+        let c = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+        let x: Vec<f32> = (0..4 * 64).map(|_| rng.normal_f32()).collect();
+        let want = forward(&x, 4, 64, &c);
+        let mut out = Vec::new();
+        forward_into(&x, 4, 64, &c, &mut out);
+        assert_eq!(out, want);
+        // Second call into the same buffer: no reallocation, same values.
+        let cap = out.capacity();
+        forward_into(&x, 4, 64, &c, &mut out);
+        assert_eq!(out.capacity(), cap);
+        assert_eq!(out, want);
     }
 
     #[test]

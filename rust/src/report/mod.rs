@@ -257,6 +257,55 @@ pub fn table5(cfg: &RoundingConfig) -> String {
     out
 }
 
+/// Serve-bench report: latency percentiles, throughput, and the
+/// batch-size histogram for the main run and the unbatched baseline.
+/// One request = one image's activations, so req/s is the img/s metric.
+pub fn serve(
+    main: &crate::serve::BenchResult,
+    baseline: Option<&crate::serve::BenchResult>,
+) -> String {
+    let mut out = hdr("Serve: dynamic micro-batching GR-KAN inference");
+    out.push_str(
+        "run                        img/s   rows/s   mean-b     p50      p95      p99\n",
+    );
+    let row = |r: &crate::serve::BenchResult| {
+        format!(
+            "{:<24} {:>8.0} {:>8.0} {:>8.1} {:>7.3}ms {:>7.3}ms {:>7.3}ms\n",
+            r.label,
+            r.throughput_rps,
+            r.rows_per_sec,
+            r.exec.mean_batch(),
+            r.p50_ms,
+            r.p95_ms,
+            r.p99_ms,
+        )
+    };
+    out.push_str(&row(main));
+    if let Some(base) = baseline {
+        out.push_str(&row(base));
+        out.push_str(&format!(
+            "throughput vs max-batch 1: {:.2}x\n",
+            main.throughput_rps / base.throughput_rps.max(1e-9)
+        ));
+    }
+    let hist: Vec<String> = main
+        .exec
+        .batch_hist
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| **n > 0)
+        .map(|(size, n)| format!("{size}x{n}"))
+        .collect();
+    out.push_str(&format!(
+        "batches: {} (sizes {}), errors {}, peak queue {}\n",
+        main.exec.batches,
+        hist.join(" "),
+        main.errors,
+        main.exec.peak_queued
+    ));
+    out
+}
+
 /// Tables 6/7: model configs and hyperparameters as encoded in `config`.
 pub fn configs() -> String {
     let mut out = hdr("Tables 6-7: model variants and training hyperparameters");
@@ -326,6 +375,40 @@ mod tests {
         let c = configs();
         assert!(c.contains("kat-b"));
         assert!(c.contains("86.6M") || c.contains("86.5M") || c.contains("86.7M"), "{c}");
+    }
+
+    #[test]
+    fn serve_report_formats_speedup_and_histogram() {
+        use crate::serve::{BenchResult, ExecStats};
+        let mk = |label: &str, rps: f64| BenchResult {
+            label: label.into(),
+            requests: 10,
+            concurrency: 2,
+            max_batch: 8,
+            deadline_us: 200,
+            wall_secs: 0.1,
+            throughput_rps: rps,
+            rows_per_sec: rps * 2.0,
+            mean_ms: 1.0,
+            p50_ms: 1.0,
+            p95_ms: 2.0,
+            p99_ms: 3.0,
+            max_ms: 4.0,
+            errors: 0,
+            exec: ExecStats {
+                batches: 5,
+                requests: 10,
+                rows: 20,
+                batch_hist: vec![0, 0, 5],
+                causes: [5, 0, 0, 0],
+                busy_secs: 0.05,
+                peak_queued: 3,
+            },
+        };
+        let t = serve(&mk("batched", 4000.0), Some(&mk("baseline", 1000.0)));
+        assert!(t.contains("4.00x"), "{t}");
+        assert!(t.contains("2x5"), "{t}");
+        assert!(t.contains("batched") && t.contains("baseline"), "{t}");
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! Deterministic load generator + latency/throughput report.
+//!
+//! Every random choice — request row counts, input values, open-loop
+//! arrival offsets — derives from `util::rng::Pcg64` streams keyed by
+//! the request id, so the workload is byte-identical across runs and
+//! across submitter-thread interleavings; only the *timing* varies with
+//! the machine.  The report side reuses `util::stats`: interpolated
+//! p50/p95/p99 latency, requests ("images") per second, and the
+//! executor's batch-size histogram.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::batcher::{BatchPolicy, FlushCause};
+use super::server::{ExecStats, Model, Server};
+use crate::rational::Coeffs;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::util::stats::percentile;
+
+/// Arrival process for the generated request stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// Each of `concurrency` clients submits its next request as soon as
+    /// the previous one completes (throughput-oriented).
+    Closed,
+    /// Poisson arrivals at `rate_rps`, pre-scheduled and split across
+    /// the submitter threads; a slow response delays only that thread's
+    /// own later arrivals (bounded open loop).
+    Open { rate_rps: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    pub requests: usize,
+    pub concurrency: usize,
+    /// Rows per request are drawn uniformly from `rows_min..=rows_max`.
+    pub rows_min: u32,
+    pub rows_max: u32,
+    pub d: usize,
+    pub n_groups: usize,
+    pub seed: u64,
+    pub arrival: Arrival,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        Self {
+            requests: 2000,
+            concurrency: 16,
+            rows_min: 1,
+            rows_max: 4,
+            d: 256,
+            n_groups: 8,
+            seed: 7,
+            arrival: Arrival::Closed,
+        }
+    }
+}
+
+/// Row count and input payload for request `id` — a pure function of
+/// `(seed, id)`, independent of which thread materializes it.
+pub fn request(cfg: &LoadConfig, id: u64) -> (u32, Vec<f32>) {
+    let mut rng = Pcg64::with_stream(cfg.seed, id);
+    let span = cfg.rows_max.max(cfg.rows_min) - cfg.rows_min;
+    let rows = cfg.rows_min + rng.below(span as usize + 1) as u32;
+    let x = (0..rows as usize * cfg.d).map(|_| rng.normal_f32()).collect();
+    (rows, x)
+}
+
+/// Cumulative Poisson arrival offsets (µs) for the open-loop schedule.
+pub fn open_schedule(requests: usize, rate_rps: f64, seed: u64) -> Vec<u64> {
+    let mut rng = Pcg64::with_stream(seed, 0x5eed_a11);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        // Exponential interarrival; clamp the log argument away from 0.
+        let u = rng.uniform().max(1e-12);
+        t += -u.ln() / rate_rps.max(1e-9);
+        out.push((t * 1e6) as u64);
+    }
+    out
+}
+
+/// Outcome of one load run against one server policy.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub label: String,
+    pub requests: usize,
+    pub concurrency: usize,
+    pub max_batch: usize,
+    pub deadline_us: u64,
+    pub wall_secs: f64,
+    /// Requests ("images") per second over the whole run.
+    pub throughput_rps: f64,
+    pub rows_per_sec: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub errors: usize,
+    pub exec: ExecStats,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        let hist: Vec<Json> =
+            self.exec.batch_hist.iter().map(|&n| Json::Int(n as i64)).collect();
+        let causes: Vec<(String, Json)> = FlushCause::ALL
+            .iter()
+            .map(|c| (c.label().to_string(), Json::Int(self.exec.causes[c.index()] as i64)))
+            .collect();
+        Json::Obj(vec![
+            ("label".to_string(), Json::Str(self.label.clone())),
+            ("requests".to_string(), Json::Int(self.requests as i64)),
+            ("concurrency".to_string(), Json::Int(self.concurrency as i64)),
+            ("max_batch".to_string(), Json::Int(self.max_batch as i64)),
+            ("deadline_us".to_string(), Json::Int(self.deadline_us as i64)),
+            ("wall_secs".to_string(), Json::Num(self.wall_secs)),
+            ("throughput_rps".to_string(), Json::Num(self.throughput_rps)),
+            ("rows_per_sec".to_string(), Json::Num(self.rows_per_sec)),
+            ("mean_ms".to_string(), Json::Num(self.mean_ms)),
+            ("p50_ms".to_string(), Json::Num(self.p50_ms)),
+            ("p95_ms".to_string(), Json::Num(self.p95_ms)),
+            ("p99_ms".to_string(), Json::Num(self.p99_ms)),
+            ("max_ms".to_string(), Json::Num(self.max_ms)),
+            ("errors".to_string(), Json::Int(self.errors as i64)),
+            ("batches".to_string(), Json::Int(self.exec.batches as i64)),
+            ("mean_batch".to_string(), Json::Num(self.exec.mean_batch())),
+            ("exec_busy_secs".to_string(), Json::Num(self.exec.busy_secs)),
+            ("peak_queued".to_string(), Json::Int(self.exec.peak_queued as i64)),
+            ("batch_hist".to_string(), Json::Arr(hist)),
+            ("flush_causes".to_string(), Json::Obj(causes)),
+        ])
+    }
+}
+
+/// Run the workload against a fresh server configured with `policy`.
+pub fn run(cfg: &LoadConfig, policy: BatchPolicy, label: &str) -> Result<BenchResult> {
+    if cfg.requests == 0 || cfg.concurrency == 0 {
+        bail!("load config needs at least one request and one client");
+    }
+    if cfg.d == 0 || cfg.d % cfg.n_groups != 0 {
+        bail!("d={} must be a positive multiple of n_groups={}", cfg.d, cfg.n_groups);
+    }
+    let mut rng = Pcg64::new(cfg.seed);
+    let coeffs = Coeffs::<f32>::randn(cfg.n_groups, 6, 4, &mut rng);
+    let server = Server::start(
+        vec![Model { name: "grkan".into(), d: cfg.d, coeffs }],
+        policy,
+    );
+
+    let offsets = match cfg.arrival {
+        Arrival::Open { rate_rps } => Some(open_schedule(cfg.requests, rate_rps, cfg.seed)),
+        Arrival::Closed => None,
+    };
+
+    let t0 = Instant::now();
+    let per_client: Vec<(Vec<f64>, usize)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.concurrency)
+            .map(|client| {
+                let server = &server;
+                let offsets = offsets.as_deref();
+                s.spawn(move || {
+                    let mut lats = Vec::new();
+                    let mut errors = 0usize;
+                    let mut id = client;
+                    while id < cfg.requests {
+                        if let Some(offs) = offsets {
+                            let due = Duration::from_micros(offs[id]);
+                            let since = t0.elapsed();
+                            if due > since {
+                                std::thread::sleep(due - since);
+                            }
+                        }
+                        let (rows, x) = request(cfg, id as u64);
+                        let ts = Instant::now();
+                        match server.submit(0, x, rows) {
+                            Ok(_) => lats.push(ts.elapsed().as_secs_f64()),
+                            Err(_) => errors += 1,
+                        }
+                        id += cfg.concurrency;
+                    }
+                    (lats, errors)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let exec = server.shutdown().expect("first shutdown");
+
+    let mut lats: Vec<f64> = per_client.iter().flat_map(|(l, _)| l.iter().copied()).collect();
+    let errors: usize = per_client.iter().map(|(_, e)| *e).sum();
+    lats.sort_by(|a, b| a.total_cmp(b));
+    let served = lats.len();
+    let mean_ms = if served == 0 {
+        f64::NAN
+    } else {
+        lats.iter().sum::<f64>() / served as f64 * 1e3
+    };
+    Ok(BenchResult {
+        label: label.to_string(),
+        requests: cfg.requests,
+        concurrency: cfg.concurrency,
+        max_batch: policy.max_batch,
+        deadline_us: policy.deadline_us,
+        wall_secs,
+        throughput_rps: served as f64 / wall_secs,
+        rows_per_sec: exec.rows as f64 / wall_secs,
+        mean_ms,
+        p50_ms: percentile(&lats, 50.0) * 1e3,
+        p95_ms: percentile(&lats, 95.0) * 1e3,
+        p99_ms: percentile(&lats, 99.0) * 1e3,
+        max_ms: lats.last().copied().unwrap_or(f64::NAN) * 1e3,
+        errors,
+        exec,
+    })
+}
+
+/// Assemble the `BENCH_serve.json` artifact from the main run and the
+/// optional `max_batch = 1` baseline.
+pub fn bench_json(cfg: &LoadConfig, main: &BenchResult, baseline: Option<&BenchResult>) -> Json {
+    let mut top = vec![
+        ("bench".to_string(), Json::Str("serve".to_string())),
+        (
+            "config".to_string(),
+            Json::Obj(vec![
+                ("requests".to_string(), Json::Int(cfg.requests as i64)),
+                ("concurrency".to_string(), Json::Int(cfg.concurrency as i64)),
+                ("rows_min".to_string(), Json::Int(cfg.rows_min as i64)),
+                ("rows_max".to_string(), Json::Int(cfg.rows_max as i64)),
+                ("d".to_string(), Json::Int(cfg.d as i64)),
+                ("n_groups".to_string(), Json::Int(cfg.n_groups as i64)),
+                ("seed".to_string(), Json::Int(cfg.seed as i64)),
+                (
+                    "arrival".to_string(),
+                    match cfg.arrival {
+                        Arrival::Closed => Json::Str("closed".to_string()),
+                        Arrival::Open { rate_rps } => Json::Obj(vec![(
+                            "open_rate_rps".to_string(),
+                            Json::Num(rate_rps),
+                        )]),
+                    },
+                ),
+                ("threads".to_string(), Json::Int(crate::util::parallel::default_threads() as i64)),
+            ]),
+        ),
+    ];
+    let mut results = vec![main.to_json()];
+    if let Some(base) = baseline {
+        results.push(base.to_json());
+        top.push((
+            "speedup_vs_max_batch_1".to_string(),
+            Json::Num(main.throughput_rps / base.throughput_rps.max(1e-9)),
+        ));
+    }
+    top.push(("results".to_string(), Json::Arr(results)));
+    Json::Obj(top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_payloads_are_deterministic_per_id() {
+        let cfg = LoadConfig::default();
+        let (r1, x1) = request(&cfg, 42);
+        let (r2, x2) = request(&cfg, 42);
+        assert_eq!(r1, r2);
+        assert_eq!(x1, x2);
+        assert!((cfg.rows_min..=cfg.rows_max).contains(&r1));
+        let (_, other) = request(&cfg, 43);
+        assert_ne!(x1, other);
+    }
+
+    #[test]
+    fn open_schedule_is_deterministic_and_monotone() {
+        let a = open_schedule(200, 5000.0, 3);
+        let b = open_schedule(200, 5000.0, 3);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        // ~200 arrivals at 5k rps span ~40 ms; allow generous slack.
+        let last = *a.last().unwrap();
+        assert!((5_000..400_000).contains(&last), "{last}");
+        assert_ne!(a, open_schedule(200, 5000.0, 4));
+    }
+
+    #[test]
+    fn closed_loop_smoke_run_serves_everything() {
+        let cfg = LoadConfig {
+            requests: 40,
+            concurrency: 4,
+            d: 64,
+            ..Default::default()
+        };
+        let res = run(&cfg, BatchPolicy { max_batch: 8, ..Default::default() }, "smoke").unwrap();
+        assert_eq!(res.errors, 0);
+        assert_eq!(res.exec.requests, 40);
+        assert!(res.throughput_rps > 0.0);
+        assert!(res.p50_ms <= res.p95_ms && res.p95_ms <= res.p99_ms);
+        let hist_total: usize =
+            res.exec.batch_hist.iter().enumerate().map(|(size, n)| size * n).sum();
+        assert_eq!(hist_total, 40);
+    }
+
+    #[test]
+    fn run_rejects_bad_dims() {
+        let cfg = LoadConfig { d: 100, n_groups: 8, ..Default::default() };
+        assert!(run(&cfg, BatchPolicy::default(), "bad").is_err());
+    }
+
+    #[test]
+    fn bench_json_carries_speedup_field() {
+        let cfg = LoadConfig { requests: 20, concurrency: 2, d: 64, ..Default::default() };
+        let a = run(&cfg, BatchPolicy { max_batch: 8, ..Default::default() }, "a").unwrap();
+        let b = run(&cfg, BatchPolicy { max_batch: 1, ..Default::default() }, "b").unwrap();
+        let j = bench_json(&cfg, &a, Some(&b));
+        assert!(j.get("speedup_vs_max_batch_1").is_some());
+        assert_eq!(j.get("results").unwrap().as_arr().unwrap().len(), 2);
+        // Round-trips through the parser (artifact is valid JSON).
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("serve"));
+    }
+}

@@ -1,0 +1,28 @@
+//! Dynamic micro-batching inference engine for the GR-KAN forward pass.
+//!
+//! FlashKAT's kernel-level lesson is that amortizing slow-memory traffic
+//! across a tile is what unlocks throughput; this subsystem applies the
+//! same principle one level up.  Individually served inference requests
+//! pay the worker-pool wakeup, the queue round-trip, and the coefficient
+//! traffic per *request*; coalescing concurrent requests into one
+//! batched [`crate::rational::forward`] pays them per *batch*, while a
+//! deadline keeps tail latency bounded.  Three layers (DESIGN.md §10):
+//!
+//! - [`batcher`] — the deterministic coalescing core: shape-keyed
+//!   buckets, flush on max-batch / deadline / idle-executor, admission
+//!   backpressure.  Pure (no threads, no wall clock), so coalescing is
+//!   reproducible under a virtual clock.
+//! - [`server`] — the threaded engine: blocking `submit`, one executor
+//!   thread driving batches through the persistent worker pool, drain on
+//!   shutdown.  Batched outputs are bit-identical to unbatched forwards.
+//! - [`loadgen`] — seeded closed-/open-loop workload generation and the
+//!   latency/throughput report behind `flashkat serve-bench` and the
+//!   `BENCH_serve.json` artifact.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod server;
+
+pub use batcher::{Batch, BatchPolicy, Batcher, FlushCause, ShapeKey, Ticket};
+pub use loadgen::{Arrival, BenchResult, LoadConfig};
+pub use server::{ExecStats, Model, Response, Server};

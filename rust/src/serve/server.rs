@@ -1,0 +1,430 @@
+//! Threaded micro-batching inference server for the GR-KAN forward pass.
+//!
+//! One executor thread owns the [`Batcher`]: it coalesces admitted
+//! requests into shape-keyed batches, concatenates their rows into a
+//! single buffer, and runs one [`crate::rational::forward`] per batch on
+//! the persistent worker pool (`util::parallel`), so the pool wakeup,
+//! the queue round-trip, and the coefficient traffic are paid once per
+//! batch instead of once per request.  Because the forward is strictly
+//! elementwise per row, a coalesced batch is **bit-identical** to
+//! serving each request alone — batching is purely a scheduling
+//! decision (enforced by `batched_output_matches_unbatched_forward`).
+//!
+//! Admission control: `submit` blocks while the queue is at
+//! `queue_depth` (backpressure), then blocks until its response is
+//! computed.  Shutdown stops admission, drains every pending request,
+//! and returns the executor's counters.
+
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::batcher::{Batch, Batcher, BatchPolicy, FlushCause, ShapeKey};
+use crate::rational::{forward_into, Coeffs};
+
+/// One served model: grouped PAU coefficients for inputs of width `d`.
+pub struct Model {
+    pub name: String,
+    pub d: usize,
+    pub coeffs: Coeffs<f32>,
+}
+
+/// A fulfilled request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub y: Vec<f32>,
+    /// Requests coalesced into the batch that served this one.
+    pub batch_size: usize,
+    pub cause: FlushCause,
+}
+
+/// Executor-side counters, returned by [`Server::shutdown`].
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub batches: usize,
+    pub requests: usize,
+    pub rows: usize,
+    /// `batch_hist[k]` = number of batches that coalesced `k` requests.
+    pub batch_hist: Vec<usize>,
+    /// Batches by [`FlushCause::index`].
+    pub causes: [usize; 4],
+    /// Wall time inside the batched forward (executor busy time).
+    pub busy_secs: f64,
+    /// Peak queue depth observed — must never exceed the policy's
+    /// `queue_depth` (the backpressure invariant).
+    pub peak_queued: usize,
+}
+
+impl ExecStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+struct Job {
+    x: Vec<f32>,
+    rows: u32,
+    resp: mpsc::Sender<Response>,
+}
+
+struct State {
+    batcher: Batcher,
+    /// Ticket id → payload for every admitted-but-unserved request.
+    jobs: BTreeMap<u64, Job>,
+    shutdown: bool,
+    peak_queued: usize,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Submitters waiting for queue space.
+    space: Condvar,
+    /// Executor waiting for work or a deadline.
+    work: Condvar,
+    models: Vec<Model>,
+    epoch: Instant,
+}
+
+fn now_us(shared: &Shared) -> u64 {
+    shared.epoch.elapsed().as_micros() as u64
+}
+
+pub struct Server {
+    shared: Arc<Shared>,
+    exec: Mutex<Option<std::thread::JoinHandle<ExecStats>>>,
+}
+
+impl Server {
+    /// Spawn the executor thread and start serving.
+    pub fn start(models: Vec<Model>, policy: BatchPolicy) -> Server {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                batcher: Batcher::new(policy),
+                jobs: BTreeMap::new(),
+                shutdown: false,
+                peak_queued: 0,
+            }),
+            space: Condvar::new(),
+            work: Condvar::new(),
+            models,
+            epoch: Instant::now(),
+        });
+        let worker = Arc::clone(&shared);
+        let exec = std::thread::Builder::new()
+            .name("flashkat-serve".into())
+            .spawn(move || executor(&worker))
+            .expect("spawn serve executor");
+        Server { shared, exec: Mutex::new(Some(exec)) }
+    }
+
+    /// Admitted-but-unserved request count (diagnostic).
+    pub fn queued(&self) -> usize {
+        self.shared.state.lock().unwrap().batcher.queued()
+    }
+
+    /// Submit one request and block until it is served.  Blocks at
+    /// admission while the queue is at depth (backpressure); fails fast
+    /// on a shape mismatch or once shutdown has begun.
+    pub fn submit(&self, model: u32, x: Vec<f32>, rows: u32) -> Result<Response> {
+        let m = self
+            .shared
+            .models
+            .get(model as usize)
+            .with_context(|| format!("unknown model {model}"))?;
+        if x.len() != rows as usize * m.d {
+            bail!("request shape mismatch: {} values for {} rows of d={}", x.len(), rows, m.d);
+        }
+        let key = ShapeKey { model, d: m.d as u32 };
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    bail!("server is shutting down");
+                }
+                let now = now_us(&self.shared);
+                if let Some(ticket) = st.batcher.admit(key, now) {
+                    st.jobs.insert(ticket.id, Job { x, rows, resp: tx });
+                    st.peak_queued = st.peak_queued.max(st.batcher.queued());
+                    break;
+                }
+                st = self.shared.space.wait(st).unwrap();
+            }
+            self.shared.work.notify_one();
+        }
+        rx.recv().map_err(|_| anyhow!("server dropped the request"))
+    }
+
+    /// Stop admission, drain pending requests, and join the executor.
+    /// Returns `None` if a previous call already collected the stats.
+    pub fn shutdown(&self) -> Option<ExecStats> {
+        let handle = self.exec.lock().unwrap().take()?;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_one();
+            self.shared.space.notify_all();
+        }
+        Some(handle.join().expect("serve executor panicked"))
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Batch-local buffers, reused across batches so the steady-state hot
+/// path allocates only the per-request response vectors.
+#[derive(Default)]
+struct Scratch {
+    xcat: Vec<f32>,
+    ycat: Vec<f32>,
+}
+
+fn executor(shared: &Shared) -> ExecStats {
+    let mut stats = ExecStats::default();
+    let mut scratch = Scratch::default();
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        let now = now_us(shared);
+        if let Some(batch) = st.batcher.pop(now, true) {
+            let jobs = detach_jobs(&mut st, &batch);
+            drop(st);
+            shared.space.notify_all();
+            execute(shared, &batch, jobs, &mut stats, &mut scratch);
+            st = shared.state.lock().unwrap();
+            continue;
+        }
+        if st.shutdown {
+            // `pop` came back empty; with a non-eager policy requests may
+            // still be waiting on deadlines — drain them unconditionally.
+            let batches = st.batcher.drain();
+            let drained: Vec<(Batch, Vec<Job>)> = batches
+                .into_iter()
+                .map(|b| {
+                    let jobs = detach_jobs(&mut st, &b);
+                    (b, jobs)
+                })
+                .collect();
+            stats.peak_queued = st.peak_queued;
+            drop(st);
+            shared.space.notify_all();
+            for (batch, jobs) in drained {
+                execute(shared, &batch, jobs, &mut stats, &mut scratch);
+            }
+            return stats;
+        }
+        st = match st.batcher.next_deadline_us() {
+            // Partial buckets pending (non-eager policy): sleep until the
+            // earliest deadline, then loop to flush it.
+            Some(due) => {
+                let wait = Duration::from_micros(due.saturating_sub(now_us(shared)));
+                shared.work.wait_timeout(st, wait).unwrap().0
+            }
+            None => shared.work.wait(st).unwrap(),
+        };
+    }
+}
+
+fn detach_jobs(st: &mut State, batch: &Batch) -> Vec<Job> {
+    batch
+        .tickets
+        .iter()
+        .map(|t| st.jobs.remove(&t.id).expect("payload for admitted ticket"))
+        .collect()
+}
+
+/// Run one coalesced batch and fan the rows back out to the requesters.
+fn execute(
+    shared: &Shared,
+    batch: &Batch,
+    jobs: Vec<Job>,
+    stats: &mut ExecStats,
+    scratch: &mut Scratch,
+) {
+    let model = &shared.models[batch.key.model as usize];
+    let d = model.d;
+    let total_rows: usize = jobs.iter().map(|j| j.rows as usize).sum();
+
+    let t0 = Instant::now();
+    scratch.xcat.clear();
+    scratch.xcat.reserve(total_rows * d);
+    for job in &jobs {
+        scratch.xcat.extend_from_slice(&job.x);
+    }
+    // Elementwise per row, so this equals per-request forward calls bit
+    // for bit — the accumulation order of each output element is
+    // unchanged by coalescing.
+    forward_into(&scratch.xcat, total_rows, d, &model.coeffs, &mut scratch.ycat);
+    stats.busy_secs += t0.elapsed().as_secs_f64();
+
+    let size = jobs.len();
+    stats.batches += 1;
+    stats.requests += size;
+    stats.rows += total_rows;
+    stats.causes[batch.cause.index()] += 1;
+    if stats.batch_hist.len() <= size {
+        stats.batch_hist.resize(size + 1, 0);
+    }
+    stats.batch_hist[size] += 1;
+
+    let mut off = 0usize;
+    for job in jobs {
+        let n = job.rows as usize * d;
+        let y = scratch.ycat[off..off + n].to_vec();
+        off += n;
+        // A requester that gave up is not an executor error.
+        let _ = job.resp.send(Response { y, batch_size: size, cause: batch.cause });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rational::forward;
+    use crate::util::rng::Pcg64;
+
+    const D: usize = 64;
+    const GROUPS: usize = 8;
+
+    fn model(seed: u64) -> (Model, Coeffs<f32>) {
+        let mut rng = Pcg64::new(seed);
+        let coeffs = Coeffs::<f32>::randn(GROUPS, 6, 4, &mut rng);
+        (Model { name: "grkan".into(), d: D, coeffs: coeffs.clone() }, coeffs)
+    }
+
+    fn request(seed: u64, id: u64) -> (u32, Vec<f32>) {
+        let mut rng = Pcg64::with_stream(seed, id);
+        let rows = 1 + rng.below(4) as u32;
+        let x = (0..rows as usize * D).map(|_| rng.normal_f32()).collect();
+        (rows, x)
+    }
+
+    #[test]
+    fn batched_output_matches_unbatched_forward() {
+        let (m, coeffs) = model(5);
+        let server = Server::start(
+            vec![m],
+            BatchPolicy { max_batch: 8, deadline_us: 500, queue_depth: 64, eager: true },
+        );
+        std::thread::scope(|s| {
+            for client in 0..4u64 {
+                let server = &server;
+                let coeffs = &coeffs;
+                s.spawn(move || {
+                    for i in 0..25u64 {
+                        let (rows, x) = request(5, client * 100 + i);
+                        let want = forward(&x, rows as usize, D, coeffs);
+                        let resp = server.submit(0, x, rows).expect("served");
+                        assert_eq!(resp.y, want, "batched != unbatched for req {client}/{i}");
+                        assert!(resp.batch_size >= 1);
+                    }
+                });
+            }
+        });
+        let stats = server.shutdown().expect("first shutdown collects stats");
+        assert_eq!(stats.requests, 100);
+        assert!(stats.rows > 0);
+        let hist_total: usize =
+            stats.batch_hist.iter().enumerate().map(|(size, n)| size * n).sum();
+        assert_eq!(hist_total, 100, "histogram accounts for every request");
+    }
+
+    #[test]
+    fn lone_request_is_flushed_by_the_deadline() {
+        let (m, _) = model(6);
+        // Non-eager policy and a huge max_batch: only the deadline can
+        // release this request.
+        let server = Server::start(
+            vec![m],
+            BatchPolicy { max_batch: 64, deadline_us: 2_000, queue_depth: 64, eager: false },
+        );
+        let (rows, x) = request(6, 0);
+        let resp = server.submit(0, x, rows).expect("served");
+        assert_eq!(resp.cause, FlushCause::Deadline);
+        assert_eq!(resp.batch_size, 1);
+    }
+
+    #[test]
+    fn backpressure_never_exceeds_queue_depth() {
+        let (m, _) = model(7);
+        let depth = 4;
+        let server = Server::start(
+            vec![m],
+            BatchPolicy { max_batch: 4, deadline_us: 200, queue_depth: depth, eager: true },
+        );
+        std::thread::scope(|s| {
+            for client in 0..16u64 {
+                let server = &server;
+                s.spawn(move || {
+                    for i in 0..10u64 {
+                        let (rows, x) = request(7, client * 100 + i);
+                        server.submit(0, x, rows).expect("served");
+                    }
+                });
+            }
+        });
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.requests, 160);
+        assert!(
+            stats.peak_queued <= depth,
+            "queue grew to {} despite depth {depth}",
+            stats.peak_queued
+        );
+    }
+
+    #[test]
+    fn shutdown_drains_pending_requests() {
+        let (m, _) = model(8);
+        // Deadline far in the future and non-eager: requests can only be
+        // served by the shutdown drain.
+        let server = Server::start(
+            vec![m],
+            BatchPolicy { max_batch: 64, deadline_us: 10_000_000, queue_depth: 64, eager: false },
+        );
+        std::thread::scope(|s| {
+            for i in 0..3u64 {
+                let server = &server;
+                s.spawn(move || {
+                    let (rows, x) = request(8, i);
+                    let resp = server.submit(0, x, rows).expect("drained at shutdown");
+                    assert_eq!(resp.cause, FlushCause::Drain);
+                });
+            }
+            // Wait for all three to be admitted, then drain.
+            while server.queued() < 3 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let stats = server.shutdown().unwrap();
+            assert_eq!(stats.requests, 3);
+            assert_eq!(stats.causes[FlushCause::Drain.index()], 1);
+        });
+    }
+
+    #[test]
+    fn bad_requests_fail_fast() {
+        let (m, _) = model(9);
+        let server = Server::start(vec![m], BatchPolicy::default());
+        assert!(server.submit(1, vec![0.0; D], 1).is_err(), "unknown model");
+        assert!(server.submit(0, vec![0.0; D - 1], 1).is_err(), "shape mismatch");
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.requests, 0);
+    }
+
+    #[test]
+    fn second_shutdown_returns_none() {
+        let (m, _) = model(10);
+        let server = Server::start(vec![m], BatchPolicy::default());
+        assert!(server.shutdown().is_some());
+        assert!(server.shutdown().is_none());
+        assert!(server.submit(0, vec![0.0; D], 1).is_err(), "admission closed");
+    }
+}

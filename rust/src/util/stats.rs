@@ -92,12 +92,22 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Percentile of an ascending-sorted slice with linear interpolation
+/// between the two nearest ranks (numpy's default method).
+///
+/// The seed used nearest-rank, which collapses p50/p95/p99 onto the same
+/// sample at small `n` and quantizes tail latencies; interpolation is
+/// monotone in `p` and exact at the sample points.  `p` outside
+/// `[0, 100]` clamps to the extremes.
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;
     }
-    let idx = (p / 100.0 * (sorted.len() - 1) as f64).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = (lo + 1).min(sorted.len() - 1);
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
 }
 
 /// Human formatting for big counts: 11.3M, 2.4T, ...
@@ -167,6 +177,39 @@ mod tests {
         assert!(t_crit95(1) > t_crit95(5));
         assert!(t_crit95(5) > t_crit95(100));
         assert_eq!(t_crit95(10_000), 1.960);
+    }
+
+    #[test]
+    fn percentile_interpolates_between_ranks() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+        assert!((percentile(&xs, 75.0) - 32.5).abs() < 1e-12);
+        // Exact at the sample points.
+        assert!((percentile(&xs, 100.0 / 3.0) - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        assert!(percentile(&[], 50.0).is_nan());
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+        // Out-of-range p clamps instead of indexing out of bounds.
+        assert_eq!(percentile(&[1.0, 2.0], -5.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 150.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_monotone_in_p() {
+        let mut rng = crate::util::rng::Pcg64::new(2);
+        let mut v: Vec<f64> = (0..101).map(|_| rng.uniform()).collect();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let mut prev = f64::NEG_INFINITY;
+        for p in 0..=100 {
+            let q = percentile(&v, p as f64);
+            assert!(q >= prev, "p={p}: {q} < {prev}");
+            prev = q;
+        }
     }
 
     #[test]

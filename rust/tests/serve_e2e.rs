@@ -1,0 +1,98 @@
+//! Integration: the serve subsystem end to end — seeded workloads through
+//! the threaded server, batched-vs-unbatched numeric identity, deadline
+//! coalescing, and open-loop arrivals.  No artifacts required.
+
+use flashkat::rational::{forward, Coeffs};
+use flashkat::serve::{loadgen, Arrival, BatchPolicy, FlushCause, LoadConfig, Model, Server};
+use flashkat::util::rng::Pcg64;
+
+/// Fixed seed → the exact same request payloads → outputs bit-identical
+/// to the unbatched oracle, no matter how the scheduler slices batches.
+#[test]
+fn serve_outputs_bit_identical_to_unbatched_oracle() {
+    let d = 128;
+    let mut rng = Pcg64::new(11);
+    let coeffs = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+    let server = Server::start(
+        vec![Model { name: "grkan".into(), d, coeffs: coeffs.clone() }],
+        BatchPolicy { max_batch: 16, deadline_us: 300, queue_depth: 128, eager: true },
+    );
+    std::thread::scope(|s| {
+        for client in 0..8u64 {
+            let server = &server;
+            let coeffs = &coeffs;
+            s.spawn(move || {
+                for i in 0..20u64 {
+                    let mut rng = Pcg64::with_stream(11, client * 1000 + i);
+                    let rows = 1 + rng.below(3);
+                    let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+                    let want = forward(&x, rows, d, coeffs);
+                    let got = server.submit(0, x, rows as u32).expect("served").y;
+                    assert_eq!(got, want, "client {client} req {i}");
+                }
+            });
+        }
+    });
+    let stats = server.shutdown().expect("stats");
+    assert_eq!(stats.requests, 160);
+}
+
+/// With a non-eager policy, concurrent clients are coalesced by the
+/// deadline into multi-request batches — the amortization mechanism the
+/// subsystem exists for.
+#[test]
+fn deadline_coalesces_concurrent_clients() {
+    let cfg = LoadConfig { requests: 128, concurrency: 8, d: 64, ..Default::default() };
+    let res = loadgen::run(
+        &cfg,
+        // Deadline generous enough that slow CI scheduling can't fragment
+        // the coalescing this test is about.
+        BatchPolicy { max_batch: 8, deadline_us: 20_000, queue_depth: 64, eager: false },
+        "deadline",
+    )
+    .unwrap();
+    assert_eq!(res.errors, 0);
+    assert_eq!(res.exec.requests, 128);
+    assert!(
+        res.exec.mean_batch() > 2.0,
+        "deadline coalescing should batch 8 closed-loop clients, got mean {}",
+        res.exec.mean_batch()
+    );
+    // Deadline (or terminal drain) is what released the batches, not size.
+    let deadline_batches = res.exec.causes[FlushCause::Deadline.index()]
+        + res.exec.causes[FlushCause::Full.index()]
+        + res.exec.causes[FlushCause::Drain.index()];
+    assert!(deadline_batches > 0);
+    assert_eq!(res.exec.causes[FlushCause::Idle.index()], 0, "non-eager policy never idles out");
+}
+
+#[test]
+fn open_loop_schedule_completes_without_errors() {
+    let cfg = LoadConfig {
+        requests: 200,
+        concurrency: 8,
+        d: 64,
+        arrival: Arrival::Open { rate_rps: 20_000.0 },
+        ..Default::default()
+    };
+    let res = loadgen::run(&cfg, BatchPolicy::default(), "open").unwrap();
+    assert_eq!(res.errors, 0);
+    assert_eq!(res.exec.requests, 200);
+    assert!(res.p50_ms <= res.p99_ms);
+    assert!(res.wall_secs > 0.0 && res.throughput_rps > 0.0);
+}
+
+/// The backpressure invariant holds under a deliberately tiny queue.
+#[test]
+fn tiny_queue_depth_is_never_exceeded() {
+    let cfg = LoadConfig { requests: 96, concurrency: 12, d: 64, ..Default::default() };
+    let res = loadgen::run(
+        &cfg,
+        BatchPolicy { max_batch: 4, deadline_us: 100, queue_depth: 3, eager: true },
+        "tiny-queue",
+    )
+    .unwrap();
+    assert_eq!(res.errors, 0);
+    assert_eq!(res.exec.requests, 96);
+    assert!(res.exec.peak_queued <= 3, "peak {}", res.exec.peak_queued);
+}
