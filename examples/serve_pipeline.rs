@@ -1,0 +1,122 @@
+//! Full-pipeline KAT serving demo: route requests by name to a registry
+//! mixing a GR-KAN layer model with a whole-model pipeline executor.
+//!
+//! With AOT artifacts built (`make artifacts`), the pipeline slot serves
+//! the real `kat_micro_eval` module through the PJRT runtime; without
+//! them (or with the offline PJRT stub) it falls back to a pure-Rust
+//! module so the example always runs — the serving stack is identical
+//! either way, which is the point of the executor abstraction.
+//!
+//!     cargo run --example serve_pipeline
+
+use anyhow::Result;
+use flashkat::rational::Coeffs;
+use flashkat::runtime::{HostTensor, ModuleExec, RowsAdapter, Runtime};
+use flashkat::serve::{BatchPolicy, PipelineExecutor, RationalExecutor, Server};
+use flashkat::util::rng::Pcg64;
+
+/// Pure-Rust fallback pipeline: scales each row by a fixed weight
+/// vector (row-independent, like a per-image eval model).
+struct HostEval {
+    batch: usize,
+    d: usize,
+}
+
+impl ModuleExec for HostEval {
+    fn execute_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let w = inputs[0].as_f32()?;
+        let x = inputs[1].as_f32()?;
+        let y: Vec<f32> = x
+            .chunks(self.d)
+            .flat_map(|row| row.iter().zip(w).map(|(v, wi)| v * wi).collect::<Vec<_>>())
+            .collect();
+        Ok(vec![HostTensor::F32 { shape: vec![self.batch, self.d], data: y }])
+    }
+}
+
+/// Real pipeline if artifacts + PJRT are available, host fallback else.
+fn pipeline() -> Result<PipelineExecutor> {
+    let tag = "kat_micro";
+    let real = || -> Result<PipelineExecutor> {
+        let rt = Runtime::cpu("artifacts")?;
+        PipelineExecutor::from_runtime(&rt, tag)
+    };
+    match real() {
+        Ok(ex) => {
+            println!("pipeline model: {tag} (AOT artifact)");
+            Ok(ex)
+        }
+        Err(e) => {
+            println!("pipeline model: host fallback ({e:#})");
+            let (batch, d) = (8, 48);
+            let w = HostTensor::F32 {
+                shape: vec![d],
+                data: (0..d).map(|j| 1.0 + j as f32 / d as f32).collect(),
+            };
+            let adapter = RowsAdapter::from_parts(
+                Box::new(HostEval { batch, d }),
+                vec![w],
+                vec![batch, d],
+                vec![batch, d],
+            )?;
+            Ok(PipelineExecutor::new(tag, adapter))
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let mut rng = Pcg64::new(7);
+    let coeffs = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+    let grkan = RationalExecutor::new("grkan", 256, coeffs)?;
+    let pipe = pipeline()?;
+    let pipe_d = {
+        use flashkat::serve::ModelExecutor;
+        (pipe.d_in(), pipe.d_out())
+    };
+
+    let server = Server::start(
+        vec![Box::new(grkan), Box::new(pipe)],
+        BatchPolicy { max_batch: 16, deadline_us: 300, queue_depth: 256, eager: true },
+    )?;
+    for m in server.models() {
+        println!("registered {:<10} {} -> {}", m.name, m.d_in, m.d_out);
+    }
+
+    // Concurrent clients, routed by model name.
+    std::thread::scope(|s| {
+        for client in 0..4u64 {
+            let server = &server;
+            s.spawn(move || {
+                let mut rng = Pcg64::with_stream(7, client);
+                for i in 0..25 {
+                    let (name, d) =
+                        if (client + i) % 2 == 0 { ("grkan", 256) } else { ("kat_micro", pipe_d.0) };
+                    let rows = 1 + rng.below(3);
+                    let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+                    let resp = server.submit(name, x, rows as u32).expect("served");
+                    assert_eq!(resp.y.len() % rows, 0);
+                }
+            });
+        }
+    });
+
+    let stats = server.shutdown().expect("stats");
+    println!("\nper-model stats:");
+    for m in &stats.per_model {
+        println!(
+            "  {:<10} requests {:>4}  rows {:>5}  batches {:>4}  mean batch {:>4.1}  busy {:>7.3} ms",
+            m.name,
+            m.stats.requests,
+            m.stats.rows,
+            m.stats.batches,
+            m.stats.mean_batch(),
+            m.stats.busy_secs * 1e3,
+        );
+    }
+    let total = stats.total();
+    println!(
+        "total: {} requests in {} batches (peak queue {})",
+        total.requests, total.batches, stats.peak_queued
+    );
+    Ok(())
+}

@@ -1,9 +1,12 @@
 //! Serve micro-batching bench target: the same deterministic loadgen
 //! behind `flashkat serve-bench`, swept over max-batch so the
-//! amortization curve (1 → 64) is visible in one run.  Writes
-//! `BENCH_serve.json` (the max-batch 64 run vs the max-batch 1
-//! baseline) so the serving-perf trajectory is tracked across PRs like
-//! `BENCH_rational.json` (DESIGN.md §§9-10).
+//! amortization curve (1 → 64) is visible in one run.  Runs against the
+//! default single-model registry (one `RationalExecutor`); multi-model
+//! and pipeline registries are exercised by `serve-bench --models` /
+//! `--pipeline` and `tests/serve_e2e.rs`.  Writes `BENCH_serve.json`
+//! (the max-batch 64 run vs the max-batch 1 baseline) so the
+//! serving-perf trajectory is tracked across PRs like
+//! `BENCH_rational.json` (DESIGN.md §§9-11).
 //!
 //!     cargo bench --bench bench_serve -- [--requests N] [--concurrency C]
 
@@ -28,13 +31,15 @@ fn main() {
         )
         .expect("serve run");
         println!(
-            "bench {:<24} {:>10.0} img/s  p50 {:>7.3} ms  p99 {:>7.3} ms  mean batch {:>5.1}",
+            "bench {:<24} {:>10.0} img/s  p50 {:>7.3} ms  p99 {:>7.3} ms  mean batch {:>5.1}  peak queue {:>4}",
             res.label,
             res.throughput_rps,
             res.p50_ms,
             res.p99_ms,
-            res.exec.mean_batch()
+            res.exec.mean_batch(),
+            res.peak_queued
         );
+        assert_eq!(res.exec.failed, 0, "no executor failures expected in the bench");
         results.push(res);
     }
 

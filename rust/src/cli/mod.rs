@@ -85,6 +85,21 @@ impl Args {
     pub fn flag_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.flag(name).unwrap_or(default)
     }
+
+    /// Comma-separated list flag: `--models a:256,b:64` →
+    /// `["a:256", "b:64"]`; empty items are dropped, an absent flag is
+    /// an empty list.
+    pub fn flag_list(&self, name: &str) -> Vec<String> {
+        self.flag(name)
+            .map(|v| {
+                v.split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(str::to_string)
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
 }
 
 #[cfg(test)]
@@ -130,6 +145,15 @@ mod tests {
         let big = parse("t --loops 4294967296");
         assert!(big.flag_u32("loops", 1).is_err());
         assert!(parse("t --loops -1").flag_u32("loops", 1).is_err());
+    }
+
+    #[test]
+    fn flag_list_splits_and_trims() {
+        let a = parse("t --models grkan:256:8,small:64");
+        assert_eq!(a.flag_list("models"), vec!["grkan:256:8", "small:64"]);
+        assert!(a.flag_list("absent").is_empty());
+        let b = parse("t --models ,,x,");
+        assert_eq!(b.flag_list("models"), vec!["x"]);
     }
 
     #[test]

@@ -7,13 +7,16 @@
 //!          [--seed N] [--ckpt PATH] [--artifacts DIR]
 //!   profile [--kernel fwd|kat|flash] [--loops N] [--gpu 4060ti|h200] [--batch N]
 //!   serve-bench [--requests N] [--concurrency C] [--max-batch B] [--deadline-us D]
-//!          -- dynamic micro-batching inference bench (writes BENCH_serve.json)
+//!          [--model NAME | --models name:d[:groups],... | --pipeline TAG]
+//!          [--autotune --slo-p99-us N]
+//!          -- dynamic micro-batching inference bench over named models or a
+//!             whole AOT pipeline (writes BENCH_serve.json)
 //!   selfcheck [--artifacts DIR]   -- runtime vs Rust-oracle numerics
 //!   flops
 //!
 //! See DESIGN.md §5 for the table/figure -> command mapping.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use flashkat::cli::Args;
 use flashkat::config::TrainConfig;
@@ -155,29 +158,74 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--models name:d[:groups],...` (or the single `--model`/`--d`/
+/// `--groups` flags) → the rational-model registry to serve.
+fn serve_model_specs(args: &Args) -> Result<Vec<flashkat::serve::ModelSpec>> {
+    use flashkat::serve::ModelSpec;
+    let default_d = args.flag_usize("d", 256)?;
+    let default_groups = args.flag_usize("groups", 8)?.max(1);
+    let list = args.flag_list("models");
+    if list.is_empty() {
+        // An explicitly passed but empty --models must not silently fall
+        // back to the single-model flags (and their laxer checks).
+        if args.flag("models").is_some() {
+            bail!("--models was given but names no models (want name:d[:groups],...)");
+        }
+        return Ok(vec![ModelSpec::new(
+            args.flag_str("model", "grkan"),
+            default_d,
+            default_groups,
+        )]);
+    }
+    // With an explicit registry these single-model flags would be
+    // silently dead; reject instead (--groups stays meaningful as the
+    // default for name:d entries).
+    if args.flag("model").is_some() {
+        bail!("--model and --models are mutually exclusive");
+    }
+    if args.flag("d").is_some() {
+        bail!("--d is ignored with --models; widths are per entry (name:d[:groups])");
+    }
+    list.iter()
+        .map(|item| {
+            let parse_n = |v: &str, what: &str| {
+                v.parse::<usize>()
+                    .map_err(|_| anyhow!("--models {item:?}: bad {what} {v:?}"))
+            };
+            let parts: Vec<&str> = item.split(':').collect();
+            match parts.as_slice() {
+                [name, d] => Ok(ModelSpec::new(*name, parse_n(d, "width")?, default_groups)),
+                [name, d, g] => {
+                    Ok(ModelSpec::new(*name, parse_n(d, "width")?, parse_n(g, "group count")?))
+                }
+                _ => bail!("--models entries are name:d[:groups], got {item:?}"),
+            }
+        })
+        .collect()
+}
+
 /// Dynamic micro-batching inference benchmark: drive the serve subsystem
-/// with a seeded workload at the requested policy, compare against an
-/// unbatched (`max-batch 1`) baseline, and persist `BENCH_serve.json`.
+/// with a seeded workload at the requested policy — against one or more
+/// named rational models (`--models`) or a whole AOT-compiled pipeline
+/// (`--pipeline <tag>`) — compare against an unbatched (`max-batch 1`)
+/// baseline or sweep policies (`--autotune`), and persist the
+/// `BENCH_serve.json`-shaped record.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
-    use flashkat::serve::{loadgen, Arrival, BatchPolicy, LoadConfig};
+    use flashkat::serve::{loadgen, Arrival, BatchPolicy, LoadConfig, ModelExecutor, ModelSpec};
 
     let requests = args.flag_usize("requests", 2000)?.max(1);
     let concurrency = args.flag_usize("concurrency", 16)?.max(1);
     let max_batch = args.flag_usize("max-batch", 64)?.max(1);
     let deadline_us = args.flag_u64("deadline-us", 200)?;
     let queue_depth = args.flag_usize("queue-depth", 1024)?.max(1);
-    let d = args.flag_usize("d", 256)?;
-    let n_groups = args.flag_usize("groups", 8)?.max(1);
     let arrival = if args.flag_bool("open-loop") {
         Arrival::Open { rate_rps: args.flag_f64("rate", 5000.0)? }
     } else {
         Arrival::Closed
     };
-    let cfg = LoadConfig {
+    let mut cfg = LoadConfig {
         requests,
         concurrency,
-        d,
-        n_groups,
         seed: args.flag_u64("seed", 7)?,
         arrival,
         ..Default::default()
@@ -188,17 +236,95 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         queue_depth,
         eager: !args.flag_bool("no-eager"),
     };
-
-    let main_res = loadgen::run(&cfg, policy, &format!("max-batch {max_batch}"))?;
-    let baseline = if max_batch > 1 {
-        Some(loadgen::run(&cfg, BatchPolicy { max_batch: 1, ..policy }, "max-batch 1")?)
-    } else {
-        None
-    };
-    print!("{}", report::serve(&main_res, baseline.as_ref()));
-
     let out = args.flag_str("out", "BENCH_serve.json");
-    let json = loadgen::bench_json(&cfg, &main_res, baseline.as_ref());
+    let autotune = args.flag_bool("autotune");
+    let slo_p99_us = args.flag_u64("slo-p99-us", 2000)?;
+    if !autotune && args.flag("slo-p99-us").is_some() {
+        bail!("--slo-p99-us only applies with --autotune");
+    }
+    // Autotune sweep grid: the defaults plus any explicitly requested
+    // policy point, so --max-batch / --deadline-us are folded into the
+    // sweep instead of silently discarded.
+    let mut tune_mbs = loadgen::AUTOTUNE_MAX_BATCH.to_vec();
+    if args.flag("max-batch").is_some() {
+        tune_mbs.push(max_batch);
+    }
+    tune_mbs.sort_unstable();
+    tune_mbs.dedup();
+    let mut tune_dls = loadgen::AUTOTUNE_DEADLINE_US.to_vec();
+    if args.flag("deadline-us").is_some() {
+        tune_dls.push(deadline_us);
+    }
+    tune_dls.sort_unstable();
+    tune_dls.dedup();
+
+    // Both serving modes reduce to "a way to build the registry"; the
+    // orchestration (autotune sweep, or main run + max-batch-1 baseline)
+    // is shared below instead of duplicated per mode.
+    let (mut build, label_prefix): (
+        Box<dyn FnMut() -> Result<Vec<Box<dyn ModelExecutor>>> + '_>,
+        String,
+    ) = if let Some(tag) = args.flag("pipeline") {
+        use flashkat::serve::PipelineExecutor;
+        // --pipeline serves <TAG>_eval end to end; the rational-registry
+        // flags would be silently dead, so reject the combination (same
+        // no-silent-override rule as cmd_report's --gpu/--b-sim).
+        for f in ["model", "models", "d", "groups"] {
+            if args.flag(f).is_some() {
+                bail!("--{f} only applies to rational registries, not --pipeline");
+            }
+        }
+        let rt = Runtime::cpu(args.flag_str("artifacts", "artifacts"))?;
+        // Run <TAG>_init and compile <TAG>_eval once; every executor
+        // instance (main run, baseline, autotune grid points) shares the
+        // compilation and clones the parameter leaves.
+        let init = rt.load(&format!("{tag}_init"))?;
+        let params = init.execute(&[]).with_context(|| format!("running {tag}_init"))?;
+        let eval = std::sync::Arc::new(rt.load(&format!("{tag}_eval"))?);
+        let probe = PipelineExecutor::from_module(tag, eval.clone(), params.clone())?;
+        cfg.models = vec![ModelSpec::new(tag, probe.d_in(), 1)];
+        // The probe doubles as the first registry the builder hands out,
+        // so its parameter serialization is not thrown away.
+        let mut probe = Some(probe);
+        let build = move || {
+            let ex = match probe.take() {
+                Some(ex) => ex,
+                None => PipelineExecutor::from_module(tag, eval.clone(), params.clone())?,
+            };
+            Ok(vec![Box::new(ex) as Box<dyn ModelExecutor>])
+        };
+        (Box::new(build), format!("{tag} "))
+    } else {
+        cfg.models = serve_model_specs(args)?;
+        (Box::new(|| loadgen::executors(&cfg)), String::new())
+    };
+
+    let json = if autotune {
+        let res =
+            loadgen::autotune_with(&cfg, policy, slo_p99_us, &tune_mbs, &tune_dls, &mut build)?;
+        print!("{}", report::serve_autotune(&res));
+        loadgen::autotune_json(&cfg, &res)
+    } else {
+        let main_res = loadgen::run_with(
+            &cfg,
+            build()?,
+            policy,
+            &format!("{label_prefix}max-batch {max_batch}"),
+        )?;
+        let baseline = if max_batch > 1 {
+            Some(loadgen::run_with(
+                &cfg,
+                build()?,
+                BatchPolicy { max_batch: 1, ..policy },
+                &format!("{label_prefix}max-batch 1"),
+            )?)
+        } else {
+            None
+        };
+        print!("{}", report::serve(&main_res, baseline.as_ref()));
+        loadgen::bench_json(&cfg, &main_res, baseline.as_ref())
+    };
+
     std::fs::write(out, json.to_string()).with_context(|| format!("writing {out}"))?;
     println!("wrote {out}");
     Ok(())
@@ -301,7 +427,10 @@ fn main() -> Result<()> {
                  \x20 profile [--kernel fwd|kat|flash] [--loops N] [--gpu 4060ti|h200]\n\
                  \x20 serve-bench [--requests N] [--concurrency C] [--max-batch B] [--deadline-us D]\n\
                  \x20             [--queue-depth N] [--no-eager] [--open-loop --rate RPS]\n\
-                 \x20             [--d N] [--groups N] [--seed N] [--out PATH]\n\
+                 \x20             [--model NAME] [--models name:d[:groups],...] [--d N] [--groups N]\n\
+                 \x20             [--pipeline TAG [--artifacts DIR]]  (serve a whole <TAG>_eval model)\n\
+                 \x20             [--autotune [--slo-p99-us N]]  (sweep max-batch/deadline vs the SLO)\n\
+                 \x20             [--seed N] [--out PATH]\n\
                  \x20             (micro-batching inference bench; writes BENCH_serve.json)\n\
                  \x20 selfcheck [--artifacts DIR]"
             );

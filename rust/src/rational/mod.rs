@@ -52,6 +52,21 @@ impl<T: Scalar> Coeffs<T> {
         &self.b[g * self.n..(g + 1) * self.n]
     }
 
+    /// Check that a feature width can be served by this table: positive
+    /// and an exact multiple of the group count.  [`forward_into`]
+    /// asserts the same invariant; executors (`serve::RationalExecutor`)
+    /// call this at registration time so a bad width is a clean `Err` at
+    /// model-load instead of a panic on the serving thread.
+    pub fn validate_width(&self, d: usize) -> anyhow::Result<()> {
+        if d == 0 || d % self.n_groups != 0 {
+            anyhow::bail!(
+                "width {d} is not a positive multiple of n_groups={}",
+                self.n_groups
+            );
+        }
+        Ok(())
+    }
+
     pub fn cast<U: Scalar>(&self) -> Coeffs<U> {
         Coeffs {
             n_groups: self.n_groups,
@@ -466,6 +481,16 @@ mod tests {
         let x = vec![1.0, 2.0, 3.0, 4.0]; // one row, d=4, d_g=2
         let out = forward(&x, 1, 4, &c);
         assert_eq!(out, vec![1.0, 2.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn validate_width_accepts_multiples_only() {
+        let mut rng = Pcg64::new(2);
+        let c = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+        assert!(c.validate_width(64).is_ok());
+        assert!(c.validate_width(8).is_ok());
+        assert!(c.validate_width(0).is_err());
+        assert!(c.validate_width(12).is_err(), "12 % 8 != 0");
     }
 
     #[test]

@@ -257,14 +257,15 @@ pub fn table5(cfg: &RoundingConfig) -> String {
     out
 }
 
-/// Serve-bench report: latency percentiles, throughput, and the
-/// batch-size histogram for the main run and the unbatched baseline.
-/// One request = one image's activations, so req/s is the img/s metric.
+/// Serve-bench report: latency percentiles, throughput, the batch-size
+/// histogram, and the per-model split for the main run plus the
+/// unbatched baseline.  One request = one image's activations, so req/s
+/// is the img/s metric.
 pub fn serve(
     main: &crate::serve::BenchResult,
     baseline: Option<&crate::serve::BenchResult>,
 ) -> String {
-    let mut out = hdr("Serve: dynamic micro-batching GR-KAN inference");
+    let mut out = hdr("Serve: dynamic micro-batching KAT inference");
     out.push_str(
         "run                        img/s   rows/s   mean-b     p50      p95      p99\n",
     );
@@ -297,11 +298,46 @@ pub fn serve(
         .map(|(size, n)| format!("{size}x{n}"))
         .collect();
     out.push_str(&format!(
-        "batches: {} (sizes {}), errors {}, peak queue {}\n",
+        "batches: {} (sizes {}), errors {}, failed {}, peak queue {}\n",
         main.exec.batches,
         hist.join(" "),
         main.errors,
-        main.exec.peak_queued
+        main.exec.failed,
+        main.peak_queued
+    ));
+    if main.per_model.len() > 1 {
+        out.push_str("per-model:\n");
+    }
+    for m in &main.per_model {
+        out.push_str(&format!(
+            "  {:<16} {:>4} -> {:<4}  served {:>6}  rows {:>7}  mean-b {:>5.1}  p50 {:>7.3}ms  p99 {:>7.3}ms\n",
+            m.name, m.d_in, m.d_out, m.served, m.exec.rows, m.exec.mean_batch(), m.p50_ms, m.p99_ms
+        ));
+    }
+    out
+}
+
+/// Autotune report: every swept `(max_batch, deadline_us)` grid point
+/// with its throughput and p99, and the selected policy vs the SLO.
+pub fn serve_autotune(res: &crate::serve::AutotuneResult) -> String {
+    let mut out = hdr("Serve autotune: (max_batch, deadline_us) policy sweep");
+    out.push_str("policy                 max-b  deadline    img/s      p99\n");
+    for (i, r) in res.runs.iter().enumerate() {
+        let mark = if i == res.best { " <- best" } else { "" };
+        out.push_str(&format!(
+            "{:<22} {:>5} {:>7}us {:>8.0} {:>7.3}ms{}\n",
+            r.label, r.max_batch, r.deadline_us, r.throughput_rps, r.p99_ms, mark
+        ));
+    }
+    let best = res.best();
+    out.push_str(&format!(
+        "SLO p99 <= {:.3}ms: {} — selected max-batch {} / deadline {}us ({:.0} img/s, p99 {:.3}ms)\n",
+        res.slo_p99_us as f64 / 1e3,
+        if res.met_slo { "met" } else { "NOT met (lowest-p99 fallback)" },
+        best.max_batch,
+        best.deadline_us,
+        best.throughput_rps,
+        best.p99_ms,
     ));
     out
 }
@@ -378,8 +414,17 @@ mod tests {
     }
 
     #[test]
-    fn serve_report_formats_speedup_and_histogram() {
-        use crate::serve::{BenchResult, ExecStats};
+    fn serve_report_formats_speedup_histogram_and_models() {
+        use crate::serve::{BenchResult, ExecStats, ModelBench};
+        let exec = ExecStats {
+            batches: 5,
+            requests: 10,
+            rows: 20,
+            failed: 0,
+            batch_hist: vec![0, 0, 5],
+            causes: [5, 0, 0, 0],
+            busy_secs: 0.05,
+        };
         let mk = |label: &str, rps: f64| BenchResult {
             label: label.into(),
             requests: 10,
@@ -395,20 +440,57 @@ mod tests {
             p99_ms: 3.0,
             max_ms: 4.0,
             errors: 0,
-            exec: ExecStats {
-                batches: 5,
-                requests: 10,
-                rows: 20,
-                batch_hist: vec![0, 0, 5],
-                causes: [5, 0, 0, 0],
-                busy_secs: 0.05,
-                peak_queued: 3,
-            },
+            exec: exec.clone(),
+            peak_queued: 3,
+            per_model: vec![
+                ModelBench {
+                    name: "grkan".into(),
+                    d_in: 64,
+                    d_out: 64,
+                    exec: exec.clone(),
+                    served: 10,
+                    p50_ms: 1.0,
+                    p99_ms: 3.0,
+                },
+                ModelBench {
+                    name: "kat_micro".into(),
+                    d_in: 3072,
+                    d_out: 10,
+                    exec: ExecStats::default(),
+                    served: 0,
+                    p50_ms: f64::NAN,
+                    p99_ms: f64::NAN,
+                },
+            ],
         };
         let t = serve(&mk("batched", 4000.0), Some(&mk("baseline", 1000.0)));
         assert!(t.contains("4.00x"), "{t}");
         assert!(t.contains("2x5"), "{t}");
         assert!(t.contains("batched") && t.contains("baseline"), "{t}");
+        assert!(t.contains("per-model:"), "{t}");
+        assert!(t.contains("grkan") && t.contains("kat_micro"), "{t}");
+    }
+
+    #[test]
+    fn serve_autotune_report_marks_the_selected_policy() {
+        let cfg = crate::serve::LoadConfig {
+            requests: 16,
+            concurrency: 2,
+            models: vec![crate::serve::ModelSpec::new("grkan", 64, 8)],
+            ..Default::default()
+        };
+        let res = crate::serve::loadgen::autotune(
+            &cfg,
+            crate::serve::BatchPolicy::default(),
+            5_000_000,
+            &[1, 8],
+            &[200],
+        )
+        .unwrap();
+        let t = serve_autotune(&res);
+        assert!(t.contains("<- best"), "{t}");
+        assert!(t.contains("SLO p99 <= 5000.000ms"), "{t}");
+        assert!(t.contains("mb1-dl200") && t.contains("mb8-dl200"), "{t}");
     }
 
     #[test]

@@ -7,5 +7,5 @@ pub mod module;
 pub mod values;
 
 pub use manifest::{DType, Manifest, TensorSpec};
-pub use module::{LoadedModule, Runtime};
+pub use module::{LoadedModule, ModuleExec, RowsAdapter, Runtime};
 pub use values::HostTensor;

@@ -92,6 +92,14 @@ impl LoadedModule {
 
     /// Execute with host tensors (validated against the manifest).
     pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.execute_refs(&refs)
+    }
+
+    /// [`Self::execute`] over borrowed tensors, so callers that combine a
+    /// large fixed prefix (parameter leaves) with a per-call data tensor
+    /// don't have to clone the prefix on every call.
+    pub fn execute_refs(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         for (t, spec) in inputs.iter().zip(&self.manifest.inputs) {
             t.check(spec).with_context(|| format!("input to {}", self.name))?;
         }
@@ -110,5 +118,333 @@ impl LoadedModule {
 
     pub fn output_count(&self) -> usize {
         self.manifest.outputs.len()
+    }
+}
+
+/// Anything that can execute one fixed-signature module call over host
+/// tensors.  [`LoadedModule`] is the production implementation; tests and
+/// examples provide pure-Rust modules so the layers above (the
+/// batched-rows adapter, the serving pipeline executor) are exercised
+/// without a PJRT runtime or artifacts on disk.
+pub trait ModuleExec: Send {
+    fn execute_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+impl ModuleExec for LoadedModule {
+    fn execute_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        self.execute_refs(inputs)
+    }
+}
+
+/// How a [`RowsAdapter`] invokes its module (see the adapter docs).
+enum RowsBackend {
+    /// Generic host module: the fixed tensors are re-presented on every
+    /// call (cheap — they are borrowed, not cloned).
+    Host { module: Box<dyn ModuleExec>, fixed: Vec<HostTensor> },
+    /// Loaded executable with the fixed prefix pre-serialized to
+    /// literals once at construction; per chunk only the data slot is
+    /// converted (`lits.last()` is the replace-in-place data literal).
+    /// `Arc` so several adapters (autotune grid points, baselines) can
+    /// share one compilation.
+    Bound { module: Arc<LoadedModule>, lits: Vec<xla::Literal> },
+}
+
+/// Batched-rows adapter: presents a module whose data input has a fixed
+/// leading batch dimension as a function over an arbitrary number of
+/// flattened rows.
+///
+/// The serving stack coalesces requests along the row axis; an AOT
+/// `<tag>_eval` module is compiled for one specific batch `B`.  This
+/// adapter bridges the two: it slices `rows` flattened rows into chunks
+/// of `B`, zero-pads the final partial chunk, prepends the fixed inputs
+/// (parameter leaves), executes, and concatenates the first `take` rows
+/// of each chunk's leading output.  The contract that makes this safe is
+/// the same one the whole serve subsystem rests on: the module must be
+/// **row-independent** (each output row a function of the matching input
+/// row only), which holds for per-image eval models — so chunking and
+/// padding cannot change any served row, bit for bit.
+pub struct RowsAdapter {
+    backend: RowsBackend,
+    /// Data-slot shape: `[batch, per-row dims...]`.
+    in_shape: Vec<usize>,
+    out_shape: Vec<usize>,
+    batch: usize,
+    d_in: usize,
+    d_out: usize,
+    /// Reusable chunk buffer — the serving executor thread calls
+    /// `execute_rows` once per coalesced batch, and the steady state
+    /// should not allocate.
+    scratch: Vec<f32>,
+}
+
+impl RowsAdapter {
+    /// Wrap any module given explicit data-slot shapes.  `in_shape` and
+    /// `out_shape` are `[batch, ...]` with matching batch dims.
+    pub fn from_parts(
+        module: Box<dyn ModuleExec>,
+        fixed: Vec<HostTensor>,
+        in_shape: Vec<usize>,
+        out_shape: Vec<usize>,
+    ) -> Result<Self> {
+        Self::with_backend(RowsBackend::Host { module, fixed }, in_shape, out_shape)
+    }
+
+    fn with_backend(
+        backend: RowsBackend,
+        in_shape: Vec<usize>,
+        out_shape: Vec<usize>,
+    ) -> Result<Self> {
+        if in_shape.is_empty() || out_shape.is_empty() {
+            bail!("rows adapter needs batched (rank >= 1) input and output shapes");
+        }
+        if in_shape[0] != out_shape[0] {
+            bail!(
+                "rows adapter: input batch {} != output batch {}",
+                in_shape[0],
+                out_shape[0]
+            );
+        }
+        let batch = in_shape[0];
+        let d_in: usize = in_shape[1..].iter().product();
+        let d_out: usize = out_shape[1..].iter().product();
+        if batch == 0 || d_in == 0 || d_out == 0 {
+            bail!("rows adapter: degenerate shapes in={in_shape:?} out={out_shape:?}");
+        }
+        Ok(Self { backend, in_shape, out_shape, batch, d_in, d_out, scratch: Vec::new() })
+    }
+
+    /// Wrap a loaded `<tag>_eval`-style module: every manifest input but
+    /// the last is a fixed tensor supplied up front (parameter leaves, in
+    /// manifest order), the last input is the per-row data slot, and
+    /// output 0 is the per-row result.  The fixed tensors are validated
+    /// and serialized to literals here, once — serving then pays only
+    /// the data-slot conversion per chunk, not a full parameter copy.
+    pub fn for_eval(module: LoadedModule, fixed: Vec<HostTensor>) -> Result<Self> {
+        Self::for_eval_shared(Arc::new(module), fixed)
+    }
+
+    /// [`Self::for_eval`] over a shared compilation: callers building
+    /// several adapters for the same module (an autotune sweep, a
+    /// max-batch-1 baseline) compile once and clone the `Arc`.
+    pub fn for_eval_shared(module: Arc<LoadedModule>, fixed: Vec<HostTensor>) -> Result<Self> {
+        let n_in = module.manifest.inputs.len();
+        if n_in == 0 {
+            bail!("{}: module has no inputs, nothing to feed rows into", module.name);
+        }
+        if fixed.len() + 1 != n_in {
+            bail!(
+                "{}: {} fixed inputs + 1 data slot != manifest arity {}",
+                module.name,
+                fixed.len(),
+                n_in
+            );
+        }
+        let data_spec = &module.manifest.inputs[n_in - 1];
+        let out_spec = module
+            .manifest
+            .outputs
+            .first()
+            .ok_or_else(|| anyhow!("{}: module has no outputs", module.name))?;
+        if data_spec.dtype != super::manifest::DType::F32
+            || out_spec.dtype != super::manifest::DType::F32
+        {
+            bail!(
+                "{}: rows adapter serves f32 data/output slots, got {:?} -> {:?}",
+                module.name,
+                data_spec.dtype,
+                out_spec.dtype
+            );
+        }
+        let in_shape = data_spec.shape.clone();
+        let out_shape = out_spec.shape.clone();
+        let mut lits = Vec::with_capacity(n_in);
+        for (t, spec) in fixed.iter().zip(&module.manifest.inputs[..n_in - 1]) {
+            t.check(spec).with_context(|| format!("fixed input to {}", module.name))?;
+            lits.push(t.to_literal()?);
+        }
+        // Placeholder for the data slot; replaced before every execute.
+        lits.push(xla::Literal::vec1::<f32>(&[]));
+        Self::with_backend(RowsBackend::Bound { module, lits }, in_shape, out_shape)
+    }
+
+    /// Execute one populated module-batch chunk.
+    fn run_chunk(&mut self, data: &HostTensor) -> Result<Vec<HostTensor>> {
+        match &mut self.backend {
+            RowsBackend::Host { module, fixed } => {
+                let mut inputs: Vec<&HostTensor> = fixed.iter().collect();
+                inputs.push(data);
+                module.execute_batch(&inputs)
+            }
+            RowsBackend::Bound { module, lits } => {
+                let last = lits.len() - 1;
+                lits[last] = data.to_literal()?;
+                let outs = module.execute_literals(lits)?;
+                outs.iter()
+                    .zip(&module.manifest.outputs)
+                    .map(|(l, spec)| HostTensor::from_literal(l, spec))
+                    .collect()
+            }
+        }
+    }
+
+    /// Module batch size (the chunking granularity).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Flattened per-row input width.
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    /// Flattened per-row output width.
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    /// Run `rows` flattened rows (`x.len() == rows * d_in`) through the
+    /// module in batch-sized chunks; `out` is cleared and filled with
+    /// `rows * d_out` values in row order.  `&mut self` so the chunk
+    /// buffer persists across calls: the steady-state hot path clones
+    /// the data-slot shape once per call and allocates nothing per
+    /// chunk (the buffer is moved into the input tensor and reclaimed
+    /// after each execute).
+    pub fn execute_rows(&mut self, x: &[f32], rows: usize, out: &mut Vec<f32>) -> Result<()> {
+        if x.len() != rows * self.d_in {
+            bail!(
+                "rows adapter: {} values for {} rows of d_in={}",
+                x.len(),
+                rows,
+                self.d_in
+            );
+        }
+        out.clear();
+        out.reserve(rows * self.d_out);
+        let mut chunk = std::mem::take(&mut self.scratch);
+        chunk.resize(self.batch * self.d_in, 0.0);
+        let mut shape = self.in_shape.clone();
+        let mut r = 0usize;
+        while r < rows {
+            let take = (rows - r).min(self.batch);
+            chunk[..take * self.d_in].copy_from_slice(&x[r * self.d_in..(r + take) * self.d_in]);
+            // Zero the pad rows so a partial chunk's contents are a pure
+            // function of the served rows (reproducible, and never NaN).
+            chunk[take * self.d_in..].fill(0.0);
+            let data = HostTensor::F32 { shape, data: chunk };
+            // An error drops the moved buffers; the next call simply
+            // reallocates them.
+            let outs = self.run_chunk(&data)?;
+            let HostTensor::F32 { shape: s, data: d } = data else { unreachable!() };
+            shape = s;
+            chunk = d;
+            let first = outs
+                .first()
+                .ok_or_else(|| anyhow!("rows adapter: module returned no outputs"))?;
+            let y = first.as_f32()?;
+            if y.len() != self.batch * self.d_out {
+                bail!(
+                    "rows adapter: output has {} values, expected {} ({}x{} as {:?})",
+                    y.len(),
+                    self.batch * self.d_out,
+                    self.batch,
+                    self.d_out,
+                    self.out_shape
+                );
+            }
+            out.extend_from_slice(&y[..take * self.d_out]);
+            r += take;
+        }
+        self.scratch = chunk;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pure-Rust stand-in for an eval module: one fixed weight vector
+    /// `w[d_out]`, data `[batch, d_in]`, output `y[r][j] = x[r][j % d_in]
+    /// * w[j]` — deliberately row-independent.
+    struct ToyModule {
+        batch: usize,
+        d_in: usize,
+        d_out: usize,
+    }
+
+    impl ModuleExec for ToyModule {
+        fn execute_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+            let w = inputs[0].as_f32()?;
+            let x = inputs[1].as_f32()?;
+            assert_eq!(x.len(), self.batch * self.d_in);
+            let mut y = vec![0.0f32; self.batch * self.d_out];
+            for r in 0..self.batch {
+                for j in 0..self.d_out {
+                    y[r * self.d_out + j] = x[r * self.d_in + j % self.d_in] * w[j];
+                }
+            }
+            Ok(vec![HostTensor::F32 { shape: vec![self.batch, self.d_out], data: y }])
+        }
+    }
+
+    fn adapter(batch: usize, d_in: usize, d_out: usize) -> RowsAdapter {
+        let w = HostTensor::F32 {
+            shape: vec![d_out],
+            data: (0..d_out).map(|j| 1.0 + j as f32 * 0.5).collect(),
+        };
+        RowsAdapter::from_parts(
+            Box::new(ToyModule { batch, d_in, d_out }),
+            vec![w],
+            vec![batch, d_in],
+            vec![batch, d_out],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn rows_adapter_chunks_and_pads_bit_identically() {
+        let mut a = adapter(4, 3, 5);
+        assert_eq!((a.batch(), a.d_in(), a.d_out()), (4, 3, 5));
+        // 10 rows = 2 full chunks + 1 partial (2 rows padded to 4).
+        let x: Vec<f32> = (0..10 * 3).map(|i| i as f32 * 0.25 - 3.0).collect();
+        let mut all = Vec::new();
+        a.execute_rows(&x, 10, &mut all).unwrap();
+        assert_eq!(all.len(), 10 * 5);
+        // Per-request reference: each row served alone through the same
+        // adapter must be bit-identical (row independence + zero pad).
+        for r in 0..10 {
+            let mut one = Vec::new();
+            a.execute_rows(&x[r * 3..(r + 1) * 3], 1, &mut one).unwrap();
+            assert_eq!(&all[r * 5..(r + 1) * 5], &one[..], "row {r}");
+        }
+    }
+
+    #[test]
+    fn rows_adapter_rejects_bad_shapes() {
+        let mut a = adapter(4, 3, 5);
+        let mut out = Vec::new();
+        assert!(a.execute_rows(&[0.0; 7], 2, &mut out).is_err(), "7 != 2*3");
+        assert!(RowsAdapter::from_parts(
+            Box::new(ToyModule { batch: 2, d_in: 3, d_out: 5 }),
+            vec![],
+            vec![2, 3],
+            vec![4, 5],
+        )
+        .is_err(), "batch mismatch");
+        assert!(RowsAdapter::from_parts(
+            Box::new(ToyModule { batch: 0, d_in: 3, d_out: 5 }),
+            vec![],
+            vec![0, 3],
+            vec![0, 5],
+        )
+        .is_err(), "zero batch");
+    }
+
+    #[test]
+    fn rows_adapter_zero_rows_is_empty_ok() {
+        let mut a = adapter(4, 3, 5);
+        let mut out = vec![1.0f32];
+        a.execute_rows(&[], 0, &mut out).unwrap();
+        assert!(out.is_empty());
     }
 }

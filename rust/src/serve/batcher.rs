@@ -22,11 +22,13 @@ use std::collections::BTreeMap;
 /// everything *except* the row count must match.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct ShapeKey {
-    /// Index into the server's model table.
+    /// Index into the server's executor registry.  Executors differ in
+    /// `d_in`/`d_out`, so the index alone already separates incompatible
+    /// payloads.
     pub model: u32,
-    /// Feature width (duplicates the model's `d`; keeps the key
-    /// self-describing in logs and lets one model serve several widths
-    /// later without changing this type).
+    /// Per-row input width (duplicates the executor's `d_in`; keeps the
+    /// key self-describing in logs and lets one executor serve several
+    /// widths later without changing this type).
     pub d: u32,
 }
 
@@ -156,18 +158,18 @@ impl Batcher {
     }
 
     /// Release the next due batch, if any.  Precedence (all deterministic):
-    /// full buckets in key order, then the bucket with the oldest expired
-    /// deadline, then — if `idle` and the policy is eager — the bucket
+    /// the bucket with the oldest *expired* deadline, then full buckets in
+    /// key order, then — if `idle` and the policy is eager — the bucket
     /// with the oldest request overall.
+    ///
+    /// Deadline outranks Full on purpose: under closed-loop load a hot
+    /// bucket refills to `max_batch` between every executor poll, so a
+    /// Full-first rule would let it monopolize the (single) executor and
+    /// starve a cold bucket's lone request arbitrarily far past its
+    /// deadline — the exact tail-latency bound the deadline exists to
+    /// enforce.  An expired bucket that is also full still releases (as
+    /// `Deadline`, capped at `max_batch` tickets).
     pub fn pop(&mut self, now_us: u64, idle: bool) -> Option<Batch> {
-        let full = self
-            .buckets
-            .iter()
-            .find(|(_, b)| b.len() >= self.policy.max_batch)
-            .map(|(k, _)| *k);
-        if let Some(key) = full {
-            return Some(self.release(key, FlushCause::Full));
-        }
         let oldest = self
             .buckets
             .iter()
@@ -177,6 +179,16 @@ impl Batcher {
             if now_us >= enq_us.saturating_add(self.policy.deadline_us) {
                 return Some(self.release(key, FlushCause::Deadline));
             }
+        }
+        let full = self
+            .buckets
+            .iter()
+            .find(|(_, b)| b.len() >= self.policy.max_batch)
+            .map(|(k, _)| *k);
+        if let Some(key) = full {
+            return Some(self.release(key, FlushCause::Full));
+        }
+        if let Some((_, key)) = oldest {
             if idle && self.policy.eager {
                 return Some(self.release(key, FlushCause::Idle));
             }
@@ -316,8 +328,82 @@ mod tests {
     fn degenerate_policy_is_clamped() {
         let mut b = Batcher::new(policy(0, 0, 0, true));
         assert!(b.admit(key(0, 8), 0).is_some(), "depth 0 clamps to 1");
-        let batch = b.pop(0, false).expect("max_batch 0 clamps to 1 => bucket is full");
+        // deadline_us = 0 means the ticket is expired on arrival, so the
+        // deadline-first precedence releases it immediately (max_batch 0
+        // clamps to 1, so a Full release would also be legal here).
+        let batch = b.pop(0, false).expect("deadline 0 => due immediately");
+        assert_eq!(batch.cause, FlushCause::Deadline);
         assert_eq!(batch.tickets.len(), 1);
+    }
+
+    /// A deadline-expired bucket preempts a full one: with a single pop
+    /// per executor poll (the live server's pattern), Full-first would
+    /// let a continuously-refilling hot bucket starve a cold request
+    /// indefinitely.
+    #[test]
+    fn expired_deadline_preempts_full_bucket() {
+        let mut b = Batcher::new(policy(2, 100, 64, false));
+        b.admit(key(1, 16), 0).unwrap(); // cold, due at t=100
+        b.admit(key(0, 8), 150).unwrap(); // hot bucket at max_batch
+        b.admit(key(0, 8), 150).unwrap();
+        let first = b.pop(150, false).expect("something due");
+        assert_eq!(first.key, key(1, 16), "expired cold bucket goes first");
+        assert_eq!(first.cause, FlushCause::Deadline);
+        let second = b.pop(150, false).expect("hot full bucket next");
+        assert_eq!(second.key, key(0, 8));
+        assert_eq!(second.cause, FlushCause::Full);
+    }
+
+    /// A hot key flushing continuously via Full must not starve a cold
+    /// key past its deadline: the cold request is released the first time
+    /// the executor polls at/after `enq + deadline_us`.
+    #[test]
+    fn cold_key_is_not_starved_by_a_hot_key() {
+        let mut b = Batcher::new(policy(4, 100, 256, false));
+        b.admit(key(1, 8), 0).unwrap(); // the cold request
+        let mut released_cold = None;
+        for now in 0..=120u64 {
+            // Hot key 0 stays permanently full: admit 4 every tick.
+            for _ in 0..4 {
+                b.admit(key(0, 8), now).unwrap();
+            }
+            // Busy executor (idle=false): only Full and Deadline release.
+            while let Some(batch) = b.pop(now, false) {
+                if batch.key == key(1, 8) {
+                    assert_eq!(batch.cause, FlushCause::Deadline);
+                    released_cold = Some(now);
+                }
+            }
+            if released_cold.is_some() {
+                break;
+            }
+        }
+        assert_eq!(released_cold, Some(100), "cold key must flush exactly at its deadline");
+    }
+
+    /// Interleaved admissions across several keys preserve per-bucket
+    /// FIFO: within each key, released ids appear in admission order.
+    #[test]
+    fn interleaved_multikey_admissions_keep_per_bucket_fifo() {
+        let mut b = Batcher::new(policy(3, 1_000, 256, true));
+        let mut admitted: Vec<Vec<u64>> = vec![Vec::new(); 3];
+        let mut released: Vec<Vec<u64>> = vec![Vec::new(); 3];
+        let mut rng = Pcg64::new(17);
+        for step in 0..200u64 {
+            let k = rng.below(3) as u32;
+            let t = b.admit(key(k, 8 * (k + 1)), step).unwrap();
+            admitted[k as usize].push(t.id);
+            if let Some(batch) = b.pop(step, step % 4 == 0) {
+                released[batch.key.model as usize]
+                    .extend(batch.tickets.iter().map(|t| t.id));
+            }
+        }
+        for batch in b.drain() {
+            released[batch.key.model as usize].extend(batch.tickets.iter().map(|t| t.id));
+        }
+        for k in 0..3 {
+            assert_eq!(released[k], admitted[k], "key {k} must release in admission order");
+        }
     }
 
     /// Fixed seed → identical coalescing, independent of anything but the

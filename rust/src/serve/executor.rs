@@ -1,0 +1,333 @@
+//! Model executors: the serving stack's execution abstraction.
+//!
+//! The server used to own a `Vec<Model>` of PAU coefficient tables and
+//! call `rational::forward_into` directly, which hard-wired it to one
+//! kind of workload.  [`ModelExecutor`] inverts that dependency: the
+//! server drives a registry of named executors and knows nothing about
+//! what a model *is* — only that it maps `rows x d_in` request rows to
+//! `rows x d_out` response rows.  Two implementations ship:
+//!
+//! - [`RationalExecutor`] — the original single GR-KAN layer forward,
+//!   still **bit-identical** to unbatched [`crate::rational::forward`]
+//!   (the forward is strictly elementwise per row, so coalescing cannot
+//!   change any output element's accumulation order).
+//! - [`PipelineExecutor`] — a whole AOT-compiled model (`<tag>_eval`)
+//!   behind a [`crate::runtime::RowsAdapter`], which chunks coalesced
+//!   rows into the module's fixed batch dimension.  Bit-identity here
+//!   rests on the adapter's row-independence contract (DESIGN.md §11).
+//!
+//! The executor contract (`run`): read `rows * d_in()` values from `x`,
+//! leave exactly `rows * d_out()` values in `out` (cleared first), and
+//! return `Err` — never panic — on internal failure; the server turns an
+//! `Err` into per-request submit errors and keeps serving other models.
+
+use anyhow::{Context, Result};
+
+use super::batcher::FlushCause;
+use crate::rational::{forward_into, Coeffs};
+use crate::runtime::{HostTensor, RowsAdapter, Runtime};
+
+/// One named, servable model.  `Send` because the registry moves onto
+/// the executor thread; `&mut self` so implementations can keep scratch.
+pub trait ModelExecutor: Send {
+    /// Registry name — the routing key clients submit against.
+    fn name(&self) -> &str;
+    /// Flattened per-row input width.
+    fn d_in(&self) -> usize;
+    /// Flattened per-row output width.
+    fn d_out(&self) -> usize;
+    /// Run a coalesced batch: `x` holds `rows * d_in()` values; `out` is
+    /// cleared and filled with `rows * d_out()` values in row order.
+    fn run(&mut self, x: &[f32], rows: usize, out: &mut Vec<f32>) -> Result<()>;
+}
+
+/// The GR-KAN layer forward over one grouped-PAU coefficient table.
+pub struct RationalExecutor {
+    name: String,
+    d: usize,
+    coeffs: Coeffs<f32>,
+}
+
+impl RationalExecutor {
+    /// Fails if `d` is not a positive multiple of the table's group
+    /// count (the same invariant `forward_into` asserts).
+    pub fn new(name: impl Into<String>, d: usize, coeffs: Coeffs<f32>) -> Result<Self> {
+        coeffs.validate_width(d)?;
+        Ok(Self { name: name.into(), d, coeffs })
+    }
+
+    pub fn coeffs(&self) -> &Coeffs<f32> {
+        &self.coeffs
+    }
+}
+
+impl ModelExecutor for RationalExecutor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn d_in(&self) -> usize {
+        self.d
+    }
+
+    fn d_out(&self) -> usize {
+        self.d
+    }
+
+    fn run(&mut self, x: &[f32], rows: usize, out: &mut Vec<f32>) -> Result<()> {
+        // Elementwise per row: batched == unbatched bit for bit.
+        forward_into(x, rows, self.d, &self.coeffs, out);
+        Ok(())
+    }
+}
+
+/// A full model pipeline behind the runtime's batched-rows adapter.
+pub struct PipelineExecutor {
+    name: String,
+    adapter: RowsAdapter,
+}
+
+impl PipelineExecutor {
+    pub fn new(name: impl Into<String>, adapter: RowsAdapter) -> Self {
+        Self { name: name.into(), adapter }
+    }
+
+    /// Load `<tag>_init` + `<tag>_eval` from the runtime and wrap them:
+    /// parameters come from running the init module, request rows flow
+    /// through the eval module.  The one artifact-to-executor recipe
+    /// shared by the CLI and the examples.
+    pub fn from_runtime(rt: &Runtime, tag: &str) -> Result<Self> {
+        let init = rt.load(&format!("{tag}_init"))?;
+        let params = init.execute(&[]).with_context(|| format!("running {tag}_init"))?;
+        Self::from_runtime_with_params(rt, tag, params)
+    }
+
+    /// [`Self::from_runtime`] with pre-computed parameter leaves —
+    /// callers building several executors for the same tag (the autotune
+    /// sweep, the max-batch-1 baseline) run the init module once and
+    /// clone the parameters instead of re-executing it per instance.
+    pub fn from_runtime_with_params(
+        rt: &Runtime,
+        tag: &str,
+        params: Vec<HostTensor>,
+    ) -> Result<Self> {
+        let eval = std::sync::Arc::new(rt.load(&format!("{tag}_eval"))?);
+        Self::from_module(tag, eval, params)
+    }
+
+    /// Wrap an already-compiled eval module.  `Arc` so every executor
+    /// instance in a sweep shares one compilation instead of recompiling
+    /// the identical HLO per grid point.
+    pub fn from_module(
+        tag: &str,
+        eval: std::sync::Arc<crate::runtime::LoadedModule>,
+        params: Vec<HostTensor>,
+    ) -> Result<Self> {
+        Ok(Self::new(tag, RowsAdapter::for_eval_shared(eval, params)?))
+    }
+}
+
+impl ModelExecutor for PipelineExecutor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn d_in(&self) -> usize {
+        self.adapter.d_in()
+    }
+
+    fn d_out(&self) -> usize {
+        self.adapter.d_out()
+    }
+
+    fn run(&mut self, x: &[f32], rows: usize, out: &mut Vec<f32>) -> Result<()> {
+        self.adapter.execute_rows(x, rows, out)
+    }
+}
+
+/// Executor-side counters for one model (or, merged, for the server).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ExecStats {
+    pub batches: usize,
+    pub requests: usize,
+    pub rows: usize,
+    /// Requests whose batch failed inside the executor (the submitters
+    /// received errors, not rows).
+    pub failed: usize,
+    /// `batch_hist[k]` = number of batches that coalesced `k` requests.
+    pub batch_hist: Vec<usize>,
+    /// Batches by [`FlushCause::index`].
+    pub causes: [usize; 4],
+    /// Wall time inside the executor's `run` (busy time).
+    pub busy_secs: f64,
+}
+
+impl ExecStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Record one executed batch.
+    pub fn record(&mut self, requests: usize, rows: usize, cause: FlushCause, busy_secs: f64) {
+        self.batches += 1;
+        self.requests += requests;
+        self.rows += rows;
+        self.causes[cause.index()] += 1;
+        self.busy_secs += busy_secs;
+        if self.batch_hist.len() <= requests {
+            self.batch_hist.resize(requests + 1, 0);
+        }
+        self.batch_hist[requests] += 1;
+    }
+
+    /// Fold `other` into `self` (used to form server-wide totals).
+    pub fn merge(&mut self, other: &ExecStats) {
+        self.batches += other.batches;
+        self.requests += other.requests;
+        self.rows += other.rows;
+        self.failed += other.failed;
+        self.busy_secs += other.busy_secs;
+        for (c, o) in self.causes.iter_mut().zip(&other.causes) {
+            *c += o;
+        }
+        if self.batch_hist.len() < other.batch_hist.len() {
+            self.batch_hist.resize(other.batch_hist.len(), 0);
+        }
+        for (h, o) in self.batch_hist.iter_mut().zip(&other.batch_hist) {
+            *h += o;
+        }
+    }
+}
+
+/// One registry entry's identity plus its counters.
+#[derive(Clone, Debug)]
+pub struct ModelStats {
+    pub name: String,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub stats: ExecStats,
+}
+
+/// Everything the executor thread hands back at shutdown: counters split
+/// per model (registry order) plus the queue-wide peak depth, which is a
+/// property of the shared admission queue and therefore not attributable
+/// to any single model.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub per_model: Vec<ModelStats>,
+    /// Peak admitted-but-unserved count across all buckets — must never
+    /// exceed the policy's `queue_depth` (the backpressure invariant).
+    pub peak_queued: usize,
+}
+
+impl ServeStats {
+    /// Server-wide totals: the fold of every model's counters.
+    pub fn total(&self) -> ExecStats {
+        let mut t = ExecStats::default();
+        for m in &self.per_model {
+            t.merge(&m.stats);
+        }
+        t
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelStats> {
+        self.per_model.iter().find(|m| m.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rational::forward;
+    use crate::runtime::ModuleExec;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn rational_executor_is_bit_identical_to_forward() {
+        let mut rng = Pcg64::new(21);
+        let coeffs = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+        let mut ex = RationalExecutor::new("grkan", 64, coeffs.clone()).unwrap();
+        assert_eq!((ex.d_in(), ex.d_out()), (64, 64));
+        let x: Vec<f32> = (0..5 * 64).map(|_| rng.normal_f32()).collect();
+        let mut out = Vec::new();
+        ex.run(&x, 5, &mut out).unwrap();
+        assert_eq!(out, forward(&x, 5, 64, &coeffs));
+    }
+
+    #[test]
+    fn rational_executor_rejects_bad_width() {
+        let mut rng = Pcg64::new(22);
+        let coeffs = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+        assert!(RationalExecutor::new("bad", 12, coeffs.clone()).is_err());
+        assert!(RationalExecutor::new("bad", 0, coeffs).is_err());
+    }
+
+    /// Doubler module: `y = 2x` with d_out == d_in, row-independent.
+    struct Doubler {
+        batch: usize,
+        d: usize,
+    }
+
+    impl ModuleExec for Doubler {
+        fn execute_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+            let x = inputs[0].as_f32()?;
+            let y: Vec<f32> = x.iter().map(|v| v * 2.0).collect();
+            Ok(vec![HostTensor::F32 { shape: vec![self.batch, self.d], data: y }])
+        }
+    }
+
+    #[test]
+    fn pipeline_executor_runs_rows_through_the_adapter() {
+        let adapter = RowsAdapter::from_parts(
+            Box::new(Doubler { batch: 3, d: 4 }),
+            vec![],
+            vec![3, 4],
+            vec![3, 4],
+        )
+        .unwrap();
+        let mut ex = PipelineExecutor::new("pipe", adapter);
+        assert_eq!((ex.name(), ex.d_in(), ex.d_out()), ("pipe", 4, 4));
+        // 5 rows: one full chunk of 3 + a padded chunk of 2.
+        let x: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let mut out = Vec::new();
+        ex.run(&x, 5, &mut out).unwrap();
+        let want: Vec<f32> = x.iter().map(|v| v * 2.0).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn stats_record_and_merge_sum_exactly() {
+        let mut a = ExecStats::default();
+        a.record(3, 7, FlushCause::Full, 0.25);
+        a.record(1, 2, FlushCause::Deadline, 0.5);
+        let mut b = ExecStats::default();
+        b.record(3, 5, FlushCause::Idle, 0.125);
+        b.failed += 3;
+        let mut total = ExecStats::default();
+        total.merge(&a);
+        total.merge(&b);
+        assert_eq!(total.batches, 3);
+        assert_eq!(total.requests, 7);
+        assert_eq!(total.rows, 14);
+        assert_eq!(total.failed, 3);
+        assert_eq!(total.busy_secs, 0.875);
+        assert_eq!(total.causes, [1, 1, 1, 0]);
+        assert_eq!(total.batch_hist, vec![0, 1, 0, 2]);
+        assert!((total.mean_batch() - 7.0 / 3.0).abs() < 1e-12);
+
+        let serve = ServeStats {
+            per_model: vec![
+                ModelStats { name: "a".into(), d_in: 8, d_out: 8, stats: a.clone() },
+                ModelStats { name: "b".into(), d_in: 4, d_out: 2, stats: b },
+            ],
+            peak_queued: 5,
+        };
+        assert_eq!(serve.total(), total);
+        assert_eq!(serve.model("a").unwrap().stats, a);
+        assert!(serve.model("nope").is_none());
+    }
+}

@@ -1,19 +1,26 @@
 //! Deterministic load generator + latency/throughput report.
 //!
-//! Every random choice — request row counts, input values, open-loop
-//! arrival offsets — derives from `util::rng::Pcg64` streams keyed by
-//! the request id, so the workload is byte-identical across runs and
-//! across submitter-thread interleavings; only the *timing* varies with
-//! the machine.  The report side reuses `util::stats`: interpolated
-//! p50/p95/p99 latency, requests ("images") per second, and the
-//! executor's batch-size histogram.
+//! Every random choice — request row counts, input values, model
+//! routing, open-loop arrival offsets — derives from `util::rng::Pcg64`
+//! streams keyed by the request id, so the workload is byte-identical
+//! across runs and across submitter-thread interleavings; only the
+//! *timing* varies with the machine.  Workloads target a registry of
+//! named models (round-robin across `LoadConfig::models`), so one run
+//! exercises the server's multi-model routing path.  The report side
+//! reuses `util::stats`: interpolated p50/p95/p99 latency, requests
+//! ("images") per second, and per-model executor counters.
+//!
+//! [`autotune`] layers a policy search on top: sweep a small
+//! `(max_batch, deadline_us)` grid, keep every run's record, and pick
+//! the throughput-optimal policy whose p99 meets the SLO.
 
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::batcher::{BatchPolicy, FlushCause};
-use super::server::{ExecStats, Model, Server};
+use super::executor::{ExecStats, ModelExecutor, RationalExecutor};
+use super::server::Server;
 use crate::rational::Coeffs;
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
@@ -31,6 +38,20 @@ pub enum Arrival {
     Open { rate_rps: f64 },
 }
 
+/// One rational model to register and drive traffic at.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub d: usize,
+    pub n_groups: usize,
+}
+
+impl ModelSpec {
+    pub fn new(name: impl Into<String>, d: usize, n_groups: usize) -> Self {
+        Self { name: name.into(), d, n_groups }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct LoadConfig {
     pub requests: usize,
@@ -38,10 +59,10 @@ pub struct LoadConfig {
     /// Rows per request are drawn uniformly from `rows_min..=rows_max`.
     pub rows_min: u32,
     pub rows_max: u32,
-    pub d: usize,
-    pub n_groups: usize,
     pub seed: u64,
     pub arrival: Arrival,
+    /// Registry to serve; request `id` targets model `id % models.len()`.
+    pub models: Vec<ModelSpec>,
 }
 
 impl Default for LoadConfig {
@@ -51,22 +72,51 @@ impl Default for LoadConfig {
             concurrency: 16,
             rows_min: 1,
             rows_max: 4,
-            d: 256,
-            n_groups: 8,
             seed: 7,
             arrival: Arrival::Closed,
+            models: vec![ModelSpec::new("grkan", 256, 8)],
         }
     }
 }
 
-/// Row count and input payload for request `id` — a pure function of
-/// `(seed, id)`, independent of which thread materializes it.
-pub fn request(cfg: &LoadConfig, id: u64) -> (u32, Vec<f32>) {
+/// Registry index targeted by request `id` (round-robin over the specs).
+/// Panics with a clear message on an empty registry — `run`/`run_with`
+/// reject that configuration up front.
+pub fn model_for(cfg: &LoadConfig, id: u64) -> usize {
+    assert!(!cfg.models.is_empty(), "load config has no model specs");
+    (id % cfg.models.len() as u64) as usize
+}
+
+/// Target model, row count, and input payload for request `id` — a pure
+/// function of `(seed, id)`, independent of which thread materializes it.
+pub fn request(cfg: &LoadConfig, id: u64) -> (usize, u32, Vec<f32>) {
+    let m = model_for(cfg, id);
+    let d = cfg.models[m].d;
     let mut rng = Pcg64::with_stream(cfg.seed, id);
     let span = cfg.rows_max.max(cfg.rows_min) - cfg.rows_min;
     let rows = cfg.rows_min + rng.below(span as usize + 1) as u32;
-    let x = (0..rows as usize * cfg.d).map(|_| rng.normal_f32()).collect();
-    (rows, x)
+    let x = (0..rows as usize * d).map(|_| rng.normal_f32()).collect();
+    (m, rows, x)
+}
+
+/// Build the registry described by `cfg.models`: one seeded
+/// [`RationalExecutor`] per spec (coefficients from per-spec streams of
+/// `cfg.seed`, so each model's table is distinct but reproducible).
+pub fn executors(cfg: &LoadConfig) -> Result<Vec<Box<dyn ModelExecutor>>> {
+    cfg.models
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            if spec.n_groups == 0 {
+                bail!("model {:?}: n_groups must be positive", spec.name);
+            }
+            let mut rng = Pcg64::with_stream(cfg.seed, 0xc0ef_f000 + i as u64);
+            let coeffs = Coeffs::<f32>::randn(spec.n_groups, 6, 4, &mut rng);
+            let ex = RationalExecutor::new(spec.name.as_str(), spec.d, coeffs)
+                .with_context(|| format!("model {:?}", spec.name))?;
+            Ok(Box::new(ex) as Box<dyn ModelExecutor>)
+        })
+        .collect()
 }
 
 /// Cumulative Poisson arrival offsets (µs) for the open-loop schedule.
@@ -81,6 +131,20 @@ pub fn open_schedule(requests: usize, rate_rps: f64, seed: u64) -> Vec<u64> {
         out.push((t * 1e6) as u64);
     }
     out
+}
+
+/// Per-model slice of a bench run: the executor's counters plus the
+/// client-side latency view for the requests routed to this model.
+#[derive(Clone, Debug)]
+pub struct ModelBench {
+    pub name: String,
+    pub d_in: usize,
+    pub d_out: usize,
+    pub exec: ExecStats,
+    /// Successfully served requests (client side).
+    pub served: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
 }
 
 /// Outcome of one load run against one server policy.
@@ -101,18 +165,50 @@ pub struct BenchResult {
     pub p99_ms: f64,
     pub max_ms: f64,
     pub errors: usize,
+    /// Server-wide executor totals.
     pub exec: ExecStats,
+    pub peak_queued: usize,
+    /// Registry-order split of the totals.
+    pub per_model: Vec<ModelBench>,
+}
+
+fn exec_json(exec: &ExecStats) -> Vec<(String, Json)> {
+    let hist: Vec<Json> = exec.batch_hist.iter().map(|&n| Json::Int(n as i64)).collect();
+    let causes: Vec<(String, Json)> = FlushCause::ALL
+        .iter()
+        .map(|c| (c.label().to_string(), Json::Int(exec.causes[c.index()] as i64)))
+        .collect();
+    vec![
+        ("batches".to_string(), Json::Int(exec.batches as i64)),
+        ("exec_requests".to_string(), Json::Int(exec.requests as i64)),
+        ("rows".to_string(), Json::Int(exec.rows as i64)),
+        ("failed".to_string(), Json::Int(exec.failed as i64)),
+        ("mean_batch".to_string(), Json::Num(exec.mean_batch())),
+        ("exec_busy_secs".to_string(), Json::Num(exec.busy_secs)),
+        ("batch_hist".to_string(), Json::Arr(hist)),
+        ("flush_causes".to_string(), Json::Obj(causes)),
+    ]
 }
 
 impl BenchResult {
     pub fn to_json(&self) -> Json {
-        let hist: Vec<Json> =
-            self.exec.batch_hist.iter().map(|&n| Json::Int(n as i64)).collect();
-        let causes: Vec<(String, Json)> = FlushCause::ALL
+        let models: Vec<Json> = self
+            .per_model
             .iter()
-            .map(|c| (c.label().to_string(), Json::Int(self.exec.causes[c.index()] as i64)))
+            .map(|m| {
+                let mut fields = vec![
+                    ("name".to_string(), Json::Str(m.name.clone())),
+                    ("d_in".to_string(), Json::Int(m.d_in as i64)),
+                    ("d_out".to_string(), Json::Int(m.d_out as i64)),
+                    ("served".to_string(), Json::Int(m.served as i64)),
+                    ("p50_ms".to_string(), Json::Num(m.p50_ms)),
+                    ("p99_ms".to_string(), Json::Num(m.p99_ms)),
+                ];
+                fields.extend(exec_json(&m.exec));
+                Json::Obj(fields)
+            })
             .collect();
-        Json::Obj(vec![
+        let mut fields = vec![
             ("label".to_string(), Json::Str(self.label.clone())),
             ("requests".to_string(), Json::Int(self.requests as i64)),
             ("concurrency".to_string(), Json::Int(self.concurrency as i64)),
@@ -127,44 +223,62 @@ impl BenchResult {
             ("p99_ms".to_string(), Json::Num(self.p99_ms)),
             ("max_ms".to_string(), Json::Num(self.max_ms)),
             ("errors".to_string(), Json::Int(self.errors as i64)),
-            ("batches".to_string(), Json::Int(self.exec.batches as i64)),
-            ("mean_batch".to_string(), Json::Num(self.exec.mean_batch())),
-            ("exec_busy_secs".to_string(), Json::Num(self.exec.busy_secs)),
-            ("peak_queued".to_string(), Json::Int(self.exec.peak_queued as i64)),
-            ("batch_hist".to_string(), Json::Arr(hist)),
-            ("flush_causes".to_string(), Json::Obj(causes)),
-        ])
+            ("peak_queued".to_string(), Json::Int(self.peak_queued as i64)),
+        ];
+        fields.extend(exec_json(&self.exec));
+        fields.push(("models".to_string(), Json::Arr(models)));
+        Json::Obj(fields)
     }
 }
 
-/// Run the workload against a fresh server configured with `policy`.
+/// Run the workload against a fresh server built from `cfg.models`.
 pub fn run(cfg: &LoadConfig, policy: BatchPolicy, label: &str) -> Result<BenchResult> {
+    run_with(cfg, executors(cfg)?, policy, label)
+}
+
+/// Run the workload against caller-provided executors (e.g. a
+/// [`super::PipelineExecutor`] over an AOT artifact).  `cfg.models` must
+/// describe the registry in order: names and widths are cross-checked so
+/// generated payloads always fit the executor they are routed to.
+pub fn run_with(
+    cfg: &LoadConfig,
+    executors: Vec<Box<dyn ModelExecutor>>,
+    policy: BatchPolicy,
+    label: &str,
+) -> Result<BenchResult> {
     if cfg.requests == 0 || cfg.concurrency == 0 {
         bail!("load config needs at least one request and one client");
     }
-    if cfg.d == 0 || cfg.d % cfg.n_groups != 0 {
-        bail!("d={} must be a positive multiple of n_groups={}", cfg.d, cfg.n_groups);
+    if cfg.models.is_empty() {
+        bail!("load config needs at least one model spec");
     }
-    let mut rng = Pcg64::new(cfg.seed);
-    let coeffs = Coeffs::<f32>::randn(cfg.n_groups, 6, 4, &mut rng);
-    let server = Server::start(
-        vec![Model { name: "grkan".into(), d: cfg.d, coeffs }],
-        policy,
-    );
+    if executors.len() != cfg.models.len() {
+        bail!("{} executors for {} model specs", executors.len(), cfg.models.len());
+    }
+    for (spec, ex) in cfg.models.iter().zip(&executors) {
+        if spec.name != ex.name() {
+            bail!("spec {:?} does not match executor {:?}", spec.name, ex.name());
+        }
+        if spec.d != ex.d_in() {
+            bail!("model {:?}: spec d={} but executor d_in={}", spec.name, spec.d, ex.d_in());
+        }
+    }
+    let server = Server::start(executors, policy)?;
 
     let offsets = match cfg.arrival {
         Arrival::Open { rate_rps } => Some(open_schedule(cfg.requests, rate_rps, cfg.seed)),
         Arrival::Closed => None,
     };
 
+    let n_models = cfg.models.len();
     let t0 = Instant::now();
-    let per_client: Vec<(Vec<f64>, usize)> = std::thread::scope(|s| {
+    let per_client: Vec<(Vec<Vec<f64>>, usize)> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..cfg.concurrency)
             .map(|client| {
                 let server = &server;
                 let offsets = offsets.as_deref();
                 s.spawn(move || {
-                    let mut lats = Vec::new();
+                    let mut lats: Vec<Vec<f64>> = vec![Vec::new(); n_models];
                     let mut errors = 0usize;
                     let mut id = client;
                     while id < cfg.requests {
@@ -175,10 +289,10 @@ pub fn run(cfg: &LoadConfig, policy: BatchPolicy, label: &str) -> Result<BenchRe
                                 std::thread::sleep(due - since);
                             }
                         }
-                        let (rows, x) = request(cfg, id as u64);
+                        let (model, rows, x) = request(cfg, id as u64);
                         let ts = Instant::now();
-                        match server.submit(0, x, rows) {
-                            Ok(_) => lats.push(ts.elapsed().as_secs_f64()),
+                        match server.submit_at(model as u32, x, rows) {
+                            Ok(_) => lats[model].push(ts.elapsed().as_secs_f64()),
                             Err(_) => errors += 1,
                         }
                         id += cfg.concurrency;
@@ -190,17 +304,41 @@ pub fn run(cfg: &LoadConfig, policy: BatchPolicy, label: &str) -> Result<BenchRe
         handles.into_iter().map(|h| h.join().expect("client thread")).collect()
     });
     let wall_secs = t0.elapsed().as_secs_f64().max(1e-9);
-    let exec = server.shutdown().expect("first shutdown");
+    let stats = server.shutdown().expect("first shutdown");
+    let exec = stats.total();
 
-    let mut lats: Vec<f64> = per_client.iter().flat_map(|(l, _)| l.iter().copied()).collect();
-    let errors: usize = per_client.iter().map(|(_, e)| *e).sum();
-    lats.sort_by(|a, b| a.total_cmp(b));
-    let served = lats.len();
-    let mean_ms = if served == 0 {
-        f64::NAN
-    } else {
-        lats.iter().sum::<f64>() / served as f64 * 1e3
-    };
+    let mut per_model_lats: Vec<Vec<f64>> = vec![Vec::new(); n_models];
+    let mut errors = 0usize;
+    for (lats, errs) in &per_client {
+        errors += errs;
+        for (m, l) in lats.iter().enumerate() {
+            per_model_lats[m].extend_from_slice(l);
+        }
+    }
+    let mut all: Vec<f64> = per_model_lats.iter().flatten().copied().collect();
+    all.sort_by(|a, b| a.total_cmp(b));
+    let served = all.len();
+    let mean_ms =
+        if served == 0 { f64::NAN } else { all.iter().sum::<f64>() / served as f64 * 1e3 };
+
+    let per_model: Vec<ModelBench> = stats
+        .per_model
+        .iter()
+        .zip(per_model_lats.iter_mut())
+        .map(|(m, lats)| {
+            lats.sort_by(|a, b| a.total_cmp(b));
+            ModelBench {
+                name: m.name.clone(),
+                d_in: m.d_in,
+                d_out: m.d_out,
+                exec: m.stats.clone(),
+                served: lats.len(),
+                p50_ms: percentile(lats, 50.0) * 1e3,
+                p99_ms: percentile(lats, 99.0) * 1e3,
+            }
+        })
+        .collect();
+
     Ok(BenchResult {
         label: label.to_string(),
         requests: cfg.requests,
@@ -211,13 +349,47 @@ pub fn run(cfg: &LoadConfig, policy: BatchPolicy, label: &str) -> Result<BenchRe
         throughput_rps: served as f64 / wall_secs,
         rows_per_sec: exec.rows as f64 / wall_secs,
         mean_ms,
-        p50_ms: percentile(&lats, 50.0) * 1e3,
-        p95_ms: percentile(&lats, 95.0) * 1e3,
-        p99_ms: percentile(&lats, 99.0) * 1e3,
-        max_ms: lats.last().copied().unwrap_or(f64::NAN) * 1e3,
+        p50_ms: percentile(&all, 50.0) * 1e3,
+        p95_ms: percentile(&all, 95.0) * 1e3,
+        p99_ms: percentile(&all, 99.0) * 1e3,
+        max_ms: all.last().copied().unwrap_or(f64::NAN) * 1e3,
         errors,
         exec,
+        peak_queued: stats.peak_queued,
+        per_model,
     })
+}
+
+fn config_json(cfg: &LoadConfig) -> Json {
+    let models: Vec<Json> = cfg
+        .models
+        .iter()
+        .map(|m| {
+            Json::Obj(vec![
+                ("name".to_string(), Json::Str(m.name.clone())),
+                ("d".to_string(), Json::Int(m.d as i64)),
+                ("n_groups".to_string(), Json::Int(m.n_groups as i64)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("requests".to_string(), Json::Int(cfg.requests as i64)),
+        ("concurrency".to_string(), Json::Int(cfg.concurrency as i64)),
+        ("rows_min".to_string(), Json::Int(cfg.rows_min as i64)),
+        ("rows_max".to_string(), Json::Int(cfg.rows_max as i64)),
+        ("seed".to_string(), Json::Int(cfg.seed as i64)),
+        (
+            "arrival".to_string(),
+            match cfg.arrival {
+                Arrival::Closed => Json::Str("closed".to_string()),
+                Arrival::Open { rate_rps } => {
+                    Json::Obj(vec![("open_rate_rps".to_string(), Json::Num(rate_rps))])
+                }
+            },
+        ),
+        ("models".to_string(), Json::Arr(models)),
+        ("threads".to_string(), Json::Int(crate::util::parallel::default_threads() as i64)),
+    ])
 }
 
 /// Assemble the `BENCH_serve.json` artifact from the main run and the
@@ -225,29 +397,7 @@ pub fn run(cfg: &LoadConfig, policy: BatchPolicy, label: &str) -> Result<BenchRe
 pub fn bench_json(cfg: &LoadConfig, main: &BenchResult, baseline: Option<&BenchResult>) -> Json {
     let mut top = vec![
         ("bench".to_string(), Json::Str("serve".to_string())),
-        (
-            "config".to_string(),
-            Json::Obj(vec![
-                ("requests".to_string(), Json::Int(cfg.requests as i64)),
-                ("concurrency".to_string(), Json::Int(cfg.concurrency as i64)),
-                ("rows_min".to_string(), Json::Int(cfg.rows_min as i64)),
-                ("rows_max".to_string(), Json::Int(cfg.rows_max as i64)),
-                ("d".to_string(), Json::Int(cfg.d as i64)),
-                ("n_groups".to_string(), Json::Int(cfg.n_groups as i64)),
-                ("seed".to_string(), Json::Int(cfg.seed as i64)),
-                (
-                    "arrival".to_string(),
-                    match cfg.arrival {
-                        Arrival::Closed => Json::Str("closed".to_string()),
-                        Arrival::Open { rate_rps } => Json::Obj(vec![(
-                            "open_rate_rps".to_string(),
-                            Json::Num(rate_rps),
-                        )]),
-                    },
-                ),
-                ("threads".to_string(), Json::Int(crate::util::parallel::default_threads() as i64)),
-            ]),
-        ),
+        ("config".to_string(), config_json(cfg)),
     ];
     let mut results = vec![main.to_json()];
     if let Some(base) = baseline {
@@ -261,20 +411,144 @@ pub fn bench_json(cfg: &LoadConfig, main: &BenchResult, baseline: Option<&BenchR
     Json::Obj(top)
 }
 
+/// Default autotune sweep grid (12 runs).
+pub const AUTOTUNE_MAX_BATCH: [usize; 4] = [1, 8, 16, 64];
+pub const AUTOTUNE_DEADLINE_US: [u64; 3] = [50, 200, 1000];
+
+/// Outcome of an autotune sweep: every run's record plus the selected
+/// policy (`runs[best]`).
+#[derive(Clone, Debug)]
+pub struct AutotuneResult {
+    pub slo_p99_us: u64,
+    pub runs: Vec<BenchResult>,
+    /// Index into `runs` of the selected policy.
+    pub best: usize,
+    /// Whether the selected policy actually meets the SLO; `false` means
+    /// no grid point did and `best` is the lowest-p99 fallback.
+    pub met_slo: bool,
+}
+
+impl AutotuneResult {
+    pub fn best(&self) -> &BenchResult {
+        &self.runs[self.best]
+    }
+}
+
+/// Sweep `(max_batch, deadline_us)` with a fresh registry per run (from
+/// `build`) and pick the throughput-optimal policy whose p99 latency
+/// meets `slo_p99_us`; fall back to the lowest-p99 point when none does.
+pub fn autotune_with(
+    cfg: &LoadConfig,
+    base: BatchPolicy,
+    slo_p99_us: u64,
+    max_batches: &[usize],
+    deadlines_us: &[u64],
+    mut build: impl FnMut() -> Result<Vec<Box<dyn ModelExecutor>>>,
+) -> Result<AutotuneResult> {
+    if max_batches.is_empty() || deadlines_us.is_empty() {
+        bail!("autotune needs a non-empty (max_batch, deadline_us) grid");
+    }
+    let mut runs = Vec::with_capacity(max_batches.len() * deadlines_us.len());
+    for &mb in max_batches {
+        for &dl in deadlines_us {
+            let policy = BatchPolicy { max_batch: mb, deadline_us: dl, ..base };
+            runs.push(run_with(cfg, build()?, policy, &format!("mb{mb}-dl{dl}"))?);
+        }
+    }
+    let slo_ms = slo_p99_us as f64 / 1e3;
+    let meets = |r: &BenchResult| r.errors == 0 && r.p99_ms.is_finite() && r.p99_ms <= slo_ms;
+    let best_meeting = runs
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| meets(r))
+        .max_by(|(_, a), (_, b)| a.throughput_rps.total_cmp(&b.throughput_rps))
+        .map(|(i, _)| i);
+    let (best, met_slo) = match best_meeting {
+        Some(i) => (i, true),
+        None => {
+            let i = runs
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| a.p99_ms.total_cmp(&b.p99_ms))
+                .map(|(i, _)| i)
+                .expect("non-empty grid");
+            (i, false)
+        }
+    };
+    Ok(AutotuneResult { slo_p99_us, runs, best, met_slo })
+}
+
+/// [`autotune_with`] over the registry described by `cfg.models`.
+pub fn autotune(
+    cfg: &LoadConfig,
+    base: BatchPolicy,
+    slo_p99_us: u64,
+    max_batches: &[usize],
+    deadlines_us: &[u64],
+) -> Result<AutotuneResult> {
+    autotune_with(cfg, base, slo_p99_us, max_batches, deadlines_us, || executors(cfg))
+}
+
+/// `BENCH_serve.json`-shaped artifact for an autotune sweep: the same
+/// top-level record layout, with every grid point in `results` and the
+/// selected policy summarized under `autotune`.
+pub fn autotune_json(cfg: &LoadConfig, res: &AutotuneResult) -> Json {
+    let best = res.best();
+    Json::Obj(vec![
+        ("bench".to_string(), Json::Str("serve".to_string())),
+        ("config".to_string(), config_json(cfg)),
+        (
+            "autotune".to_string(),
+            Json::Obj(vec![
+                ("slo_p99_us".to_string(), Json::Int(res.slo_p99_us as i64)),
+                ("met_slo".to_string(), Json::Bool(res.met_slo)),
+                ("best_label".to_string(), Json::Str(best.label.clone())),
+                ("best_max_batch".to_string(), Json::Int(best.max_batch as i64)),
+                ("best_deadline_us".to_string(), Json::Int(best.deadline_us as i64)),
+                ("best_throughput_rps".to_string(), Json::Num(best.throughput_rps)),
+                ("best_p99_ms".to_string(), Json::Num(best.p99_ms)),
+            ]),
+        ),
+        ("results".to_string(), Json::Arr(res.runs.iter().map(|r| r.to_json()).collect())),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn small_cfg(requests: usize, concurrency: usize, d: usize) -> LoadConfig {
+        LoadConfig {
+            requests,
+            concurrency,
+            models: vec![ModelSpec::new("grkan", d, 8)],
+            ..Default::default()
+        }
+    }
+
     #[test]
     fn request_payloads_are_deterministic_per_id() {
         let cfg = LoadConfig::default();
-        let (r1, x1) = request(&cfg, 42);
-        let (r2, x2) = request(&cfg, 42);
-        assert_eq!(r1, r2);
+        let (m1, r1, x1) = request(&cfg, 42);
+        let (m2, r2, x2) = request(&cfg, 42);
+        assert_eq!((m1, r1), (m2, r2));
         assert_eq!(x1, x2);
         assert!((cfg.rows_min..=cfg.rows_max).contains(&r1));
-        let (_, other) = request(&cfg, 43);
+        let (_, _, other) = request(&cfg, 43);
         assert_ne!(x1, other);
+    }
+
+    #[test]
+    fn requests_round_robin_across_models() {
+        let cfg = LoadConfig {
+            models: vec![ModelSpec::new("a", 64, 8), ModelSpec::new("b", 32, 8)],
+            ..Default::default()
+        };
+        for id in 0..6u64 {
+            let (m, _, x) = request(&cfg, id);
+            assert_eq!(m, (id % 2) as usize);
+            assert_eq!(x.len() % cfg.models[m].d, 0, "payload width follows the routed model");
+        }
     }
 
     #[test]
@@ -291,12 +565,7 @@ mod tests {
 
     #[test]
     fn closed_loop_smoke_run_serves_everything() {
-        let cfg = LoadConfig {
-            requests: 40,
-            concurrency: 4,
-            d: 64,
-            ..Default::default()
-        };
+        let cfg = small_cfg(40, 4, 64);
         let res = run(&cfg, BatchPolicy { max_batch: 8, ..Default::default() }, "smoke").unwrap();
         assert_eq!(res.errors, 0);
         assert_eq!(res.exec.requests, 40);
@@ -305,17 +574,58 @@ mod tests {
         let hist_total: usize =
             res.exec.batch_hist.iter().enumerate().map(|(size, n)| size * n).sum();
         assert_eq!(hist_total, 40);
+        assert_eq!(res.per_model.len(), 1);
+        assert_eq!(res.per_model[0].served, 40);
+    }
+
+    #[test]
+    fn multi_model_run_splits_stats_by_model() {
+        let cfg = LoadConfig {
+            requests: 60,
+            concurrency: 4,
+            models: vec![ModelSpec::new("wide", 64, 8), ModelSpec::new("narrow", 16, 4)],
+            ..Default::default()
+        };
+        let res = run(&cfg, BatchPolicy { max_batch: 8, ..Default::default() }, "multi").unwrap();
+        assert_eq!(res.errors, 0);
+        assert_eq!(res.per_model.len(), 2);
+        let served: usize = res.per_model.iter().map(|m| m.served).sum();
+        assert_eq!(served, 60);
+        assert_eq!(res.per_model[0].served, 30, "round-robin split");
+        let req_sum: usize = res.per_model.iter().map(|m| m.exec.requests).sum();
+        let row_sum: usize = res.per_model.iter().map(|m| m.exec.rows).sum();
+        assert_eq!(req_sum, res.exec.requests);
+        assert_eq!(row_sum, res.exec.rows);
     }
 
     #[test]
     fn run_rejects_bad_dims() {
-        let cfg = LoadConfig { d: 100, n_groups: 8, ..Default::default() };
+        let cfg = small_cfg(10, 2, 100); // 100 % 8 != 0
         assert!(run(&cfg, BatchPolicy::default(), "bad").is_err());
+        let empty = LoadConfig { models: vec![], ..Default::default() };
+        assert!(run(&empty, BatchPolicy::default(), "empty").is_err());
     }
 
     #[test]
-    fn bench_json_carries_speedup_field() {
-        let cfg = LoadConfig { requests: 20, concurrency: 2, d: 64, ..Default::default() };
+    fn run_with_cross_checks_specs_against_executors() {
+        let cfg = small_cfg(10, 2, 64);
+        let mismatched = LoadConfig {
+            models: vec![ModelSpec::new("other", 64, 8)],
+            ..cfg.clone()
+        };
+        let ex = executors(&cfg).unwrap();
+        assert!(run_with(&mismatched, ex, BatchPolicy::default(), "x").is_err(), "name mismatch");
+        let wrong_d = LoadConfig {
+            models: vec![ModelSpec::new("grkan", 32, 8)],
+            ..cfg.clone()
+        };
+        let ex = executors(&cfg).unwrap();
+        assert!(run_with(&wrong_d, ex, BatchPolicy::default(), "x").is_err(), "width mismatch");
+    }
+
+    #[test]
+    fn bench_json_carries_speedup_and_models() {
+        let cfg = small_cfg(20, 2, 64);
         let a = run(&cfg, BatchPolicy { max_batch: 8, ..Default::default() }, "a").unwrap();
         let b = run(&cfg, BatchPolicy { max_batch: 1, ..Default::default() }, "b").unwrap();
         let j = bench_json(&cfg, &a, Some(&b));
@@ -324,5 +634,41 @@ mod tests {
         // Round-trips through the parser (artifact is valid JSON).
         let back = Json::parse(&j.to_string()).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str(), Some("serve"));
+        let models = back.get("results").unwrap().as_arr().unwrap()[0]
+            .get("models")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(models[0].get("name").unwrap().as_str(), Some("grkan"));
+    }
+
+    #[test]
+    fn autotune_picks_a_policy_and_serializes() {
+        let cfg = small_cfg(24, 4, 64);
+        // Tiny grid to keep the test quick; generous SLO so the sweep
+        // normally meets it (scheduling noise can't fail the test either
+        // way — the fallback path is also a valid outcome).
+        let res = autotune(&cfg, BatchPolicy::default(), 5_000_000, &[1, 8], &[200]).unwrap();
+        assert_eq!(res.runs.len(), 2);
+        assert!(res.best < res.runs.len());
+        if res.met_slo {
+            let best_thp = res.best().throughput_rps;
+            assert!(res
+                .runs
+                .iter()
+                .filter(|r| r.errors == 0 && r.p99_ms <= 5_000.0)
+                .all(|r| r.throughput_rps <= best_thp));
+        }
+        let j = autotune_json(&cfg, &res);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("autotune").unwrap().get("slo_p99_us").unwrap().as_usize(), Some(5_000_000));
+        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn autotune_rejects_empty_grid() {
+        let cfg = small_cfg(10, 2, 64);
+        assert!(autotune(&cfg, BatchPolicy::default(), 1000, &[], &[200]).is_err());
     }
 }

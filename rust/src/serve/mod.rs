@@ -1,28 +1,38 @@
-//! Dynamic micro-batching inference engine for the GR-KAN forward pass.
+//! Dynamic micro-batching inference engine over named model executors.
 //!
 //! FlashKAT's kernel-level lesson is that amortizing slow-memory traffic
 //! across a tile is what unlocks throughput; this subsystem applies the
 //! same principle one level up.  Individually served inference requests
-//! pay the worker-pool wakeup, the queue round-trip, and the coefficient
+//! pay the worker-pool wakeup, the queue round-trip, and the model-state
 //! traffic per *request*; coalescing concurrent requests into one
-//! batched [`crate::rational::forward`] pays them per *batch*, while a
-//! deadline keeps tail latency bounded.  Three layers (DESIGN.md §10):
+//! executor call pays them per *batch*, while a deadline keeps tail
+//! latency bounded.  Four layers (DESIGN.md §§10-11):
 //!
-//! - [`batcher`] — the deterministic coalescing core: shape-keyed
-//!   buckets, flush on max-batch / deadline / idle-executor, admission
-//!   backpressure.  Pure (no threads, no wall clock), so coalescing is
-//!   reproducible under a virtual clock.
-//! - [`server`] — the threaded engine: blocking `submit`, one executor
-//!   thread driving batches through the persistent worker pool, drain on
-//!   shutdown.  Batched outputs are bit-identical to unbatched forwards.
-//! - [`loadgen`] — seeded closed-/open-loop workload generation and the
-//!   latency/throughput report behind `flashkat serve-bench` and the
-//!   `BENCH_serve.json` artifact.
+//! - [`batcher`] — the deterministic coalescing core: buckets keyed by
+//!   registry index, flush on max-batch / deadline / idle-executor,
+//!   admission backpressure.  Pure (no threads, no wall clock), so
+//!   coalescing is reproducible under a virtual clock.
+//! - [`executor`] — the execution abstraction: [`ModelExecutor`] maps
+//!   `rows x d_in` to `rows x d_out`; [`RationalExecutor`] serves one
+//!   GR-KAN layer (bit-identical to unbatched `rational::forward`),
+//!   [`PipelineExecutor`] serves a whole AOT `<tag>_eval` model through
+//!   the runtime's batched-rows adapter.
+//! - [`server`] — the threaded engine: blocking `submit` routed by model
+//!   name, one executor thread driving batches through the registry,
+//!   drain on shutdown, per-model [`ExecStats`].
+//! - [`loadgen`] — seeded multi-model workload generation, the
+//!   latency/throughput report behind `flashkat serve-bench`, and the
+//!   `(max_batch, deadline_us)` autotune sweep; both persist to the
+//!   `BENCH_serve.json` record shape.
 
 pub mod batcher;
+pub mod executor;
 pub mod loadgen;
 pub mod server;
 
 pub use batcher::{Batch, BatchPolicy, Batcher, FlushCause, ShapeKey, Ticket};
-pub use loadgen::{Arrival, BenchResult, LoadConfig};
-pub use server::{ExecStats, Model, Response, Server};
+pub use executor::{
+    ExecStats, ModelExecutor, ModelStats, PipelineExecutor, RationalExecutor, ServeStats,
+};
+pub use loadgen::{Arrival, AutotuneResult, BenchResult, LoadConfig, ModelBench, ModelSpec};
+pub use server::{ModelMeta, Response, Server};

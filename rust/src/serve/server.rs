@@ -1,19 +1,24 @@
-//! Threaded micro-batching inference server for the GR-KAN forward pass.
+//! Threaded micro-batching inference server over a registry of named
+//! model executors.
 //!
-//! One executor thread owns the [`Batcher`]: it coalesces admitted
-//! requests into shape-keyed batches, concatenates their rows into a
-//! single buffer, and runs one [`crate::rational::forward`] per batch on
-//! the persistent worker pool (`util::parallel`), so the pool wakeup,
-//! the queue round-trip, and the coefficient traffic are paid once per
-//! batch instead of once per request.  Because the forward is strictly
-//! elementwise per row, a coalesced batch is **bit-identical** to
-//! serving each request alone — batching is purely a scheduling
-//! decision (enforced by `batched_output_matches_unbatched_forward`).
+//! One executor thread owns the [`Batcher`] and the executor registry:
+//! it coalesces admitted requests into batches keyed by registry index,
+//! concatenates their rows into a single buffer, and hands the buffer to
+//! the owning [`ModelExecutor`], so the pool wakeup, the queue
+//! round-trip, and the model-state traffic are paid once per batch
+//! instead of once per request.  The server itself knows nothing about
+//! model internals — a [`super::RationalExecutor`] batch is bit-identical
+//! to unbatched `rational::forward` calls, and a
+//! [`super::PipelineExecutor`] batch is bit-identical to per-request
+//! adapter calls (row independence; DESIGN.md §11).
 //!
-//! Admission control: `submit` blocks while the queue is at
-//! `queue_depth` (backpressure), then blocks until its response is
-//! computed.  Shutdown stops admission, drains every pending request,
-//! and returns the executor's counters.
+//! Requests are routed by model *name* ([`Server::submit`]) or by
+//! registry index ([`Server::submit_at`]).  Admission control: `submit`
+//! blocks while the queue is at `queue_depth` (backpressure), then
+//! blocks until its response is computed.  An executor `Err` fails that
+//! batch's requests without taking the server down.  Shutdown stops
+//! admission, drains every pending request, and returns per-model
+//! counters ([`ServeStats`]).
 
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -22,14 +27,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::batcher::{Batch, Batcher, BatchPolicy, FlushCause, ShapeKey};
-use crate::rational::{forward_into, Coeffs};
-
-/// One served model: grouped PAU coefficients for inputs of width `d`.
-pub struct Model {
-    pub name: String,
-    pub d: usize,
-    pub coeffs: Coeffs<f32>,
-}
+use super::executor::{ExecStats, ModelExecutor, ModelStats, ServeStats};
 
 /// A fulfilled request.
 #[derive(Clone, Debug)]
@@ -40,37 +38,20 @@ pub struct Response {
     pub cause: FlushCause,
 }
 
-/// Executor-side counters, returned by [`Server::shutdown`].
-#[derive(Clone, Debug, Default)]
-pub struct ExecStats {
-    pub batches: usize,
-    pub requests: usize,
-    pub rows: usize,
-    /// `batch_hist[k]` = number of batches that coalesced `k` requests.
-    pub batch_hist: Vec<usize>,
-    /// Batches by [`FlushCause::index`].
-    pub causes: [usize; 4],
-    /// Wall time inside the batched forward (executor busy time).
-    pub busy_secs: f64,
-    /// Peak queue depth observed — must never exceed the policy's
-    /// `queue_depth` (the backpressure invariant).
-    pub peak_queued: usize,
-}
-
-impl ExecStats {
-    pub fn mean_batch(&self) -> f64 {
-        if self.batches == 0 {
-            0.0
-        } else {
-            self.requests as f64 / self.batches as f64
-        }
-    }
+/// Immutable registry-entry identity, kept on the shared side so
+/// `submit` can validate and route without touching the executors (which
+/// live on the executor thread).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub d_in: usize,
+    pub d_out: usize,
 }
 
 struct Job {
     x: Vec<f32>,
     rows: u32,
-    resp: mpsc::Sender<Response>,
+    resp: mpsc::Sender<std::result::Result<Response, String>>,
 }
 
 struct State {
@@ -87,7 +68,7 @@ struct Shared {
     space: Condvar,
     /// Executor waiting for work or a deadline.
     work: Condvar,
-    models: Vec<Model>,
+    meta: Vec<ModelMeta>,
     epoch: Instant,
 }
 
@@ -97,12 +78,36 @@ fn now_us(shared: &Shared) -> u64 {
 
 pub struct Server {
     shared: Arc<Shared>,
-    exec: Mutex<Option<std::thread::JoinHandle<ExecStats>>>,
+    exec: Mutex<Option<std::thread::JoinHandle<ServeStats>>>,
 }
 
 impl Server {
-    /// Spawn the executor thread and start serving.
-    pub fn start(models: Vec<Model>, policy: BatchPolicy) -> Server {
+    /// Validate the registry, spawn the executor thread, and start
+    /// serving.  Fails (instead of panicking) on an empty registry,
+    /// duplicate model names, or thread-spawn failure.
+    pub fn start(executors: Vec<Box<dyn ModelExecutor>>, policy: BatchPolicy) -> Result<Server> {
+        if executors.is_empty() {
+            bail!("server needs at least one executor");
+        }
+        if executors.len() > u32::MAX as usize {
+            bail!("registry too large for ShapeKey's u32 index");
+        }
+        let meta: Vec<ModelMeta> = executors
+            .iter()
+            .map(|e| ModelMeta {
+                name: e.name().to_string(),
+                d_in: e.d_in(),
+                d_out: e.d_out(),
+            })
+            .collect();
+        for (i, m) in meta.iter().enumerate() {
+            if m.d_in == 0 || m.d_out == 0 {
+                bail!("model {:?} has degenerate width {}x{}", m.name, m.d_in, m.d_out);
+            }
+            if meta[..i].iter().any(|o| o.name == m.name) {
+                bail!("duplicate model name {:?} in registry", m.name);
+            }
+        }
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 batcher: Batcher::new(policy),
@@ -112,15 +117,25 @@ impl Server {
             }),
             space: Condvar::new(),
             work: Condvar::new(),
-            models,
+            meta,
             epoch: Instant::now(),
         });
         let worker = Arc::clone(&shared);
         let exec = std::thread::Builder::new()
             .name("flashkat-serve".into())
-            .spawn(move || executor(&worker))
-            .expect("spawn serve executor");
-        Server { shared, exec: Mutex::new(Some(exec)) }
+            .spawn(move || executor_loop(&worker, executors))
+            .context("spawning serve executor thread")?;
+        Ok(Server { shared, exec: Mutex::new(Some(exec)) })
+    }
+
+    /// Registry metadata, in registry (= `ShapeKey.model` index) order.
+    pub fn models(&self) -> &[ModelMeta] {
+        &self.shared.meta
+    }
+
+    /// Registry index of a model name.
+    pub fn model_index(&self, name: &str) -> Option<u32> {
+        self.shared.meta.iter().position(|m| m.name == name).map(|i| i as u32)
     }
 
     /// Admitted-but-unserved request count (diagnostic).
@@ -128,19 +143,34 @@ impl Server {
         self.shared.state.lock().unwrap().batcher.queued()
     }
 
-    /// Submit one request and block until it is served.  Blocks at
-    /// admission while the queue is at depth (backpressure); fails fast
-    /// on a shape mismatch or once shutdown has begun.
-    pub fn submit(&self, model: u32, x: Vec<f32>, rows: u32) -> Result<Response> {
+    /// Submit one request to the named model and block until served.
+    pub fn submit(&self, model: &str, x: Vec<f32>, rows: u32) -> Result<Response> {
+        let idx = self
+            .model_index(model)
+            .with_context(|| format!("unknown model {model:?}"))?;
+        self.submit_at(idx, x, rows)
+    }
+
+    /// Submit by registry index.  Blocks at admission while the queue is
+    /// at depth (backpressure), then until the response is computed;
+    /// fails fast on a shape mismatch, once shutdown has begun, or when
+    /// the model's executor reports an error for this batch.
+    pub fn submit_at(&self, model: u32, x: Vec<f32>, rows: u32) -> Result<Response> {
         let m = self
             .shared
-            .models
+            .meta
             .get(model as usize)
-            .with_context(|| format!("unknown model {model}"))?;
-        if x.len() != rows as usize * m.d {
-            bail!("request shape mismatch: {} values for {} rows of d={}", x.len(), rows, m.d);
+            .with_context(|| format!("unknown model index {model}"))?;
+        if x.len() != rows as usize * m.d_in {
+            bail!(
+                "request shape mismatch for {:?}: {} values for {} rows of d_in={}",
+                m.name,
+                x.len(),
+                rows,
+                m.d_in
+            );
         }
-        let key = ShapeKey { model, d: m.d as u32 };
+        let key = ShapeKey { model, d: m.d_in as u32 };
         let (tx, rx) = mpsc::channel();
         {
             let mut st = self.shared.state.lock().unwrap();
@@ -158,12 +188,16 @@ impl Server {
             }
             self.shared.work.notify_one();
         }
-        rx.recv().map_err(|_| anyhow!("server dropped the request"))
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(msg)) => Err(anyhow!("model {:?}: {msg}", m.name)),
+            Err(_) => Err(anyhow!("server dropped the request")),
+        }
     }
 
     /// Stop admission, drain pending requests, and join the executor.
     /// Returns `None` if a previous call already collected the stats.
-    pub fn shutdown(&self) -> Option<ExecStats> {
+    pub fn shutdown(&self) -> Option<ServeStats> {
         let handle = self.exec.lock().unwrap().take()?;
         {
             let mut st = self.shared.state.lock().unwrap();
@@ -189,8 +223,8 @@ struct Scratch {
     ycat: Vec<f32>,
 }
 
-fn executor(shared: &Shared) -> ExecStats {
-    let mut stats = ExecStats::default();
+fn executor_loop(shared: &Shared, mut executors: Vec<Box<dyn ModelExecutor>>) -> ServeStats {
+    let mut per: Vec<ExecStats> = vec![ExecStats::default(); executors.len()];
     let mut scratch = Scratch::default();
     let mut st = shared.state.lock().unwrap();
     loop {
@@ -199,7 +233,7 @@ fn executor(shared: &Shared) -> ExecStats {
             let jobs = detach_jobs(&mut st, &batch);
             drop(st);
             shared.space.notify_all();
-            execute(shared, &batch, jobs, &mut stats, &mut scratch);
+            execute(&mut executors, &batch, jobs, &mut per, &mut scratch);
             st = shared.state.lock().unwrap();
             continue;
         }
@@ -214,13 +248,26 @@ fn executor(shared: &Shared) -> ExecStats {
                     (b, jobs)
                 })
                 .collect();
-            stats.peak_queued = st.peak_queued;
+            let peak_queued = st.peak_queued;
             drop(st);
             shared.space.notify_all();
             for (batch, jobs) in drained {
-                execute(shared, &batch, jobs, &mut stats, &mut scratch);
+                execute(&mut executors, &batch, jobs, &mut per, &mut scratch);
             }
-            return stats;
+            return ServeStats {
+                per_model: shared
+                    .meta
+                    .iter()
+                    .zip(per)
+                    .map(|(m, stats)| ModelStats {
+                        name: m.name.clone(),
+                        d_in: m.d_in,
+                        d_out: m.d_out,
+                        stats,
+                    })
+                    .collect(),
+                peak_queued,
+            };
         }
         st = match st.batcher.next_deadline_us() {
             // Partial buckets pending (non-eager policy): sleep until the
@@ -242,63 +289,82 @@ fn detach_jobs(st: &mut State, batch: &Batch) -> Vec<Job> {
         .collect()
 }
 
-/// Run one coalesced batch and fan the rows back out to the requesters.
+/// Run one coalesced batch through its model's executor and fan the rows
+/// back out to the requesters.
 fn execute(
-    shared: &Shared,
+    executors: &mut [Box<dyn ModelExecutor>],
     batch: &Batch,
     jobs: Vec<Job>,
-    stats: &mut ExecStats,
+    per: &mut [ExecStats],
     scratch: &mut Scratch,
 ) {
-    let model = &shared.models[batch.key.model as usize];
-    let d = model.d;
+    let idx = batch.key.model as usize;
+    let exec = &mut executors[idx];
+    let d_in = exec.d_in();
+    let d_out = exec.d_out();
     let total_rows: usize = jobs.iter().map(|j| j.rows as usize).sum();
 
     let t0 = Instant::now();
     scratch.xcat.clear();
-    scratch.xcat.reserve(total_rows * d);
+    scratch.xcat.reserve(total_rows * d_in);
     for job in &jobs {
         scratch.xcat.extend_from_slice(&job.x);
     }
-    // Elementwise per row, so this equals per-request forward calls bit
-    // for bit — the accumulation order of each output element is
-    // unchanged by coalescing.
-    forward_into(&scratch.xcat, total_rows, d, &model.coeffs, &mut scratch.ycat);
-    stats.busy_secs += t0.elapsed().as_secs_f64();
+    // Executors are documented never to panic, but a third-party
+    // implementation (or an FFI abort surfacing as a panic) must not
+    // unwind this thread: that would strand every queued and future
+    // submitter on a channel nobody serves.  Contain it to this batch.
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        exec.run(&scratch.xcat, total_rows, &mut scratch.ycat)
+    }))
+    .unwrap_or_else(|_| Err(anyhow::anyhow!("executor panicked")));
+    let busy = t0.elapsed().as_secs_f64();
 
     let size = jobs.len();
-    stats.batches += 1;
-    stats.requests += size;
-    stats.rows += total_rows;
-    stats.causes[batch.cause.index()] += 1;
-    if stats.batch_hist.len() <= size {
-        stats.batch_hist.resize(size + 1, 0);
+    let stats = &mut per[idx];
+    stats.record(size, total_rows, batch.cause, busy);
+
+    let failure = match run {
+        Ok(()) if scratch.ycat.len() == total_rows * d_out => None,
+        Ok(()) => Some(format!(
+            "executor returned {} values, expected {} ({total_rows} rows x d_out={d_out})",
+            scratch.ycat.len(),
+            total_rows * d_out
+        )),
+        Err(e) => Some(format!("{e:#}")),
+    };
+    if let Some(msg) = failure {
+        stats.failed += size;
+        for job in jobs {
+            // A requester that gave up is not an executor error.
+            let _ = job.resp.send(Err(msg.clone()));
+        }
+        return;
     }
-    stats.batch_hist[size] += 1;
 
     let mut off = 0usize;
     for job in jobs {
-        let n = job.rows as usize * d;
+        let n = job.rows as usize * d_out;
         let y = scratch.ycat[off..off + n].to_vec();
         off += n;
-        // A requester that gave up is not an executor error.
-        let _ = job.resp.send(Response { y, batch_size: size, cause: batch.cause });
+        let _ = job.resp.send(Ok(Response { y, batch_size: size, cause: batch.cause }));
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::rational::forward;
+    use crate::rational::{forward, Coeffs};
+    use crate::serve::executor::RationalExecutor;
     use crate::util::rng::Pcg64;
 
     const D: usize = 64;
     const GROUPS: usize = 8;
 
-    fn model(seed: u64) -> (Model, Coeffs<f32>) {
+    fn model(seed: u64) -> (Box<dyn ModelExecutor>, Coeffs<f32>) {
         let mut rng = Pcg64::new(seed);
         let coeffs = Coeffs::<f32>::randn(GROUPS, 6, 4, &mut rng);
-        (Model { name: "grkan".into(), d: D, coeffs: coeffs.clone() }, coeffs)
+        (Box::new(RationalExecutor::new("grkan", D, coeffs.clone()).unwrap()), coeffs)
     }
 
     fn request(seed: u64, id: u64) -> (u32, Vec<f32>) {
@@ -314,7 +380,8 @@ mod tests {
         let server = Server::start(
             vec![m],
             BatchPolicy { max_batch: 8, deadline_us: 500, queue_depth: 64, eager: true },
-        );
+        )
+        .unwrap();
         std::thread::scope(|s| {
             for client in 0..4u64 {
                 let server = &server;
@@ -323,7 +390,7 @@ mod tests {
                     for i in 0..25u64 {
                         let (rows, x) = request(5, client * 100 + i);
                         let want = forward(&x, rows as usize, D, coeffs);
-                        let resp = server.submit(0, x, rows).expect("served");
+                        let resp = server.submit("grkan", x, rows).expect("served");
                         assert_eq!(resp.y, want, "batched != unbatched for req {client}/{i}");
                         assert!(resp.batch_size >= 1);
                     }
@@ -331,11 +398,141 @@ mod tests {
             }
         });
         let stats = server.shutdown().expect("first shutdown collects stats");
-        assert_eq!(stats.requests, 100);
-        assert!(stats.rows > 0);
+        let total = stats.total();
+        assert_eq!(total.requests, 100);
+        assert_eq!(total.failed, 0);
+        assert!(total.rows > 0);
         let hist_total: usize =
-            stats.batch_hist.iter().enumerate().map(|(size, n)| size * n).sum();
+            total.batch_hist.iter().enumerate().map(|(size, n)| size * n).sum();
         assert_eq!(hist_total, 100, "histogram accounts for every request");
+        // Single-model registry: the per-model split IS the total.
+        assert_eq!(stats.per_model.len(), 1);
+        assert_eq!(stats.per_model[0].name, "grkan");
+        assert_eq!(stats.per_model[0].stats, total);
+    }
+
+    #[test]
+    fn routes_by_name_with_per_model_stats() {
+        let mut rng = Pcg64::new(31);
+        let cw = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+        let cn = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+        let server = Server::start(
+            vec![
+                Box::new(RationalExecutor::new("wide", 64, cw.clone()).unwrap()),
+                Box::new(RationalExecutor::new("narrow", 16, cn.clone()).unwrap()),
+            ],
+            BatchPolicy { max_batch: 8, deadline_us: 300, queue_depth: 64, eager: true },
+        )
+        .unwrap();
+        assert_eq!(server.model_index("narrow"), Some(1));
+        assert_eq!(server.model_index("nope"), None);
+        std::thread::scope(|s| {
+            for client in 0..4u64 {
+                let server = &server;
+                let (cw, cn) = (&cw, &cn);
+                s.spawn(move || {
+                    for i in 0..10u64 {
+                        let mut rng = Pcg64::with_stream(31, client * 100 + i);
+                        let (name, d, c): (&str, usize, &Coeffs<f32>) =
+                            if (client + i) % 2 == 0 { ("wide", 64, cw) } else { ("narrow", 16, cn) };
+                        let rows = 1 + rng.below(3);
+                        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+                        let want = forward(&x, rows, d, c);
+                        let got = server.submit(name, x, rows as u32).expect("served").y;
+                        assert_eq!(got, want, "{name} {client}/{i}");
+                    }
+                });
+            }
+        });
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.per_model.len(), 2);
+        let total = stats.total();
+        assert_eq!(total.requests, 40);
+        let wide = stats.model("wide").unwrap();
+        let narrow = stats.model("narrow").unwrap();
+        assert_eq!(wide.stats.requests, 20);
+        assert_eq!(narrow.stats.requests, 20);
+        assert_eq!((wide.d_in, narrow.d_in), (64, 16));
+        assert_eq!(wide.stats.requests + narrow.stats.requests, total.requests);
+        assert_eq!(wide.stats.rows + narrow.stats.rows, total.rows);
+        assert_eq!(wide.stats.batches + narrow.stats.batches, total.batches);
+    }
+
+    #[test]
+    fn registry_validation_rejects_bad_configs() {
+        let (a, _) = model(40);
+        let (b, _) = model(41);
+        // Duplicate names: both executors are called "grkan".
+        assert!(Server::start(vec![a, b], BatchPolicy::default()).is_err());
+        assert!(Server::start(vec![], BatchPolicy::default()).is_err(), "empty registry");
+    }
+
+    /// An executor whose `run` always fails: the batch's submitters get
+    /// errors, the counters record the failure, and the server survives.
+    struct Exploding;
+    impl ModelExecutor for Exploding {
+        fn name(&self) -> &str {
+            "boom"
+        }
+        fn d_in(&self) -> usize {
+            4
+        }
+        fn d_out(&self) -> usize {
+            4
+        }
+        fn run(&mut self, _x: &[f32], _rows: usize, _out: &mut Vec<f32>) -> Result<()> {
+            bail!("synthetic failure")
+        }
+    }
+
+    #[test]
+    fn executor_failure_is_an_error_not_a_crash() {
+        let (m, coeffs) = model(42);
+        let server = Server::start(vec![m, Box::new(Exploding)], BatchPolicy::default()).unwrap();
+        let err = server.submit("boom", vec![0.0; 4], 1).unwrap_err().to_string();
+        assert!(err.contains("synthetic failure"), "{err}");
+        // The healthy model still serves after the failure.
+        let (rows, x) = request(42, 0);
+        let want = forward(&x, rows as usize, D, &coeffs);
+        assert_eq!(server.submit("grkan", x, rows).unwrap().y, want);
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.model("boom").unwrap().stats.failed, 1);
+        assert_eq!(stats.model("grkan").unwrap().stats.failed, 0);
+        assert_eq!(stats.total().failed, 1);
+    }
+
+    /// A panicking executor (contract violation) must be contained to
+    /// its batch: submitters get errors, the thread survives, other
+    /// models keep serving, shutdown still returns stats.
+    struct Panicking;
+    impl ModelExecutor for Panicking {
+        fn name(&self) -> &str {
+            "panicky"
+        }
+        fn d_in(&self) -> usize {
+            4
+        }
+        fn d_out(&self) -> usize {
+            4
+        }
+        fn run(&mut self, _x: &[f32], _rows: usize, _out: &mut Vec<f32>) -> Result<()> {
+            panic!("synthetic executor panic")
+        }
+    }
+
+    #[test]
+    fn executor_panic_fails_the_batch_not_the_server() {
+        let (m, coeffs) = model(43);
+        let server =
+            Server::start(vec![m, Box::new(Panicking)], BatchPolicy::default()).unwrap();
+        let err = server.submit("panicky", vec![0.0; 4], 1).unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+        let (rows, x) = request(43, 0);
+        let want = forward(&x, rows as usize, D, &coeffs);
+        assert_eq!(server.submit("grkan", x, rows).unwrap().y, want);
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.model("panicky").unwrap().stats.failed, 1);
+        assert_eq!(stats.total().failed, 1);
     }
 
     #[test]
@@ -346,9 +543,10 @@ mod tests {
         let server = Server::start(
             vec![m],
             BatchPolicy { max_batch: 64, deadline_us: 2_000, queue_depth: 64, eager: false },
-        );
+        )
+        .unwrap();
         let (rows, x) = request(6, 0);
-        let resp = server.submit(0, x, rows).expect("served");
+        let resp = server.submit("grkan", x, rows).expect("served");
         assert_eq!(resp.cause, FlushCause::Deadline);
         assert_eq!(resp.batch_size, 1);
     }
@@ -360,20 +558,21 @@ mod tests {
         let server = Server::start(
             vec![m],
             BatchPolicy { max_batch: 4, deadline_us: 200, queue_depth: depth, eager: true },
-        );
+        )
+        .unwrap();
         std::thread::scope(|s| {
             for client in 0..16u64 {
                 let server = &server;
                 s.spawn(move || {
                     for i in 0..10u64 {
                         let (rows, x) = request(7, client * 100 + i);
-                        server.submit(0, x, rows).expect("served");
+                        server.submit("grkan", x, rows).expect("served");
                     }
                 });
             }
         });
         let stats = server.shutdown().unwrap();
-        assert_eq!(stats.requests, 160);
+        assert_eq!(stats.total().requests, 160);
         assert!(
             stats.peak_queued <= depth,
             "queue grew to {} despite depth {depth}",
@@ -389,13 +588,14 @@ mod tests {
         let server = Server::start(
             vec![m],
             BatchPolicy { max_batch: 64, deadline_us: 10_000_000, queue_depth: 64, eager: false },
-        );
+        )
+        .unwrap();
         std::thread::scope(|s| {
             for i in 0..3u64 {
                 let server = &server;
                 s.spawn(move || {
                     let (rows, x) = request(8, i);
-                    let resp = server.submit(0, x, rows).expect("drained at shutdown");
+                    let resp = server.submit("grkan", x, rows).expect("drained at shutdown");
                     assert_eq!(resp.cause, FlushCause::Drain);
                 });
             }
@@ -404,27 +604,29 @@ mod tests {
                 std::thread::sleep(Duration::from_millis(1));
             }
             let stats = server.shutdown().unwrap();
-            assert_eq!(stats.requests, 3);
-            assert_eq!(stats.causes[FlushCause::Drain.index()], 1);
+            let total = stats.total();
+            assert_eq!(total.requests, 3);
+            assert_eq!(total.causes[FlushCause::Drain.index()], 1);
         });
     }
 
     #[test]
     fn bad_requests_fail_fast() {
         let (m, _) = model(9);
-        let server = Server::start(vec![m], BatchPolicy::default());
-        assert!(server.submit(1, vec![0.0; D], 1).is_err(), "unknown model");
-        assert!(server.submit(0, vec![0.0; D - 1], 1).is_err(), "shape mismatch");
+        let server = Server::start(vec![m], BatchPolicy::default()).unwrap();
+        assert!(server.submit("nope", vec![0.0; D], 1).is_err(), "unknown model name");
+        assert!(server.submit_at(1, vec![0.0; D], 1).is_err(), "unknown model index");
+        assert!(server.submit("grkan", vec![0.0; D - 1], 1).is_err(), "shape mismatch");
         let stats = server.shutdown().unwrap();
-        assert_eq!(stats.requests, 0);
+        assert_eq!(stats.total().requests, 0);
     }
 
     #[test]
     fn second_shutdown_returns_none() {
         let (m, _) = model(10);
-        let server = Server::start(vec![m], BatchPolicy::default());
+        let server = Server::start(vec![m], BatchPolicy::default()).unwrap();
         assert!(server.shutdown().is_some());
         assert!(server.shutdown().is_none());
-        assert!(server.submit(0, vec![0.0; D], 1).is_err(), "admission closed");
+        assert!(server.submit("grkan", vec![0.0; D], 1).is_err(), "admission closed");
     }
 }

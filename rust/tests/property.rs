@@ -159,6 +159,99 @@ fn prop_gpusim_work_monotone_in_blocks() {
 }
 
 #[test]
+fn prop_batcher_interleaved_multikey_invariants() {
+    // Virtual-clock property: under ANY interleaving of admissions to a
+    // hot key and several cold keys, with the executor polling every
+    // step, (a) each bucket releases in FIFO order, (b) no request —
+    // cold keys included — waits more than deadline + one poll interval,
+    // and (c) backpressure counts requests across ALL buckets.
+    use flashkat::serve::{BatchPolicy, Batcher, ShapeKey};
+    use std::collections::BTreeMap;
+
+    cases(30, |seed, rng| {
+        let n_keys = 2 + rng.below(3); // key 0 is hot, the rest cold
+        let max_step = 1 + rng.below(30) as u64;
+        let policy = BatchPolicy {
+            max_batch: 1 + rng.below(6),
+            deadline_us: 20 + rng.below(300) as u64,
+            queue_depth: 4 + rng.below(24),
+            eager: false,
+        };
+        let mut b = Batcher::new(policy);
+        let key = |k: usize| ShapeKey { model: k as u32, d: 8 * (k as u32 + 1) };
+        let mut now = 0u64;
+        let mut outstanding = 0usize;
+        let mut enq: BTreeMap<u64, u64> = BTreeMap::new(); // id -> enq time
+        let mut last_id: Vec<Option<u64>> = vec![None; n_keys];
+
+        let check_release = |batch: &flashkat::serve::Batch,
+                             now: u64,
+                             enq: &mut BTreeMap<u64, u64>,
+                             last_id: &mut Vec<Option<u64>>,
+                             outstanding: &mut usize| {
+            let k = batch.key.model as usize;
+            for t in &batch.tickets {
+                // (a) per-bucket FIFO: ids strictly increase per key.
+                if let Some(prev) = last_id[k] {
+                    assert!(t.id > prev, "seed {seed}: key {k} out of order");
+                }
+                last_id[k] = Some(t.id);
+                // (b) bounded wait: released no later than one poll
+                // interval past the deadline.
+                let waited = now - enq.remove(&t.id).expect("admitted ticket");
+                assert!(
+                    waited <= policy.deadline_us + max_step,
+                    "seed {seed}: key {k} waited {waited}us (deadline {}, step {max_step})",
+                    policy.deadline_us
+                );
+                *outstanding -= 1;
+            }
+        };
+
+        for step in 0..400usize {
+            now += 1 + rng.below(max_step as usize) as u64;
+            // Hot key admits most steps; cold keys occasionally.
+            let k = if rng.below(4) < 3 { 0 } else { 1 + rng.below(n_keys - 1) };
+            match b.admit(key(k), now) {
+                Some(t) => {
+                    enq.insert(t.id, now);
+                    outstanding += 1;
+                }
+                None => {
+                    // (c) refusal happens exactly at the cross-bucket cap.
+                    assert_eq!(
+                        outstanding, policy.queue_depth,
+                        "seed {seed} step {step}: refused below depth"
+                    );
+                }
+            }
+            assert_eq!(b.queued(), outstanding, "seed {seed}: queued() counts all buckets");
+            // Busy executor polls every step (idle=false): Full and
+            // Deadline releases only.
+            while let Some(batch) = b.pop(now, false) {
+                check_release(&batch, now, &mut enq, &mut last_id, &mut outstanding);
+            }
+        }
+        // Terminal drain returns every remaining ticket exactly once, in
+        // per-bucket FIFO order (the wait bound no longer applies).
+        for batch in b.drain() {
+            let k = batch.key.model as usize;
+            for t in &batch.tickets {
+                if let Some(prev) = last_id[k] {
+                    assert!(t.id > prev, "seed {seed}: drain out of order on key {k}");
+                }
+                last_id[k] = Some(t.id);
+                assert!(enq.remove(&t.id).is_some(), "seed {seed}: drained unknown ticket");
+                outstanding -= 1;
+            }
+        }
+        assert_eq!(outstanding, 0, "seed {seed}: every admitted ticket was released");
+        assert!(enq.is_empty());
+        assert_eq!(b.queued(), 0);
+    });
+}
+
+#[test]
 fn prop_rational_forward_finite_for_wild_inputs() {
     // Safe-PAU property: Q >= 1 means no poles for ANY coefficients/x.
     cases(30, |seed, rng| {

@@ -1,9 +1,17 @@
 //! Integration: the serve subsystem end to end — seeded workloads through
-//! the threaded server, batched-vs-unbatched numeric identity, deadline
-//! coalescing, and open-loop arrivals.  No artifacts required.
+//! the threaded server, batched-vs-unbatched numeric identity, routing by
+//! model name across a mixed registry (rational layers + a full pipeline
+//! behind the batched-rows adapter), deadline coalescing, and open-loop
+//! arrivals.  No artifacts required: the pipeline model is a pure-Rust
+//! `ModuleExec`, exactly the seam `runtime::LoadedModule` plugs into.
 
+use anyhow::Result;
 use flashkat::rational::{forward, Coeffs};
-use flashkat::serve::{loadgen, Arrival, BatchPolicy, FlushCause, LoadConfig, Model, Server};
+use flashkat::runtime::{HostTensor, ModuleExec, RowsAdapter};
+use flashkat::serve::{
+    loadgen, Arrival, BatchPolicy, FlushCause, LoadConfig, ModelSpec, PipelineExecutor,
+    RationalExecutor, Server,
+};
 use flashkat::util::rng::Pcg64;
 
 /// Fixed seed → the exact same request payloads → outputs bit-identical
@@ -14,9 +22,10 @@ fn serve_outputs_bit_identical_to_unbatched_oracle() {
     let mut rng = Pcg64::new(11);
     let coeffs = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
     let server = Server::start(
-        vec![Model { name: "grkan".into(), d, coeffs: coeffs.clone() }],
+        vec![Box::new(RationalExecutor::new("grkan", d, coeffs.clone()).unwrap())],
         BatchPolicy { max_batch: 16, deadline_us: 300, queue_depth: 128, eager: true },
-    );
+    )
+    .unwrap();
     std::thread::scope(|s| {
         for client in 0..8u64 {
             let server = &server;
@@ -27,14 +36,168 @@ fn serve_outputs_bit_identical_to_unbatched_oracle() {
                     let rows = 1 + rng.below(3);
                     let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
                     let want = forward(&x, rows, d, coeffs);
-                    let got = server.submit(0, x, rows as u32).expect("served").y;
+                    let got = server.submit("grkan", x, rows as u32).expect("served").y;
                     assert_eq!(got, want, "client {client} req {i}");
                 }
             });
         }
     });
     let stats = server.shutdown().expect("stats");
-    assert_eq!(stats.requests, 160);
+    assert_eq!(stats.total().requests, 160);
+}
+
+/// Pure-Rust pipeline model standing in for an AOT `<tag>_eval` module:
+/// a fixed per-output weight vector plus a deterministic, strictly
+/// row-independent map (each output row reads only its own input row),
+/// which is the adapter's bit-identity contract.
+struct TinyEvalModule {
+    batch: usize,
+    d_in: usize,
+    d_out: usize,
+}
+
+impl ModuleExec for TinyEvalModule {
+    fn execute_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let w = inputs[0].as_f32()?;
+        let x = inputs[1].as_f32()?;
+        assert_eq!(x.len(), self.batch * self.d_in);
+        let mut y = vec![0.0f32; self.batch * self.d_out];
+        for r in 0..self.batch {
+            let row = &x[r * self.d_in..(r + 1) * self.d_in];
+            for j in 0..self.d_out {
+                let a = row[j % self.d_in];
+                let b = row[(j * 7 + 1) % self.d_in];
+                y[r * self.d_out + j] = a * w[j] + b;
+            }
+        }
+        Ok(vec![HostTensor::F32 { shape: vec![self.batch, self.d_out], data: y }])
+    }
+}
+
+fn tiny_pipeline(batch: usize, d_in: usize, d_out: usize) -> RowsAdapter {
+    let w = HostTensor::F32 {
+        shape: vec![d_out],
+        data: (0..d_out).map(|j| 0.5 + 0.25 * j as f32).collect(),
+    };
+    RowsAdapter::from_parts(
+        Box::new(TinyEvalModule { batch, d_in, d_out }),
+        vec![w],
+        vec![batch, d_in],
+        vec![batch, d_out],
+    )
+    .unwrap()
+}
+
+/// The acceptance scenario: two rational models with different widths
+/// plus a full-pipeline model served concurrently, requests routed by
+/// name, every output bit-identical to its per-request reference, and
+/// the per-model `ExecStats` summing exactly to the server totals.
+#[test]
+fn mixed_model_traffic_is_bit_identical_per_model() {
+    let (d_wide, d_narrow) = (96usize, 32usize);
+    let (pipe_din, pipe_dout) = (24usize, 10usize);
+    let mut rng = Pcg64::new(23);
+    let cw = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+    let cn = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+
+    // Module batch 4 on purpose: request coalescing routinely crosses
+    // chunk boundaries, exercising the pad path mid-traffic.
+    let server = Server::start(
+        vec![
+            Box::new(RationalExecutor::new("wide", d_wide, cw.clone()).unwrap()),
+            Box::new(RationalExecutor::new("narrow", d_narrow, cn.clone()).unwrap()),
+            Box::new(PipelineExecutor::new("kat_tiny", tiny_pipeline(4, pipe_din, pipe_dout))),
+        ],
+        BatchPolicy { max_batch: 8, deadline_us: 400, queue_depth: 128, eager: true },
+    )
+    .unwrap();
+    assert_eq!(server.models().len(), 3);
+    assert_eq!(server.model_index("kat_tiny"), Some(2));
+
+    let per_kind = 3u64; // clients per model kind
+    let reqs_each = 15u64;
+    std::thread::scope(|s| {
+        for kind in 0..3u64 {
+            for client in 0..per_kind {
+                let server = &server;
+                let (cw, cn) = (&cw, &cn);
+                s.spawn(move || {
+                    // Per-thread reference adapter (execute_rows keeps
+                    // scratch, so it takes &mut self); same weights as
+                    // the served executor, so outputs must match bit
+                    // for bit.
+                    let mut reference = tiny_pipeline(4, pipe_din, pipe_dout);
+                    for i in 0..reqs_each {
+                        let mut rng = Pcg64::with_stream(23, kind * 10_000 + client * 100 + i);
+                        let rows = 1 + rng.below(4);
+                        match kind {
+                            0 | 1 => {
+                                let (name, d, c): (&str, usize, &Coeffs<f32>) = if kind == 0 {
+                                    ("wide", d_wide, cw)
+                                } else {
+                                    ("narrow", d_narrow, cn)
+                                };
+                                let x: Vec<f32> =
+                                    (0..rows * d).map(|_| rng.normal_f32()).collect();
+                                let want = forward(&x, rows, d, c);
+                                let got = server.submit(name, x, rows as u32).expect("served").y;
+                                assert_eq!(got, want, "{name} {client}/{i}");
+                            }
+                            _ => {
+                                let x: Vec<f32> =
+                                    (0..rows * pipe_din).map(|_| rng.normal_f32()).collect();
+                                let mut want = Vec::new();
+                                reference.execute_rows(&x, rows, &mut want).unwrap();
+                                let resp =
+                                    server.submit("kat_tiny", x, rows as u32).expect("served");
+                                assert_eq!(resp.y, want, "pipeline {client}/{i}");
+                                assert_eq!(resp.y.len(), rows * pipe_dout);
+                            }
+                        }
+                    }
+                });
+            }
+        }
+    });
+
+    let stats = server.shutdown().expect("stats");
+    assert_eq!(stats.per_model.len(), 3);
+    let total = stats.total();
+    let n_per_model = (per_kind * reqs_each) as usize;
+    assert_eq!(total.requests, 3 * n_per_model);
+    assert_eq!(total.failed, 0);
+    for name in ["wide", "narrow", "kat_tiny"] {
+        assert_eq!(stats.model(name).unwrap().stats.requests, n_per_model, "{name}");
+    }
+    // The per-model split sums exactly to the global totals, counter by
+    // counter (requests, rows, batches, causes, histogram, busy time).
+    let sum =
+        |f: &dyn Fn(&flashkat::serve::ModelStats) -> usize| -> usize {
+            stats.per_model.iter().map(f).sum()
+        };
+    assert_eq!(sum(&|m| m.stats.requests), total.requests);
+    assert_eq!(sum(&|m| m.stats.rows), total.rows);
+    assert_eq!(sum(&|m| m.stats.batches), total.batches);
+    assert_eq!(sum(&|m| m.stats.failed), total.failed);
+    for c in FlushCause::ALL {
+        assert_eq!(
+            sum(&|m| m.stats.causes[c.index()]),
+            total.causes[c.index()],
+            "{c:?} split"
+        );
+    }
+    let hist_requests =
+        |h: &[usize]| -> usize { h.iter().enumerate().map(|(size, n)| size * n).sum() };
+    assert_eq!(
+        stats.per_model.iter().map(|m| hist_requests(&m.stats.batch_hist)).sum::<usize>(),
+        hist_requests(&total.batch_hist)
+    );
+    assert_eq!(hist_requests(&total.batch_hist), total.requests);
+    let busy_sum: f64 = stats.per_model.iter().map(|m| m.stats.busy_secs).sum();
+    assert!((busy_sum - total.busy_secs).abs() < 1e-9);
+    // The pipeline model's widths flow from the adapter, not the server.
+    let kat = stats.model("kat_tiny").unwrap();
+    assert_eq!((kat.d_in, kat.d_out), (pipe_din, pipe_dout));
 }
 
 /// With a non-eager policy, concurrent clients are coalesced by the
@@ -42,7 +205,12 @@ fn serve_outputs_bit_identical_to_unbatched_oracle() {
 /// subsystem exists for.
 #[test]
 fn deadline_coalesces_concurrent_clients() {
-    let cfg = LoadConfig { requests: 128, concurrency: 8, d: 64, ..Default::default() };
+    let cfg = LoadConfig {
+        requests: 128,
+        concurrency: 8,
+        models: vec![ModelSpec::new("grkan", 64, 8)],
+        ..Default::default()
+    };
     let res = loadgen::run(
         &cfg,
         // Deadline generous enough that slow CI scheduling can't fragment
@@ -71,8 +239,8 @@ fn open_loop_schedule_completes_without_errors() {
     let cfg = LoadConfig {
         requests: 200,
         concurrency: 8,
-        d: 64,
         arrival: Arrival::Open { rate_rps: 20_000.0 },
+        models: vec![ModelSpec::new("grkan", 64, 8)],
         ..Default::default()
     };
     let res = loadgen::run(&cfg, BatchPolicy::default(), "open").unwrap();
@@ -82,10 +250,16 @@ fn open_loop_schedule_completes_without_errors() {
     assert!(res.wall_secs > 0.0 && res.throughput_rps > 0.0);
 }
 
-/// The backpressure invariant holds under a deliberately tiny queue.
+/// The backpressure invariant holds under a deliberately tiny queue,
+/// with admissions spread across a multi-model registry.
 #[test]
 fn tiny_queue_depth_is_never_exceeded() {
-    let cfg = LoadConfig { requests: 96, concurrency: 12, d: 64, ..Default::default() };
+    let cfg = LoadConfig {
+        requests: 96,
+        concurrency: 12,
+        models: vec![ModelSpec::new("a", 64, 8), ModelSpec::new("b", 32, 8)],
+        ..Default::default()
+    };
     let res = loadgen::run(
         &cfg,
         BatchPolicy { max_batch: 4, deadline_us: 100, queue_depth: 3, eager: true },
@@ -94,5 +268,5 @@ fn tiny_queue_depth_is_never_exceeded() {
     .unwrap();
     assert_eq!(res.errors, 0);
     assert_eq!(res.exec.requests, 96);
-    assert!(res.exec.peak_queued <= 3, "peak {}", res.exec.peak_queued);
+    assert!(res.peak_queued <= 3, "peak {}", res.peak_queued);
 }
