@@ -1,0 +1,96 @@
+//! Client for a running `flashkat serve-http`: submit seeded requests
+//! over HTTP and verify each response is **bit-identical** to the
+//! in-process forward for the same model.
+//!
+//! Works because both sides are deterministic: the server built its
+//! registry from `(seed, model spec)` via `loadgen::executors`, and this
+//! client rebuilds the identical executor locally from the same flags —
+//! so any f32 mismatch means the transport (or the server) corrupted a
+//! value, and the process exits nonzero.  CI uses exactly that as the
+//! "200 + bit-identical payload" smoke check.
+//!
+//!     flashkat serve-http --port 0 --seed 7 &
+//!     cargo run --release --example http_client -- --addr 127.0.0.1:PORT --seed 7
+
+use anyhow::{bail, Context, Result};
+use flashkat::cli::Args;
+use flashkat::net::HttpClient;
+use flashkat::serve::{loadgen, LoadConfig, ModelExecutor, ModelSpec};
+use flashkat::util::json::Json;
+
+fn main() -> Result<()> {
+    // Args' grammar expects a leading command token; synthesize one so
+    // `--addr ...` is parsed as a flag, not swallowed as the command.
+    let args =
+        Args::parse(std::iter::once("http-client".to_string()).chain(std::env::args().skip(1)))?;
+    let addr: std::net::SocketAddr = args
+        .flag_str("addr", "127.0.0.1:8080")
+        .parse()
+        .context("--addr expects host:port")?;
+    let cfg = LoadConfig {
+        seed: args.flag_u64("seed", 7)?,
+        models: vec![ModelSpec::new(
+            args.flag_str("model", "grkan"),
+            args.flag_usize("d", 256)?,
+            args.flag_usize("groups", 8)?.max(1),
+        )],
+        ..Default::default()
+    };
+    let requests = args.flag_u64("requests", 8)?.max(1);
+    let name = cfg.models[0].name.clone();
+
+    // The local twin of the server's executor: same seed, same spec.
+    let mut reference = loadgen::executors(&cfg)?.remove(0);
+
+    let mut client = HttpClient::connect(addr)?;
+    let listing = client.get("/v1/models")?;
+    if listing.status != 200 {
+        bail!("GET /v1/models returned {}", listing.status);
+    }
+    let listing = Json::parse(&listing.body_str()).context("parsing model listing")?;
+    let found = listing
+        .get("models")
+        .and_then(Json::as_arr)
+        .map(|models| {
+            models.iter().any(|m| {
+                m.get("name").and_then(Json::as_str) == Some(name.as_str())
+                    && m.get("d_in").and_then(Json::as_usize) == Some(cfg.models[0].d)
+            })
+        })
+        .unwrap_or(false);
+    if !found {
+        bail!("server does not list model {name:?} with d_in={}", cfg.models[0].d);
+    }
+
+    for id in 0..requests {
+        let (_, body) = loadgen::http_body(&cfg, id);
+        let resp = client.post_json(&format!("/v1/models/{name}/infer"), &body)?;
+        if resp.status != 200 {
+            bail!("request {id}: status {} body {}", resp.status, resp.body_str());
+        }
+        let parsed = Json::parse(&resp.body_str()).context("parsing infer response")?;
+        let y: Vec<f32> = parsed
+            .get("y")
+            .and_then(Json::as_arr)
+            .context("response missing y")?
+            .iter()
+            .map(|v| v.as_f64().map(|f| f as f32))
+            .collect::<Option<_>>()
+            .context("non-numeric y element")?;
+        let (_, rows, x) = loadgen::request(&cfg, id);
+        let mut want = Vec::new();
+        reference.run(&x, rows as usize, &mut want)?;
+        if y != want {
+            bail!("request {id}: HTTP response differs from the in-process forward");
+        }
+    }
+
+    let metrics = client.get("/metrics")?;
+    if metrics.status != 200 || !metrics.body_str().contains("flashkat_serve_requests_total") {
+        bail!("/metrics scrape failed (status {})", metrics.status);
+    }
+    println!(
+        "OK: {requests} responses from {addr} bit-identical to the in-process forward ({name})"
+    );
+    Ok(())
+}

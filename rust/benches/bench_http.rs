@@ -1,0 +1,57 @@
+//! HTTP-frontend bench target: the same deterministic workload
+//! in-process and over loopback HTTP, at 1 and N executor shards, so
+//! the frontend's overhead and the sharding win are tracked across PRs
+//! in `BENCH_http.json` like the other BENCH artifacts (DESIGN.md §12).
+//!
+//!     cargo bench --bench bench_http -- [--requests N] [--concurrency C] [--shards N]
+
+use flashkat::serve::{loadgen, BatchPolicy, LoadConfig, ModelSpec};
+
+fn main() {
+    // Synthetic leading command token: Args treats the first item as the
+    // command, which would otherwise swallow a leading `--requests`.
+    let args = flashkat::cli::Args::parse(
+        std::iter::once("bench".to_string())
+            .chain(std::env::args().skip(1).filter(|a| a != "--bench")),
+    )
+    .expect("bench args");
+    let shards = args.flag_usize("shards", 2).expect("--shards").max(1);
+    let cfg = LoadConfig {
+        requests: args.flag_usize("requests", 2000).expect("--requests"),
+        concurrency: args.flag_usize("concurrency", 16).expect("--concurrency"),
+        // Two models so sharding has something to separate.
+        models: vec![ModelSpec::new("grkan", 256, 8), ModelSpec::new("small", 64, 8)],
+        ..Default::default()
+    };
+    let policy = BatchPolicy::default();
+
+    let row = |r: &loadgen::BenchResult| {
+        println!(
+            "bench {:<24} {:>10.0} img/s  p50 {:>7.3} ms  p99 {:>7.3} ms  mean batch {:>5.1}",
+            r.label,
+            r.throughput_rps,
+            r.p50_ms,
+            r.p99_ms,
+            r.exec.mean_batch(),
+        );
+    };
+
+    // Same shard count in-process and over HTTP, so the recorded
+    // http_overhead isolates the transport; the 1-shard HTTP row shows
+    // the sharding win on top.
+    let inproc = loadgen::run_sharded(&cfg, policy, "in-process", shards).expect("in-process run");
+    row(&inproc);
+    let http1 = loadgen::run_http(&cfg, policy, "http-1-shard", 1).expect("http 1-shard run");
+    row(&http1);
+    let label = format!("http-{shards}-shards");
+    let http_n = loadgen::run_http(&cfg, policy, &label, shards).expect("http sharded run");
+    row(&http_n);
+    assert_eq!(inproc.errors + http1.errors + http_n.errors, 0, "no request may fail");
+
+    let json = loadgen::http_bench_json(&cfg, &inproc, &http_n, shards);
+    std::fs::write("BENCH_http.json", json.to_string()).expect("write BENCH_http.json");
+    println!(
+        "wrote BENCH_http.json (http/{shards}-shards vs in-process throughput: {:.2}x)",
+        http_n.throughput_rps / inproc.throughput_rps.max(1e-9)
+    );
+}

@@ -14,8 +14,13 @@ use flashkat::cli::Args;
 use flashkat::serve::{loadgen, BatchPolicy, LoadConfig};
 
 fn main() {
-    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))
-        .expect("bench args");
+    // Synthetic leading command token: Args treats the first item as the
+    // command, which would otherwise swallow a leading `--requests`.
+    let args = Args::parse(
+        std::iter::once("bench".to_string())
+            .chain(std::env::args().skip(1).filter(|a| a != "--bench")),
+    )
+    .expect("bench args");
     let cfg = LoadConfig {
         requests: args.flag_usize("requests", 2000).expect("--requests"),
         concurrency: args.flag_usize("concurrency", 16).expect("--concurrency"),

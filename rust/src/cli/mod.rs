@@ -68,6 +68,18 @@ impl Args {
         }
     }
 
+    /// Range-checked into `u16` — the port-flag parser: `--port 70000`
+    /// is an error, not a silent wraparound onto some other port
+    /// (mirrors the [`Self::flag_u32`] fix).
+    pub fn flag_u16(&self, name: &str, default: u16) -> Result<u16> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow!("--{name} expects an integer in 0..=65535, got {v:?}")
+            }),
+        }
+    }
+
     pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.flag(name) {
             None => Ok(default),
@@ -145,6 +157,19 @@ mod tests {
         let big = parse("t --loops 4294967296");
         assert!(big.flag_u32("loops", 1).is_err());
         assert!(parse("t --loops -1").flag_u32("loops", 1).is_err());
+    }
+
+    #[test]
+    fn flag_u16_rejects_out_of_range_ports() {
+        let a = parse("t --port 8080");
+        assert_eq!(a.flag_u16("port", 80).unwrap(), 8080);
+        assert_eq!(a.flag_u16("absent", 80).unwrap(), 80);
+        assert_eq!(parse("t --port 0").flag_u16("port", 80).unwrap(), 0, "0 = ephemeral");
+        assert_eq!(parse("t --port 65535").flag_u16("port", 80).unwrap(), 65535);
+        // 65536 used to be truncatable to 0 through a wider parse.
+        assert!(parse("t --port 65536").flag_u16("port", 80).is_err());
+        assert!(parse("t --port -1").flag_u16("port", 80).is_err());
+        assert!(parse("t --port http").flag_u16("port", 80).is_err());
     }
 
     #[test]

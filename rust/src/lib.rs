@@ -8,9 +8,11 @@
 //!   substrate the paper's evaluation needs — most notably a GPU
 //!   memory-hierarchy simulator (`gpusim`) that reproduces the paper's
 //!   Nsight-style measurements, a bit-faithful gradient-accumulation
-//!   model (`rational`) for the rounding-error study, and a dynamic
+//!   model (`rational`) for the rounding-error study, a dynamic
 //!   micro-batching inference engine (`serve`) that turns the optimized
-//!   host kernels into a traffic-handling system.
+//!   host kernels into a traffic-handling system, and a zero-dependency
+//!   HTTP/JSON frontend (`net`) exposing the sharded engine to external
+//!   traffic.
 
 pub mod cli;
 pub mod config;
@@ -18,6 +20,7 @@ pub mod coordinator;
 pub mod data;
 pub mod flops;
 pub mod gpusim;
+pub mod net;
 pub mod rational;
 pub mod report;
 pub mod runtime;

@@ -8,9 +8,13 @@
 //!   profile [--kernel fwd|kat|flash] [--loops N] [--gpu 4060ti|h200] [--batch N]
 //!   serve-bench [--requests N] [--concurrency C] [--max-batch B] [--deadline-us D]
 //!          [--model NAME | --models name:d[:groups],... | --pipeline TAG]
-//!          [--autotune --slo-p99-us N]
+//!          [--autotune --slo-p99-us N] [--http --shards N]
 //!          -- dynamic micro-batching inference bench over named models or a
-//!             whole AOT pipeline (writes BENCH_serve.json)
+//!             whole AOT pipeline (writes BENCH_serve.json; --http also runs
+//!             the workload over loopback HTTP and writes BENCH_http.json)
+//!   serve-http [--addr A] [--port P|0] [--shards N]
+//!          [--models name:d[:groups],... | --pipeline TAG]
+//!          -- HTTP/JSON serving frontend; runs until SIGTERM, then drains
 //!   selfcheck [--artifacts DIR]   -- runtime vs Rust-oracle numerics
 //!   flops
 //!
@@ -242,6 +246,34 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     if !autotune && args.flag("slo-p99-us").is_some() {
         bail!("--slo-p99-us only applies with --autotune");
     }
+
+    // --http: the same workload in-process and over loopback HTTP, so
+    // the frontend's overhead is measured, not assumed (BENCH_http.json).
+    if args.flag_bool("http") {
+        if args.flag("pipeline").is_some() {
+            bail!("--http benches the rational registry; use serve-http --pipeline to serve one");
+        }
+        if autotune {
+            bail!("--http and --autotune are mutually exclusive (autotune in-process first)");
+        }
+        let shards = args.flag_usize("shards", 2)?.max(1);
+        cfg.models = serve_model_specs(args)?;
+        // Same shard count on both sides, so the overhead numbers
+        // measure the transport and nothing else.
+        let inproc = loadgen::run_sharded(&cfg, policy, "in-process", shards)?;
+        let http_res = loadgen::run_http(&cfg, policy, "loopback-http", shards)?;
+        print!("{}", report::serve_http(&inproc, &http_res, shards));
+        let out = args.flag_str("out", "BENCH_http.json");
+        let json = loadgen::http_bench_json(&cfg, &inproc, &http_res, shards);
+        std::fs::write(out, json.to_string()).with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+        return Ok(());
+    }
+    // Repo rule: no silently-dead flags (--shards shards the HTTP bench
+    // and serve-http; the in-process bench paths are single-server).
+    if args.flag("shards").is_some() {
+        bail!("--shards only applies with --http (or the serve-http command)");
+    }
     // Autotune sweep grid: the defaults plus any explicitly requested
     // policy point, so --max-batch / --deadline-us are folded into the
     // sweep instead of silently discarded.
@@ -330,6 +362,82 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Stand up the HTTP/JSON serving frontend and run until SIGTERM/SIGINT,
+/// then drain gracefully: `flashkat serve-http --addr A --port P
+/// --shards N [--models ... | --pipeline TAG]`.  `--port 0` binds an
+/// ephemeral port; the bound address is printed (and flushed) so
+/// scripts can scrape it.
+fn cmd_serve_http(args: &Args) -> Result<()> {
+    use flashkat::net::{install_signal_handler, HttpOptions, HttpServer, Limits};
+    use flashkat::serve::{loadgen, BatchPolicy, LoadConfig, ModelExecutor, ModelSpec, Server};
+    use std::io::Write as _;
+    use std::sync::atomic::Ordering;
+
+    let host = args.flag_str("addr", "127.0.0.1");
+    let port = args.flag_u16("port", 8080)?;
+    let shards = args.flag_usize("shards", 2)?.max(1);
+    let policy = BatchPolicy {
+        max_batch: args.flag_usize("max-batch", 64)?.max(1),
+        deadline_us: args.flag_u64("deadline-us", 200)?,
+        queue_depth: args.flag_usize("queue-depth", 1024)?.max(1),
+        eager: !args.flag_bool("no-eager"),
+    };
+    let mut cfg = LoadConfig { seed: args.flag_u64("seed", 7)?, ..Default::default() };
+    let executors: Vec<Box<dyn ModelExecutor>> = if let Some(tag) = args.flag("pipeline") {
+        use flashkat::serve::PipelineExecutor;
+        for f in ["model", "models", "d", "groups"] {
+            if args.flag(f).is_some() {
+                bail!("--{f} only applies to rational registries, not --pipeline");
+            }
+        }
+        let rt = Runtime::cpu(args.flag_str("artifacts", "artifacts"))?;
+        let ex = PipelineExecutor::from_runtime(&rt, tag)?;
+        cfg.models = vec![ModelSpec::new(tag, ex.d_in(), 1)];
+        vec![Box::new(ex)]
+    } else {
+        cfg.models = serve_model_specs(args)?;
+        loadgen::executors(&cfg)?
+    };
+    let n_models = executors.len();
+    let server = std::sync::Arc::new(Server::start_sharded(executors, policy, shards)?);
+    let shards = server.shards(); // clamped to the registry size
+    let opts = HttpOptions {
+        conn_threads: args.flag_usize("conn-threads", 8)?.max(1),
+        backlog: args.flag_usize("backlog", 64)?.max(1),
+        limits: Limits {
+            max_body_bytes: args.flag_usize("max-body-bytes", 8 * 1024 * 1024)?.max(1),
+            ..Default::default()
+        },
+    };
+    let http = HttpServer::bind(&format!("{host}:{port}"), server, opts)?;
+    println!(
+        "listening on http://{} ({n_models} models, {shards} shards, seed {})",
+        http.local_addr(),
+        cfg.seed
+    );
+    println!("routes: POST /v1/models/<name>/infer | GET /v1/models /healthz /metrics");
+    // The bound-port line is scraped by scripts (CI starts us with
+    // --port 0); a piped stdout is block-buffered, so flush explicitly.
+    std::io::stdout().flush().ok();
+
+    let stop = install_signal_handler();
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("signal received; draining in-flight requests...");
+    let stats = http.shutdown().expect("first shutdown collects stats");
+    let total = stats.total();
+    println!(
+        "drained cleanly: {} requests in {} batches ({} failed), peak queue {} across {} shards",
+        total.requests,
+        total.batches,
+        total.failed,
+        stats.peak_queued,
+        stats.shard_peaks.len()
+    );
+    Ok(())
+}
+
 /// Runtime integration check: run the standalone rational kernels through
 /// PJRT and compare against the Rust-side oracle.
 fn cmd_selfcheck(args: &Args) -> Result<()> {
@@ -413,6 +521,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "profile" => cmd_profile(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "serve-http" => cmd_serve_http(&args),
         "selfcheck" => cmd_selfcheck(&args),
         "flops" => {
             print!("{}", report::table1());
@@ -421,7 +530,7 @@ fn main() -> Result<()> {
         "" | "help" | "--help" => {
             println!(
                 "flashkat — FlashKAT reproduction (see DESIGN.md)\n\n\
-                 usage: flashkat <report|train|profile|serve-bench|selfcheck|flops> [flags]\n\
+                 usage: flashkat <report|train|profile|serve-bench|serve-http|selfcheck|flops> [flags]\n\
                  \x20 report <fig1|table1|table2|fig2|fig3|table3|table4|table5|configs|all>\n\
                  \x20 train  [--model kat_micro|vit_micro|kat_micro_katbwd] [--steps N] [--ckpt PATH]\n\
                  \x20 profile [--kernel fwd|kat|flash] [--loops N] [--gpu 4060ti|h200]\n\
@@ -430,8 +539,14 @@ fn main() -> Result<()> {
                  \x20             [--model NAME] [--models name:d[:groups],...] [--d N] [--groups N]\n\
                  \x20             [--pipeline TAG [--artifacts DIR]]  (serve a whole <TAG>_eval model)\n\
                  \x20             [--autotune [--slo-p99-us N]]  (sweep max-batch/deadline vs the SLO)\n\
+                 \x20             [--http [--shards N]]  (also run over loopback HTTP; writes BENCH_http.json)\n\
                  \x20             [--seed N] [--out PATH]\n\
                  \x20             (micro-batching inference bench; writes BENCH_serve.json)\n\
+                 \x20 serve-http [--addr A] [--port P|0] [--shards N] [--conn-threads N]\n\
+                 \x20             [--models name:d[:groups],... | --pipeline TAG] [--max-batch B]\n\
+                 \x20             [--deadline-us D] [--queue-depth N] [--max-body-bytes N] [--seed N]\n\
+                 \x20             (HTTP/JSON frontend; POST /v1/models/<name>/infer, GET /v1/models\n\
+                 \x20              /healthz /metrics; runs until SIGTERM, then drains)\n\
                  \x20 selfcheck [--artifacts DIR]"
             );
             Ok(())

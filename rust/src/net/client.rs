@@ -1,0 +1,129 @@
+//! Thin blocking HTTP/1.1 client over `std::net::TcpStream`.
+//!
+//! Exists for the HTTP loadgen mode, the e2e tests, and
+//! `examples/http_client` — one keep-alive connection per client
+//! thread, mirroring how the closed-loop in-process bench holds one
+//! submitter per thread, so the in-process vs HTTP comparison in
+//! `BENCH_http.json` measures transport overhead rather than
+//! connection-setup overhead.  Not a general-purpose client: no
+//! redirects, no TLS, no chunked bodies — the same scope as the server
+//! side in [`super::http`].
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+/// A response as the client sees it.
+#[derive(Clone, Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    /// Lower-cased header names, wire order.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> std::borrow::Cow<'_, str> {
+        String::from_utf8_lossy(&self.body)
+    }
+}
+
+/// One keep-alive connection.
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+    addr: SocketAddr,
+}
+
+impl HttpClient {
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        // A generous ceiling so a wedged server fails the call instead of
+        // hanging the bench/test forever.
+        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+        Ok(Self { reader: BufReader::new(stream), addr })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<ClientResponse> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post_json(&mut self, path: &str, body: &str) -> Result<ClientResponse> {
+        self.request("POST", path, Some(body.as_bytes()))
+    }
+
+    /// Send one request and read the response off the same connection.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+    ) -> Result<ClientResponse> {
+        let mut head = format!("{method} {path} HTTP/1.1\r\nhost: {}\r\n", self.addr);
+        if body.is_some() {
+            head.push_str("content-type: application/json\r\n");
+        }
+        head.push_str(&format!("content-length: {}\r\n\r\n", body.map_or(0, <[u8]>::len)));
+        let stream = self.reader.get_mut();
+        stream.write_all(head.as_bytes())?;
+        if let Some(body) = body {
+            stream.write_all(body)?;
+        }
+        stream.flush()?;
+        self.read_response()
+    }
+
+    fn read_line(&mut self) -> Result<String> {
+        let mut line = Vec::new();
+        let n = self.reader.read_until(b'\n', &mut line)?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        while line.last().is_some_and(|c| *c == b'\n' || *c == b'\r') {
+            line.pop();
+        }
+        String::from_utf8(line).map_err(|_| anyhow::anyhow!("non-UTF-8 response header"))
+    }
+
+    fn read_response(&mut self) -> Result<ClientResponse> {
+        let status_line = self.read_line()?;
+        let status: u16 = status_line
+            .split_ascii_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("bad status line {status_line:?}"))?;
+        let mut headers = Vec::new();
+        let mut content_length = 0usize;
+        loop {
+            let line = self.read_line()?;
+            if line.is_empty() {
+                break;
+            }
+            let (name, value) = line
+                .split_once(':')
+                .with_context(|| format!("bad response header {line:?}"))?;
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim().to_string();
+            if name == "content-length" {
+                content_length = value
+                    .parse()
+                    .with_context(|| format!("bad content-length {value:?}"))?;
+            }
+            headers.push((name, value));
+        }
+        let mut body = vec![0u8; content_length];
+        io::Read::read_exact(&mut self.reader, &mut body).context("reading response body")?;
+        Ok(ClientResponse { status, headers, body })
+    }
+}

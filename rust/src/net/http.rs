@@ -1,0 +1,643 @@
+//! Minimal HTTP/1.1 framing: request parser and response writer over
+//! any `BufRead`/`Write`, built on `std` only (the crate's
+//! vendored-stubs-only rule extends to the network frontend).
+//!
+//! Scope is exactly what the serving frontend needs — and no more:
+//! request line + headers + `Content-Length` bodies, keep-alive
+//! (HTTP/1.1 default, `Connection` header honored both ways), and hard
+//! resource limits (`431` on an oversized header section, `413` on an
+//! oversized body, `501` on `Transfer-Encoding`, which we do not
+//! implement).  Everything is a pure function of the byte stream, so
+//! the parser is unit-tested on in-memory cursors; only
+//! [`super::listener`] ever hands it a real socket.
+//!
+//! Protocol errors are **data**, not `Err`: [`ReadOutcome::Bad`]
+//! carries the status the connection handler should answer with before
+//! closing, while `Err(io::Error)` is reserved for transport failures
+//! (reset, timeout) where no answer can be delivered.
+
+use std::io::{self, BufRead, Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Hard limits on a single request's wire size and patience.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// Request line + all header lines, bytes (431 above).  Also caps a
+    /// single line's buffer, so a newline-free flood cannot grow memory
+    /// past this (the check fires as 431 once the cap is hit).
+    pub max_header_bytes: usize,
+    /// `Content-Length` ceiling, bytes (413 above).
+    pub max_body_bytes: usize,
+    /// Read-timeout ticks (one per socket `read_timeout` expiry, 50ms
+    /// in the listener) tolerated while waiting for bytes.  An idle
+    /// keep-alive connection is closed after this many silent ticks
+    /// (freeing its handler thread); a stall mid-request is answered
+    /// with `408`.  Bounds how long a do-nothing peer can pin a
+    /// handler.
+    pub max_stall_ticks: usize,
+    /// Wall-clock ceiling on reading one whole request.  The tick
+    /// budget alone would not stop a drip-feeder (1 byte per tick makes
+    /// "progress" forever); this bounds slow-as-possible peers too.
+    /// Mid-request expiry is a `408`.
+    pub max_request_secs: u64,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Self {
+            max_header_bytes: 16 * 1024,
+            max_body_bytes: 8 * 1024 * 1024,
+            // 200 x 50ms = ~10s of patience per silent wait.
+            max_stall_ticks: 200,
+            max_request_secs: 60,
+        }
+    }
+}
+
+/// One parsed request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    /// Request target as sent (path + optional query), percent-decoding
+    /// deliberately not applied (model names are `[A-Za-z0-9_.-]`).
+    pub target: String,
+    /// `true` for HTTP/1.1, `false` for HTTP/1.0.
+    pub http11: bool,
+    /// Header name/value pairs in wire order; names lower-cased.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value by (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the connection should stay open after this exchange:
+    /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
+    /// HTTP/1.0 defaults to close unless `Connection: keep-alive`.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(str::to_ascii_lowercase) {
+            Some(v) if v.contains("close") => false,
+            Some(v) if v.contains("keep-alive") => true,
+            _ => self.http11,
+        }
+    }
+
+    /// Path without the query string.
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or(&self.target)
+    }
+}
+
+/// Result of reading one request off a connection.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// A complete, well-formed request.
+    Ok(Request),
+    /// Clean EOF before the first byte of a request (the peer closed an
+    /// idle keep-alive connection) — not an error.
+    Closed,
+    /// Protocol violation: answer with `status` and close.
+    Bad { status: u16, msg: String },
+}
+
+fn bad(status: u16, msg: impl Into<String>) -> ReadOutcome {
+    ReadOutcome::Bad { status, msg: msg.into() }
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Grace window a read gets once the listener starts draining: long
+/// enough to finish receiving a request already on the wire (which then
+/// gets a real response), short enough to bound shutdown.
+const DRAIN_GRACE: Duration = Duration::from_millis(500);
+
+/// Shared budget for one request's reads: silent timeout ticks against
+/// `max_stall_ticks` AND wall-clock elapsed against the request
+/// deadline — the latter is what stops a drip-feeder whose 1-byte
+/// "progress" would reset any activity-based scheme.  When the
+/// listener's `stop` flag flips, reads are not aborted outright (that
+/// would drop queued connections unanswered); they get [`DRAIN_GRACE`]
+/// to complete, after which exhaustion surfaces like any other timeout:
+/// `ErrorKind::TimedOut`, which the caller maps to a `408` answer
+/// mid-request or a silent close at a request boundary.
+struct Patience<'a> {
+    stop: &'a AtomicBool,
+    ticks: usize,
+    max_ticks: usize,
+    started: Instant,
+    max_elapsed: Duration,
+    /// Set when `stop` is first observed: the drain cutoff.
+    grace_until: Option<Instant>,
+}
+
+impl Patience<'_> {
+    fn new(stop: &AtomicBool, limits: &Limits) -> Patience<'_> {
+        Patience {
+            stop,
+            ticks: 0,
+            max_ticks: limits.max_stall_ticks,
+            started: Instant::now(),
+            max_elapsed: Duration::from_secs(limits.max_request_secs),
+            grace_until: None,
+        }
+    }
+
+    /// Drain grace + wall-clock deadline; called on every read-loop
+    /// iteration, progress or not.
+    fn check(&mut self) -> io::Result<()> {
+        if self.grace_until.is_none() && self.stop.load(Ordering::SeqCst) {
+            self.grace_until = Some(Instant::now() + DRAIN_GRACE);
+        }
+        if self.grace_until.is_some_and(|g| Instant::now() >= g) {
+            return Err(io::Error::new(io::ErrorKind::TimedOut, "drain grace expired"));
+        }
+        if self.started.elapsed() >= self.max_elapsed {
+            return Err(io::Error::new(io::ErrorKind::TimedOut, "request deadline exceeded"));
+        }
+        Ok(())
+    }
+
+    /// Account one *silent* timeout tick; `Err` when the tick budget is
+    /// spent (idle/stalled peer) or [`Self::check`] fails.
+    fn tick(&mut self) -> io::Result<()> {
+        self.check()?;
+        self.ticks += 1;
+        if self.ticks > self.max_ticks {
+            return Err(io::Error::new(io::ErrorKind::TimedOut, "read stalled"));
+        }
+        Ok(())
+    }
+}
+
+/// `read_until` that survives read-timeout ticks (partial bytes stay in
+/// `buf` and the read resumes, so the listener's short socket
+/// `read_timeout` never corrupts parsing) and never buffers more than
+/// `cap` bytes for one line — a newline-free flood stops growing at the
+/// cap and the caller's size check turns it into `431`.
+fn read_line_resumable(
+    r: &mut impl BufRead,
+    buf: &mut Vec<u8>,
+    cap: usize,
+    patience: &mut Patience<'_>,
+) -> io::Result<usize> {
+    let start = buf.len();
+    loop {
+        patience.check()?;
+        let consumed = buf.len() - start;
+        if consumed >= cap {
+            return Ok(consumed);
+        }
+        let mut limited = r.by_ref().take((cap - consumed) as u64);
+        match limited.read_until(b'\n', buf) {
+            // EOF (the cap > 0 here, so 0 bytes cannot mean cap-exhausted).
+            Ok(0) => return Ok(buf.len() - start),
+            Ok(_) => {
+                if buf.last() == Some(&b'\n') {
+                    return Ok(buf.len() - start);
+                }
+                // No newline: the Take hit the cap; the `consumed >= cap`
+                // check at the top of the loop returns the capped line.
+            }
+            Err(e) if is_timeout(&e) => patience.tick()?,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// `read_exact` with the same resume-on-timeout behavior.
+fn read_exact_resumable(
+    r: &mut impl BufRead,
+    out: &mut [u8],
+    patience: &mut Patience<'_>,
+) -> io::Result<()> {
+    let mut off = 0;
+    while off < out.len() {
+        patience.check()?;
+        match r.read(&mut out[off..]) {
+            Ok(0) => return Err(io::ErrorKind::UnexpectedEof.into()),
+            Ok(n) => off += n,
+            Err(e) if is_timeout(&e) => patience.tick()?,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Strip one trailing `\r\n` or `\n` and return the line as UTF-8.
+fn trim_line(buf: &[u8]) -> Result<&str, ReadOutcome> {
+    let mut end = buf.len();
+    if end > 0 && buf[end - 1] == b'\n' {
+        end -= 1;
+        if end > 0 && buf[end - 1] == b'\r' {
+            end -= 1;
+        }
+    }
+    std::str::from_utf8(&buf[..end]).map_err(|_| bad(400, "non-UTF-8 header bytes"))
+}
+
+/// Read and parse one request.  `stop` is the listener's shutdown flag
+/// (a read-timeout tick with `stop` set aborts the read as a transport
+/// error).  The whole request shares one stall budget
+/// ([`Limits::max_stall_ticks`]): a connection idle at a request
+/// boundary is reported `Closed` (the handler just drops it); a stall
+/// *inside* a request is a `408` the handler answers before closing.
+pub fn read_request(
+    r: &mut impl BufRead,
+    limits: &Limits,
+    stop: &AtomicBool,
+) -> io::Result<ReadOutcome> {
+    let mut patience = Patience::new(stop, limits);
+    let line_cap = limits.max_header_bytes + 2;
+    let mut line = Vec::new();
+    let n = match read_line_resumable(r, &mut line, line_cap, &mut patience) {
+        Ok(n) => n,
+        Err(e) if e.kind() == io::ErrorKind::TimedOut => {
+            // Stall budget spent.  Nothing read yet → idle keep-alive
+            // connection: close silently.  Mid-line → a started request
+            // stalled: tell the peer.
+            return Ok(if line.is_empty() {
+                ReadOutcome::Closed
+            } else {
+                bad(408, "request read timed out")
+            });
+        }
+        Err(e) => return Err(e),
+    };
+    if n == 0 {
+        return Ok(ReadOutcome::Closed);
+    }
+    if n > limits.max_header_bytes {
+        return Ok(bad(431, format!("request line over {} bytes", limits.max_header_bytes)));
+    }
+    let mut header_bytes = n;
+    let request_line = match trim_line(&line) {
+        Ok(l) => l.to_string(),
+        Err(b) => return Ok(b),
+    };
+    let mut parts = request_line.split_ascii_whitespace();
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) => (m.to_string(), t.to_string(), v),
+            _ => return Ok(bad(400, format!("malformed request line {request_line:?}"))),
+        };
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        other => return Ok(bad(505, format!("unsupported version {other:?}"))),
+    };
+
+    let mut headers = Vec::new();
+    loop {
+        line.clear();
+        let n = match read_line_resumable(r, &mut line, line_cap, &mut patience) {
+            Ok(n) => n,
+            Err(e) if e.kind() == io::ErrorKind::TimedOut => {
+                return Ok(bad(408, "request read timed out"));
+            }
+            Err(e) => return Err(e),
+        };
+        if n == 0 {
+            return Ok(bad(400, "connection closed inside headers"));
+        }
+        header_bytes += n;
+        if header_bytes > limits.max_header_bytes {
+            return Ok(bad(431, format!("header section over {} bytes", limits.max_header_bytes)));
+        }
+        let text = match trim_line(&line) {
+            Ok(l) => l,
+            Err(b) => return Ok(b),
+        };
+        if text.is_empty() {
+            break;
+        }
+        let Some((name, value)) = text.split_once(':') else {
+            return Ok(bad(400, format!("malformed header line {text:?}")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let mut req = Request { method, target, http11, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        return Ok(bad(501, "transfer-encoding not supported; use content-length"));
+    }
+    let body_len = match req.header("content-length") {
+        None => 0,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => return Ok(bad(400, format!("bad content-length {v:?}"))),
+        },
+    };
+    if body_len > limits.max_body_bytes {
+        return Ok(bad(413, format!("body of {body_len} bytes over {} limit", limits.max_body_bytes)));
+    }
+    if body_len > 0 {
+        let mut body = vec![0u8; body_len];
+        match read_exact_resumable(r, &mut body, &mut patience) {
+            Ok(()) => req.body = body,
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => {
+                return Ok(bad(400, "connection closed inside body"));
+            }
+            Err(e) if e.kind() == io::ErrorKind::TimedOut => {
+                return Ok(bad(408, "request body read timed out"));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(ReadOutcome::Ok(req))
+}
+
+/// One response to serialize.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    /// Extra headers beyond the always-written `Content-Type`,
+    /// `Content-Length`, and `Connection`.
+    pub headers: Vec<(String, String)>,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, body: &crate::util::json::Json) -> Self {
+        Self {
+            status,
+            headers: Vec::new(),
+            content_type: "application/json",
+            body: body.to_string().into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Self {
+        Self {
+            status,
+            headers: Vec::new(),
+            content_type: "text/plain; charset=utf-8",
+            body: body.into().into_bytes(),
+        }
+    }
+
+    pub fn with_header(mut self, name: &str, value: impl Into<String>) -> Self {
+        self.headers.push((name.to_string(), value.into()));
+        self
+    }
+
+    /// Serialize status line, headers, and body.  `keep_alive` decides
+    /// the `Connection` header; the caller closes the stream when false.
+    pub fn write(&self, w: &mut impl Write, keep_alive: bool) -> io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
+            self.status,
+            status_reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        for (name, value) in &self.headers {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Reason phrase for every status this frontend emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn no_stop() -> AtomicBool {
+        AtomicBool::new(false)
+    }
+
+    fn parse(raw: &[u8]) -> ReadOutcome {
+        read_request(&mut Cursor::new(raw.to_vec()), &Limits::default(), &no_stop()).unwrap()
+    }
+
+    fn parse_limited(raw: &[u8], limits: Limits) -> ReadOutcome {
+        read_request(&mut Cursor::new(raw.to_vec()), &limits, &no_stop()).unwrap()
+    }
+
+    #[test]
+    fn parses_post_with_body_and_headers() {
+        let raw = b"POST /v1/models/grkan/infer HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: 11\r\n\r\n{\"rows\": 1}";
+        let ReadOutcome::Ok(req) = parse(raw) else { panic!("want Ok") };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path(), "/v1/models/grkan/infer");
+        assert!(req.http11);
+        assert_eq!(req.header("content-type"), Some("application/json"));
+        assert_eq!(req.header("HOST"), Some("x"), "header lookup is case-insensitive");
+        assert_eq!(req.body, b"{\"rows\": 1}");
+        assert!(req.keep_alive(), "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn parses_get_without_body_and_query() {
+        let raw = b"GET /metrics?verbose=1 HTTP/1.1\r\n\r\n";
+        let ReadOutcome::Ok(req) = parse(raw) else { panic!("want Ok") };
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path(), "/metrics");
+        assert_eq!(req.target, "/metrics?verbose=1");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn bare_lf_lines_are_tolerated() {
+        let raw = b"GET /healthz HTTP/1.1\nHost: x\n\n";
+        let ReadOutcome::Ok(req) = parse(raw) else { panic!("want Ok") };
+        assert_eq!(req.path(), "/healthz");
+    }
+
+    #[test]
+    fn connection_header_overrides_version_default() {
+        let raw = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let ReadOutcome::Ok(req) = parse(raw) else { panic!("want Ok") };
+        assert!(!req.keep_alive());
+        let raw = b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n";
+        let ReadOutcome::Ok(req) = parse(raw) else { panic!("want Ok") };
+        assert!(!req.http11);
+        assert!(req.keep_alive());
+        let raw = b"GET / HTTP/1.0\r\n\r\n";
+        let ReadOutcome::Ok(req) = parse(raw) else { panic!("want Ok") };
+        assert!(!req.keep_alive(), "HTTP/1.0 defaults to close");
+    }
+
+    #[test]
+    fn eof_before_first_byte_is_closed_not_error() {
+        assert!(matches!(parse(b""), ReadOutcome::Closed));
+    }
+
+    #[test]
+    fn malformed_inputs_get_400_class_statuses() {
+        let cases: &[(&[u8], u16)] = &[
+            (b"GARBAGE\r\n\r\n", 400),                                 // no method/target
+            (b"GET / HTTP/2.0\r\n\r\n", 505),                          // unsupported version
+            (b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n", 400),         // bad header line
+            (b"GET / HTTP/1.1\r\nContent-Length: pony\r\n\r\n", 400),  // bad length
+            (b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort", 400), // truncated body
+            (b"GET / HTTP/1.1\r\nHost: x", 400),                       // EOF inside headers
+            (b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 501),
+        ];
+        for (raw, want) in cases {
+            match parse(raw) {
+                ReadOutcome::Bad { status, .. } => {
+                    assert_eq!(status, *want, "input {:?}", String::from_utf8_lossy(raw))
+                }
+                other => panic!("want Bad for {:?}, got {other:?}", String::from_utf8_lossy(raw)),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_header_section_is_431() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend_from_slice(format!("X-Big: {}\r\n\r\n", "v".repeat(200)).as_bytes());
+        let limits = Limits { max_header_bytes: 64, ..Default::default() };
+        match parse_limited(&raw, limits) {
+            ReadOutcome::Bad { status, .. } => assert_eq!(status, 431),
+            other => panic!("want 431, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn newline_free_flood_is_431_not_unbounded_buffering() {
+        // 100KB of request-line bytes with no newline: the per-line cap
+        // stops buffering at max_header_bytes + 2 and reports 431.
+        let raw = vec![b'G'; 100_000];
+        let limits = Limits { max_header_bytes: 1024, ..Default::default() };
+        match parse_limited(&raw, limits) {
+            ReadOutcome::Bad { status, .. } => assert_eq!(status, 431),
+            other => panic!("want 431, got {other:?}"),
+        }
+    }
+
+    /// A reader that yields its prefix, then stalls forever with
+    /// `WouldBlock` — the unit-test stand-in for a silent socket.
+    struct Stall(&'static [u8], usize);
+
+    impl io::Read for Stall {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            if self.1 < self.0.len() {
+                let n = (self.0.len() - self.1).min(out.len());
+                out[..n].copy_from_slice(&self.0[self.1..self.1 + n]);
+                self.1 += n;
+                Ok(n)
+            } else {
+                Err(io::ErrorKind::WouldBlock.into())
+            }
+        }
+    }
+
+    #[test]
+    fn expired_request_deadline_is_reported_not_looped() {
+        // max_request_secs = 0: the wall-clock deadline (the drip-feed
+        // defense) trips at the first check, before any read — proving
+        // the deadline path is wired, without sleeping in the test.
+        let limits = Limits { max_request_secs: 0, ..Default::default() };
+        let mut r = Cursor::new(b"GET / HTTP/1.1\r\n\r\n".to_vec());
+        assert!(matches!(
+            read_request(&mut r, &limits, &no_stop()).unwrap(),
+            ReadOutcome::Closed
+        ));
+    }
+
+    #[test]
+    fn stall_mid_request_is_408_and_idle_stall_is_closed() {
+        let limits = Limits { max_stall_ticks: 3, ..Default::default() };
+        // Bytes arrived, then silence: a started request timed out.
+        let mut r = io::BufReader::new(Stall(b"GET /he", 0));
+        match read_request(&mut r, &limits, &no_stop()).unwrap() {
+            ReadOutcome::Bad { status, .. } => assert_eq!(status, 408),
+            other => panic!("want 408, got {other:?}"),
+        }
+        // Silence from byte zero: just an idle keep-alive connection.
+        let mut r = io::BufReader::new(Stall(b"", 0));
+        assert!(matches!(
+            read_request(&mut r, &limits, &no_stop()).unwrap(),
+            ReadOutcome::Closed
+        ));
+    }
+
+    #[test]
+    fn oversized_body_is_413_without_reading_it() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 1000000\r\n\r\n";
+        let limits = Limits { max_body_bytes: 1024, ..Default::default() };
+        match parse_limited(raw, limits) {
+            ReadOutcome::Bad { status, .. } => assert_eq!(status, 413),
+            other => panic!("want 413, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_writes_framing_and_roundtrips_reason() {
+        let resp = HttpResponse::json(200, &crate::util::json::Json::Obj(vec![]))
+            .with_header("retry-after", "1");
+        let mut out = Vec::new();
+        resp.write(&mut out, true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("content-type: application/json\r\n"), "{text}");
+        assert!(text.contains("content-length: 2\r\n"), "{text}");
+        assert!(text.contains("connection: keep-alive\r\n"), "{text}");
+        assert!(text.contains("retry-after: 1\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{}"), "{text}");
+        let mut out = Vec::new();
+        HttpResponse::text(429, "slow down").write(&mut out, false).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("connection: close\r\n"), "{text}");
+    }
+
+    #[test]
+    fn two_pipelined_requests_parse_in_sequence() {
+        let raw = b"POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET /b HTTP/1.1\r\n\r\n".to_vec();
+        let mut cur = Cursor::new(raw);
+        let stop = no_stop();
+        let ReadOutcome::Ok(a) = read_request(&mut cur, &Limits::default(), &stop).unwrap()
+        else {
+            panic!("first")
+        };
+        assert_eq!((a.path(), a.body.as_slice()), ("/a", b"hi".as_slice()));
+        let ReadOutcome::Ok(b) = read_request(&mut cur, &Limits::default(), &stop).unwrap()
+        else {
+            panic!("second")
+        };
+        assert_eq!(b.path(), "/b");
+        assert!(matches!(
+            read_request(&mut cur, &Limits::default(), &stop).unwrap(),
+            ReadOutcome::Closed
+        ));
+    }
+}

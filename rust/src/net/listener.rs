@@ -1,0 +1,428 @@
+//! Threaded TCP frontend: bounded accept loop + connection-handler pool
+//! around [`router::handle`].
+//!
+//! Thread layout mirrors the serve engine's own structure: one accept
+//! thread pushes connections into a **bounded** hand-off queue, and a
+//! fixed pool of handler threads drains it — so concurrency is capped
+//! by construction, and overload degrades by protocol (the accept
+//! thread answers `503` itself when the hand-off queue is full, and a
+//! full *admission* queue inside the serve engine becomes `429` via
+//! `try_submit`) instead of by unbounded thread growth.  The crate's
+//! persistent worker pool (`util::parallel`, DESIGN.md §7) is a
+//! join-on-submit compute pool and deliberately not reused here:
+//! connections are long-lived I/O waits, which would wedge compute
+//! capacity; executors keep using that pool *inside* batches.
+//!
+//! **Graceful drain** ([`HttpServer::shutdown`], also triggered by
+//! SIGTERM/SIGINT via [`install_signal_handler`]): stop accepting,
+//! finish every in-flight request, close keep-alive connections at the
+//! next request boundary, join all threads, then drain the serve engine
+//! itself (`Server::shutdown`) so every admitted request is answered —
+//! never dropped.  Sockets carry a short read timeout so reads observe
+//! the shutdown flag promptly; a read in progress then gets a short
+//! grace window (`http::DRAIN_GRACE`) to finish receiving its request —
+//! which is answered before the connection closes — while idle
+//! keep-alive connections are simply dropped.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::http::{read_request, HttpResponse, Limits, ReadOutcome};
+use super::router::{handle, HttpMetrics};
+use crate::serve::{ServeStats, Server};
+
+/// Frontend tuning knobs.
+#[derive(Clone, Debug)]
+pub struct HttpOptions {
+    /// Connection-handler threads (max concurrent connections).
+    pub conn_threads: usize,
+    /// Accepted-but-unclaimed connections the accept thread may hold
+    /// before answering `503` itself.
+    pub backlog: usize,
+    pub limits: Limits,
+}
+
+impl Default for HttpOptions {
+    fn default() -> Self {
+        Self { conn_threads: 8, backlog: 64, limits: Limits::default() }
+    }
+}
+
+/// Bounded blocking FIFO hand-off queue (accept thread → handler pool).
+struct ConnQueue {
+    q: Mutex<std::collections::VecDeque<TcpStream>>,
+    ready: Condvar,
+    cap: usize,
+}
+
+impl ConnQueue {
+    /// Enqueue, or hand the stream back when the queue is at capacity
+    /// so the caller can answer `503` on it.
+    fn push(&self, stream: TcpStream) -> std::result::Result<(), TcpStream> {
+        let mut q = self.q.lock().unwrap();
+        if q.len() >= self.cap {
+            return Err(stream);
+        }
+        q.push_back(stream);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Pop with a timeout so handlers can observe shutdown.
+    fn pop(&self, timeout: Duration) -> Option<TcpStream> {
+        let mut q = self.q.lock().unwrap();
+        if q.is_empty() {
+            q = self.ready.wait_timeout(q, timeout).unwrap().0;
+        }
+        q.pop_front()
+    }
+}
+
+pub struct HttpServer {
+    addr: SocketAddr,
+    server: Arc<Server>,
+    metrics: Arc<HttpMetrics>,
+    stop: Arc<AtomicBool>,
+    queue: Arc<ConnQueue>,
+    limits: Limits,
+    threads: Mutex<Option<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (port 0 → ephemeral; see [`Self::local_addr`]) and
+    /// start the accept thread plus the handler pool.
+    pub fn bind(addr: &str, server: Arc<Server>, opts: HttpOptions) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr().context("reading bound address")?;
+        // Nonblocking accept + sleep-poll lets the accept thread observe
+        // the shutdown flag without a self-connect wakeup hack.
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(HttpMetrics::new());
+        let queue = Arc::new(ConnQueue {
+            q: Mutex::new(std::collections::VecDeque::new()),
+            ready: Condvar::new(),
+            cap: opts.backlog.max(1),
+        });
+
+        let mut threads = Vec::with_capacity(opts.conn_threads.max(1) + 1);
+        {
+            let (stop, queue, metrics) = (stop.clone(), queue.clone(), metrics.clone());
+            threads.push(
+                std::thread::Builder::new()
+                    .name("flashkat-http-accept".into())
+                    .spawn(move || accept_loop(&listener, &queue, &stop, &metrics))
+                    .context("spawning accept thread")?,
+            );
+        }
+        for i in 0..opts.conn_threads.max(1) {
+            let (stop_t, queue, metrics) = (stop.clone(), queue.clone(), metrics.clone());
+            let server = server.clone();
+            let limits = opts.limits;
+            let spawned = std::thread::Builder::new()
+                .name(format!("flashkat-http-{i}"))
+                .spawn(move || handler_loop(&queue, &server, &metrics, &limits, &stop_t));
+            match spawned {
+                Ok(handle) => threads.push(handle),
+                Err(e) => {
+                    // Don't leak the accept thread (and the bound port)
+                    // on a partial start: stop and join what exists.
+                    stop.store(true, Ordering::SeqCst);
+                    for t in threads {
+                        let _ = t.join();
+                    }
+                    anyhow::bail!("spawning handler thread {i}: {e}");
+                }
+            }
+        }
+        Ok(HttpServer {
+            addr: local,
+            server,
+            metrics,
+            stop,
+            queue,
+            limits: opts.limits,
+            threads: Mutex::new(Some(threads)),
+        })
+    }
+
+    /// The actually-bound address (resolves `--port 0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> &HttpMetrics {
+        &self.metrics
+    }
+
+    /// The serve engine behind this frontend.
+    pub fn server(&self) -> &Arc<Server> {
+        &self.server
+    }
+
+    /// Graceful drain (idempotent): stop accepting, let in-flight
+    /// requests finish, join every frontend thread, then drain the
+    /// serve engine.  Returns the final [`ServeStats`] on the call that
+    /// performed the engine shutdown.
+    pub fn shutdown(&self) -> Option<ServeStats> {
+        let threads = self.threads.lock().unwrap().take()?;
+        self.stop.store(true, Ordering::SeqCst);
+        for t in threads {
+            let _ = t.join();
+        }
+        // Belt-and-braces: answer any connection that was accepted but
+        // never claimed by a handler (all handlers may race out through
+        // the idle path at the instant of shutdown).
+        while let Some(stream) = self.queue.pop(Duration::from_millis(1)) {
+            handle_connection(stream, &self.server, &self.metrics, &self.limits, &self.stop);
+        }
+        self.server.shutdown()
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    queue: &ConnQueue,
+    stop: &AtomicBool,
+    metrics: &HttpMetrics,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                metrics.connections.fetch_add(1, Ordering::Relaxed);
+                if let Err(mut stream) = queue.push(stream) {
+                    // Hand-off queue full: shed at the door with a 503
+                    // instead of queueing unboundedly or hanging the peer.
+                    metrics.count(503);
+                    let _ = HttpResponse::text(503, "connection backlog full\n")
+                        .with_header("retry-after", "1")
+                        .write(&mut stream, false);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn handler_loop(
+    queue: &ConnQueue,
+    server: &Server,
+    metrics: &HttpMetrics,
+    limits: &Limits,
+    stop: &AtomicBool,
+) {
+    loop {
+        let Some(stream) = queue.pop(Duration::from_millis(50)) else {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            continue;
+        };
+        handle_connection(stream, server, metrics, limits, stop);
+        if stop.load(Ordering::SeqCst) {
+            // Drain what is already queued before exiting, so accepted
+            // connections are answered, not abandoned.
+            while let Some(stream) = queue.pop(Duration::from_millis(1)) {
+                handle_connection(stream, server, metrics, limits, stop);
+            }
+            return;
+        }
+    }
+}
+
+/// Serve one connection until close, protocol error, or drain.
+fn handle_connection(
+    stream: TcpStream,
+    server: &Server,
+    metrics: &HttpMetrics,
+    limits: &Limits,
+    stop: &AtomicBool,
+) {
+    stream.set_nodelay(true).ok();
+    // Short read timeout: idle keep-alive connections poll the shutdown
+    // flag at this cadence (the parser resumes across timeout ticks).
+    stream.set_read_timeout(Some(Duration::from_millis(50))).ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let outcome = match read_request(&mut reader, limits, stop) {
+            Ok(o) => o,
+            Err(_) => return, // transport failure / drain tick: nothing to answer
+        };
+        match outcome {
+            ReadOutcome::Closed => return,
+            ReadOutcome::Bad { status, msg } => {
+                // Framing is broken; answer and close rather than guess
+                // where the next request starts.
+                metrics.count(status);
+                let resp = HttpResponse::json(
+                    status,
+                    &crate::util::json::Json::Obj(vec![(
+                        "error".to_string(),
+                        crate::util::json::Json::Str(msg),
+                    )]),
+                );
+                let _ = resp.write(&mut writer, false);
+                return;
+            }
+            ReadOutcome::Ok(req) => {
+                let resp = handle(&req, server, metrics);
+                metrics.count(resp.status);
+                // During drain, finish this response but close the
+                // connection so the handler can exit.
+                let keep = req.keep_alive() && !stop.load(Ordering::SeqCst);
+                if resp.write(&mut writer, keep).is_err() || !keep {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Install a process-wide SIGTERM/SIGINT handler that flips the
+/// returned flag (for `flashkat serve-http`'s run-until-signaled loop).
+/// Zero-dependency: `std` already links libc on unix, so declaring
+/// `signal(2)` ourselves adds nothing to the dependency graph.  The
+/// handler only stores to an atomic, which is async-signal-safe.
+/// On non-unix targets this is a no-op and the flag never flips.
+pub fn install_signal_handler() -> &'static AtomicBool {
+    static FLAG: AtomicBool = AtomicBool::new(false);
+    #[cfg(unix)]
+    {
+        extern "C" fn on_signal(_sig: i32) {
+            FLAG.store(true, Ordering::SeqCst);
+        }
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_signal as extern "C" fn(i32) as usize);
+            signal(SIGINT, on_signal as extern "C" fn(i32) as usize);
+        }
+    }
+    &FLAG
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::client::HttpClient;
+    use crate::rational::{forward, Coeffs};
+    use crate::serve::{BatchPolicy, RationalExecutor};
+    use crate::util::json::Json;
+    use crate::util::rng::Pcg64;
+
+    const D: usize = 16;
+
+    fn start() -> (HttpServer, Coeffs<f32>) {
+        let mut rng = Pcg64::new(81);
+        let coeffs = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+        let server = Arc::new(
+            Server::start(
+                vec![Box::new(RationalExecutor::new("grkan", D, coeffs.clone()).unwrap())],
+                BatchPolicy::default(),
+            )
+            .unwrap(),
+        );
+        let http = HttpServer::bind("127.0.0.1:0", server, HttpOptions::default()).unwrap();
+        (http, coeffs)
+    }
+
+    #[test]
+    fn serves_infer_over_loopback_with_keep_alive() {
+        let (http, coeffs) = start();
+        let mut client = HttpClient::connect(http.local_addr()).unwrap();
+        for i in 0..3u64 {
+            let mut rng = Pcg64::with_stream(81, i);
+            let x: Vec<f32> = (0..D).map(|_| rng.normal_f32()).collect();
+            let want = forward(&x, 1, D, &coeffs);
+            let body = Json::Obj(vec![
+                ("x".to_string(), Json::Arr(x.iter().map(|&v| Json::Num(v as f64)).collect())),
+                ("rows".to_string(), Json::Int(1)),
+            ]);
+            // Same connection across iterations: keep-alive works.
+            let resp = client.post_json("/v1/models/grkan/infer", &body.to_string()).unwrap();
+            assert_eq!(resp.status, 200, "{}", resp.body_str());
+            let parsed = Json::parse(&resp.body_str()).unwrap();
+            let y: Vec<f32> = parsed
+                .get("y")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap() as f32)
+                .collect();
+            assert_eq!(y, want, "request {i}");
+        }
+        let health = client.get("/healthz").unwrap();
+        assert_eq!(health.status, 200);
+        let stats = http.shutdown().expect("first shutdown yields stats");
+        assert_eq!(stats.total().requests, 3);
+        assert!(http.shutdown().is_none(), "idempotent");
+    }
+
+    #[test]
+    fn malformed_request_line_gets_400_and_close() {
+        let (http, _) = start();
+        use std::io::{Read, Write};
+        let mut raw = std::net::TcpStream::connect(http.local_addr()).unwrap();
+        raw.write_all(b"NONSENSE\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        raw.read_to_string(&mut buf).unwrap(); // server closes after answering
+        assert!(buf.starts_with("HTTP/1.1 400 "), "{buf}");
+        assert_eq!(http.metrics().status_count(400), 1);
+        http.shutdown();
+    }
+
+    #[test]
+    fn drain_finishes_inflight_then_refuses_new_connections() {
+        let (http, coeffs) = start();
+        let addr = http.local_addr();
+        let mut client = HttpClient::connect(addr).unwrap();
+        let mut rng = Pcg64::with_stream(81, 99);
+        let x: Vec<f32> = (0..D).map(|_| rng.normal_f32()).collect();
+        let want = forward(&x, 1, D, &coeffs);
+        let body = Json::Obj(vec![
+            ("x".to_string(), Json::Arr(x.iter().map(|&v| Json::Num(v as f64)).collect())),
+            ("rows".to_string(), Json::Int(1)),
+        ])
+        .to_string();
+        let resp = client.post_json("/v1/models/grkan/infer", &body).unwrap();
+        assert_eq!(resp.status, 200);
+        let parsed = Json::parse(&resp.body_str()).unwrap();
+        let y: Vec<f32> =
+            parsed.get("y").unwrap().as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+        assert_eq!(y, want);
+
+        let stats = http.shutdown().expect("stats");
+        assert_eq!(stats.total().requests, 1);
+        // After drain: either the connect is refused or the engine
+        // answers 503 — never a served request.
+        if let Ok(mut c) = HttpClient::connect(addr) {
+            match c.post_json("/v1/models/grkan/infer", &body) {
+                Ok(resp) => assert_ne!(resp.status, 200),
+                Err(_) => {} // connection refused/reset: equally fine
+            }
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Network serving frontend: a zero-dependency HTTP/1.1 + JSON layer in
+//! front of the sharded [`crate::serve::Server`] (DESIGN.md §12).
+//!
+//! FlashKAT's thesis — wall-clock cost is coordination overhead, not
+//! FLOPs — shaped this subsystem the same way it shaped the kernel and
+//! the batcher: the frontend's job is to move untrusted bytes onto the
+//! serve engine's admission queue with bounded, measurable overhead, and
+//! to surface every internal limit as protocol (queue full → `429
+//! Retry-After`, oversized body → `413`, drain → `503`), never as an
+//! unbounded wait.  Four layers, each testable on its own:
+//!
+//! - [`http`] — HTTP/1.1 framing over any `BufRead`/`Write`: parser +
+//!   response writer, keep-alive, size limits.  Pure byte-stream logic.
+//! - [`client`] — a thin blocking client (loadgen HTTP mode, e2e tests,
+//!   `examples/http_client`).
+//! - [`router`] — request → response mapping onto a [`crate::serve::Server`]:
+//!   `POST /v1/models/{name}/infer`, `GET /v1/models`, `GET /healthz`,
+//!   `GET /metrics` (Prometheus text from the live stats snapshot).
+//! - [`listener`] — the threaded frontend: bounded accept loop, fixed
+//!   handler pool, graceful drain, SIGTERM/SIGINT hook.
+
+pub mod client;
+pub mod http;
+pub mod listener;
+pub mod router;
+
+pub use client::{ClientResponse, HttpClient};
+pub use http::{HttpResponse, Limits, Request};
+pub use listener::{install_signal_handler, HttpOptions, HttpServer};
+pub use router::HttpMetrics;

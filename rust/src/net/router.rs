@@ -1,0 +1,433 @@
+//! Route parsed HTTP requests onto a [`Server`] and render responses.
+//!
+//! Pure request → response mapping (no sockets, no threads), so every
+//! route is unit-testable against an in-process server.  Endpoints:
+//!
+//! - `POST /v1/models/{name}/infer` — JSON `{"x": [f32...], "rows": N}`
+//!   (`rows` optional: defaults to `x.len() / d_in`).  Admission uses
+//!   [`Server::try_submit`], so a saturated shard queue is **shed** as
+//!   `429 Too Many Requests` + `Retry-After` instead of stalling the
+//!   connection handler — backpressure surfaces at the protocol layer.
+//!   Success returns `{"y": [...], "batch_size": B, "cause": "..."}`.
+//! - `GET /v1/models` — registry metadata (name, widths, shard).
+//! - `GET /healthz` — liveness probe.
+//! - `GET /metrics` — Prometheus text: HTTP status counters plus the
+//!   server's live per-model [`crate::serve::ExecStats`] snapshot.
+//!
+//! Float fidelity: request/response payloads round-trip f32 values
+//! bit-exactly — f32 → f64 is exact, the JSON writer emits the shortest
+//! round-trip decimal for the f64, and the parser rounds it back to the
+//! identical f64, so `(sent f32) == (received f32)` for every finite
+//! value (`tests/http_e2e.rs` asserts this end to end).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::http::{HttpResponse, Request};
+use crate::serve::{Server, SubmitError};
+use crate::util::json::Json;
+
+/// Every status the frontend emits, in reporting order.
+pub const TRACKED_STATUSES: [u16; 12] =
+    [200, 400, 404, 405, 408, 413, 429, 431, 500, 501, 503, 505];
+
+/// HTTP-layer counters (the serve-layer counters live in
+/// [`crate::serve::ServeStats`] and are scraped live).
+#[derive(Default)]
+pub struct HttpMetrics {
+    /// Indexed like [`TRACKED_STATUSES`]; the last slot catches unknowns.
+    statuses: [AtomicU64; TRACKED_STATUSES.len() + 1],
+    pub connections: AtomicU64,
+}
+
+impl HttpMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one response by status code.
+    pub fn count(&self, status: u16) {
+        let idx = TRACKED_STATUSES
+            .iter()
+            .position(|&s| s == status)
+            .unwrap_or(TRACKED_STATUSES.len());
+        self.statuses[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Responses recorded for `status` so far.
+    pub fn status_count(&self, status: u16) -> u64 {
+        let idx = TRACKED_STATUSES
+            .iter()
+            .position(|&s| s == status)
+            .unwrap_or(TRACKED_STATUSES.len());
+        self.statuses[idx].load(Ordering::Relaxed)
+    }
+}
+
+fn error_json(status: u16, msg: &str) -> HttpResponse {
+    HttpResponse::json(
+        status,
+        &Json::Obj(vec![("error".to_string(), Json::Str(msg.to_string()))]),
+    )
+}
+
+/// Map one request to its response.  The caller (listener or test)
+/// records `resp.status` into `metrics` afterwards, so parse-level
+/// failures it generates itself are counted through the same funnel.
+pub fn handle(req: &Request, server: &Server, metrics: &HttpMetrics) -> HttpResponse {
+    let segments: Vec<&str> = req.path().split('/').filter(|s| !s.is_empty()).collect();
+    match segments.as_slice() {
+        ["healthz"] => match req.method.as_str() {
+            "GET" => HttpResponse::text(200, "ok\n"),
+            _ => error_json(405, "healthz supports GET"),
+        },
+        ["metrics"] => match req.method.as_str() {
+            "GET" => HttpResponse::text(200, render_metrics(server, metrics)),
+            _ => error_json(405, "metrics supports GET"),
+        },
+        ["v1", "models"] => match req.method.as_str() {
+            "GET" => HttpResponse::json(200, &models_json(server)),
+            _ => error_json(405, "models supports GET"),
+        },
+        ["v1", "models", name, "infer"] => match req.method.as_str() {
+            "POST" => infer(req, server, name),
+            _ => error_json(405, "infer supports POST"),
+        },
+        _ => error_json(404, &format!("no route for {}", req.path())),
+    }
+}
+
+fn models_json(server: &Server) -> Json {
+    let models: Vec<Json> = server
+        .models()
+        .iter()
+        .map(|m| {
+            Json::Obj(vec![
+                ("name".to_string(), Json::Str(m.name.clone())),
+                ("d_in".to_string(), Json::Int(m.d_in as i64)),
+                ("d_out".to_string(), Json::Int(m.d_out as i64)),
+                ("shard".to_string(), Json::Int(m.shard as i64)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("models".to_string(), Json::Arr(models)),
+        ("shards".to_string(), Json::Int(server.shards() as i64)),
+    ])
+}
+
+fn infer(req: &Request, server: &Server, name: &str) -> HttpResponse {
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => return error_json(400, "body is not UTF-8"),
+    };
+    let body = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => return error_json(400, &format!("bad JSON body: {e}")),
+    };
+    let Some(x_json) = body.get("x").and_then(Json::as_arr) else {
+        return error_json(400, "body needs an \"x\" array of numbers");
+    };
+    let mut x = Vec::with_capacity(x_json.len());
+    for v in x_json {
+        // Finite in f32, not just f64: 1e999 parses to f64 infinity and
+        // 1e300 overflows the f32 cast — both would silently corrupt the
+        // model input, and JSON could not carry them back out anyway.
+        let f = v.as_f64().map(|f| f as f32);
+        match f {
+            Some(f) if f.is_finite() => x.push(f),
+            _ => return error_json(400, "\"x\" must contain only finite numbers"),
+        }
+    }
+    let rows = match body.get("rows") {
+        None => {
+            // Default: one request = x.len()/d_in rows of the target
+            // model (validated below by the server's shape check; an
+            // unknown model still 404s first).
+            let Some(idx) = server.model_index(name) else {
+                return error_json(404, &format!("unknown model {name:?}"));
+            };
+            let d_in = server.models()[idx as usize].d_in;
+            if x.is_empty() || x.len() % d_in != 0 {
+                return error_json(
+                    400,
+                    &format!("x has {} values, not a positive multiple of d_in={d_in}", x.len()),
+                );
+            }
+            (x.len() / d_in) as u32
+        }
+        // rows >= 1: a 0-row request would pass the server's shape check
+        // (0 == 0 * d_in) and burn a queue slot + an executor wakeup on
+        // a no-op, which the empty-`x` default path already rejects.
+        Some(v) => match v.as_usize().and_then(|n| u32::try_from(n).ok()) {
+            Some(n) if n > 0 => n,
+            _ => return error_json(400, "\"rows\" must be a positive integer"),
+        },
+    };
+    match server.try_submit(name, x, rows) {
+        Ok(resp) => {
+            // JSON numbers cannot carry NaN/inf (the writer would emit
+            // null and the documented bit-identity would silently
+            // break); a model emitting them is a server-side fault.
+            if resp.y.iter().any(|v| !v.is_finite()) {
+                return error_json(500, "model produced non-finite values");
+            }
+            let y: Vec<Json> = resp.y.iter().map(|&v| Json::Num(v as f64)).collect();
+            HttpResponse::json(
+                200,
+                &Json::Obj(vec![
+                    ("y".to_string(), Json::Arr(y)),
+                    ("batch_size".to_string(), Json::Int(resp.batch_size as i64)),
+                    ("cause".to_string(), Json::Str(resp.cause.label().to_string())),
+                ]),
+            )
+        }
+        Err(SubmitError::QueueFull { queue_depth }) => error_json(
+            429,
+            &format!("admission queue full (depth {queue_depth}); retry shortly"),
+        )
+        .with_header("retry-after", "1"),
+        Err(SubmitError::ShuttingDown) => error_json(503, "server is draining"),
+        Err(e @ SubmitError::ResponseTimeout) => {
+            error_json(503, &e.to_string()).with_header("retry-after", "1")
+        }
+        Err(SubmitError::UnknownModel(what)) => {
+            error_json(404, &format!("unknown model {what}"))
+        }
+        Err(SubmitError::BadRequest(msg)) => error_json(400, &msg),
+        Err(SubmitError::Failed(msg)) => error_json(500, &msg),
+    }
+}
+
+/// Prometheus label-value escaping: `\` → `\\`, `"` → `\"`, newline →
+/// `\n`.  Model names are free-form registry strings, so emitting them
+/// raw could make the whole exposition unparseable to a scraper.
+fn prom_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Prometheus text exposition: HTTP counters + the live serve snapshot.
+fn render_metrics(server: &Server, metrics: &HttpMetrics) -> String {
+    let mut out = String::new();
+    out.push_str("# TYPE flashkat_http_requests_total counter\n");
+    for &status in &TRACKED_STATUSES {
+        let n = metrics.status_count(status);
+        if n > 0 {
+            out.push_str(&format!(
+                "flashkat_http_requests_total{{code=\"{status}\"}} {n}\n"
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "# TYPE flashkat_http_connections_total counter\nflashkat_http_connections_total {}\n",
+        metrics.connections.load(Ordering::Relaxed)
+    ));
+    let stats = server.stats();
+    for (metric, help) in [
+        ("flashkat_serve_requests_total", "requests served per model"),
+        ("flashkat_serve_rows_total", "rows served per model"),
+        ("flashkat_serve_batches_total", "coalesced batches per model"),
+        ("flashkat_serve_failed_total", "requests failed in the executor per model"),
+    ] {
+        out.push_str(&format!("# HELP {metric} {help}\n# TYPE {metric} counter\n"));
+        for m in &stats.per_model {
+            let v = match metric {
+                "flashkat_serve_requests_total" => m.stats.requests,
+                "flashkat_serve_rows_total" => m.stats.rows,
+                "flashkat_serve_batches_total" => m.stats.batches,
+                _ => m.stats.failed,
+            };
+            out.push_str(&format!("{metric}{{model=\"{}\"}} {v}\n", prom_escape(&m.name)));
+        }
+    }
+    out.push_str("# TYPE flashkat_serve_busy_seconds_total counter\n");
+    for m in &stats.per_model {
+        out.push_str(&format!(
+            "flashkat_serve_busy_seconds_total{{model=\"{}\"}} {}\n",
+            prom_escape(&m.name),
+            m.stats.busy_secs
+        ));
+    }
+    out.push_str("# TYPE flashkat_serve_peak_queued gauge\n");
+    for (s, peak) in stats.shard_peaks.iter().enumerate() {
+        out.push_str(&format!("flashkat_serve_peak_queued{{shard=\"{s}\"}} {peak}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rational::{forward, Coeffs};
+    use crate::serve::{BatchPolicy, RationalExecutor};
+    use crate::util::rng::Pcg64;
+
+    const D: usize = 16;
+
+    fn test_server() -> (Server, Coeffs<f32>) {
+        let mut rng = Pcg64::new(71);
+        let coeffs = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+        let server = Server::start(
+            vec![Box::new(RationalExecutor::new("grkan", D, coeffs.clone()).unwrap())],
+            BatchPolicy::default(),
+        )
+        .unwrap();
+        (server, coeffs)
+    }
+
+    fn post(server: &Server, path: &str, body: &str) -> HttpResponse {
+        let req = Request {
+            method: "POST".to_string(),
+            target: path.to_string(),
+            http11: true,
+            headers: vec![],
+            body: body.as_bytes().to_vec(),
+        };
+        handle(&req, server, &HttpMetrics::new())
+    }
+
+    fn get(server: &Server, path: &str, metrics: &HttpMetrics) -> HttpResponse {
+        let req = Request {
+            method: "GET".to_string(),
+            target: path.to_string(),
+            http11: true,
+            headers: vec![],
+            body: vec![],
+        };
+        handle(&req, server, metrics)
+    }
+
+    #[test]
+    fn infer_round_trips_bit_identically() {
+        let (server, coeffs) = test_server();
+        let mut rng = Pcg64::new(72);
+        let x: Vec<f32> = (0..2 * D).map(|_| rng.normal_f32()).collect();
+        let want = forward(&x, 2, D, &coeffs);
+        let body = Json::Obj(vec![
+            ("x".to_string(), Json::Arr(x.iter().map(|&v| Json::Num(v as f64)).collect())),
+            ("rows".to_string(), Json::Int(2)),
+        ]);
+        let resp = post(&server, "/v1/models/grkan/infer", &body.to_string());
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let parsed = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let y: Vec<f32> = parsed
+            .get("y")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(y, want, "HTTP JSON round trip must be bit-exact");
+        assert!(parsed.get("batch_size").unwrap().as_usize().unwrap() >= 1);
+        assert!(parsed.get("cause").unwrap().as_str().is_some());
+    }
+
+    #[test]
+    fn infer_rows_defaults_to_payload_height() {
+        let (server, coeffs) = test_server();
+        let x: Vec<f32> = (0..3 * D).map(|i| i as f32 * 0.125).collect();
+        let want = forward(&x, 3, D, &coeffs);
+        let body = Json::Obj(vec![(
+            "x".to_string(),
+            Json::Arr(x.iter().map(|&v| Json::Num(v as f64)).collect()),
+        )]);
+        let resp = post(&server, "/v1/models/grkan/infer", &body.to_string());
+        assert_eq!(resp.status, 200);
+        let parsed = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let y: Vec<f32> =
+            parsed.get("y").unwrap().as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect();
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn infer_failures_map_to_http_statuses() {
+        let (server, _) = test_server();
+        // Malformed JSON → 400.
+        assert_eq!(post(&server, "/v1/models/grkan/infer", "{\"x\":").status, 400);
+        // Missing x → 400.
+        assert_eq!(post(&server, "/v1/models/grkan/infer", "{\"rows\":1}").status, 400);
+        // Non-numeric x → 400.
+        assert_eq!(post(&server, "/v1/models/grkan/infer", "{\"x\":[\"a\"]}").status, 400);
+        // Non-finite x → 400: f64 overflow (1e999 → inf) and f32
+        // overflow (1e300 → inf after the cast) are both rejected.
+        assert_eq!(post(&server, "/v1/models/grkan/infer", "{\"x\":[1e999]}").status, 400);
+        assert_eq!(post(&server, "/v1/models/grkan/infer", "{\"x\":[1e300]}").status, 400);
+        // Shape mismatch → 400 (server-side check).
+        assert_eq!(post(&server, "/v1/models/grkan/infer", "{\"x\":[1,2],\"rows\":1}").status, 400);
+        // Zero rows → 400 (would otherwise be a queue-slot-burning no-op).
+        assert_eq!(post(&server, "/v1/models/grkan/infer", "{\"x\":[],\"rows\":0}").status, 400);
+        // Unknown model → 404, with and without explicit rows.
+        assert_eq!(post(&server, "/v1/models/nope/infer", "{\"x\":[1],\"rows\":1}").status, 404);
+        assert_eq!(post(&server, "/v1/models/nope/infer", "{\"x\":[1]}").status, 404);
+        // Unknown route → 404; wrong method → 405.
+        assert_eq!(post(&server, "/v1/other", "{}").status, 404);
+        assert_eq!(post(&server, "/healthz", "").status, 405);
+        // Draining server → 503.
+        server.shutdown();
+        let ok_body = format!(
+            "{{\"x\":[{}],\"rows\":1}}",
+            vec!["0"; D].join(",")
+        );
+        assert_eq!(post(&server, "/v1/models/grkan/infer", &ok_body).status, 503);
+    }
+
+    #[test]
+    fn models_healthz_and_metrics_render() {
+        let (server, _) = test_server();
+        let metrics = HttpMetrics::new();
+        assert_eq!(get(&server, "/healthz", &metrics).status, 200);
+        let models = get(&server, "/v1/models", &metrics);
+        assert_eq!(models.status, 200);
+        let parsed = Json::parse(std::str::from_utf8(&models.body).unwrap()).unwrap();
+        let list = parsed.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(list.len(), 1);
+        assert_eq!(list[0].get("name").unwrap().as_str(), Some("grkan"));
+        assert_eq!(list[0].get("d_in").unwrap().as_usize(), Some(D));
+
+        // Serve one request, then the scrape must show it.
+        let ok_body = format!("{{\"x\":[{}],\"rows\":1}}", vec!["0"; D].join(","));
+        assert_eq!(post(&server, "/v1/models/grkan/infer", &ok_body).status, 200);
+        metrics.count(200);
+        let scrape = get(&server, "/metrics", &metrics);
+        assert_eq!(scrape.status, 200);
+        let text = String::from_utf8(scrape.body).unwrap();
+        assert!(text.contains("flashkat_http_requests_total{code=\"200\"} 1"), "{text}");
+        assert!(text.contains("flashkat_serve_requests_total{model=\"grkan\"} 1"), "{text}");
+        assert!(text.contains("flashkat_serve_peak_queued{shard=\"0\"}"), "{text}");
+    }
+
+    #[test]
+    fn metrics_counts_unknown_statuses_in_overflow_slot() {
+        let m = HttpMetrics::new();
+        m.count(200);
+        m.count(418); // not tracked: falls into the overflow slot
+        assert_eq!(m.status_count(200), 1);
+        assert_eq!(m.status_count(777), 1, "all unknown statuses share the overflow slot");
+    }
+
+    #[test]
+    fn prometheus_label_values_are_escaped() {
+        assert_eq!(prom_escape("grkan"), "grkan");
+        assert_eq!(prom_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        // End to end: a hostile model name still yields parseable lines.
+        let mut rng = Pcg64::new(73);
+        let coeffs = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+        let server = Server::start(
+            vec![Box::new(RationalExecutor::new("a\"b", D, coeffs).unwrap())],
+            BatchPolicy::default(),
+        )
+        .unwrap();
+        let scrape = get(&server, "/metrics", &HttpMetrics::new());
+        let text = String::from_utf8(scrape.body).unwrap();
+        assert!(text.contains("{model=\"a\\\"b\"}"), "{text}");
+    }
+}

@@ -317,6 +317,46 @@ pub fn serve(
     out
 }
 
+/// HTTP-vs-in-process report: the same workload through both
+/// transports, with the frontend's added latency and throughput cost
+/// called out explicitly (the `BENCH_http.json` acceptance view).
+pub fn serve_http(
+    inproc: &crate::serve::BenchResult,
+    http: &crate::serve::BenchResult,
+    shards: usize,
+) -> String {
+    let mut out = hdr("Serve: loopback HTTP frontend vs in-process submit");
+    out.push_str(&format!("executor shards: {shards}\n"));
+    out.push_str(
+        "transport                  img/s   rows/s   mean-b     p50      p95      p99\n",
+    );
+    for r in [inproc, http] {
+        out.push_str(&format!(
+            "{:<24} {:>8.0} {:>8.0} {:>8.1} {:>7.3}ms {:>7.3}ms {:>7.3}ms\n",
+            r.label,
+            r.throughput_rps,
+            r.rows_per_sec,
+            r.exec.mean_batch(),
+            r.p50_ms,
+            r.p95_ms,
+            r.p99_ms,
+        ));
+    }
+    out.push_str(&format!(
+        "http overhead: p50 {:+.3}ms, p99 {:+.3}ms, throughput {:.2}x of in-process\n",
+        http.p50_ms - inproc.p50_ms,
+        http.p99_ms - inproc.p99_ms,
+        http.throughput_rps / inproc.throughput_rps.max(1e-9),
+    ));
+    if http.errors > 0 || inproc.errors > 0 {
+        out.push_str(&format!(
+            "errors: in-process {}, http {}\n",
+            inproc.errors, http.errors
+        ));
+    }
+    out
+}
+
 /// Autotune report: every swept `(max_batch, deadline_us)` grid point
 /// with its throughput and p99, and the selected policy vs the SLO.
 pub fn serve_autotune(res: &crate::serve::AutotuneResult) -> String {
@@ -469,6 +509,35 @@ mod tests {
         assert!(t.contains("batched") && t.contains("baseline"), "{t}");
         assert!(t.contains("per-model:"), "{t}");
         assert!(t.contains("grkan") && t.contains("kat_micro"), "{t}");
+    }
+
+    #[test]
+    fn serve_http_report_shows_overhead() {
+        use crate::serve::{BenchResult, ExecStats};
+        let mk = |label: &str, rps: f64, p50: f64| BenchResult {
+            label: label.into(),
+            requests: 10,
+            concurrency: 2,
+            max_batch: 8,
+            deadline_us: 200,
+            wall_secs: 0.1,
+            throughput_rps: rps,
+            rows_per_sec: rps * 2.0,
+            mean_ms: p50,
+            p50_ms: p50,
+            p95_ms: p50 * 2.0,
+            p99_ms: p50 * 3.0,
+            max_ms: p50 * 4.0,
+            errors: 0,
+            exec: ExecStats::default(),
+            peak_queued: 1,
+            per_model: vec![],
+        };
+        let t = serve_http(&mk("in-process", 4000.0, 0.5), &mk("loopback-http", 3000.0, 0.8), 2);
+        assert!(t.contains("executor shards: 2"), "{t}");
+        assert!(t.contains("in-process") && t.contains("loopback-http"), "{t}");
+        assert!(t.contains("0.75x"), "{t}");
+        assert!(t.contains("+0.300ms"), "{t}");
     }
 
     #[test]

@@ -212,16 +212,21 @@ pub struct ModelStats {
     pub stats: ExecStats,
 }
 
-/// Everything the executor thread hands back at shutdown: counters split
-/// per model (registry order) plus the queue-wide peak depth, which is a
-/// property of the shared admission queue and therefore not attributable
-/// to any single model.
+/// Server-wide counter snapshot: counters split per model (global
+/// registry order) plus queue-depth peaks, which are properties of the
+/// per-shard admission queues and therefore not attributable to any
+/// single model.  Produced live by `Server::stats` (the `/metrics`
+/// feed) and finally by `Server::shutdown`.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     pub per_model: Vec<ModelStats>,
-    /// Peak admitted-but-unserved count across all buckets — must never
-    /// exceed the policy's `queue_depth` (the backpressure invariant).
+    /// Peak admitted-but-unserved count of the most loaded shard — must
+    /// never exceed the policy's `queue_depth` (the backpressure
+    /// invariant, which holds per shard).
     pub peak_queued: usize,
+    /// Per-shard peak queue depths, shard order; `peak_queued` is their
+    /// max.  A single-shard server has one entry.
+    pub shard_peaks: Vec<usize>,
 }
 
 impl ServeStats {
@@ -325,6 +330,7 @@ mod tests {
                 ModelStats { name: "b".into(), d_in: 4, d_out: 2, stats: b },
             ],
             peak_queued: 5,
+            shard_peaks: vec![5, 2],
         };
         assert_eq!(serve.total(), total);
         assert_eq!(serve.model("a").unwrap().stats, a);

@@ -13,13 +13,19 @@
 //! [`autotune`] layers a policy search on top: sweep a small
 //! `(max_batch, deadline_us)` grid, keep every run's record, and pick
 //! the throughput-optimal policy whose p99 meets the SLO.
+//!
+//! [`run_http`] replays the identical workload over loopback HTTP
+//! (sharded server behind `net::HttpServer`, one keep-alive client per
+//! submitter thread); [`http_bench_json`] pairs it with the in-process
+//! record in `BENCH_http.json` so the frontend's overhead is a measured
+//! number, not a hope.
 
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use super::batcher::{BatchPolicy, FlushCause};
-use super::executor::{ExecStats, ModelExecutor, RationalExecutor};
+use super::executor::{ExecStats, ModelExecutor, RationalExecutor, ServeStats};
 use super::server::Server;
 use crate::rational::Coeffs;
 use crate::util::json::Json;
@@ -236,6 +242,19 @@ pub fn run(cfg: &LoadConfig, policy: BatchPolicy, label: &str) -> Result<BenchRe
     run_with(cfg, executors(cfg)?, policy, label)
 }
 
+/// [`run`] on a server sharded across `shards` executor threads — the
+/// apples-to-apples in-process baseline for [`run_http`] (comparing a
+/// 1-shard in-process run against an N-shard HTTP run would conflate
+/// sharding speedup with transport overhead).
+pub fn run_sharded(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    label: &str,
+    shards: usize,
+) -> Result<BenchResult> {
+    run_with_sharded(cfg, executors(cfg)?, policy, label, shards)
+}
+
 /// Run the workload against caller-provided executors (e.g. a
 /// [`super::PipelineExecutor`] over an AOT artifact).  `cfg.models` must
 /// describe the registry in order: names and widths are cross-checked so
@@ -245,6 +264,17 @@ pub fn run_with(
     executors: Vec<Box<dyn ModelExecutor>>,
     policy: BatchPolicy,
     label: &str,
+) -> Result<BenchResult> {
+    run_with_sharded(cfg, executors, policy, label, 1)
+}
+
+/// [`run_with`] on a sharded server.
+pub fn run_with_sharded(
+    cfg: &LoadConfig,
+    executors: Vec<Box<dyn ModelExecutor>>,
+    policy: BatchPolicy,
+    label: &str,
+    shards: usize,
 ) -> Result<BenchResult> {
     if cfg.requests == 0 || cfg.concurrency == 0 {
         bail!("load config needs at least one request and one client");
@@ -263,21 +293,51 @@ pub fn run_with(
             bail!("model {:?}: spec d={} but executor d_in={}", spec.name, spec.d, ex.d_in());
         }
     }
-    let server = Server::start(executors, policy)?;
+    let server = Server::start_sharded(executors, policy, shards)?;
+    let (wall_secs, per_client) = drive(cfg, || {
+        let server = &server;
+        move |id| {
+            let (model, rows, x) = request(cfg, id);
+            let ts = Instant::now();
+            let outcome = server
+                .submit_at(model as u32, x, rows)
+                .map(|_| ts.elapsed().as_secs_f64())
+                .map_err(|_| ());
+            (model, outcome)
+        }
+    });
+    let stats = server.shutdown().expect("first shutdown");
+    Ok(aggregate(cfg, policy, label, wall_secs, per_client, &stats))
+}
 
+/// The workload driver shared by every transport: fan `cfg.concurrency`
+/// client threads out over the request ids (round-robin partition),
+/// pace open-loop arrivals against one shared epoch, and collect
+/// per-model latency samples.  `make_client` runs once inside each
+/// client thread and returns that thread's submit closure — the
+/// closure generates request `id`'s payload, times its own submission,
+/// and reports `(routed model, Ok(latency_secs) | Err(()))`.  Keeping
+/// pacing/partitioning here is what makes the in-process and HTTP
+/// records comparable by construction: the transports differ only in
+/// the closure.
+fn drive<M, S>(cfg: &LoadConfig, make_client: M) -> (f64, Vec<(Vec<Vec<f64>>, usize)>)
+where
+    M: Fn() -> S + Sync,
+    S: FnMut(u64) -> (usize, std::result::Result<f64, ()>),
+{
     let offsets = match cfg.arrival {
         Arrival::Open { rate_rps } => Some(open_schedule(cfg.requests, rate_rps, cfg.seed)),
         Arrival::Closed => None,
     };
-
     let n_models = cfg.models.len();
     let t0 = Instant::now();
     let per_client: Vec<(Vec<Vec<f64>>, usize)> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..cfg.concurrency)
             .map(|client| {
-                let server = &server;
                 let offsets = offsets.as_deref();
+                let make_client = &make_client;
                 s.spawn(move || {
+                    let mut submit = make_client();
                     let mut lats: Vec<Vec<f64>> = vec![Vec::new(); n_models];
                     let mut errors = 0usize;
                     let mut id = client;
@@ -289,11 +349,10 @@ pub fn run_with(
                                 std::thread::sleep(due - since);
                             }
                         }
-                        let (model, rows, x) = request(cfg, id as u64);
-                        let ts = Instant::now();
-                        match server.submit_at(model as u32, x, rows) {
-                            Ok(_) => lats[model].push(ts.elapsed().as_secs_f64()),
-                            Err(_) => errors += 1,
+                        let (model, outcome) = submit(id as u64);
+                        match outcome {
+                            Ok(latency) => lats[model].push(latency),
+                            Err(()) => errors += 1,
                         }
                         id += cfg.concurrency;
                     }
@@ -303,10 +362,22 @@ pub fn run_with(
             .collect();
         handles.into_iter().map(|h| h.join().expect("client thread")).collect()
     });
-    let wall_secs = t0.elapsed().as_secs_f64().max(1e-9);
-    let stats = server.shutdown().expect("first shutdown");
-    let exec = stats.total();
+    (t0.elapsed().as_secs_f64().max(1e-9), per_client)
+}
 
+/// Fold client-side latency samples and the server's counter snapshot
+/// into one [`BenchResult`] record — shared by the in-process and the
+/// HTTP transports so `BENCH_http.json` compares like with like.
+fn aggregate(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    label: &str,
+    wall_secs: f64,
+    per_client: Vec<(Vec<Vec<f64>>, usize)>,
+    stats: &ServeStats,
+) -> BenchResult {
+    let n_models = cfg.models.len();
+    let exec = stats.total();
     let mut per_model_lats: Vec<Vec<f64>> = vec![Vec::new(); n_models];
     let mut errors = 0usize;
     for (lats, errs) in &per_client {
@@ -339,7 +410,7 @@ pub fn run_with(
         })
         .collect();
 
-    Ok(BenchResult {
+    BenchResult {
         label: label.to_string(),
         requests: cfg.requests,
         concurrency: cfg.concurrency,
@@ -357,7 +428,133 @@ pub fn run_with(
         exec,
         peak_queued: stats.peak_queued,
         per_model,
-    })
+    }
+}
+
+/// Serialize one infer request body — the HTTP wire encoding of a
+/// `(payload, rows)` pair.
+pub fn infer_body(x: &[f32], rows: u32) -> String {
+    Json::Obj(vec![
+        ("x".to_string(), Json::Arr(x.iter().map(|&v| Json::Num(v as f64)).collect())),
+        ("rows".to_string(), Json::Int(rows as i64)),
+    ])
+    .to_string()
+}
+
+/// JSON infer body for request `id` — the exact payload the in-process
+/// run submits, serialized once per request.
+pub fn http_body(cfg: &LoadConfig, id: u64) -> (usize, String) {
+    let (model, rows, x) = request(cfg, id);
+    (model, infer_body(&x, rows))
+}
+
+/// Run the same seeded workload **over loopback HTTP**: a sharded
+/// server behind `net::HttpServer`, one keep-alive `net::HttpClient`
+/// per submitter thread.  Latencies are measured around the full
+/// serialize → TCP → server parse → admit → respond round trip
+/// (payload *generation* stays outside the window, as in-process;
+/// client-side decoding of `y` is the one cost not included).
+/// Comparing this record against [`run_sharded`]'s at the same shard
+/// count isolates the frontend's overhead.  A `429` (shed load) is
+/// retried after a short backoff — the bench counts only irrecoverable
+/// failures as errors.
+pub fn run_http(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    label: &str,
+    shards: usize,
+) -> Result<BenchResult> {
+    use crate::net::{HttpClient, HttpOptions, HttpServer};
+
+    if cfg.requests == 0 || cfg.concurrency == 0 {
+        bail!("load config needs at least one request and one client");
+    }
+    if cfg.models.is_empty() {
+        bail!("load config needs at least one model spec");
+    }
+    let server = std::sync::Arc::new(Server::start_sharded(executors(cfg)?, policy, shards)?);
+    let http = HttpServer::bind(
+        "127.0.0.1:0",
+        server,
+        HttpOptions { conn_threads: cfg.concurrency.max(1), ..Default::default() },
+    )?;
+    let addr = http.local_addr();
+    let paths: Vec<String> = cfg
+        .models
+        .iter()
+        .map(|m| format!("/v1/models/{}/infer", m.name))
+        .collect();
+
+    let (wall_secs, per_client) = drive(cfg, || {
+        let paths = &paths;
+        let mut conn = HttpClient::connect(addr).ok();
+        move |id| {
+            // Workload generation stays outside the timed window (as in
+            // the in-process run); JSON serialization goes inside — it
+            // is transport cost, and the http_overhead numbers exist to
+            // charge the transport for everything it adds.
+            let (model, rows, x) = request(cfg, id);
+            let ts = Instant::now();
+            let body = infer_body(&x, rows);
+            let mut ok = false;
+            // Bounded 429 retry: shed load is backpressure, not
+            // failure, but a wedged server must not spin the bench
+            // forever.
+            for _attempt in 0..1000 {
+                if conn.is_none() {
+                    match HttpClient::connect(addr) {
+                        Ok(c) => conn = Some(c),
+                        Err(_) => break,
+                    }
+                }
+                let c = conn.as_mut().expect("connection established above");
+                match c.post_json(&paths[model], &body) {
+                    Ok(resp) if resp.status == 200 => {
+                        ok = true;
+                        break;
+                    }
+                    Ok(resp) if resp.status == 429 => {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    Ok(_) => break,
+                    Err(_) => {
+                        // Reconnect once on a broken stream.
+                        conn = None;
+                    }
+                }
+            }
+            (model, if ok { Ok(ts.elapsed().as_secs_f64()) } else { Err(()) })
+        }
+    });
+    let stats = http.shutdown().expect("first shutdown");
+    Ok(aggregate(cfg, policy, label, wall_secs, per_client, &stats))
+}
+
+/// The `BENCH_http.json` artifact: the same workload in-process and over
+/// loopback HTTP, with the frontend's overhead made explicit.
+pub fn http_bench_json(
+    cfg: &LoadConfig,
+    inproc: &BenchResult,
+    http: &BenchResult,
+    shards: usize,
+) -> Json {
+    Json::Obj(vec![
+        ("bench".to_string(), Json::Str("serve_http".to_string())),
+        ("config".to_string(), config_json(cfg)),
+        ("shards".to_string(), Json::Int(shards as i64)),
+        (
+            "http_overhead".to_string(),
+            Json::Obj(vec![
+                ("p50_ms".to_string(), Json::Num(http.p50_ms - inproc.p50_ms)),
+                ("p99_ms".to_string(), Json::Num(http.p99_ms - inproc.p99_ms)),
+                (
+                    "throughput_ratio".to_string(),
+                    Json::Num(http.throughput_rps / inproc.throughput_rps.max(1e-9)),
+                ),
+            ]),
+        ),
+        ("results".to_string(), Json::Arr(vec![inproc.to_json(), http.to_json()])),
+    ])
 }
 
 fn config_json(cfg: &LoadConfig) -> Json {
@@ -561,6 +758,76 @@ mod tests {
         let last = *a.last().unwrap();
         assert!((5_000..400_000).contains(&last), "{last}");
         assert_ne!(a, open_schedule(200, 5000.0, 4));
+    }
+
+    /// The open-loop arrivals really are Poisson-distributed: the mean
+    /// interarrival gap converges to `1/rate` (seeded, so the check is
+    /// exact-reproducible, not flaky), and the exponential shape shows
+    /// up as ~63% of gaps below the mean.
+    #[test]
+    fn open_schedule_poisson_interarrival_mean_matches_rate() {
+        let (n, rate) = (20_000usize, 10_000.0f64);
+        let sched = open_schedule(n, rate, 42);
+        let want_us = 1e6 / rate; // 100 µs
+        let mean_us = *sched.last().unwrap() as f64 / n as f64;
+        assert!(
+            (mean_us - want_us).abs() / want_us < 0.05,
+            "mean interarrival {mean_us:.2}µs vs expected {want_us:.2}µs"
+        );
+        // Exponential(λ): P(gap < mean) = 1 - 1/e ≈ 0.632.
+        let below: usize = sched
+            .windows(2)
+            .filter(|w| ((w[1] - w[0]) as f64) < want_us)
+            .count();
+        let frac = below as f64 / (n - 1) as f64;
+        assert!((frac - 0.632).abs() < 0.03, "sub-mean gap fraction {frac:.3}");
+    }
+
+    /// Identical seeds reproduce identical schedules AND identical
+    /// request payloads — the invariant the HTTP-mode client refactor
+    /// leans on when it compares transports on "the same workload".
+    #[test]
+    fn identical_seeds_reproduce_identical_request_streams() {
+        let cfg = LoadConfig { seed: 9, ..Default::default() };
+        let cfg2 = LoadConfig { seed: 9, ..Default::default() };
+        assert_eq!(open_schedule(64, 2_000.0, cfg.seed), open_schedule(64, 2_000.0, cfg2.seed));
+        for id in 0..32u64 {
+            assert_eq!(request(&cfg, id), request(&cfg2, id), "request {id}");
+            assert_eq!(http_body(&cfg, id), http_body(&cfg2, id), "http body {id}");
+        }
+        let other = LoadConfig { seed: 10, ..Default::default() };
+        assert_ne!(request(&cfg, 0).2, request(&other, 0).2, "different seed, different stream");
+    }
+
+    /// End-to-end HTTP-mode smoke: the loopback run serves everything it
+    /// serves in-process, with the same counters accounting.
+    #[test]
+    fn http_mode_run_serves_the_workload() {
+        let cfg = LoadConfig {
+            requests: 40,
+            concurrency: 4,
+            models: vec![ModelSpec::new("wide", 64, 8), ModelSpec::new("narrow", 16, 4)],
+            ..Default::default()
+        };
+        let res = run_http(
+            &cfg,
+            BatchPolicy { max_batch: 8, ..Default::default() },
+            "http smoke",
+            2,
+        )
+        .unwrap();
+        assert_eq!(res.errors, 0, "all requests served over HTTP");
+        assert_eq!(res.exec.requests, 40);
+        assert_eq!(res.per_model.len(), 2);
+        let served: usize = res.per_model.iter().map(|m| m.served).sum();
+        assert_eq!(served, 40);
+        assert!(res.throughput_rps > 0.0);
+        let j = http_bench_json(&cfg, &res, &res, 2);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("serve_http"));
+        assert_eq!(back.get("shards").unwrap().as_usize(), Some(2));
+        assert!(back.get("http_overhead").unwrap().get("throughput_ratio").is_some());
+        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 2);
     }
 
     #[test]

@@ -17,9 +17,11 @@
 //!   GR-KAN layer (bit-identical to unbatched `rational::forward`),
 //!   [`PipelineExecutor`] serves a whole AOT `<tag>_eval` model through
 //!   the runtime's batched-rows adapter.
-//! - [`server`] — the threaded engine: blocking `submit` routed by model
-//!   name, one executor thread driving batches through the registry,
-//!   drain on shutdown, per-model [`ExecStats`].
+//! - [`server`] — the sharded threaded engine: the registry is
+//!   partitioned across N executor shards (each with its own batcher
+//!   and executor thread), so a slow model cannot head-of-line-block a
+//!   fast one; blocking `submit` / non-blocking `try_submit` routed by
+//!   model name, live per-model [`ExecStats`], drain on shutdown.
 //! - [`loadgen`] — seeded multi-model workload generation, the
 //!   latency/throughput report behind `flashkat serve-bench`, and the
 //!   `(max_batch, deadline_us)` autotune sweep; both persist to the
@@ -35,4 +37,4 @@ pub use executor::{
     ExecStats, ModelExecutor, ModelStats, PipelineExecutor, RationalExecutor, ServeStats,
 };
 pub use loadgen::{Arrival, AutotuneResult, BenchResult, LoadConfig, ModelBench, ModelSpec};
-pub use server::{ModelMeta, Response, Server};
+pub use server::{ModelMeta, Response, Server, SubmitError};

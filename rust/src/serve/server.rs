@@ -1,26 +1,33 @@
-//! Threaded micro-batching inference server over a registry of named
-//! model executors.
+//! Sharded, threaded micro-batching inference server over a registry of
+//! named model executors.
 //!
-//! One executor thread owns the [`Batcher`] and the executor registry:
-//! it coalesces admitted requests into batches keyed by registry index,
+//! The registry is partitioned round-robin across `n_shards` **executor
+//! shards**; each shard owns its own [`Batcher`], admission queue,
+//! condvars, and executor thread, so a slow model's batch (a whole
+//! [`super::PipelineExecutor`] forward, say) can never head-of-line-block
+//! a fast rational model that lives on another shard — the serving-level
+//! image of FlashKAT's "coordination overhead, not FLOPs" lesson.
+//! Within a shard the engine is unchanged: the executor thread coalesces
+//! admitted requests into batches keyed by shard-local registry index,
 //! concatenates their rows into a single buffer, and hands the buffer to
 //! the owning [`ModelExecutor`], so the pool wakeup, the queue
 //! round-trip, and the model-state traffic are paid once per batch
-//! instead of once per request.  The server itself knows nothing about
-//! model internals — a [`super::RationalExecutor`] batch is bit-identical
-//! to unbatched `rational::forward` calls, and a
-//! [`super::PipelineExecutor`] batch is bit-identical to per-request
-//! adapter calls (row independence; DESIGN.md §11).
+//! instead of once per request.  A batched forward stays bit-identical
+//! to its per-request reference (row independence; DESIGN.md §§11-12).
 //!
-//! Requests are routed by model *name* ([`Server::submit`]) or by
+//! Requests are routed by model *name* ([`Server::submit`]) or by global
 //! registry index ([`Server::submit_at`]).  Admission control: `submit`
-//! blocks while the queue is at `queue_depth` (backpressure), then
-//! blocks until its response is computed.  An executor `Err` fails that
-//! batch's requests without taking the server down.  Shutdown stops
-//! admission, drains every pending request, and returns per-model
-//! counters ([`ServeStats`]).
+//! blocks while the shard's queue is at `queue_depth` (backpressure);
+//! [`Server::try_submit`] instead fails fast with the typed
+//! [`SubmitError::QueueFull`], which the HTTP frontend maps to
+//! `429 Retry-After`.  An executor `Err` fails that batch's requests
+//! without taking the server down.  Per-model counters are recorded
+//! live after every batch ([`Server::stats`] — the `/metrics` feed);
+//! shutdown stops admission, drains every pending request, and returns
+//! the final [`ServeStats`].
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -38,14 +45,69 @@ pub struct Response {
     pub cause: FlushCause,
 }
 
+/// Typed submission failure, so callers (the HTTP frontend above all)
+/// can map outcomes to distinct actions without string matching:
+/// `QueueFull` → 429 + Retry-After, `ShuttingDown` → 503,
+/// `UnknownModel` → 404, `BadRequest` → 400, `Failed` → 500.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The target shard's admission queue is at `queue_depth`; the
+    /// request was **not** admitted and may be retried.
+    QueueFull {
+        /// The depth it hit, for Retry-After style hints.
+        queue_depth: usize,
+    },
+    /// Admission is closed; no further request will be served.
+    ShuttingDown,
+    /// No such model name / registry index.
+    UnknownModel(String),
+    /// The request itself is malformed (shape mismatch).
+    BadRequest(String),
+    /// Admitted, but the model's executor failed this batch (or the
+    /// server dropped the response channel).
+    Failed(String),
+    /// Admitted, but the response did not arrive within
+    /// [`TRY_RESPONSE_TIMEOUT`] — the non-blocking path gives its
+    /// caller's thread back instead of waiting out a wedged executor.
+    /// The request itself is still in flight and will be executed.
+    ResponseTimeout,
+}
+
+/// Ceiling on how long [`Server::try_submit`] waits for an admitted
+/// request's response.  Batching delay is deadline-bounded, so this only
+/// triggers on an executor wedged far beyond any sane batch duration —
+/// it exists so a slow model cannot pin every HTTP handler thread
+/// indefinitely (the frontend maps it to `503 Retry-After`).
+pub const TRY_RESPONSE_TIMEOUT: Duration = Duration::from_secs(30);
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull { queue_depth } => {
+                write!(f, "admission queue full (depth {queue_depth})")
+            }
+            SubmitError::ShuttingDown => write!(f, "server is shutting down"),
+            SubmitError::UnknownModel(what) => write!(f, "unknown model {what}"),
+            SubmitError::BadRequest(msg) | SubmitError::Failed(msg) => write!(f, "{msg}"),
+            SubmitError::ResponseTimeout => {
+                write!(f, "timed out waiting for the model's response")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// Immutable registry-entry identity, kept on the shared side so
 /// `submit` can validate and route without touching the executors (which
-/// live on the executor thread).
+/// live on their shard's executor thread).
 #[derive(Clone, Debug)]
 pub struct ModelMeta {
     pub name: String,
     pub d_in: usize,
     pub d_out: usize,
+    /// Executor shard this model is pinned to.
+    pub shard: usize,
 }
 
 struct Job {
@@ -62,13 +124,26 @@ struct State {
     peak_queued: usize,
 }
 
-struct Shared {
+/// One executor shard: its own admission queue, condvars, and live
+/// counters.  The executor thread owns the shard's executors; everything
+/// here is the shared side.
+struct Shard {
     state: Mutex<State>,
     /// Submitters waiting for queue space.
     space: Condvar,
     /// Executor waiting for work or a deadline.
     work: Condvar,
+    /// Live per-executor counters (shard-local registry order), updated
+    /// once per executed batch — the `/metrics` feed.
+    stats: Mutex<Vec<ExecStats>>,
+}
+
+struct Shared {
+    shards: Vec<Shard>,
+    /// Global registry order (= `submit_at` index order).
     meta: Vec<ModelMeta>,
+    /// Global registry index → (shard, shard-local index).
+    route: Vec<(u32, u32)>,
     epoch: Instant,
 }
 
@@ -78,28 +153,48 @@ fn now_us(shared: &Shared) -> u64 {
 
 pub struct Server {
     shared: Arc<Shared>,
-    exec: Mutex<Option<std::thread::JoinHandle<ServeStats>>>,
+    exec: Mutex<Option<Vec<std::thread::JoinHandle<()>>>>,
 }
 
 impl Server {
-    /// Validate the registry, spawn the executor thread, and start
-    /// serving.  Fails (instead of panicking) on an empty registry,
-    /// duplicate model names, or thread-spawn failure.
+    /// Single-shard server: one executor thread drives the whole
+    /// registry (the PR-2/PR-3 behavior, unchanged).
     pub fn start(executors: Vec<Box<dyn ModelExecutor>>, policy: BatchPolicy) -> Result<Server> {
+        Self::start_sharded(executors, policy, 1)
+    }
+
+    /// Validate the registry, partition it round-robin across
+    /// `min(n_shards, registry len)` executor shards, spawn one executor
+    /// thread per shard, and start serving.  Fails (instead of
+    /// panicking) on an empty registry, duplicate model names, or
+    /// thread-spawn failure.  Each shard applies `policy` independently
+    /// (its own batcher and `queue_depth`).
+    pub fn start_sharded(
+        executors: Vec<Box<dyn ModelExecutor>>,
+        policy: BatchPolicy,
+        n_shards: usize,
+    ) -> Result<Server> {
         if executors.is_empty() {
             bail!("server needs at least one executor");
         }
         if executors.len() > u32::MAX as usize {
             bail!("registry too large for ShapeKey's u32 index");
         }
-        let meta: Vec<ModelMeta> = executors
-            .iter()
-            .map(|e| ModelMeta {
+        let n_shards = n_shards.clamp(1, executors.len());
+        let mut meta = Vec::with_capacity(executors.len());
+        let mut route = Vec::with_capacity(executors.len());
+        let mut locals: Vec<u32> = vec![0; n_shards];
+        for (i, e) in executors.iter().enumerate() {
+            let shard = i % n_shards;
+            meta.push(ModelMeta {
                 name: e.name().to_string(),
                 d_in: e.d_in(),
                 d_out: e.d_out(),
-            })
-            .collect();
+                shard,
+            });
+            route.push((shard as u32, locals[shard]));
+            locals[shard] += 1;
+        }
         for (i, m) in meta.iter().enumerate() {
             if m.d_in == 0 || m.d_out == 0 {
                 bail!("model {:?} has degenerate width {}x{}", m.name, m.d_in, m.d_out);
@@ -108,29 +203,64 @@ impl Server {
                 bail!("duplicate model name {:?} in registry", m.name);
             }
         }
-        let shared = Arc::new(Shared {
-            state: Mutex::new(State {
-                batcher: Batcher::new(policy),
-                jobs: BTreeMap::new(),
-                shutdown: false,
-                peak_queued: 0,
-            }),
-            space: Condvar::new(),
-            work: Condvar::new(),
-            meta,
-            epoch: Instant::now(),
-        });
-        let worker = Arc::clone(&shared);
-        let exec = std::thread::Builder::new()
-            .name("flashkat-serve".into())
-            .spawn(move || executor_loop(&worker, executors))
-            .context("spawning serve executor thread")?;
-        Ok(Server { shared, exec: Mutex::new(Some(exec)) })
+        let shards: Vec<Shard> = locals
+            .iter()
+            .map(|&n| Shard {
+                state: Mutex::new(State {
+                    batcher: Batcher::new(policy),
+                    jobs: BTreeMap::new(),
+                    shutdown: false,
+                    peak_queued: 0,
+                }),
+                space: Condvar::new(),
+                work: Condvar::new(),
+                stats: Mutex::new(vec![ExecStats::default(); n as usize]),
+            })
+            .collect();
+        let shared = Arc::new(Shared { shards, meta, route, epoch: Instant::now() });
+
+        // Hand each shard its slice of the registry, preserving
+        // shard-local order (global index i lives at local slot i / n).
+        let mut per_shard: Vec<Vec<Box<dyn ModelExecutor>>> =
+            (0..n_shards).map(|_| Vec::new()).collect();
+        for (i, e) in executors.into_iter().enumerate() {
+            per_shard[i % n_shards].push(e);
+        }
+        let mut threads = Vec::with_capacity(n_shards);
+        for (s, execs) in per_shard.into_iter().enumerate() {
+            let worker = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name(format!("flashkat-serve-{s}"))
+                .spawn(move || executor_loop(&worker, s, execs));
+            match spawned {
+                Ok(handle) => threads.push(handle),
+                Err(e) => {
+                    // Already-spawned shards would otherwise park forever
+                    // on their work condvars: shut them down before
+                    // reporting the failure.
+                    for shard in &shared.shards {
+                        let mut st = shard.state.lock().unwrap();
+                        st.shutdown = true;
+                        shard.work.notify_one();
+                    }
+                    for t in threads {
+                        let _ = t.join();
+                    }
+                    bail!("spawning serve executor thread {s}: {e}");
+                }
+            }
+        }
+        Ok(Server { shared, exec: Mutex::new(Some(threads)) })
     }
 
-    /// Registry metadata, in registry (= `ShapeKey.model` index) order.
+    /// Registry metadata, in global registry (= `submit_at` index) order.
     pub fn models(&self) -> &[ModelMeta] {
         &self.shared.meta
+    }
+
+    /// Executor shard count.
+    pub fn shards(&self) -> usize {
+        self.shared.shards.len()
     }
 
     /// Registry index of a model name.
@@ -138,9 +268,48 @@ impl Server {
         self.shared.meta.iter().position(|m| m.name == name).map(|i| i as u32)
     }
 
-    /// Admitted-but-unserved request count (diagnostic).
+    /// Admitted-but-unserved request count across all shards (diagnostic).
     pub fn queued(&self) -> usize {
-        self.shared.state.lock().unwrap().batcher.queued()
+        self.shared
+            .shards
+            .iter()
+            .map(|s| s.state.lock().unwrap().batcher.queued())
+            .sum()
+    }
+
+    /// Live counter snapshot: per-model stats recorded after every
+    /// executed batch, plus each shard's peak queue depth.  Safe to call
+    /// at any time (the `/metrics` endpoint does, per scrape); after
+    /// [`Self::shutdown`] it returns the same final totals.
+    pub fn stats(&self) -> ServeStats {
+        let shared = &self.shared;
+        // One lock round-trip per shard (these mutexes sit on the
+        // executor hot path), then assemble per_model from the copies.
+        let per_shard: Vec<Vec<ExecStats>> = shared
+            .shards
+            .iter()
+            .map(|s| s.stats.lock().unwrap().clone())
+            .collect();
+        let per_model = shared
+            .meta
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                let (s, l) = shared.route[i];
+                let stats = per_shard[s as usize][l as usize].clone();
+                ModelStats { name: m.name.clone(), d_in: m.d_in, d_out: m.d_out, stats }
+            })
+            .collect();
+        let shard_peaks: Vec<usize> = shared
+            .shards
+            .iter()
+            .map(|s| s.state.lock().unwrap().peak_queued)
+            .collect();
+        ServeStats {
+            per_model,
+            peak_queued: shard_peaks.iter().copied().max().unwrap_or(0),
+            shard_peaks,
+        }
     }
 
     /// Submit one request to the named model and block until served.
@@ -151,32 +320,72 @@ impl Server {
         self.submit_at(idx, x, rows)
     }
 
-    /// Submit by registry index.  Blocks at admission while the queue is
-    /// at depth (backpressure), then until the response is computed;
-    /// fails fast on a shape mismatch, once shutdown has begun, or when
-    /// the model's executor reports an error for this batch.
+    /// Submit by global registry index.  Blocks at admission while the
+    /// shard's queue is at depth (backpressure), then until the response
+    /// is computed; fails fast on a shape mismatch, once shutdown has
+    /// begun, or when the model's executor reports an error for this
+    /// batch.
     pub fn submit_at(&self, model: u32, x: Vec<f32>, rows: u32) -> Result<Response> {
+        self.submit_inner(model, x, rows, true).map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Non-blocking admission to the named model: where [`Self::submit`]
+    /// would wait for queue space, this returns
+    /// [`SubmitError::QueueFull`] immediately (load shedding — the HTTP
+    /// 429 path).  Once admitted it still waits for the response, which
+    /// is the part with a deadline-bounded latency.
+    pub fn try_submit(
+        &self,
+        model: &str,
+        x: Vec<f32>,
+        rows: u32,
+    ) -> std::result::Result<Response, SubmitError> {
+        let idx = self
+            .model_index(model)
+            .ok_or_else(|| SubmitError::UnknownModel(format!("{model:?}")))?;
+        self.submit_inner(idx, x, rows, false)
+    }
+
+    /// [`Self::try_submit`] by global registry index.
+    pub fn try_submit_at(
+        &self,
+        model: u32,
+        x: Vec<f32>,
+        rows: u32,
+    ) -> std::result::Result<Response, SubmitError> {
+        self.submit_inner(model, x, rows, false)
+    }
+
+    fn submit_inner(
+        &self,
+        model: u32,
+        x: Vec<f32>,
+        rows: u32,
+        block: bool,
+    ) -> std::result::Result<Response, SubmitError> {
         let m = self
             .shared
             .meta
             .get(model as usize)
-            .with_context(|| format!("unknown model index {model}"))?;
+            .ok_or_else(|| SubmitError::UnknownModel(format!("index {model}")))?;
         if x.len() != rows as usize * m.d_in {
-            bail!(
+            return Err(SubmitError::BadRequest(format!(
                 "request shape mismatch for {:?}: {} values for {} rows of d_in={}",
                 m.name,
                 x.len(),
                 rows,
                 m.d_in
-            );
+            )));
         }
-        let key = ShapeKey { model, d: m.d_in as u32 };
+        let (s, local) = self.shared.route[model as usize];
+        let shard = &self.shared.shards[s as usize];
+        let key = ShapeKey { model: local, d: m.d_in as u32 };
         let (tx, rx) = mpsc::channel();
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = shard.state.lock().unwrap();
             loop {
                 if st.shutdown {
-                    bail!("server is shutting down");
+                    return Err(SubmitError::ShuttingDown);
                 }
                 let now = now_us(&self.shared);
                 if let Some(ticket) = st.batcher.admit(key, now) {
@@ -184,28 +393,48 @@ impl Server {
                     st.peak_queued = st.peak_queued.max(st.batcher.queued());
                     break;
                 }
-                st = self.shared.space.wait(st).unwrap();
+                if !block {
+                    return Err(SubmitError::QueueFull {
+                        queue_depth: st.batcher.policy().queue_depth,
+                    });
+                }
+                st = shard.space.wait(st).unwrap();
             }
-            self.shared.work.notify_one();
+            shard.work.notify_one();
         }
-        match rx.recv() {
-            Ok(Ok(resp)) => Ok(resp),
-            Ok(Err(msg)) => Err(anyhow!("model {:?}: {msg}", m.name)),
-            Err(_) => Err(anyhow!("server dropped the request")),
+        let outcome = if block {
+            rx.recv().map_err(|_| SubmitError::Failed("server dropped the request".to_string()))
+        } else {
+            // The non-blocking path bounds its wait: batching delay is
+            // deadline-bounded, so only a wedged executor reaches this.
+            rx.recv_timeout(TRY_RESPONSE_TIMEOUT).map_err(|e| match e {
+                mpsc::RecvTimeoutError::Timeout => SubmitError::ResponseTimeout,
+                mpsc::RecvTimeoutError::Disconnected => {
+                    SubmitError::Failed("server dropped the request".to_string())
+                }
+            })
+        };
+        match outcome? {
+            Ok(resp) => Ok(resp),
+            Err(msg) => Err(SubmitError::Failed(format!("model {:?}: {msg}", m.name))),
         }
     }
 
-    /// Stop admission, drain pending requests, and join the executor.
-    /// Returns `None` if a previous call already collected the stats.
+    /// Stop admission on every shard, drain pending requests, and join
+    /// the executor threads.  Returns `None` if a previous call already
+    /// collected the stats.
     pub fn shutdown(&self) -> Option<ServeStats> {
-        let handle = self.exec.lock().unwrap().take()?;
-        {
-            let mut st = self.shared.state.lock().unwrap();
+        let threads = self.exec.lock().unwrap().take()?;
+        for shard in &self.shared.shards {
+            let mut st = shard.state.lock().unwrap();
             st.shutdown = true;
-            self.shared.work.notify_one();
-            self.shared.space.notify_all();
+            shard.work.notify_one();
+            shard.space.notify_all();
         }
-        Some(handle.join().expect("serve executor panicked"))
+        for t in threads {
+            t.join().expect("serve executor panicked");
+        }
+        Some(self.stats())
     }
 }
 
@@ -223,18 +452,18 @@ struct Scratch {
     ycat: Vec<f32>,
 }
 
-fn executor_loop(shared: &Shared, mut executors: Vec<Box<dyn ModelExecutor>>) -> ServeStats {
-    let mut per: Vec<ExecStats> = vec![ExecStats::default(); executors.len()];
+fn executor_loop(shared: &Shared, shard_idx: usize, mut executors: Vec<Box<dyn ModelExecutor>>) {
+    let shard = &shared.shards[shard_idx];
     let mut scratch = Scratch::default();
-    let mut st = shared.state.lock().unwrap();
+    let mut st = shard.state.lock().unwrap();
     loop {
         let now = now_us(shared);
         if let Some(batch) = st.batcher.pop(now, true) {
             let jobs = detach_jobs(&mut st, &batch);
             drop(st);
-            shared.space.notify_all();
-            execute(&mut executors, &batch, jobs, &mut per, &mut scratch);
-            st = shared.state.lock().unwrap();
+            shard.space.notify_all();
+            execute(&mut executors, &batch, jobs, &shard.stats, &mut scratch);
+            st = shard.state.lock().unwrap();
             continue;
         }
         if st.shutdown {
@@ -248,35 +477,21 @@ fn executor_loop(shared: &Shared, mut executors: Vec<Box<dyn ModelExecutor>>) ->
                     (b, jobs)
                 })
                 .collect();
-            let peak_queued = st.peak_queued;
             drop(st);
-            shared.space.notify_all();
+            shard.space.notify_all();
             for (batch, jobs) in drained {
-                execute(&mut executors, &batch, jobs, &mut per, &mut scratch);
+                execute(&mut executors, &batch, jobs, &shard.stats, &mut scratch);
             }
-            return ServeStats {
-                per_model: shared
-                    .meta
-                    .iter()
-                    .zip(per)
-                    .map(|(m, stats)| ModelStats {
-                        name: m.name.clone(),
-                        d_in: m.d_in,
-                        d_out: m.d_out,
-                        stats,
-                    })
-                    .collect(),
-                peak_queued,
-            };
+            return;
         }
         st = match st.batcher.next_deadline_us() {
             // Partial buckets pending (non-eager policy): sleep until the
             // earliest deadline, then loop to flush it.
             Some(due) => {
                 let wait = Duration::from_micros(due.saturating_sub(now_us(shared)));
-                shared.work.wait_timeout(st, wait).unwrap().0
+                shard.work.wait_timeout(st, wait).unwrap().0
             }
-            None => shared.work.wait(st).unwrap(),
+            None => shard.work.wait(st).unwrap(),
         };
     }
 }
@@ -289,13 +504,14 @@ fn detach_jobs(st: &mut State, batch: &Batch) -> Vec<Job> {
         .collect()
 }
 
-/// Run one coalesced batch through its model's executor and fan the rows
-/// back out to the requesters.
+/// Run one coalesced batch through its model's executor, record the
+/// outcome in the shard's live counters, and fan the rows back out to
+/// the requesters.
 fn execute(
     executors: &mut [Box<dyn ModelExecutor>],
     batch: &Batch,
     jobs: Vec<Job>,
-    per: &mut [ExecStats],
+    shard_stats: &Mutex<Vec<ExecStats>>,
     scratch: &mut Scratch,
 ) {
     let idx = batch.key.model as usize;
@@ -321,9 +537,6 @@ fn execute(
     let busy = t0.elapsed().as_secs_f64();
 
     let size = jobs.len();
-    let stats = &mut per[idx];
-    stats.record(size, total_rows, batch.cause, busy);
-
     let failure = match run {
         Ok(()) if scratch.ycat.len() == total_rows * d_out => None,
         Ok(()) => Some(format!(
@@ -333,8 +546,14 @@ fn execute(
         )),
         Err(e) => Some(format!("{e:#}")),
     };
+    {
+        let stats = &mut shard_stats.lock().unwrap()[idx];
+        stats.record(size, total_rows, batch.cause, busy);
+        if failure.is_some() {
+            stats.failed += size;
+        }
+    }
     if let Some(msg) = failure {
-        stats.failed += size;
         for job in jobs {
             // A requester that gave up is not an executor error.
             let _ = job.resp.send(Err(msg.clone()));
@@ -409,6 +628,7 @@ mod tests {
         assert_eq!(stats.per_model.len(), 1);
         assert_eq!(stats.per_model[0].name, "grkan");
         assert_eq!(stats.per_model[0].stats, total);
+        assert_eq!(stats.shard_peaks.len(), 1, "single shard by default");
     }
 
     #[test]
@@ -458,6 +678,230 @@ mod tests {
         assert_eq!(wide.stats.batches + narrow.stats.batches, total.batches);
     }
 
+    /// The same mixed workload served sharded: every output still
+    /// bit-identical, per-model stats still sum to totals, and the
+    /// shard layout is round-robin by registry index.
+    #[test]
+    fn sharded_server_routes_and_splits_stats() {
+        let mut rng = Pcg64::new(33);
+        let cw = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+        let cn = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+        let server = Server::start_sharded(
+            vec![
+                Box::new(RationalExecutor::new("wide", 64, cw.clone()).unwrap()),
+                Box::new(RationalExecutor::new("narrow", 16, cn.clone()).unwrap()),
+            ],
+            BatchPolicy { max_batch: 8, deadline_us: 300, queue_depth: 64, eager: true },
+            2,
+        )
+        .unwrap();
+        assert_eq!(server.shards(), 2);
+        assert_eq!(server.models()[0].shard, 0);
+        assert_eq!(server.models()[1].shard, 1);
+        std::thread::scope(|s| {
+            for client in 0..4u64 {
+                let server = &server;
+                let (cw, cn) = (&cw, &cn);
+                s.spawn(move || {
+                    for i in 0..10u64 {
+                        let mut rng = Pcg64::with_stream(33, client * 100 + i);
+                        let (name, d, c): (&str, usize, &Coeffs<f32>) =
+                            if (client + i) % 2 == 0 { ("wide", 64, cw) } else { ("narrow", 16, cn) };
+                        let rows = 1 + rng.below(3);
+                        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+                        let want = forward(&x, rows, d, c);
+                        let got = server.submit(name, x, rows as u32).expect("served").y;
+                        assert_eq!(got, want, "{name} {client}/{i}");
+                    }
+                });
+            }
+        });
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.shard_peaks.len(), 2);
+        let total = stats.total();
+        assert_eq!(total.requests, 40);
+        assert_eq!(total.failed, 0);
+        assert_eq!(stats.model("wide").unwrap().stats.requests, 20);
+        assert_eq!(stats.model("narrow").unwrap().stats.requests, 20);
+        assert!(stats.peak_queued <= 64);
+    }
+
+    /// Shared boolean + condvar (the test's wedge/release signal).
+    type Flag = Arc<(Mutex<bool>, Condvar)>;
+
+    /// An executor that blocks inside `run` until released, and reports
+    /// when it has entered — the deterministic way to hold a shard busy.
+    struct Gate {
+        name: &'static str,
+        entered: Flag,
+        release: Flag,
+    }
+
+    impl Gate {
+        fn pair(name: &'static str) -> (Box<dyn ModelExecutor>, Flag, Flag) {
+            let entered: Flag = Arc::new((Mutex::new(false), Condvar::new()));
+            let release: Flag = Arc::new((Mutex::new(false), Condvar::new()));
+            (
+                Box::new(Gate { name, entered: entered.clone(), release: release.clone() }),
+                entered,
+                release,
+            )
+        }
+
+        fn wait_entered(entered: &Flag) {
+            let (lock, cv) = &**entered;
+            let mut e = lock.lock().unwrap();
+            while !*e {
+                e = cv.wait(e).unwrap();
+            }
+        }
+
+        fn open(release: &Flag) {
+            let (lock, cv) = &**release;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+    }
+
+    impl ModelExecutor for Gate {
+        fn name(&self) -> &str {
+            self.name
+        }
+        fn d_in(&self) -> usize {
+            4
+        }
+        fn d_out(&self) -> usize {
+            4
+        }
+        fn run(&mut self, x: &[f32], _rows: usize, out: &mut Vec<f32>) -> Result<()> {
+            {
+                let (lock, cv) = &*self.entered;
+                *lock.lock().unwrap() = true;
+                cv.notify_all();
+            }
+            let (lock, cv) = &*self.release;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            out.clear();
+            out.extend_from_slice(x);
+            Ok(())
+        }
+    }
+
+    /// The sharding acceptance property, deterministically: with the
+    /// slow model's shard wedged inside `run`, a fast model on the other
+    /// shard still completes.  (On a single shard the fast request
+    /// could not be served until the gate opened.)
+    #[test]
+    fn slow_shard_does_not_head_of_line_block_fast_shard() {
+        let (gate, entered, release) = Gate::pair("slow");
+        let (fast, coeffs) = model(44);
+        let server = Server::start_sharded(
+            vec![gate, fast],
+            BatchPolicy { max_batch: 4, deadline_us: 100, queue_depth: 16, eager: true },
+            2,
+        )
+        .unwrap();
+        std::thread::scope(|s| {
+            let server = &server;
+            s.spawn(move || {
+                let resp = server.submit("slow", vec![1.0; 4], 1).expect("served after release");
+                assert_eq!(resp.y, vec![1.0; 4]);
+            });
+            // The slow shard is now provably wedged inside `run`.
+            Gate::wait_entered(&entered);
+            // A fast-model request must complete while it is wedged.
+            let (rows, x) = request(44, 0);
+            let want = forward(&x, rows as usize, D, &coeffs);
+            assert_eq!(server.submit("grkan", x, rows).unwrap().y, want);
+            // Live stats see the fast batch before the slow one finishes.
+            let live = server.stats();
+            assert_eq!(live.model("grkan").unwrap().stats.requests, 1);
+            assert_eq!(live.model("slow").unwrap().stats.requests, 0);
+            Gate::open(&release);
+        });
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.total().requests, 2);
+        assert_eq!(stats.total().failed, 0);
+    }
+
+    /// `try_submit` sheds load when the queue is saturated while `submit`
+    /// keeps blocking: wedge the executor, fill the queue to depth, then
+    /// observe the typed refusal and the blocking path's completion.
+    #[test]
+    fn try_submit_sheds_load_where_submit_blocks() {
+        let (gate, entered, release) = Gate::pair("slow");
+        let depth = 2;
+        let server = Server::start_sharded(
+            vec![gate],
+            BatchPolicy { max_batch: 1, deadline_us: 50, queue_depth: depth, eager: true },
+            1,
+        )
+        .unwrap();
+        std::thread::scope(|s| {
+            let server = &server;
+            // First request is popped into a batch and wedges the executor.
+            s.spawn(move || {
+                server.submit("slow", vec![0.0; 4], 1).expect("served after release");
+            });
+            Gate::wait_entered(&entered);
+            // Fill the admission queue to depth (these block for their
+            // responses on their own threads).
+            for _ in 0..depth {
+                s.spawn(move || {
+                    server.submit("slow", vec![0.0; 4], 1).expect("served after release");
+                });
+            }
+            while server.queued() < depth {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            // Non-blocking admission now refuses with the typed error...
+            match server.try_submit("slow", vec![0.0; 4], 1) {
+                Err(SubmitError::QueueFull { queue_depth }) => assert_eq!(queue_depth, depth),
+                other => panic!("expected QueueFull, got {other:?}"),
+            }
+            // ...and `queued` is unchanged: the request was never admitted.
+            assert_eq!(server.queued(), depth);
+            // A blocking submit waits instead: start one, prove it is
+            // still waiting, then release the gate and watch it finish.
+            let blocked = s.spawn(move || {
+                server.submit("slow", vec![0.0; 4], 1).expect("served after release")
+            });
+            std::thread::sleep(Duration::from_millis(20));
+            assert!(!blocked.is_finished(), "submit must block, not error");
+            Gate::open(&release);
+            blocked.join().expect("blocked submit eventually served");
+        });
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.total().requests, 2 + depth);
+        assert!(stats.peak_queued <= depth);
+    }
+
+    #[test]
+    fn try_submit_rejects_bad_requests_with_typed_errors() {
+        let (m, _) = model(45);
+        let server = Server::start(vec![m], BatchPolicy::default()).unwrap();
+        assert!(matches!(
+            server.try_submit("nope", vec![0.0; D], 1),
+            Err(SubmitError::UnknownModel(_))
+        ));
+        assert!(matches!(
+            server.try_submit_at(7, vec![0.0; D], 1),
+            Err(SubmitError::UnknownModel(_))
+        ));
+        assert!(matches!(
+            server.try_submit("grkan", vec![0.0; D - 1], 1),
+            Err(SubmitError::BadRequest(_))
+        ));
+        server.shutdown();
+        assert!(matches!(
+            server.try_submit("grkan", vec![0.0; D], 1),
+            Err(SubmitError::ShuttingDown)
+        ));
+    }
+
     #[test]
     fn registry_validation_rejects_bad_configs() {
         let (a, _) = model(40);
@@ -465,6 +909,13 @@ mod tests {
         // Duplicate names: both executors are called "grkan".
         assert!(Server::start(vec![a, b], BatchPolicy::default()).is_err());
         assert!(Server::start(vec![], BatchPolicy::default()).is_err(), "empty registry");
+        // Shard counts are clamped, not errors: 0 → 1, huge → registry len.
+        let (c, _) = model(40);
+        let s = Server::start_sharded(vec![c], BatchPolicy::default(), 0).unwrap();
+        assert_eq!(s.shards(), 1);
+        let (d, _) = model(40);
+        let s = Server::start_sharded(vec![d], BatchPolicy::default(), 99).unwrap();
+        assert_eq!(s.shards(), 1);
     }
 
     /// An executor whose `run` always fails: the batch's submitters get

@@ -3,6 +3,12 @@
 //! Supports the full JSON grammar; numbers are stored as f64 with an i64
 //! fast path for integers.  Object key order is preserved (artifact
 //! manifests rely on input ordering).
+//!
+//! Strings are handled strictly in both directions — HTTP bodies now
+//! flow through here, so inputs are untrusted: the serializer escapes
+//! every control character (U+0000–U+001F), and the parser rejects raw
+//! (unescaped) control bytes inside strings per RFC 8259, so any string
+//! a `Json` value can hold round-trips byte-exactly.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -94,7 +100,7 @@ impl Json {
     // ---------------- parse ----------------
 
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -167,9 +173,16 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Containers deeper than this are rejected.  The parser recurses per
+/// nesting level and HTTP bodies are untrusted, so without a cap a few
+/// kilobytes of `[` would overflow the handler thread's stack and abort
+/// the process; 128 is far beyond any artifact or API payload.
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -197,6 +210,16 @@ impl<'a> Parser<'a> {
     }
 
     fn value(&mut self) -> Result<Json, JsonError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting deeper than 128 levels"));
+        }
+        self.depth += 1;
+        let v = self.value_inner();
+        self.depth -= 1;
+        v
+    }
+
+    fn value_inner(&mut self) -> Result<Json, JsonError> {
         match self.peek() {
             Some(b'{') => self.object(),
             Some(b'[') => self.array(),
@@ -298,19 +321,59 @@ impl<'a> Parser<'a> {
                                 .map_err(|_| self.err("bad \\u escape"))?;
                             let cp = u32::from_str_radix(hex, 16)
                                 .map_err(|_| self.err("bad \\u escape"))?;
-                            // (surrogate pairs unsupported; manifests are ASCII)
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
                             self.i += 4;
+                            // Strict surrogate handling (untrusted HTTP
+                            // bodies; standard encoders emit non-BMP
+                            // chars as \uD800-range pairs): decode a
+                            // valid pair, reject a lone half instead of
+                            // silently corrupting it to U+FFFD.
+                            let c = match cp {
+                                0xD800..=0xDBFF => {
+                                    if self.b.get(self.i + 1) != Some(&b'\\')
+                                        || self.b.get(self.i + 2) != Some(&b'u')
+                                        || self.i + 6 >= self.b.len()
+                                    {
+                                        return Err(self.err("unpaired surrogate in \\u escape"));
+                                    }
+                                    let hex =
+                                        std::str::from_utf8(&self.b[self.i + 3..self.i + 7])
+                                            .map_err(|_| self.err("bad \\u escape"))?;
+                                    let lo = u32::from_str_radix(hex, 16)
+                                        .map_err(|_| self.err("bad \\u escape"))?;
+                                    if !(0xDC00..=0xDFFF).contains(&lo) {
+                                        return Err(self.err("unpaired surrogate in \\u escape"));
+                                    }
+                                    self.i += 6;
+                                    let combined =
+                                        0x1_0000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                    char::from_u32(combined)
+                                        .ok_or_else(|| self.err("bad \\u escape"))?
+                                }
+                                0xDC00..=0xDFFF => {
+                                    return Err(self.err("unpaired surrogate in \\u escape"))
+                                }
+                                cp => char::from_u32(cp)
+                                    .ok_or_else(|| self.err("bad \\u escape"))?,
+                            };
+                            s.push(c);
                         }
                         _ => return Err(self.err("bad escape")),
                     }
                     self.i += 1;
                 }
+                // RFC 8259: control characters (U+0000–U+001F) MUST be
+                // escaped inside strings.  HTTP bodies carry untrusted
+                // bytes, so a raw control byte is a parse error, not
+                // something to smuggle through (the serializer always
+                // escapes them, so round-trips are unaffected).
+                Some(c) if c < 0x20 => {
+                    return Err(self.err("unescaped control character in string"))
+                }
                 Some(_) => {
                     // copy a UTF-8 run
                     let start = self.i;
                     while let Some(c) = self.peek() {
-                        if c == b'"' || c == b'\\' {
+                        if c == b'"' || c == b'\\' || c < 0x20 {
                             break;
                         }
                         self.i += 1;
@@ -353,7 +416,12 @@ impl<'a> Parser<'a> {
         let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
         if !is_float {
             if let Ok(i) = text.parse::<i64>() {
-                return Ok(Json::Int(i));
+                // "-0" must stay a float: Int(0) would drop the sign
+                // bit, and the serving layer's bit-exact f32 round-trip
+                // contract distinguishes -0.0 from +0.0.
+                if i != 0 || !text.starts_with('-') {
+                    return Ok(Json::Int(i));
+                }
             }
         }
         text.parse::<f64>()
@@ -409,8 +477,120 @@ mod tests {
     }
 
     #[test]
+    fn all_control_characters_serialize_escaped_and_round_trip() {
+        for cp in 0u32..0x20 {
+            let c = char::from_u32(cp).unwrap();
+            let v = Json::Str(format!("a{c}b"));
+            let text = v.to_string();
+            // The wire form must not contain the raw control byte.
+            assert!(
+                !text.bytes().any(|b| (b as u32) < 0x20),
+                "U+{cp:04X} leaked raw into {text:?}"
+            );
+            assert_eq!(Json::parse(&text).unwrap(), v, "U+{cp:04X}");
+        }
+    }
+
+    #[test]
+    fn parser_rejects_raw_control_bytes_but_accepts_escapes() {
+        // Raw control bytes inside a string are RFC 8259 violations.
+        assert!(Json::parse("\"a\u{0}b\"").is_err(), "raw NUL");
+        assert!(Json::parse("\"a\nb\"").is_err(), "raw newline");
+        assert!(Json::parse("\"a\tb\"").is_err(), "raw tab");
+        assert!(Json::parse("{\"k\u{1f}\":1}").is_err(), "raw control in key");
+        // The escaped forms are fine.
+        assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".to_string()));
+        assert_eq!(Json::parse("\"a\\u0000b\"").unwrap(), Json::Str("a\u{0}b".to_string()));
+        // Control bytes outside strings (whitespace) keep working.
+        assert!(Json::parse("{\n\t\"a\": 1\r\n}").is_ok());
+    }
+
+    /// Property-style round trip over byte-noise strings: whatever UTF-8
+    /// string a seeded fuzzer produces — control bytes, quotes,
+    /// backslashes, multi-byte runs — `parse(to_string(s)) == s`.
+    #[test]
+    fn byte_noise_strings_round_trip() {
+        let mut rng = crate::util::rng::Pcg64::new(0x1e57);
+        for case in 0..200 {
+            let len = rng.below(64);
+            let mut bytes = Vec::with_capacity(len);
+            for _ in 0..len {
+                // Bias toward the interesting ranges: controls, ASCII
+                // punctuation (quotes/backslashes), and high bytes that
+                // form (or break into) multi-byte UTF-8 sequences.
+                let b = match rng.below(4) {
+                    0 => rng.below(0x20) as u8,
+                    1 => b"\"\\/{}[]:,"[rng.below(9)],
+                    2 => rng.below(128) as u8,
+                    _ => rng.below(256) as u8,
+                };
+                bytes.push(b);
+            }
+            // from_utf8_lossy folds invalid sequences to U+FFFD, giving a
+            // valid but adversarial string.
+            let s = String::from_utf8_lossy(&bytes).into_owned();
+            let v = Json::Str(s.clone());
+            let text = v.to_string();
+            let back = Json::parse(&text)
+                .unwrap_or_else(|e| panic!("case {case}: {e} for {text:?}"));
+            assert_eq!(back, v, "case {case}: {s:?}");
+            // And nested inside a document, as HTTP bodies will carry it.
+            let doc = Json::Obj(vec![("k".to_string(), v)]);
+            assert_eq!(Json::parse(&doc.to_string()).unwrap(), doc, "case {case} nested");
+        }
+    }
+
+    #[test]
     fn big_ints_fall_back_to_float() {
         let v = Json::parse("99999999999999999999").unwrap();
         assert!(matches!(v, Json::Num(_)));
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign_bit() {
+        // Parse side: "-0" must not collapse into Int(0) (= +0.0).
+        let v = Json::parse("-0").unwrap();
+        let f = v.as_f64().unwrap();
+        assert!(f == 0.0 && f.is_sign_negative(), "parsed {v:?}");
+        // Full wire round trip, f32 bit-exact (the serving contract).
+        let sent = -0.0f32;
+        let wire = Json::Num(sent as f64).to_string();
+        let back = Json::parse(&wire).unwrap().as_f64().unwrap() as f32;
+        assert_eq!(back.to_bits(), sent.to_bits(), "wire {wire:?}");
+        // Plain zero and negative ints are untouched.
+        assert_eq!(Json::parse("0").unwrap(), Json::Int(0));
+        assert_eq!(Json::parse("-7").unwrap(), Json::Int(-7));
+    }
+
+    #[test]
+    fn surrogate_pairs_decode_and_lone_halves_are_rejected() {
+        // Standard encoders (e.g. json.dumps with ensure_ascii) emit
+        // non-BMP characters as surrogate pairs.
+        assert_eq!(
+            Json::parse("\"\\ud83d\\ude00\"").unwrap(),
+            Json::Str("\u{1F600}".to_string())
+        );
+        // Lone halves are corruption, not data.
+        assert!(Json::parse("\"\\ud83d\"").is_err());
+        assert!(Json::parse("\"\\ud83d x\"").is_err());
+        assert!(Json::parse("\"\\ude00\"").is_err());
+        assert!(Json::parse("\"\\ud83d\\u0041\"").is_err(), "high half + non-low half");
+        // BMP escapes are unaffected.
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".to_string()));
+    }
+
+    #[test]
+    fn nesting_depth_is_capped_not_a_stack_overflow() {
+        // 100k opening brackets: must error cleanly, not abort the
+        // process (this parser sees untrusted HTTP bodies).
+        let bomb = "[".repeat(100_000);
+        assert!(Json::parse(&bomb).is_err());
+        let bomb = "{\"a\":".repeat(50_000);
+        assert!(Json::parse(&bomb).is_err());
+        // Reasonable nesting still parses.
+        let deep = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&deep).is_ok());
+        let too_deep = format!("{}1{}", "[".repeat(129), "]".repeat(129));
+        assert!(Json::parse(&too_deep).is_err());
     }
 }

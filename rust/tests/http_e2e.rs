@@ -1,0 +1,284 @@
+//! End-to-end: the HTTP/JSON frontend over a **sharded** serve engine.
+//!
+//! Acceptance properties (ISSUE 4):
+//! - responses over loopback HTTP are **bit-identical** to in-process
+//!   `Server::submit` for the same requests, across a mixed multi-model
+//!   registry on ≥2 shards, under concurrent load;
+//! - per-model stats sum exactly to the server totals;
+//! - a saturated admission queue surfaces as `429` with a `Retry-After`
+//!   header — never a hang, never a dropped response;
+//! - malformed traffic maps to 4xx statuses and the server keeps serving.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+use flashkat::net::{HttpClient, HttpOptions, HttpServer, Limits};
+use flashkat::rational::Coeffs;
+// The canonical wire encoding — shared with the bench client so the
+// test exercises the real format, not a private copy of it.
+use flashkat::serve::loadgen::infer_body;
+use flashkat::serve::{BatchPolicy, ModelExecutor, RationalExecutor, Server};
+use flashkat::util::json::Json;
+use flashkat::util::rng::Pcg64;
+
+const D_WIDE: usize = 96;
+const D_NARROW: usize = 32;
+
+fn registry(seed: u64) -> Vec<Box<dyn ModelExecutor>> {
+    let mut rng = Pcg64::new(seed);
+    let cw = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+    let cn = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+    vec![
+        Box::new(RationalExecutor::new("wide", D_WIDE, cw).unwrap()),
+        Box::new(RationalExecutor::new("narrow", D_NARROW, cn).unwrap()),
+    ]
+}
+
+fn parse_y(body: &str) -> Vec<f32> {
+    Json::parse(body)
+        .unwrap()
+        .get("y")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect()
+}
+
+/// The headline acceptance test: concurrent mixed-model traffic over a
+/// 2-shard HTTP server, every response compared bitwise against an
+/// identically-seeded in-process server answering the same requests.
+#[test]
+fn http_responses_bit_identical_to_in_process_submit() {
+    let seed = 1234;
+    let oracle = Server::start(registry(seed), BatchPolicy::default()).unwrap();
+    let served = Server::start_sharded(
+        registry(seed),
+        BatchPolicy { max_batch: 8, deadline_us: 400, queue_depth: 128, eager: true },
+        2,
+    )
+    .unwrap();
+    assert_eq!(served.shards(), 2);
+    let http =
+        HttpServer::bind("127.0.0.1:0", Arc::new(served), HttpOptions::default()).unwrap();
+    let addr = http.local_addr();
+
+    let clients = 6u64;
+    let reqs_each = 12u64;
+    std::thread::scope(|s| {
+        for client in 0..clients {
+            let oracle = &oracle;
+            s.spawn(move || {
+                let mut conn = HttpClient::connect(addr).expect("connect");
+                for i in 0..reqs_each {
+                    let mut rng = Pcg64::with_stream(seed, client * 1000 + i);
+                    let (name, idx, d) = if (client + i) % 2 == 0 {
+                        ("wide", 0u32, D_WIDE)
+                    } else {
+                        ("narrow", 1u32, D_NARROW)
+                    };
+                    let rows = 1 + rng.below(3) as u32;
+                    let x: Vec<f32> =
+                        (0..rows as usize * d).map(|_| rng.normal_f32()).collect();
+                    let want =
+                        oracle.submit_at(idx, x.clone(), rows).expect("oracle submit").y;
+                    let resp = conn
+                        .post_json(&format!("/v1/models/{name}/infer"), &infer_body(&x, rows))
+                        .expect("http request");
+                    assert_eq!(resp.status, 200, "{}", resp.body_str());
+                    let y = parse_y(&resp.body_str());
+                    assert_eq!(y, want, "client {client} req {i} ({name}): HTTP != in-process");
+                }
+            });
+        }
+    });
+
+    let stats = http.shutdown().expect("stats");
+    let total = stats.total();
+    let n = (clients * reqs_each) as usize;
+    assert_eq!(total.requests, n);
+    assert_eq!(total.failed, 0);
+    // Per-model split sums exactly to the totals, counter by counter.
+    assert_eq!(stats.per_model.len(), 2);
+    let req_sum: usize = stats.per_model.iter().map(|m| m.stats.requests).sum();
+    let row_sum: usize = stats.per_model.iter().map(|m| m.stats.rows).sum();
+    let batch_sum: usize = stats.per_model.iter().map(|m| m.stats.batches).sum();
+    assert_eq!(req_sum, total.requests);
+    assert_eq!(row_sum, total.rows);
+    assert_eq!(batch_sum, total.batches);
+    assert_eq!(stats.model("wide").unwrap().stats.requests, n / 2);
+    assert_eq!(stats.model("narrow").unwrap().stats.requests, n / 2);
+    assert_eq!(stats.shard_peaks.len(), 2);
+    oracle.shutdown();
+}
+
+/// An executor that blocks until released (counts entries so the test
+/// can wedge the queue deterministically).
+struct Gate {
+    entered: Arc<AtomicUsize>,
+    release: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl ModelExecutor for Gate {
+    fn name(&self) -> &str {
+        "gated"
+    }
+    fn d_in(&self) -> usize {
+        4
+    }
+    fn d_out(&self) -> usize {
+        4
+    }
+    fn run(&mut self, x: &[f32], _rows: usize, out: &mut Vec<f32>) -> Result<()> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        let (lock, cv) = &*self.release;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        out.clear();
+        out.extend_from_slice(x);
+        Ok(())
+    }
+}
+
+/// Saturate the admission queue behind a wedged executor: concurrent
+/// HTTP requests must split into served-later (200 after release) and
+/// shed (429 + Retry-After) — with **every** request answered.
+#[test]
+fn saturated_queue_returns_429_with_retry_after_never_hangs() {
+    let entered = Arc::new(AtomicUsize::new(0));
+    let release = Arc::new((Mutex::new(false), Condvar::new()));
+    let gate = Gate { entered: entered.clone(), release: release.clone() };
+    let depth = 2;
+    let server = Server::start(
+        vec![Box::new(gate)],
+        BatchPolicy { max_batch: 1, deadline_us: 100, queue_depth: depth, eager: true },
+    )
+    .unwrap();
+    let http = HttpServer::bind(
+        "127.0.0.1:0",
+        Arc::new(server),
+        HttpOptions { conn_threads: 12, ..Default::default() },
+    )
+    .unwrap();
+    let addr = http.local_addr();
+
+    // 1 wedged in the executor + `depth` queued; everything beyond that
+    // must be shed as 429.
+    let fired = 9usize;
+    let outcomes: Vec<(u16, Option<String>)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for i in 0..fired {
+            let release = release.clone();
+            let entered = entered.clone();
+            handles.push(s.spawn(move || {
+                // Thread 0 wedges the executor first; the rest pile on
+                // once it is provably inside `run`.
+                if i > 0 {
+                    while entered.load(Ordering::SeqCst) == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                }
+                if i == fired - 1 {
+                    // Last thread opens the gate after everyone else has
+                    // had time to be admitted or shed.
+                    std::thread::sleep(std::time::Duration::from_millis(150));
+                    let (lock, cv) = &*release;
+                    *lock.lock().unwrap() = true;
+                    cv.notify_all();
+                }
+                let mut conn = HttpClient::connect(addr).expect("connect");
+                let resp = conn
+                    .post_json("/v1/models/gated/infer", &infer_body(&[0.5; 4], 1))
+                    .expect("every request gets an answer");
+                (resp.status, resp.header("retry-after").map(str::to_string))
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("no hung client")).collect()
+    });
+
+    let ok = outcomes.iter().filter(|(s, _)| *s == 200).count();
+    let shed: Vec<_> = outcomes.iter().filter(|(s, _)| *s == 429).collect();
+    assert_eq!(ok + shed.len(), fired, "only 200s and 429s: {outcomes:?}");
+    assert!(ok >= 1, "the wedged request itself completes after release");
+    assert!(!shed.is_empty(), "a {depth}-deep queue under {fired} concurrent requests must shed");
+    for (_, retry) in &shed {
+        assert_eq!(retry.as_deref(), Some("1"), "429 carries Retry-After");
+    }
+    let stats = http.shutdown().expect("stats");
+    assert_eq!(stats.total().requests, ok, "every 200 is a served request");
+    assert!(stats.peak_queued <= depth);
+}
+
+/// Protocol-level rejects: malformed bodies, unknown models, bad
+/// routes/methods, oversized payloads — each the right status, and the
+/// server keeps serving afterwards.
+#[test]
+fn malformed_traffic_gets_4xx_and_service_survives() {
+    let server = Server::start_sharded(registry(9), BatchPolicy::default(), 2).unwrap();
+    let http = HttpServer::bind(
+        "127.0.0.1:0",
+        Arc::new(server),
+        HttpOptions { limits: Limits { max_body_bytes: 4096, ..Default::default() }, ..Default::default() },
+    )
+    .unwrap();
+    let addr = http.local_addr();
+    let mut conn = HttpClient::connect(addr).unwrap();
+
+    // Malformed JSON → 400 (the CI curl smoke's exact case).
+    let r = conn.post_json("/v1/models/wide/infer", "{\"x\":").unwrap();
+    assert_eq!(r.status, 400);
+    // Wrong shape → 400.
+    let r = conn.post_json("/v1/models/wide/infer", &infer_body(&[1.0; 3], 1)).unwrap();
+    assert_eq!(r.status, 400);
+    // Raw control byte inside a JSON string → 400 (json hardening).
+    let r = conn.post_json("/v1/models/wide/infer", "{\"x\":[1],\"note\":\"a\u{1}b\"}").unwrap();
+    assert_eq!(r.status, 400);
+    // Unknown model → 404; unknown route → 404; wrong method → 405.
+    let r = conn.post_json("/v1/models/nope/infer", &infer_body(&[0.0; 4], 1)).unwrap();
+    assert_eq!(r.status, 404);
+    assert_eq!(conn.get("/v1/nope").unwrap().status, 404);
+    assert_eq!(conn.get("/v1/models/wide/infer").unwrap().status, 405);
+    // Oversized body → 413.  Declared length is enough — the server
+    // rejects before reading the body (so a client can't be forced to
+    // upload megabytes just to be refused).  Raw socket: the response
+    // arrives while the body was never sent.
+    {
+        use std::io::{Read, Write};
+        let mut raw = std::net::TcpStream::connect(addr).unwrap();
+        raw.write_all(
+            b"POST /v1/models/wide/infer HTTP/1.1\r\ncontent-length: 999999\r\n\r\n",
+        )
+        .unwrap();
+        let mut buf = [0u8; 64];
+        let n = raw.read(&mut buf).unwrap();
+        let head = String::from_utf8_lossy(&buf[..n]).into_owned();
+        assert!(head.starts_with("HTTP/1.1 413 "), "{head}");
+    }
+
+    // The server still serves good traffic afterwards.
+    let mut conn = HttpClient::connect(addr).unwrap();
+    let mut rng = Pcg64::new(10);
+    let x: Vec<f32> = (0..D_WIDE).map(|_| rng.normal_f32()).collect();
+    let r = conn.post_json("/v1/models/wide/infer", &infer_body(&x, 1)).unwrap();
+    assert_eq!(r.status, 200, "{}", r.body_str());
+
+    // Observability endpoints agree with what just happened.
+    assert_eq!(conn.get("/healthz").unwrap().status, 200);
+    let models = conn.get("/v1/models").unwrap();
+    assert_eq!(models.status, 200);
+    let listed = Json::parse(&models.body_str()).unwrap();
+    assert_eq!(listed.get("models").unwrap().as_arr().unwrap().len(), 2);
+    assert_eq!(listed.get("shards").unwrap().as_usize(), Some(2));
+    let scrape = conn.get("/metrics").unwrap().body_str().into_owned();
+    assert!(scrape.contains("flashkat_serve_requests_total{model=\"wide\"} 1"), "{scrape}");
+    assert!(scrape.contains("flashkat_http_requests_total{code=\"200\"}"), "{scrape}");
+    assert!(scrape.contains("flashkat_http_requests_total{code=\"400\"}"), "{scrape}");
+
+    let stats = http.shutdown().expect("stats");
+    assert_eq!(stats.total().requests, 1, "only the good request reached an executor");
+    assert_eq!(stats.total().failed, 0);
+}
