@@ -1,0 +1,76 @@
+//! Client for a running `flashkat serve-wire`: submit seeded requests
+//! over the flashwire binary protocol and verify each response is
+//! **bit-identical** to the in-process forward for the same model.
+//!
+//! Works exactly like `examples/http_client`: the server built its
+//! registry from `(seed, model spec)` via `loadgen::executors`, and
+//! this client rebuilds the identical executor locally from the same
+//! flags — so any f32 mismatch means the transport (or the server)
+//! corrupted a value, and the process exits nonzero.  CI uses this as
+//! the serve-wire "answered + bit-identical payload" smoke probe.
+//!
+//!     flashkat serve-wire --port 0 --seed 7 &
+//!     cargo run --release --example wire_client -- --addr 127.0.0.1:PORT --seed 7
+
+use anyhow::{bail, Context, Result};
+use flashkat::cli::Args;
+use flashkat::serve::{loadgen, LoadConfig, ModelExecutor, ModelSpec};
+use flashkat::wire::WireClient;
+
+fn main() -> Result<()> {
+    // Args' grammar expects a leading command token; synthesize one so
+    // `--addr ...` is parsed as a flag, not swallowed as the command.
+    let args =
+        Args::parse(std::iter::once("wire-client".to_string()).chain(std::env::args().skip(1)))?;
+    let addr: std::net::SocketAddr = args
+        .flag_str("addr", "127.0.0.1:8081")
+        .parse()
+        .context("--addr expects host:port")?;
+    let cfg = LoadConfig {
+        seed: args.flag_u64("seed", 7)?,
+        models: vec![ModelSpec::new(
+            args.flag_str("model", "grkan"),
+            args.flag_usize("d", 256)?,
+            args.flag_usize("groups", 8)?.max(1),
+        )],
+        ..Default::default()
+    };
+    let requests = args.flag_u64("requests", 8)?.max(1);
+    let name = cfg.models[0].name.clone();
+
+    // The local twin of the server's executor: same seed, same spec.
+    let mut reference = loadgen::executors(&cfg)?.remove(0);
+
+    let mut client = WireClient::connect(addr)?;
+    client.ping(0xf1a5_4a7).context("ping")?;
+
+    let mut want = Vec::new();
+    for id in 0..requests {
+        let (_, rows, x) = loadgen::request(&cfg, id);
+        let resp = match client.infer(&name, &x, rows)? {
+            Ok(resp) => resp,
+            Err(e) => bail!("request {id}: server answered {e}"),
+        };
+        reference.run(&x, rows as usize, &mut want)?;
+        let got: Vec<u32> = resp.y.iter().map(|v| v.to_bits()).collect();
+        let exp: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+        if got != exp {
+            bail!("request {id}: flashwire response differs from the in-process forward");
+        }
+    }
+
+    // The binary stats frame must account for what we just sent.
+    let stats = client.stats().context("stats")?;
+    let served = stats
+        .models
+        .iter()
+        .find(|m| m.name == name)
+        .with_context(|| format!("server does not list model {name:?}"))?;
+    if served.requests < requests {
+        bail!("stats report {} requests for {name:?}, sent {requests}", served.requests);
+    }
+    println!(
+        "OK: {requests} responses from flashwire://{addr} bit-identical to the in-process forward ({name})"
+    );
+    Ok(())
+}

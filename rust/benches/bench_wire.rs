@@ -1,0 +1,58 @@
+//! Transport bench target: the same deterministic workload in-process,
+//! over loopback HTTP/JSON, and over the flashwire binary protocol —
+//! all at the same shard count — tracked across PRs in
+//! `BENCH_wire.json` like the other BENCH artifacts (DESIGN.md §13).
+//!
+//!     cargo bench --bench bench_wire -- [--requests N] [--concurrency C] [--shards N]
+
+use flashkat::serve::{loadgen, BatchPolicy, LoadConfig, ModelSpec};
+
+fn main() {
+    // Synthetic leading command token: Args treats the first item as the
+    // command, which would otherwise swallow a leading `--requests`.
+    let args = flashkat::cli::Args::parse(
+        std::iter::once("bench".to_string())
+            .chain(std::env::args().skip(1).filter(|a| a != "--bench")),
+    )
+    .expect("bench args");
+    let cfg = LoadConfig {
+        requests: args.flag_usize("requests", 2000).expect("--requests"),
+        concurrency: args.flag_usize("concurrency", 16).expect("--concurrency"),
+        // Two models so sharding has something to separate; the wide one
+        // is where JSON float text hurts most.
+        models: vec![ModelSpec::new("grkan", 256, 8), ModelSpec::new("small", 64, 8)],
+        ..Default::default()
+    };
+    // Clamped to the registry size, as the server clamps: the recorded
+    // shard count must be the one the legs actually ran on.
+    let shards = args.flag_usize("shards", 2).expect("--shards").clamp(1, cfg.models.len());
+    let policy = BatchPolicy::default();
+
+    let row = |r: &loadgen::BenchResult| {
+        println!(
+            "bench {:<24} {:>10.0} img/s  p50 {:>7.3} ms  p99 {:>7.3} ms  mean batch {:>5.1}",
+            r.label,
+            r.throughput_rps,
+            r.p50_ms,
+            r.p99_ms,
+            r.exec.mean_batch(),
+        );
+    };
+
+    let inproc = loadgen::run_sharded(&cfg, policy, "in-process", shards).expect("in-process run");
+    row(&inproc);
+    let http = loadgen::run_http(&cfg, policy, "loopback-http", shards).expect("http run");
+    row(&http);
+    let wire = loadgen::run_wire(&cfg, policy, "loopback-wire", shards).expect("wire run");
+    row(&wire);
+    assert_eq!(inproc.errors + http.errors + wire.errors, 0, "no request may fail");
+
+    let bytes = loadgen::transport_bytes(&cfg).expect("byte accounting");
+    let json = loadgen::wire_bench_json(&cfg, &inproc, &http, &wire, shards, &bytes);
+    std::fs::write("BENCH_wire.json", json.to_string()).expect("write BENCH_wire.json");
+    println!(
+        "wrote BENCH_wire.json (wire vs json throughput: {:.2}x, bytes/request: {:.2}x)",
+        wire.throughput_rps / http.throughput_rps.max(1e-9),
+        bytes.wire_vs_json_ratio(),
+    );
+}

@@ -10,9 +10,11 @@
 //!   Nsight-style measurements, a bit-faithful gradient-accumulation
 //!   model (`rational`) for the rounding-error study, a dynamic
 //!   micro-batching inference engine (`serve`) that turns the optimized
-//!   host kernels into a traffic-handling system, and a zero-dependency
-//!   HTTP/JSON frontend (`net`) exposing the sharded engine to external
-//!   traffic.
+//!   host kernels into a traffic-handling system, and two zero-dependency
+//!   network frontends exposing the sharded engine to external traffic:
+//!   HTTP/JSON (`net`) and the flashwire length-prefixed binary protocol
+//!   (`wire`) for float-heavy payloads where text JSON dominates request
+//!   cost.
 
 pub mod cli;
 pub mod config;
@@ -27,3 +29,4 @@ pub mod runtime;
 pub mod serve;
 pub mod tensor;
 pub mod util;
+pub mod wire;

@@ -190,7 +190,8 @@ fn serve_model_specs(args: &Args) -> Result<Vec<flashkat::serve::ModelSpec>> {
     if args.flag("d").is_some() {
         bail!("--d is ignored with --models; widths are per entry (name:d[:groups])");
     }
-    list.iter()
+    let specs: Vec<ModelSpec> = list
+        .iter()
         .map(|item| {
             let parse_n = |v: &str, what: &str| {
                 v.parse::<usize>()
@@ -205,7 +206,24 @@ fn serve_model_specs(args: &Args) -> Result<Vec<flashkat::serve::ModelSpec>> {
                 _ => bail!("--models entries are name:d[:groups], got {item:?}"),
             }
         })
-        .collect()
+        .collect::<Result<_>>()?;
+    // Models route by name, so a repeated name cannot mean anything the
+    // user wants: one entry would shadow the other.  Reject at the CLI
+    // with the offending entry named, instead of letting the registry
+    // validation fail later with less context.
+    for (i, s) in specs.iter().enumerate() {
+        if let Some(first) = specs[..i].iter().find(|o| o.name == s.name) {
+            bail!(
+                "--models names {:?} twice ({}:{} and {}:{}); registry names route requests and must be unique",
+                s.name,
+                first.name,
+                first.d,
+                s.name,
+                s.d
+            );
+        }
+    }
+    Ok(specs)
 }
 
 /// Dynamic micro-batching inference benchmark: drive the serve subsystem
@@ -247,6 +265,36 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         bail!("--slo-p99-us only applies with --autotune");
     }
 
+    // --wire: the same workload in-process, over loopback HTTP/JSON,
+    // and over the flashwire binary protocol — all three legs at the
+    // same shard count — so the transport comparison in BENCH_wire.json
+    // measures encodings and nothing else (DESIGN.md §13).
+    if args.flag_bool("wire") {
+        if args.flag_bool("http") {
+            bail!("--wire already includes the HTTP/JSON leg; drop --http");
+        }
+        if args.flag("pipeline").is_some() {
+            bail!("--wire benches the rational registry; use serve-wire --pipeline to serve one");
+        }
+        if autotune {
+            bail!("--wire and --autotune are mutually exclusive (autotune in-process first)");
+        }
+        cfg.models = serve_model_specs(args)?;
+        // Record the shard count the legs actually run on: the server
+        // clamps to the registry size, and the published artifact must
+        // not claim a sharding it never had.
+        let shards = args.flag_usize("shards", 2)?.clamp(1, cfg.models.len());
+        let inproc = loadgen::run_sharded(&cfg, policy, "in-process", shards)?;
+        let http_res = loadgen::run_http(&cfg, policy, "loopback-http", shards)?;
+        let wire_res = loadgen::run_wire(&cfg, policy, "loopback-wire", shards)?;
+        let bytes = loadgen::transport_bytes(&cfg)?;
+        print!("{}", report::serve_wire(&inproc, &http_res, &wire_res, shards, &bytes));
+        let out = args.flag_str("out", "BENCH_wire.json");
+        let json = loadgen::wire_bench_json(&cfg, &inproc, &http_res, &wire_res, shards, &bytes);
+        std::fs::write(out, json.to_string()).with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+        return Ok(());
+    }
     // --http: the same workload in-process and over loopback HTTP, so
     // the frontend's overhead is measured, not assumed (BENCH_http.json).
     if args.flag_bool("http") {
@@ -256,10 +304,12 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         if autotune {
             bail!("--http and --autotune are mutually exclusive (autotune in-process first)");
         }
-        let shards = args.flag_usize("shards", 2)?.max(1);
         cfg.models = serve_model_specs(args)?;
-        // Same shard count on both sides, so the overhead numbers
-        // measure the transport and nothing else.
+        // Same shard count on both sides (clamped to the registry size,
+        // as the server itself clamps), so the overhead numbers measure
+        // the transport and nothing else — and the recorded shard count
+        // is the one the legs actually ran on.
+        let shards = args.flag_usize("shards", 2)?.clamp(1, cfg.models.len());
         let inproc = loadgen::run_sharded(&cfg, policy, "in-process", shards)?;
         let http_res = loadgen::run_http(&cfg, policy, "loopback-http", shards)?;
         print!("{}", report::serve_http(&inproc, &http_res, shards));
@@ -269,10 +319,11 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         println!("wrote {out}");
         return Ok(());
     }
-    // Repo rule: no silently-dead flags (--shards shards the HTTP bench
-    // and serve-http; the in-process bench paths are single-server).
+    // Repo rule: no silently-dead flags (--shards shards the transport
+    // benches and the serving frontends; the in-process bench paths are
+    // single-server).
     if args.flag("shards").is_some() {
-        bail!("--shards only applies with --http (or the serve-http command)");
+        bail!("--shards only applies with --http/--wire (or the serve-http/serve-wire commands)");
     }
     // Autotune sweep grid: the defaults plus any explicitly requested
     // policy point, so --max-batch / --deadline-us are folded into the
@@ -362,29 +413,27 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Stand up the HTTP/JSON serving frontend and run until SIGTERM/SIGINT,
-/// then drain gracefully: `flashkat serve-http --addr A --port P
-/// --shards N [--models ... | --pipeline TAG]`.  `--port 0` binds an
-/// ephemeral port; the bound address is printed (and flushed) so
-/// scripts can scrape it.
-fn cmd_serve_http(args: &Args) -> Result<()> {
-    use flashkat::net::{install_signal_handler, HttpOptions, HttpServer, Limits};
-    use flashkat::serve::{loadgen, BatchPolicy, LoadConfig, ModelExecutor, ModelSpec, Server};
-    use std::io::Write as _;
-    use std::sync::atomic::Ordering;
-
-    let host = args.flag_str("addr", "127.0.0.1");
-    let port = args.flag_u16("port", 8080)?;
-    let shards = args.flag_usize("shards", 2)?.max(1);
-    let policy = BatchPolicy {
+/// The shared serving-frontend batch policy (`--max-batch`,
+/// `--deadline-us`, `--queue-depth`, `--no-eager`).
+fn serve_policy(args: &Args) -> Result<flashkat::serve::BatchPolicy> {
+    Ok(flashkat::serve::BatchPolicy {
         max_batch: args.flag_usize("max-batch", 64)?.max(1),
         deadline_us: args.flag_u64("deadline-us", 200)?,
         queue_depth: args.flag_usize("queue-depth", 1024)?.max(1),
         eager: !args.flag_bool("no-eager"),
-    };
-    let mut cfg = LoadConfig { seed: args.flag_u64("seed", 7)?, ..Default::default() };
-    let executors: Vec<Box<dyn ModelExecutor>> = if let Some(tag) = args.flag("pipeline") {
-        use flashkat::serve::PipelineExecutor;
+    })
+}
+
+/// Build the serving registry (`--models name:d[:groups],...` or
+/// `--pipeline TAG`) and record the matching specs into `cfg` — shared
+/// by the serve-http and serve-wire frontends so the two transports
+/// serve byte-identical registries for the same flags.
+fn serve_registry(
+    args: &Args,
+    cfg: &mut flashkat::serve::LoadConfig,
+) -> Result<Vec<Box<dyn flashkat::serve::ModelExecutor>>> {
+    use flashkat::serve::{loadgen, ModelExecutor, ModelSpec, PipelineExecutor};
+    if let Some(tag) = args.flag("pipeline") {
         for f in ["model", "models", "d", "groups"] {
             if args.flag(f).is_some() {
                 bail!("--{f} only applies to rational registries, not --pipeline");
@@ -393,11 +442,56 @@ fn cmd_serve_http(args: &Args) -> Result<()> {
         let rt = Runtime::cpu(args.flag_str("artifacts", "artifacts"))?;
         let ex = PipelineExecutor::from_runtime(&rt, tag)?;
         cfg.models = vec![ModelSpec::new(tag, ex.d_in(), 1)];
-        vec![Box::new(ex)]
+        Ok(vec![Box::new(ex)])
     } else {
         cfg.models = serve_model_specs(args)?;
-        loadgen::executors(&cfg)?
-    };
+        loadgen::executors(cfg)
+    }
+}
+
+/// Run-until-signaled drain loop shared by both serving frontends:
+/// block on the SIGTERM/SIGINT flag, drain, and print the final
+/// counters (the "drained cleanly" line CI asserts on).
+fn serve_until_signaled(
+    shutdown: impl FnOnce() -> Option<flashkat::serve::ServeStats>,
+) -> Result<()> {
+    use flashkat::net::install_signal_handler;
+    use std::sync::atomic::Ordering;
+
+    let stop = install_signal_handler();
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("signal received; draining in-flight requests...");
+    let stats = shutdown().expect("first shutdown collects stats");
+    let total = stats.total();
+    println!(
+        "drained cleanly: {} requests in {} batches ({} failed), peak queue {} across {} shards",
+        total.requests,
+        total.batches,
+        total.failed,
+        stats.peak_queued,
+        stats.shard_peaks.len()
+    );
+    Ok(())
+}
+
+/// Stand up the HTTP/JSON serving frontend and run until SIGTERM/SIGINT,
+/// then drain gracefully: `flashkat serve-http --addr A --port P
+/// --shards N [--models ... | --pipeline TAG]`.  `--port 0` binds an
+/// ephemeral port; the bound address is printed (and flushed) so
+/// scripts can scrape it.
+fn cmd_serve_http(args: &Args) -> Result<()> {
+    use flashkat::net::{HttpOptions, HttpServer, Limits};
+    use flashkat::serve::{LoadConfig, Server};
+    use std::io::Write as _;
+
+    let host = args.flag_str("addr", "127.0.0.1");
+    let port = args.flag_u16("port", 8080)?;
+    let shards = args.flag_usize("shards", 2)?.max(1);
+    let policy = serve_policy(args)?;
+    let mut cfg = LoadConfig { seed: args.flag_u64("seed", 7)?, ..Default::default() };
+    let executors = serve_registry(args, &mut cfg)?;
     let n_models = executors.len();
     let server = std::sync::Arc::new(Server::start_sharded(executors, policy, shards)?);
     let shards = server.shards(); // clamped to the registry size
@@ -419,23 +513,47 @@ fn cmd_serve_http(args: &Args) -> Result<()> {
     // The bound-port line is scraped by scripts (CI starts us with
     // --port 0); a piped stdout is block-buffered, so flush explicitly.
     std::io::stdout().flush().ok();
+    serve_until_signaled(|| http.shutdown())
+}
 
-    let stop = install_signal_handler();
-    while !stop.load(Ordering::SeqCst) {
-        std::thread::sleep(std::time::Duration::from_millis(50));
-    }
-    println!("signal received; draining in-flight requests...");
-    let stats = http.shutdown().expect("first shutdown collects stats");
-    let total = stats.total();
+/// Stand up the flashwire binary serving frontend (DESIGN.md §13) and
+/// run until SIGTERM/SIGINT, then drain gracefully: `flashkat
+/// serve-wire --addr A --port P --shards N [--models ... | --pipeline
+/// TAG]`.  Same registry, policy, and drain semantics as serve-http —
+/// only the bytes on the socket differ.
+fn cmd_serve_wire(args: &Args) -> Result<()> {
+    use flashkat::serve::{LoadConfig, Server};
+    use flashkat::wire::{WireLimits, WireOptions, WireServer};
+    use std::io::Write as _;
+
+    let host = args.flag_str("addr", "127.0.0.1");
+    let port = args.flag_u16("port", 8081)?;
+    let shards = args.flag_usize("shards", 2)?.max(1);
+    let policy = serve_policy(args)?;
+    let mut cfg = LoadConfig { seed: args.flag_u64("seed", 7)?, ..Default::default() };
+    let executors = serve_registry(args, &mut cfg)?;
+    let n_models = executors.len();
+    let server = std::sync::Arc::new(Server::start_sharded(executors, policy, shards)?);
+    let shards = server.shards(); // clamped to the registry size
+    let opts = WireOptions {
+        conn_threads: args.flag_usize("conn-threads", 8)?.max(1),
+        backlog: args.flag_usize("backlog", 64)?.max(1),
+        limits: WireLimits {
+            max_payload_bytes: args.flag_usize("max-payload-bytes", 8 * 1024 * 1024)?.max(1),
+            ..Default::default()
+        },
+    };
+    let wire = WireServer::bind(&format!("{host}:{port}"), server, opts)?;
     println!(
-        "drained cleanly: {} requests in {} batches ({} failed), peak queue {} across {} shards",
-        total.requests,
-        total.batches,
-        total.failed,
-        stats.peak_queued,
-        stats.shard_peaks.len()
+        "listening on flashwire://{} ({n_models} models, {shards} shards, seed {})",
+        wire.local_addr(),
+        cfg.seed
     );
-    Ok(())
+    println!(
+        "frames: InferRequest/InferResponse, StatsRequest/StatsResponse, Ping/Pong (DESIGN.md \u{a7}13)"
+    );
+    std::io::stdout().flush().ok();
+    serve_until_signaled(|| wire.shutdown())
 }
 
 /// Runtime integration check: run the standalone rational kernels through
@@ -522,6 +640,7 @@ fn main() -> Result<()> {
         "profile" => cmd_profile(&args),
         "serve-bench" => cmd_serve_bench(&args),
         "serve-http" => cmd_serve_http(&args),
+        "serve-wire" => cmd_serve_wire(&args),
         "selfcheck" => cmd_selfcheck(&args),
         "flops" => {
             print!("{}", report::table1());
@@ -530,7 +649,7 @@ fn main() -> Result<()> {
         "" | "help" | "--help" => {
             println!(
                 "flashkat — FlashKAT reproduction (see DESIGN.md)\n\n\
-                 usage: flashkat <report|train|profile|serve-bench|serve-http|selfcheck|flops> [flags]\n\
+                 usage: flashkat <report|train|profile|serve-bench|serve-http|serve-wire|selfcheck|flops> [flags]\n\
                  \x20 report <fig1|table1|table2|fig2|fig3|table3|table4|table5|configs|all>\n\
                  \x20 train  [--model kat_micro|vit_micro|kat_micro_katbwd] [--steps N] [--ckpt PATH]\n\
                  \x20 profile [--kernel fwd|kat|flash] [--loops N] [--gpu 4060ti|h200]\n\
@@ -540,6 +659,8 @@ fn main() -> Result<()> {
                  \x20             [--pipeline TAG [--artifacts DIR]]  (serve a whole <TAG>_eval model)\n\
                  \x20             [--autotune [--slo-p99-us N]]  (sweep max-batch/deadline vs the SLO)\n\
                  \x20             [--http [--shards N]]  (also run over loopback HTTP; writes BENCH_http.json)\n\
+                 \x20             [--wire [--shards N]]  (in-process vs HTTP/JSON vs flashwire binary;\n\
+                 \x20              writes BENCH_wire.json with bytes-per-request)\n\
                  \x20             [--seed N] [--out PATH]\n\
                  \x20             (micro-batching inference bench; writes BENCH_serve.json)\n\
                  \x20 serve-http [--addr A] [--port P|0] [--shards N] [--conn-threads N]\n\
@@ -547,10 +668,58 @@ fn main() -> Result<()> {
                  \x20             [--deadline-us D] [--queue-depth N] [--max-body-bytes N] [--seed N]\n\
                  \x20             (HTTP/JSON frontend; POST /v1/models/<name>/infer, GET /v1/models\n\
                  \x20              /healthz /metrics; runs until SIGTERM, then drains)\n\
+                 \x20 serve-wire [--addr A] [--port P|0] [--shards N] [--conn-threads N]\n\
+                 \x20             [--models name:d[:groups],... | --pipeline TAG] [--max-batch B]\n\
+                 \x20             [--deadline-us D] [--queue-depth N] [--max-payload-bytes N] [--seed N]\n\
+                 \x20             (flashwire length-prefixed binary frontend, DESIGN.md \u{a7}13;\n\
+                 \x20              runs until SIGTERM, then drains)\n\
                  \x20 selfcheck [--artifacts DIR]"
             );
             Ok(())
         }
         other => bail!("unknown command {other:?} — try `flashkat help`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string)).unwrap()
+    }
+
+    #[test]
+    fn serve_model_specs_parses_registries() {
+        let specs = serve_model_specs(&parse("serve-http --models wide:256:8,narrow:64")).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!((specs[0].name.as_str(), specs[0].d, specs[0].n_groups), ("wide", 256, 8));
+        assert_eq!((specs[1].name.as_str(), specs[1].d, specs[1].n_groups), ("narrow", 64, 8));
+        let single = serve_model_specs(&parse("serve-http --model m --d 128")).unwrap();
+        assert_eq!((single[0].name.as_str(), single[0].d), ("m", 128));
+    }
+
+    /// Models route by name, so `--models a:64,a:128` can only mean one
+    /// entry silently shadowing the other — reject it at the CLI with
+    /// both entries named, before any server is built.
+    #[test]
+    fn serve_model_specs_rejects_duplicate_names() {
+        let err = serve_model_specs(&parse("serve-http --models a:64,b:32,a:128"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("\"a\" twice"), "{err}");
+        assert!(err.contains("a:64") && err.contains("a:128"), "names both widths: {err}");
+        // Same name, same width: still a duplicate route.
+        assert!(serve_model_specs(&parse("serve-http --models a:64,a:64")).is_err());
+        // Distinct names stay fine.
+        assert!(serve_model_specs(&parse("serve-http --models a:64,b:64")).is_ok());
+    }
+
+    #[test]
+    fn serve_model_specs_rejects_conflicting_flag_combos() {
+        assert!(serve_model_specs(&parse("serve-http --models a:64 --model b")).is_err());
+        assert!(serve_model_specs(&parse("serve-http --models a:64 --d 32")).is_err());
+        assert!(serve_model_specs(&parse("serve-http --models ,,")).is_err(), "empty list");
+        assert!(serve_model_specs(&parse("serve-http --models a:sixty")).is_err(), "bad width");
     }
 }

@@ -30,6 +30,15 @@ impl ClientResponse {
         self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
     }
 
+    /// The `Retry-After` backoff hint (on `429`/`503`), in milliseconds.
+    /// Parses the delay-seconds form — the only form this stack emits;
+    /// an HTTP-date value (or garbage) is `None`, so callers fall back
+    /// to their own backoff instead of sleeping until a misparsed date.
+    pub fn retry_after_millis(&self) -> Option<u64> {
+        let secs: u64 = self.header("retry-after")?.trim().parse().ok()?;
+        secs.checked_mul(1000)
+    }
+
     pub fn body_str(&self) -> std::borrow::Cow<'_, str> {
         String::from_utf8_lossy(&self.body)
     }
@@ -125,5 +134,46 @@ impl HttpClient {
         let mut body = vec![0u8; content_length];
         io::Read::read_exact(&mut self.reader, &mut body).context("reading response body")?;
         Ok(ClientResponse { status, headers, body })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(headers: &[(&str, &str)]) -> ClientResponse {
+        ClientResponse {
+            status: 429,
+            headers: headers
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            body: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn retry_after_parses_delay_seconds_to_millis() {
+        assert_eq!(resp(&[("retry-after", "1")]).retry_after_millis(), Some(1000));
+        assert_eq!(resp(&[("retry-after", " 30 ")]).retry_after_millis(), Some(30_000));
+        assert_eq!(resp(&[("retry-after", "0")]).retry_after_millis(), Some(0));
+    }
+
+    #[test]
+    fn retry_after_absent_or_unparseable_is_none() {
+        assert_eq!(resp(&[]).retry_after_millis(), None);
+        // HTTP-date form: unsupported, must not misparse into a sleep.
+        assert_eq!(
+            resp(&[("retry-after", "Wed, 21 Oct 2026 07:28:00 GMT")]).retry_after_millis(),
+            None
+        );
+        assert_eq!(resp(&[("retry-after", "-2")]).retry_after_millis(), None);
+        assert_eq!(resp(&[("retry-after", "1.5")]).retry_after_millis(), None);
+        // Saturating garbage: u64::MAX seconds would overflow the
+        // millisecond conversion — None, not a wrapped tiny sleep.
+        assert_eq!(
+            resp(&[("retry-after", &u64::MAX.to_string())]).retry_after_millis(),
+            None
+        );
     }
 }

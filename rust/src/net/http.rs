@@ -127,7 +127,11 @@ const DRAIN_GRACE: Duration = Duration::from_millis(500);
 /// to complete, after which exhaustion surfaces like any other timeout:
 /// `ErrorKind::TimedOut`, which the caller maps to a `408` answer
 /// mid-request or a silent close at a request boundary.
-struct Patience<'a> {
+///
+/// `pub(crate)` because the flashwire frame codec (`crate::wire::frame`)
+/// reads off the same kind of short-timeout socket and shares this exact
+/// budget discipline.
+pub(crate) struct Patience<'a> {
     stop: &'a AtomicBool,
     ticks: usize,
     max_ticks: usize,
@@ -139,12 +143,22 @@ struct Patience<'a> {
 
 impl Patience<'_> {
     fn new(stop: &AtomicBool, limits: &Limits) -> Patience<'_> {
+        Patience::with_budget(stop, limits.max_stall_ticks, limits.max_request_secs)
+    }
+
+    /// Budget from explicit knobs (for non-HTTP framings that keep their
+    /// own limits struct).
+    pub(crate) fn with_budget(
+        stop: &AtomicBool,
+        max_ticks: usize,
+        max_secs: u64,
+    ) -> Patience<'_> {
         Patience {
             stop,
             ticks: 0,
-            max_ticks: limits.max_stall_ticks,
+            max_ticks,
             started: Instant::now(),
-            max_elapsed: Duration::from_secs(limits.max_request_secs),
+            max_elapsed: Duration::from_secs(max_secs),
             grace_until: None,
         }
     }
@@ -212,8 +226,9 @@ fn read_line_resumable(
     }
 }
 
-/// `read_exact` with the same resume-on-timeout behavior.
-fn read_exact_resumable(
+/// `read_exact` with the same resume-on-timeout behavior.  Shared with
+/// the flashwire frame codec, which is all fixed-length reads.
+pub(crate) fn read_exact_resumable(
     r: &mut impl BufRead,
     out: &mut [u8],
     patience: &mut Patience<'_>,

@@ -54,16 +54,26 @@ impl Default for HttpOptions {
 }
 
 /// Bounded blocking FIFO hand-off queue (accept thread → handler pool).
-struct ConnQueue {
+/// `pub(crate)`: the flashwire frontend (`crate::wire::server`) has the
+/// same accept-thread/handler-pool shape and reuses it.
+pub(crate) struct ConnQueue {
     q: Mutex<std::collections::VecDeque<TcpStream>>,
     ready: Condvar,
     cap: usize,
 }
 
 impl ConnQueue {
+    pub(crate) fn new(cap: usize) -> ConnQueue {
+        ConnQueue {
+            q: Mutex::new(std::collections::VecDeque::new()),
+            ready: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
     /// Enqueue, or hand the stream back when the queue is at capacity
     /// so the caller can answer `503` on it.
-    fn push(&self, stream: TcpStream) -> std::result::Result<(), TcpStream> {
+    pub(crate) fn push(&self, stream: TcpStream) -> std::result::Result<(), TcpStream> {
         let mut q = self.q.lock().unwrap();
         if q.len() >= self.cap {
             return Err(stream);
@@ -74,7 +84,7 @@ impl ConnQueue {
     }
 
     /// Pop with a timeout so handlers can observe shutdown.
-    fn pop(&self, timeout: Duration) -> Option<TcpStream> {
+    pub(crate) fn pop(&self, timeout: Duration) -> Option<TcpStream> {
         let mut q = self.q.lock().unwrap();
         if q.is_empty() {
             q = self.ready.wait_timeout(q, timeout).unwrap().0;
@@ -105,11 +115,7 @@ impl HttpServer {
 
         let stop = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(HttpMetrics::new());
-        let queue = Arc::new(ConnQueue {
-            q: Mutex::new(std::collections::VecDeque::new()),
-            ready: Condvar::new(),
-            cap: opts.backlog.max(1),
-        });
+        let queue = Arc::new(ConnQueue::new(opts.backlog));
 
         let mut threads = Vec::with_capacity(opts.conn_threads.max(1) + 1);
         {

@@ -257,6 +257,51 @@ pub fn table5(cfg: &RoundingConfig) -> String {
     out
 }
 
+/// Latency cell that survives empty samples: a model that completed
+/// zero requests in a short run has no latency distribution, and its
+/// percentile is NaN — render a dash instead of leaking `NaNms` into
+/// the table (and into anything parsing it).
+fn ms_cell(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:>7.3}ms")
+    } else {
+        format!("{:>9}", "-")
+    }
+}
+
+/// Signed-delta analogue of [`ms_cell`] for the overhead summary lines
+/// (a transport leg that served nothing has NaN percentiles, so its
+/// deltas are NaN too).
+fn delta_ms(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:+.3}ms")
+    } else {
+        "-".to_string()
+    }
+}
+
+fn ratio_cell(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.2}x")
+    } else {
+        "-".to_string()
+    }
+}
+
+/// One transport/run table row shared by the serve-family reports.
+fn serve_row(r: &crate::serve::BenchResult) -> String {
+    format!(
+        "{:<24} {:>8.0} {:>8.0} {:>8.1} {} {} {}\n",
+        r.label,
+        r.throughput_rps,
+        r.rows_per_sec,
+        r.exec.mean_batch(),
+        ms_cell(r.p50_ms),
+        ms_cell(r.p95_ms),
+        ms_cell(r.p99_ms),
+    )
+}
+
 /// Serve-bench report: latency percentiles, throughput, the batch-size
 /// histogram, and the per-model split for the main run plus the
 /// unbatched baseline.  One request = one image's activations, so req/s
@@ -269,21 +314,9 @@ pub fn serve(
     out.push_str(
         "run                        img/s   rows/s   mean-b     p50      p95      p99\n",
     );
-    let row = |r: &crate::serve::BenchResult| {
-        format!(
-            "{:<24} {:>8.0} {:>8.0} {:>8.1} {:>7.3}ms {:>7.3}ms {:>7.3}ms\n",
-            r.label,
-            r.throughput_rps,
-            r.rows_per_sec,
-            r.exec.mean_batch(),
-            r.p50_ms,
-            r.p95_ms,
-            r.p99_ms,
-        )
-    };
-    out.push_str(&row(main));
+    out.push_str(&serve_row(main));
     if let Some(base) = baseline {
-        out.push_str(&row(base));
+        out.push_str(&serve_row(base));
         out.push_str(&format!(
             "throughput vs max-batch 1: {:.2}x\n",
             main.throughput_rps / base.throughput_rps.max(1e-9)
@@ -310,8 +343,15 @@ pub fn serve(
     }
     for m in &main.per_model {
         out.push_str(&format!(
-            "  {:<16} {:>4} -> {:<4}  served {:>6}  rows {:>7}  mean-b {:>5.1}  p50 {:>7.3}ms  p99 {:>7.3}ms\n",
-            m.name, m.d_in, m.d_out, m.served, m.exec.rows, m.exec.mean_batch(), m.p50_ms, m.p99_ms
+            "  {:<16} {:>4} -> {:<4}  served {:>6}  rows {:>7}  mean-b {:>5.1}  p50 {}  p99 {}\n",
+            m.name,
+            m.d_in,
+            m.d_out,
+            m.served,
+            m.exec.rows,
+            m.exec.mean_batch(),
+            ms_cell(m.p50_ms),
+            ms_cell(m.p99_ms)
         ));
     }
     out
@@ -331,27 +371,72 @@ pub fn serve_http(
         "transport                  img/s   rows/s   mean-b     p50      p95      p99\n",
     );
     for r in [inproc, http] {
-        out.push_str(&format!(
-            "{:<24} {:>8.0} {:>8.0} {:>8.1} {:>7.3}ms {:>7.3}ms {:>7.3}ms\n",
-            r.label,
-            r.throughput_rps,
-            r.rows_per_sec,
-            r.exec.mean_batch(),
-            r.p50_ms,
-            r.p95_ms,
-            r.p99_ms,
-        ));
+        out.push_str(&serve_row(r));
     }
     out.push_str(&format!(
-        "http overhead: p50 {:+.3}ms, p99 {:+.3}ms, throughput {:.2}x of in-process\n",
-        http.p50_ms - inproc.p50_ms,
-        http.p99_ms - inproc.p99_ms,
-        http.throughput_rps / inproc.throughput_rps.max(1e-9),
+        "http overhead: p50 {}, p99 {}, throughput {} of in-process\n",
+        delta_ms(http.p50_ms - inproc.p50_ms),
+        delta_ms(http.p99_ms - inproc.p99_ms),
+        ratio_cell(http.throughput_rps / inproc.throughput_rps.max(1e-9)),
     ));
     if http.errors > 0 || inproc.errors > 0 {
         out.push_str(&format!(
             "errors: in-process {}, http {}\n",
             inproc.errors, http.errors
+        ));
+    }
+    out
+}
+
+/// Three-way transport report: the identical seeded workload
+/// in-process, over HTTP/JSON, and over flashwire, plus the
+/// deterministic bytes-per-request accounting — the `BENCH_wire.json`
+/// acceptance view (DESIGN.md §13).
+pub fn serve_wire(
+    inproc: &crate::serve::BenchResult,
+    http: &crate::serve::BenchResult,
+    wire: &crate::serve::BenchResult,
+    shards: usize,
+    bytes: &crate::serve::TransportBytes,
+) -> String {
+    let mut out = hdr("Serve: flashwire binary frontend vs HTTP/JSON vs in-process");
+    out.push_str(&format!("executor shards: {shards}\n"));
+    out.push_str(
+        "transport                  img/s   rows/s   mean-b     p50      p95      p99\n",
+    );
+    for r in [inproc, http, wire] {
+        out.push_str(&serve_row(r));
+    }
+    out.push_str(&format!(
+        "wire vs json: p50 {}, p99 {}, throughput {}\n",
+        delta_ms(wire.p50_ms - http.p50_ms),
+        delta_ms(wire.p99_ms - http.p99_ms),
+        ratio_cell(wire.throughput_rps / http.throughput_rps.max(1e-9)),
+    ));
+    out.push_str(&format!(
+        "wire vs in-process: p50 {}, p99 {}, throughput {}\n",
+        delta_ms(wire.p50_ms - inproc.p50_ms),
+        delta_ms(wire.p99_ms - inproc.p99_ms),
+        ratio_cell(wire.throughput_rps / inproc.throughput_rps.max(1e-9)),
+    ));
+    out.push_str(&format!(
+        "bytes/request (req+resp): json {:.0}+{:.0} B, flashwire {:.0}+{:.0} B ({:.2}x of json)\n",
+        bytes.json_request,
+        bytes.json_response,
+        bytes.wire_request,
+        bytes.wire_response,
+        bytes.wire_vs_json_ratio(),
+    ));
+    if inproc.errors + http.errors + wire.errors > 0 {
+        out.push_str(&format!(
+            "errors: in-process {}, http {}, wire {}\n",
+            inproc.errors, http.errors, wire.errors
+        ));
+    }
+    if http.retries + wire.retries > 0 {
+        out.push_str(&format!(
+            "shed retries (backoff-absorbed 429/queue-full): http {}, wire {}\n",
+            http.retries, wire.retries
         ));
     }
     out
@@ -480,6 +565,7 @@ mod tests {
             p99_ms: 3.0,
             max_ms: 4.0,
             errors: 0,
+            retries: 0,
             exec: exec.clone(),
             peak_queued: 3,
             per_model: vec![
@@ -509,6 +595,17 @@ mod tests {
         assert!(t.contains("batched") && t.contains("baseline"), "{t}");
         assert!(t.contains("per-model:"), "{t}");
         assert!(t.contains("grkan") && t.contains("kat_micro"), "{t}");
+        // The zero-served model (kat_micro: 0 requests in this short
+        // run) must render dashes, never NaN/divide-by-zero artifacts.
+        assert!(!t.contains("NaN"), "zero-served model leaked NaN: {t}");
+        let micro_row = t.lines().find(|l| l.contains("kat_micro")).unwrap();
+        for stat in ["p50", "p99"] {
+            let cell = micro_row.split(stat).nth(1).unwrap();
+            assert!(
+                cell.trim_start().starts_with('-'),
+                "want a dash {stat} cell in {micro_row:?}"
+            );
+        }
     }
 
     #[test]
@@ -529,6 +626,7 @@ mod tests {
             p99_ms: p50 * 3.0,
             max_ms: p50 * 4.0,
             errors: 0,
+            retries: 0,
             exec: ExecStats::default(),
             peak_queued: 1,
             per_model: vec![],
@@ -538,6 +636,63 @@ mod tests {
         assert!(t.contains("in-process") && t.contains("loopback-http"), "{t}");
         assert!(t.contains("0.75x"), "{t}");
         assert!(t.contains("+0.300ms"), "{t}");
+
+        // A run where nothing completed (all NaN percentiles) renders
+        // dashes everywhere — the rows AND the overhead summary line.
+        let mut empty = mk("empty", 0.0, f64::NAN);
+        empty.mean_ms = f64::NAN;
+        let t = serve_http(&mk("in-process", 4000.0, 0.5), &empty, 2);
+        assert!(!t.contains("NaN"), "{t}");
+        assert!(t.contains("http overhead: p50 -, p99 -,"), "{t}");
+    }
+
+    #[test]
+    fn serve_wire_report_compares_three_transports_and_bytes() {
+        use crate::serve::{BenchResult, ExecStats, TransportBytes};
+        let mk = |label: &str, rps: f64, p50: f64| BenchResult {
+            label: label.into(),
+            requests: 10,
+            concurrency: 2,
+            max_batch: 8,
+            deadline_us: 200,
+            wall_secs: 0.1,
+            throughput_rps: rps,
+            rows_per_sec: rps * 2.0,
+            mean_ms: p50,
+            p50_ms: p50,
+            p95_ms: p50 * 2.0,
+            p99_ms: p50 * 3.0,
+            max_ms: p50 * 4.0,
+            errors: 0,
+            retries: 0,
+            exec: ExecStats::default(),
+            peak_queued: 1,
+            per_model: vec![],
+        };
+        let mut http = mk("loopback-http", 3000.0, 0.8);
+        http.retries = 4;
+        let bytes = TransportBytes {
+            json_request: 5000.0,
+            json_response: 5200.0,
+            wire_request: 1200.0,
+            wire_response: 1100.0,
+        };
+        let t = serve_wire(
+            &mk("in-process", 4000.0, 0.5),
+            &http,
+            &mk("loopback-wire", 3600.0, 0.6),
+            2,
+            &bytes,
+        );
+        assert!(t.contains("executor shards: 2"), "{t}");
+        assert!(
+            t.contains("in-process") && t.contains("loopback-http") && t.contains("loopback-wire"),
+            "{t}"
+        );
+        assert!(t.contains("wire vs json:"), "{t}");
+        assert!(t.contains("1.20x"), "{t}"); // 3600/3000
+        assert!(t.contains("json 5000+5200 B, flashwire 1200+1100 B (0.23x of json)"), "{t}");
+        assert!(t.contains("shed retries"), "{t}");
     }
 
     #[test]

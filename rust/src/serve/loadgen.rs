@@ -18,7 +18,11 @@
 //! (sharded server behind `net::HttpServer`, one keep-alive client per
 //! submitter thread); [`http_bench_json`] pairs it with the in-process
 //! record in `BENCH_http.json` so the frontend's overhead is a measured
-//! number, not a hope.
+//! number, not a hope.  [`run_wire`] does the same over the flashwire
+//! binary protocol, and [`wire_bench_json`] assembles the three-way
+//! in-process / HTTP-JSON / flashwire record (`BENCH_wire.json`),
+//! including the deterministic bytes-per-request accounting from
+//! [`transport_bytes`].
 
 use std::time::{Duration, Instant};
 
@@ -171,6 +175,11 @@ pub struct BenchResult {
     pub p99_ms: f64,
     pub max_ms: f64,
     pub errors: usize,
+    /// Shed-load (429 / QueueFull) retries the transport clients
+    /// performed — backpressure that was absorbed by backoff, distinct
+    /// from `errors` (requests that ultimately failed).  Always 0 for
+    /// the in-process transport, which blocks at admission instead.
+    pub retries: usize,
     /// Server-wide executor totals.
     pub exec: ExecStats,
     pub peak_queued: usize,
@@ -229,6 +238,7 @@ impl BenchResult {
             ("p99_ms".to_string(), Json::Num(self.p99_ms)),
             ("max_ms".to_string(), Json::Num(self.max_ms)),
             ("errors".to_string(), Json::Int(self.errors as i64)),
+            ("shed_retries".to_string(), Json::Int(self.retries as i64)),
             ("peak_queued".to_string(), Json::Int(self.peak_queued as i64)),
         ];
         fields.extend(exec_json(&self.exec));
@@ -425,9 +435,24 @@ fn aggregate(
         p99_ms: percentile(&all, 99.0) * 1e3,
         max_ms: all.last().copied().unwrap_or(f64::NAN) * 1e3,
         errors,
+        retries: 0,
         exec,
         peak_queued: stats.peak_queued,
         per_model,
+    }
+}
+
+/// Backoff before retrying a shed (429 / QueueFull) request: honor the
+/// server's Retry-After hint, but cap it — on loopback the queue drains
+/// in microseconds, and sleeping out a full advisory second per retry
+/// would make the bench measure `sleep()`, not the transport.  No hint
+/// (or an unparseable one) falls back to a short fixed poll.
+const SHED_BACKOFF_CAP: Duration = Duration::from_millis(5);
+
+fn shed_backoff(hint_millis: Option<u64>) -> Duration {
+    match hint_millis {
+        Some(ms) => Duration::from_millis(ms.max(1)).min(SHED_BACKOFF_CAP),
+        None => Duration::from_micros(200),
     }
 }
 
@@ -456,8 +481,9 @@ pub fn http_body(cfg: &LoadConfig, id: u64) -> (usize, String) {
 /// client-side decoding of `y` is the one cost not included).
 /// Comparing this record against [`run_sharded`]'s at the same shard
 /// count isolates the frontend's overhead.  A `429` (shed load) is
-/// retried after a short backoff — the bench counts only irrecoverable
-/// failures as errors.
+/// retried after a `Retry-After`-aware backoff ([`shed_backoff`]) and
+/// recorded in [`BenchResult::retries`] — the bench counts only
+/// irrecoverable failures as errors.
 pub fn run_http(
     cfg: &LoadConfig,
     policy: BatchPolicy,
@@ -485,8 +511,10 @@ pub fn run_http(
         .map(|m| format!("/v1/models/{}/infer", m.name))
         .collect();
 
+    let retries = std::sync::atomic::AtomicUsize::new(0);
     let (wall_secs, per_client) = drive(cfg, || {
         let paths = &paths;
+        let retries = &retries;
         let mut conn = HttpClient::connect(addr).ok();
         move |id| {
             // Workload generation stays outside the timed window (as in
@@ -514,7 +542,12 @@ pub fn run_http(
                         break;
                     }
                     Ok(resp) if resp.status == 429 => {
-                        std::thread::sleep(Duration::from_micros(200));
+                        // Backoff-aware retry: honor the server's
+                        // Retry-After hint (capped for loopback) and
+                        // record the shed instead of failing the
+                        // request.
+                        retries.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        std::thread::sleep(shed_backoff(resp.retry_after_millis()));
                     }
                     Ok(_) => break,
                     Err(_) => {
@@ -527,7 +560,93 @@ pub fn run_http(
         }
     });
     let stats = http.shutdown().expect("first shutdown");
-    Ok(aggregate(cfg, policy, label, wall_secs, per_client, &stats))
+    let mut res = aggregate(cfg, policy, label, wall_secs, per_client, &stats);
+    res.retries = retries.into_inner();
+    Ok(res)
+}
+
+/// Run the same seeded workload **over loopback flashwire**: a sharded
+/// server behind [`crate::wire::WireServer`], one keep-alive
+/// [`crate::wire::WireClient`] per submitter thread.  The timed window
+/// matches [`run_http`]'s exactly — payload generation outside, encode
+/// → TCP → decode → admit → respond inside — so the three records
+/// (in-process, HTTP/JSON, flashwire) differ only in transport.
+/// `QueueFull` error frames are retried with the same
+/// [`shed_backoff`] policy, honoring the frame's typed
+/// retry-after-millis hint.
+pub fn run_wire(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    label: &str,
+    shards: usize,
+) -> Result<BenchResult> {
+    use crate::wire::{ErrCode, WireClient, WireOptions, WireServer};
+
+    if cfg.requests == 0 || cfg.concurrency == 0 {
+        bail!("load config needs at least one request and one client");
+    }
+    if cfg.models.is_empty() {
+        bail!("load config needs at least one model spec");
+    }
+    let server = std::sync::Arc::new(Server::start_sharded(executors(cfg)?, policy, shards)?);
+    let wire = WireServer::bind(
+        "127.0.0.1:0",
+        server,
+        WireOptions { conn_threads: cfg.concurrency.max(1), ..Default::default() },
+    )?;
+    let addr = wire.local_addr();
+
+    let retries = std::sync::atomic::AtomicUsize::new(0);
+    let (wall_secs, per_client) = drive(cfg, || {
+        let retries = &retries;
+        let mut conn = WireClient::connect(addr).ok();
+        move |id| {
+            // Payload generation outside the timed window, encoding
+            // inside — mirroring run_http's window exactly.  Encode
+            // once: retries resend the same bytes instead of re-copying
+            // the floats per attempt (as run_http reuses its body
+            // string).
+            let (model, rows, x) = request(cfg, id);
+            let name = cfg.models[model].name.as_str();
+            let ts = Instant::now();
+            let payload = match WireClient::encode_infer(name, &x, rows) {
+                Ok(p) => p,
+                Err(_) => return (model, Err(())),
+            };
+            let mut ok = false;
+            for _attempt in 0..1000 {
+                if conn.is_none() {
+                    match WireClient::connect(addr) {
+                        Ok(c) => conn = Some(c),
+                        Err(_) => break,
+                    }
+                }
+                let c = conn.as_mut().expect("connection established above");
+                match c.infer_encoded(&payload) {
+                    Ok(Ok(_resp)) => {
+                        ok = true;
+                        break;
+                    }
+                    Ok(Err(e)) if e.code == ErrCode::QueueFull => {
+                        retries.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        let hint = (e.retry_after_millis > 0)
+                            .then_some(e.retry_after_millis as u64);
+                        std::thread::sleep(shed_backoff(hint));
+                    }
+                    Ok(Err(_)) => break,
+                    Err(_) => {
+                        // Reconnect once on a broken stream.
+                        conn = None;
+                    }
+                }
+            }
+            (model, if ok { Ok(ts.elapsed().as_secs_f64()) } else { Err(()) })
+        }
+    });
+    let stats = wire.shutdown().expect("first shutdown");
+    let mut res = aggregate(cfg, policy, label, wall_secs, per_client, &stats);
+    res.retries = retries.into_inner();
+    Ok(res)
 }
 
 /// The `BENCH_http.json` artifact: the same workload in-process and over
@@ -554,6 +673,159 @@ pub fn http_bench_json(
             ]),
         ),
         ("results".to_string(), Json::Arr(vec![inproc.to_json(), http.to_json()])),
+    ])
+}
+
+/// Mean on-the-wire payload bytes per request, per transport — computed
+/// deterministically over the **whole** seeded workload (every request
+/// id, its exact payload, and the exact response rows the executor
+/// produces), not sampled from a live run.  Counted bytes are the
+/// message encodings themselves: the JSON body for HTTP (headers are a
+/// near-constant ~150B/request and depend on the bound address), and
+/// the full frame (8-byte header + payload) for flashwire.  Response
+/// sizes assume a batch of 1 (`batch_size`/`cause` cost O(1) bytes
+/// either way, so coalescing does not change the comparison).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransportBytes {
+    pub json_request: f64,
+    pub json_response: f64,
+    pub wire_request: f64,
+    pub wire_response: f64,
+}
+
+impl TransportBytes {
+    pub fn json_total(&self) -> f64 {
+        self.json_request + self.json_response
+    }
+
+    pub fn wire_total(&self) -> f64 {
+        self.wire_request + self.wire_response
+    }
+
+    /// flashwire bytes as a fraction of JSON bytes (request + response).
+    pub fn wire_vs_json_ratio(&self) -> f64 {
+        self.wire_total() / self.json_total().max(1e-9)
+    }
+
+    fn to_json_pair(v_req: f64, v_resp: f64) -> Json {
+        Json::Obj(vec![
+            ("request".to_string(), Json::Num(v_req)),
+            ("response".to_string(), Json::Num(v_resp)),
+            ("total".to_string(), Json::Num(v_req + v_resp)),
+        ])
+    }
+}
+
+/// Compute [`TransportBytes`] for `cfg`'s workload: every request is
+/// encoded in both formats, and its response rows come from running the
+/// registry's executors directly (single-request batches, so the
+/// response payload is exact, not estimated).
+pub fn transport_bytes(cfg: &LoadConfig) -> Result<TransportBytes> {
+    use crate::wire::{InferRequest, InferResponse};
+
+    if cfg.requests == 0 {
+        bail!("load config needs at least one request");
+    }
+    let mut execs = executors(cfg)?;
+    let mut sums = TransportBytes::default();
+    let mut y = Vec::new();
+    for id in 0..cfg.requests as u64 {
+        let (model, rows, x) = request(cfg, id);
+        sums.json_request += infer_body(&x, rows).len() as f64;
+        let req = InferRequest {
+            model: cfg.models[model].name.clone(),
+            rows,
+            dim: cfg.models[model].d as u32,
+            x,
+        };
+        sums.wire_request += req.wire_bytes() as f64;
+        execs[model]
+            .run(&req.x, rows as usize, &mut y)
+            .with_context(|| format!("reference forward for request {id}"))?;
+        let resp_json = Json::Obj(vec![
+            ("y".to_string(), Json::Arr(y.iter().map(|&v| Json::Num(v as f64)).collect())),
+            ("batch_size".to_string(), Json::Int(1)),
+            ("cause".to_string(), Json::Str(FlushCause::Idle.label().to_string())),
+        ]);
+        sums.json_response += resp_json.to_string().len() as f64;
+        let resp = InferResponse { y: std::mem::take(&mut y), batch_size: 1, cause: FlushCause::Idle };
+        sums.wire_response += resp.wire_bytes() as f64;
+        y = resp.y; // reuse the buffer across requests
+    }
+    let n = cfg.requests as f64;
+    Ok(TransportBytes {
+        json_request: sums.json_request / n,
+        json_response: sums.json_response / n,
+        wire_request: sums.wire_request / n,
+        wire_response: sums.wire_response / n,
+    })
+}
+
+/// The `BENCH_wire.json` artifact: the identical seeded workload
+/// in-process, over HTTP/JSON, and over flashwire (all at the same
+/// shard count), with per-transport latency and the deterministic
+/// bytes-per-request accounting side by side.
+pub fn wire_bench_json(
+    cfg: &LoadConfig,
+    inproc: &BenchResult,
+    http: &BenchResult,
+    wire: &BenchResult,
+    shards: usize,
+    bytes: &TransportBytes,
+) -> Json {
+    let leg = |r: &BenchResult, b_req: f64, b_resp: f64| {
+        Json::Obj(vec![
+            ("p50_ms".to_string(), Json::Num(r.p50_ms)),
+            ("p99_ms".to_string(), Json::Num(r.p99_ms)),
+            ("throughput_rps".to_string(), Json::Num(r.throughput_rps)),
+            ("shed_retries".to_string(), Json::Int(r.retries as i64)),
+            (
+                "bytes_per_request".to_string(),
+                TransportBytes::to_json_pair(b_req, b_resp),
+            ),
+        ])
+    };
+    Json::Obj(vec![
+        ("bench".to_string(), Json::Str("serve_wire".to_string())),
+        ("config".to_string(), config_json(cfg)),
+        ("shards".to_string(), Json::Int(shards as i64)),
+        (
+            "transport_comparison".to_string(),
+            Json::Obj(vec![
+                ("json".to_string(), leg(http, bytes.json_request, bytes.json_response)),
+                (
+                    "flashwire".to_string(),
+                    leg(wire, bytes.wire_request, bytes.wire_response),
+                ),
+                (
+                    "wire_vs_json".to_string(),
+                    Json::Obj(vec![
+                        ("p50_ms".to_string(), Json::Num(wire.p50_ms - http.p50_ms)),
+                        ("p99_ms".to_string(), Json::Num(wire.p99_ms - http.p99_ms)),
+                        (
+                            "throughput_ratio".to_string(),
+                            Json::Num(wire.throughput_rps / http.throughput_rps.max(1e-9)),
+                        ),
+                        ("bytes_ratio".to_string(), Json::Num(bytes.wire_vs_json_ratio())),
+                    ]),
+                ),
+            ]),
+        ),
+        (
+            "wire_overhead".to_string(),
+            Json::Obj(vec![
+                ("p50_ms".to_string(), Json::Num(wire.p50_ms - inproc.p50_ms)),
+                ("p99_ms".to_string(), Json::Num(wire.p99_ms - inproc.p99_ms)),
+                (
+                    "throughput_ratio".to_string(),
+                    Json::Num(wire.throughput_rps / inproc.throughput_rps.max(1e-9)),
+                ),
+            ]),
+        ),
+        (
+            "results".to_string(),
+            Json::Arr(vec![inproc.to_json(), http.to_json(), wire.to_json()]),
+        ),
     ])
 }
 
@@ -797,6 +1069,85 @@ mod tests {
         }
         let other = LoadConfig { seed: 10, ..Default::default() };
         assert_ne!(request(&cfg, 0).2, request(&other, 0).2, "different seed, different stream");
+    }
+
+    #[test]
+    fn shed_backoff_honors_and_caps_the_hint() {
+        assert_eq!(shed_backoff(None), Duration::from_micros(200));
+        assert_eq!(shed_backoff(Some(2)), Duration::from_millis(2));
+        assert_eq!(shed_backoff(Some(0)), Duration::from_millis(1), "floor at 1ms");
+        assert_eq!(
+            shed_backoff(Some(60_000)),
+            SHED_BACKOFF_CAP,
+            "an advisory minute must not stall the bench"
+        );
+    }
+
+    /// End-to-end wire-mode smoke: the loopback flashwire run serves
+    /// everything it serves in-process, with the same counters
+    /// accounting, and the three-way record assembles.
+    #[test]
+    fn wire_mode_run_serves_the_workload() {
+        let cfg = LoadConfig {
+            requests: 40,
+            concurrency: 4,
+            models: vec![ModelSpec::new("wide", 64, 8), ModelSpec::new("narrow", 16, 4)],
+            ..Default::default()
+        };
+        let res = run_wire(
+            &cfg,
+            BatchPolicy { max_batch: 8, ..Default::default() },
+            "wire smoke",
+            2,
+        )
+        .unwrap();
+        assert_eq!(res.errors, 0, "all requests served over flashwire");
+        assert_eq!(res.exec.requests, 40);
+        let served: usize = res.per_model.iter().map(|m| m.served).sum();
+        assert_eq!(served, 40);
+        assert!(res.throughput_rps > 0.0);
+        let bytes = transport_bytes(&cfg).unwrap();
+        let j = wire_bench_json(&cfg, &res, &res, &res, 2, &bytes);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("serve_wire"));
+        assert_eq!(back.get("shards").unwrap().as_usize(), Some(2));
+        let cmp = back.get("transport_comparison").unwrap();
+        assert!(cmp.get("json").unwrap().get("bytes_per_request").unwrap().get("total").is_some());
+        assert!(cmp.get("flashwire").unwrap().get("bytes_per_request").is_some());
+        assert!(cmp.get("wire_vs_json").unwrap().get("bytes_ratio").is_some());
+        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    /// The binary encoding must be strictly smaller than JSON for
+    /// float-heavy payloads — that is the protocol's reason to exist —
+    /// and the accounting must be deterministic.
+    #[test]
+    fn transport_bytes_show_binary_smaller_than_json() {
+        let cfg = LoadConfig {
+            requests: 32,
+            models: vec![ModelSpec::new("grkan", 64, 8)],
+            ..Default::default()
+        };
+        let a = transport_bytes(&cfg).unwrap();
+        let b = transport_bytes(&cfg).unwrap();
+        assert_eq!(a.json_total(), b.json_total(), "deterministic");
+        assert_eq!(a.wire_total(), b.wire_total(), "deterministic");
+        // A 64-wide f32 row is 256 payload bytes on the wire vs ~a
+        // dozen decimal characters per value in JSON.
+        assert!(
+            a.wire_request < a.json_request && a.wire_response < a.json_response,
+            "binary must beat text: {a:?}"
+        );
+        assert!(a.wire_vs_json_ratio() < 0.5, "expected >2x byte saving, got {a:?}");
+        // Exact request size: header(8) + name(2+5) + rows(4) + dim(4)
+        // + rows*64*4 payload bytes, averaged over the row distribution.
+        let mut want = 0.0;
+        for id in 0..cfg.requests as u64 {
+            let (_, rows, x) = request(&cfg, id);
+            assert_eq!(x.len(), rows as usize * 64);
+            want += (8 + 2 + 5 + 4 + 4 + x.len() * 4) as f64;
+        }
+        assert_eq!(a.wire_request, want / cfg.requests as f64);
     }
 
     /// End-to-end HTTP-mode smoke: the loopback run serves everything it

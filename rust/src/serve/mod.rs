@@ -36,5 +36,7 @@ pub use batcher::{Batch, BatchPolicy, Batcher, FlushCause, ShapeKey, Ticket};
 pub use executor::{
     ExecStats, ModelExecutor, ModelStats, PipelineExecutor, RationalExecutor, ServeStats,
 };
-pub use loadgen::{Arrival, AutotuneResult, BenchResult, LoadConfig, ModelBench, ModelSpec};
+pub use loadgen::{
+    Arrival, AutotuneResult, BenchResult, LoadConfig, ModelBench, ModelSpec, TransportBytes,
+};
 pub use server::{ModelMeta, Response, Server, SubmitError};

@@ -1,0 +1,182 @@
+//! Thin blocking flashwire client over `std::net::TcpStream`.
+//!
+//! Exists for the wire loadgen mode, the e2e tests, and
+//! `examples/wire_client` — one keep-alive connection per client
+//! thread, mirroring `net::HttpClient` so the three-way transport
+//! comparison in `BENCH_wire.json` measures encodings, not
+//! connection-setup strategy.  Request/response are strictly one frame
+//! each, in order, on one connection.
+//!
+//! Outcome shape: the outer `Result` is transport failure (connection
+//! reset, protocol confusion — the conversation is over); the inner
+//! `Result<_, WireError>` is a *typed server answer* (queue full,
+//! unknown model, ...) on a connection that is still healthy — callers
+//! branch on [`ErrCode`](super::proto::ErrCode) without string
+//! matching, e.g. the bench's retry-after-aware backoff on
+//! `QueueFull`.
+
+use std::io::{BufReader, Read};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::frame::{
+    decode_header, write_frame, Frame, MsgType, WireLimits, HEADER_LEN,
+};
+use super::proto::{InferRequest, InferResponse, StatsResponse, WireError, PING_TOKEN_LEN};
+
+/// One keep-alive flashwire connection.
+pub struct WireClient {
+    reader: BufReader<TcpStream>,
+    addr: SocketAddr,
+    limits: WireLimits,
+    /// Set when a frame from the server failed to parse: the unread
+    /// remainder of that frame is still on the wire, so any further
+    /// read would misparse mid-payload bytes as a header.  Fail fast
+    /// instead; the caller reconnects.
+    broken: bool,
+}
+
+impl WireClient {
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        Self::connect_with_limits(addr, WireLimits::default())
+    }
+
+    /// [`Self::connect`] with explicit limits.  The client enforces
+    /// `limits.max_payload_bytes` on frames it *reads*, so talking to a
+    /// server started with a raised `--max-payload-bytes` (responses
+    /// can be as large as requests) needs a matching cap here.
+    pub fn connect_with_limits(addr: SocketAddr, limits: WireLimits) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        // A generous ceiling so a wedged server fails the call instead
+        // of hanging the bench/test forever (same as HttpClient).
+        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+        Ok(Self { reader: BufReader::new(stream), addr, limits, broken: false })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Validate and pre-encode one infer request's frame payload.  `x`
+    /// must hold `rows` full rows; the row width is derived as
+    /// `x.len() / rows`.  Callers that may resend — the bench's
+    /// shed-backoff retry loop — encode once here and replay the bytes
+    /// via [`Self::infer_encoded`] instead of re-copying the floats on
+    /// every attempt.
+    pub fn encode_infer(model: &str, x: &[f32], rows: u32) -> Result<Vec<u8>> {
+        let dim = if rows == 0 {
+            // An empty 0-row request still round-trips so the server
+            // can answer its typed BadShape; 0 rows WITH payload could
+            // never decode server-side (0 rows of any dim is 0 values),
+            // so fail it here as the caller bug it is.
+            if !x.is_empty() {
+                bail!("0 rows cannot carry {} payload values", x.len());
+            }
+            0
+        } else {
+            if x.len() % rows as usize != 0 {
+                bail!("{} values is not {rows} whole rows", x.len());
+            }
+            (x.len() / rows as usize) as u32
+        };
+        if model.len() > u16::MAX as usize {
+            bail!("model name over u16::MAX bytes");
+        }
+        Ok(InferRequest::encode_parts(model, rows, dim, x))
+    }
+
+    /// Submit one infer request.  Outer `Err` = transport failure;
+    /// inner `Err` = typed server error on a still-healthy connection.
+    pub fn infer(
+        &mut self,
+        model: &str,
+        x: &[f32],
+        rows: u32,
+    ) -> Result<std::result::Result<InferResponse, WireError>> {
+        let payload = Self::encode_infer(model, x, rows)?;
+        self.infer_encoded(&payload)
+    }
+
+    /// [`Self::infer`] over a payload pre-built by
+    /// [`Self::encode_infer`].
+    pub fn infer_encoded(
+        &mut self,
+        payload: &[u8],
+    ) -> Result<std::result::Result<InferResponse, WireError>> {
+        let frame = self.round_trip(MsgType::InferRequest, payload)?;
+        match frame.msg_type {
+            MsgType::InferResponse => Ok(Ok(InferResponse::decode(&frame.payload)
+                .map_err(|e| anyhow::anyhow!("bad InferResponse: {e}"))?)),
+            MsgType::Error => Ok(Err(WireError::decode(&frame.payload)
+                .map_err(|e| anyhow::anyhow!("bad Error frame: {e}"))?)),
+            other => bail!("unexpected reply {other:?} to an InferRequest"),
+        }
+    }
+
+    /// Round-trip a ping token; errors if the echo does not match.
+    pub fn ping(&mut self, token: u64) -> Result<()> {
+        let sent = token.to_le_bytes();
+        debug_assert_eq!(sent.len(), PING_TOKEN_LEN);
+        let frame = self.round_trip(MsgType::Ping, &sent)?;
+        match frame.msg_type {
+            MsgType::Pong if frame.payload == sent => Ok(()),
+            MsgType::Pong => bail!("pong echoed a different token"),
+            MsgType::Error => {
+                let e = WireError::decode(&frame.payload)
+                    .map_err(|e| anyhow::anyhow!("bad Error frame: {e}"))?;
+                bail!("ping refused: {e}")
+            }
+            other => bail!("unexpected reply {other:?} to a Ping"),
+        }
+    }
+
+    /// Fetch the live per-model counter snapshot.
+    pub fn stats(&mut self) -> Result<StatsResponse> {
+        let frame = self.round_trip(MsgType::StatsRequest, &[])?;
+        match frame.msg_type {
+            MsgType::StatsResponse => StatsResponse::decode(&frame.payload)
+                .map_err(|e| anyhow::anyhow!("bad StatsResponse: {e}")),
+            MsgType::Error => {
+                let e = WireError::decode(&frame.payload)
+                    .map_err(|e| anyhow::anyhow!("bad Error frame: {e}"))?;
+                bail!("stats refused: {e}")
+            }
+            other => bail!("unexpected reply {other:?} to a StatsRequest"),
+        }
+    }
+
+    /// Write one frame and read the one reply frame.  ANY failure —
+    /// partial write, timeout or EOF mid-read, header reject — leaves
+    /// the stream position unknowable, so it poisons the connection:
+    /// further calls fail fast instead of parsing stale mid-frame bytes
+    /// as a header.  Callers reconnect (as the bench's retry loop does).
+    fn round_trip(&mut self, msg_type: MsgType, payload: &[u8]) -> Result<Frame> {
+        if self.broken {
+            bail!("connection desynced by an earlier frame failure; reconnect");
+        }
+        let res = write_frame(self.reader.get_mut(), msg_type, payload)
+            .context("writing request frame")
+            .and_then(|()| self.read_frame());
+        if res.is_err() {
+            self.broken = true;
+        }
+        res
+    }
+
+    /// Blocking frame read (the 30s socket timeout is the only budget a
+    /// client needs; servers are the side that meters patience).
+    fn read_frame(&mut self) -> Result<Frame> {
+        let mut header = [0u8; HEADER_LEN];
+        self.reader
+            .read_exact(&mut header)
+            .context("reading frame header (connection closed?)")?;
+        let (msg_type, len) = decode_header(&header, &self.limits)
+            .map_err(|e| anyhow::anyhow!("bad frame from server: {e}"))?;
+        let mut payload = vec![0u8; len];
+        self.reader.read_exact(&mut payload).context("reading frame payload")?;
+        Ok(Frame { msg_type, payload })
+    }
+}

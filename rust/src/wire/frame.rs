@@ -1,0 +1,373 @@
+//! Length-prefixed binary frame codec — the flashwire transport's
+//! lowest layer (DESIGN.md §13).
+//!
+//! Every message on a flashwire connection is one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic  0x46 0x57 ("FW")
+//! 2       1     version (currently 1)
+//! 3       1     msg-type ([`MsgType`])
+//! 4       4     payload length, u32 little-endian
+//! 8       n     payload ([`super::proto`] defines each type's encoding)
+//! ```
+//!
+//! The codec is deliberately strict: a bad magic, an unknown version, an
+//! unknown msg-type, or a length over [`WireLimits::max_payload_bytes`]
+//! is rejected **at the header**, before a single payload byte is read —
+//! so a hostile or confused peer can never make the server buffer more
+//! than 8 bytes of garbage, and the property tests can assert the
+//! no-over-read guarantee byte for byte.  Truncation mid-frame is an
+//! error, never a silent partial message.
+//!
+//! Reads share the HTTP parser's patience discipline
+//! (`net::http::Patience`): they resume across the listener's short
+//! socket read-timeout ticks, an idle connection at a frame boundary is
+//! reported [`FrameOutcome::Closed`], and a stall or drip-feed *inside*
+//! a frame exhausts the tick/wall-clock budget and surfaces as
+//! [`FrameOutcome::Bad`] with [`BadKind::Timeout`] — the binary analogue
+//! of the HTTP `408`.
+
+use std::io::{self, BufRead, Write};
+use std::sync::atomic::AtomicBool;
+
+use crate::net::http::{read_exact_resumable, Patience};
+
+/// First two bytes of every frame.
+pub const MAGIC: [u8; 2] = *b"FW";
+/// Protocol version this codec speaks (byte 2 of the header).
+pub const VERSION: u8 = 1;
+/// Fixed frame-header size: magic + version + msg-type + u32 length.
+pub const HEADER_LEN: usize = 8;
+
+/// Hard limits on a single frame's wire size and patience — mirrors
+/// `net::Limits` so the binary frontend is exactly as abuse-bounded as
+/// the HTTP one.
+#[derive(Clone, Copy, Debug)]
+pub struct WireLimits {
+    /// Payload-length ceiling, bytes; a header declaring more is
+    /// rejected before any payload byte is read.
+    pub max_payload_bytes: usize,
+    /// Silent read-timeout ticks (one per socket `read_timeout` expiry,
+    /// 50ms in the server) tolerated while waiting for bytes; same
+    /// semantics as `net::Limits::max_stall_ticks`.
+    pub max_stall_ticks: usize,
+    /// Wall-clock ceiling on reading one whole frame (drip-feed
+    /// defense); same semantics as `net::Limits::max_request_secs`.
+    pub max_request_secs: u64,
+}
+
+impl Default for WireLimits {
+    fn default() -> Self {
+        Self {
+            // Same body ceiling as the HTTP frontend's default.
+            max_payload_bytes: 8 * 1024 * 1024,
+            max_stall_ticks: 200,
+            max_request_secs: 60,
+        }
+    }
+}
+
+/// Frame discriminator (byte 3 of the header).  Odd = client → server,
+/// even = server → client, except [`MsgType::Error`], which only the
+/// server sends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum MsgType {
+    InferRequest = 1,
+    InferResponse = 2,
+    StatsRequest = 3,
+    StatsResponse = 4,
+    Ping = 5,
+    Pong = 6,
+    Error = 7,
+}
+
+impl MsgType {
+    pub const ALL: [MsgType; 7] = [
+        MsgType::InferRequest,
+        MsgType::InferResponse,
+        MsgType::StatsRequest,
+        MsgType::StatsResponse,
+        MsgType::Ping,
+        MsgType::Pong,
+        MsgType::Error,
+    ];
+
+    pub fn from_u8(v: u8) -> Option<MsgType> {
+        MsgType::ALL.iter().copied().find(|t| *t as u8 == v)
+    }
+}
+
+/// One decoded frame.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub msg_type: MsgType,
+    pub payload: Vec<u8>,
+}
+
+/// Why a frame read failed in a way the connection handler should
+/// answer (with an error frame) before closing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BadKind {
+    /// Framing violation: bad magic/version/type, oversized length, or
+    /// truncation mid-frame.  The byte stream can no longer be trusted.
+    Malformed,
+    /// Stall/deadline budget exhausted mid-frame (the HTTP `408`
+    /// analogue).
+    Timeout,
+}
+
+/// Result of reading one frame off a connection.
+#[derive(Debug)]
+pub enum FrameOutcome {
+    /// A complete, well-formed frame.
+    Ok(Frame),
+    /// Clean EOF or idle-timeout before the first byte of a frame (the
+    /// peer closed or parked an idle keep-alive connection) — not an
+    /// error.
+    Closed,
+    /// Protocol violation: answer an error frame and close.
+    Bad { kind: BadKind, msg: String },
+}
+
+fn bad(kind: BadKind, msg: impl Into<String>) -> FrameOutcome {
+    FrameOutcome::Bad { kind, msg: msg.into() }
+}
+
+/// Validate a frame header against `limits`.  Pure — the property tests
+/// drive it directly.  `Err` carries the reason; the caller has read
+/// exactly [`HEADER_LEN`] bytes and must not read more on error.
+pub fn decode_header(
+    h: &[u8; HEADER_LEN],
+    limits: &WireLimits,
+) -> Result<(MsgType, usize), String> {
+    if h[0..2] != MAGIC {
+        return Err(format!("bad magic {:#04x}{:02x} (want \"FW\")", h[0], h[1]));
+    }
+    if h[2] != VERSION {
+        return Err(format!("unsupported flashwire version {} (want {VERSION})", h[2]));
+    }
+    let Some(msg_type) = MsgType::from_u8(h[3]) else {
+        return Err(format!("unknown msg-type {}", h[3]));
+    };
+    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]) as usize;
+    if len > limits.max_payload_bytes {
+        return Err(format!(
+            "payload of {len} bytes over the {} cap",
+            limits.max_payload_bytes
+        ));
+    }
+    Ok((msg_type, len))
+}
+
+/// Read one frame.  `stop` is the server's shutdown flag: reads get the
+/// shared drain-grace window, after which exhaustion surfaces as a
+/// timeout.  An idle connection (no bytes of a next frame) is `Closed`;
+/// truncation or a stall inside a frame is `Bad`.
+pub fn read_frame(
+    r: &mut impl BufRead,
+    limits: &WireLimits,
+    stop: &AtomicBool,
+) -> io::Result<FrameOutcome> {
+    let mut patience =
+        Patience::with_budget(stop, limits.max_stall_ticks, limits.max_request_secs);
+    let mut header = [0u8; HEADER_LEN];
+    // The first byte separates "idle peer went away / never spoke" from
+    // "a started frame was cut short".
+    match read_exact_resumable(r, &mut header[..1], &mut patience) {
+        Ok(()) => {}
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(FrameOutcome::Closed),
+        Err(e) if e.kind() == io::ErrorKind::TimedOut => return Ok(FrameOutcome::Closed),
+        Err(e) => return Err(e),
+    }
+    match read_exact_resumable(r, &mut header[1..], &mut patience) {
+        Ok(()) => {}
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => {
+            return Ok(bad(BadKind::Malformed, "connection closed inside a frame header"));
+        }
+        Err(e) if e.kind() == io::ErrorKind::TimedOut => {
+            return Ok(bad(BadKind::Timeout, "frame header read timed out"));
+        }
+        Err(e) => return Err(e),
+    }
+    let (msg_type, len) = match decode_header(&header, limits) {
+        Ok(v) => v,
+        Err(msg) => return Ok(bad(BadKind::Malformed, msg)),
+    };
+    let mut payload = vec![0u8; len];
+    if len > 0 {
+        match read_exact_resumable(r, &mut payload, &mut patience) {
+            Ok(()) => {}
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => {
+                return Ok(bad(BadKind::Malformed, "connection closed inside a frame payload"));
+            }
+            Err(e) if e.kind() == io::ErrorKind::TimedOut => {
+                return Ok(bad(BadKind::Timeout, "frame payload read timed out"));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(FrameOutcome::Ok(Frame { msg_type, payload }))
+}
+
+/// Serialize one frame: 8-byte header, payload, flush.
+pub fn write_frame(w: &mut impl Write, msg_type: MsgType, payload: &[u8]) -> io::Result<()> {
+    let len = u32::try_from(payload.len()).map_err(|_| {
+        io::Error::new(io::ErrorKind::InvalidInput, "frame payload over u32::MAX bytes")
+    })?;
+    let mut header = [0u8; HEADER_LEN];
+    header[..2].copy_from_slice(&MAGIC);
+    header[2] = VERSION;
+    header[3] = msg_type as u8;
+    header[4..].copy_from_slice(&len.to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn no_stop() -> AtomicBool {
+        AtomicBool::new(false)
+    }
+
+    fn read(raw: &[u8], limits: &WireLimits) -> FrameOutcome {
+        read_frame(&mut Cursor::new(raw.to_vec()), limits, &no_stop()).unwrap()
+    }
+
+    fn encoded(msg_type: MsgType, payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, msg_type, payload).unwrap();
+        out
+    }
+
+    #[test]
+    fn round_trips_a_frame() {
+        let raw = encoded(MsgType::Ping, b"12345678");
+        assert_eq!(raw.len(), HEADER_LEN + 8);
+        let FrameOutcome::Ok(f) = read(&raw, &WireLimits::default()) else {
+            panic!("want Ok")
+        };
+        assert_eq!(f.msg_type, MsgType::Ping);
+        assert_eq!(f.payload, b"12345678");
+    }
+
+    #[test]
+    fn empty_payload_and_pipelined_frames_parse_in_sequence() {
+        let mut raw = encoded(MsgType::StatsRequest, b"");
+        raw.extend_from_slice(&encoded(MsgType::Ping, b"abcdefgh"));
+        let mut cur = Cursor::new(raw);
+        let stop = no_stop();
+        let FrameOutcome::Ok(a) = read_frame(&mut cur, &WireLimits::default(), &stop).unwrap()
+        else {
+            panic!("first")
+        };
+        assert_eq!((a.msg_type, a.payload.len()), (MsgType::StatsRequest, 0));
+        let FrameOutcome::Ok(b) = read_frame(&mut cur, &WireLimits::default(), &stop).unwrap()
+        else {
+            panic!("second")
+        };
+        assert_eq!(b.msg_type, MsgType::Ping);
+        assert!(matches!(
+            read_frame(&mut cur, &WireLimits::default(), &stop).unwrap(),
+            FrameOutcome::Closed
+        ));
+    }
+
+    #[test]
+    fn eof_before_first_byte_is_closed_not_error() {
+        assert!(matches!(read(b"", &WireLimits::default()), FrameOutcome::Closed));
+    }
+
+    #[test]
+    fn bad_magic_version_and_type_are_rejected_at_the_header() {
+        let good = encoded(MsgType::Ping, b"12345678");
+        for (mutate, want_sub) in [
+            (0usize, "bad magic"),
+            (2, "unsupported flashwire version"),
+            (3, "unknown msg-type"),
+        ] {
+            let mut raw = good.clone();
+            raw[mutate] = 0xEE;
+            match read(&raw, &WireLimits::default()) {
+                FrameOutcome::Bad { kind: BadKind::Malformed, msg } => {
+                    assert!(msg.contains(want_sub), "byte {mutate}: {msg}")
+                }
+                other => panic!("byte {mutate}: want Bad, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_without_reading_payload() {
+        let limits = WireLimits { max_payload_bytes: 16, ..Default::default() };
+        let raw = encoded(MsgType::Ping, &[0u8; 64]);
+        let mut cur = Cursor::new(raw);
+        match read_frame(&mut cur, &limits, &no_stop()).unwrap() {
+            FrameOutcome::Bad { kind: BadKind::Malformed, msg } => {
+                assert!(msg.contains("over the 16 cap"), "{msg}")
+            }
+            other => panic!("want Bad, got {other:?}"),
+        }
+        assert_eq!(cur.position(), HEADER_LEN as u64, "no payload byte was read");
+    }
+
+    #[test]
+    fn truncated_frames_are_malformed_not_hangs() {
+        let raw = encoded(MsgType::Ping, b"12345678");
+        // Every strict prefix (past the first byte) is a truncation.
+        for cut in 1..raw.len() {
+            match read(&raw[..cut], &WireLimits::default()) {
+                FrameOutcome::Bad { kind: BadKind::Malformed, .. } => {}
+                other => panic!("cut at {cut}: want Bad, got {other:?}"),
+            }
+        }
+    }
+
+    /// A reader that yields its prefix, then stalls forever with
+    /// `WouldBlock` — the frame-codec analogue of http.rs's stall stub.
+    struct Stall(Vec<u8>, usize);
+
+    impl io::Read for Stall {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            if self.1 < self.0.len() {
+                let n = (self.0.len() - self.1).min(out.len());
+                out[..n].copy_from_slice(&self.0[self.1..self.1 + n]);
+                self.1 += n;
+                Ok(n)
+            } else {
+                Err(io::ErrorKind::WouldBlock.into())
+            }
+        }
+    }
+
+    #[test]
+    fn stall_mid_frame_is_timeout_and_idle_stall_is_closed() {
+        let limits = WireLimits { max_stall_ticks: 3, ..Default::default() };
+        let raw = encoded(MsgType::Ping, b"12345678");
+        let mut r = io::BufReader::new(Stall(raw[..5].to_vec(), 0));
+        match read_frame(&mut r, &limits, &no_stop()).unwrap() {
+            FrameOutcome::Bad { kind: BadKind::Timeout, .. } => {}
+            other => panic!("want Timeout, got {other:?}"),
+        }
+        let mut r = io::BufReader::new(Stall(Vec::new(), 0));
+        assert!(matches!(
+            read_frame(&mut r, &limits, &no_stop()).unwrap(),
+            FrameOutcome::Closed
+        ));
+    }
+
+    #[test]
+    fn header_layout_matches_the_design_doc_table() {
+        let raw = encoded(MsgType::InferRequest, &[9, 9, 9]);
+        assert_eq!(&raw[0..2], b"FW");
+        assert_eq!(raw[2], VERSION);
+        assert_eq!(raw[3], MsgType::InferRequest as u8);
+        assert_eq!(u32::from_le_bytes([raw[4], raw[5], raw[6], raw[7]]), 3);
+        assert_eq!(&raw[8..], &[9, 9, 9]);
+    }
+}

@@ -1,0 +1,43 @@
+//! flashwire: a zero-dependency, length-prefixed binary wire protocol
+//! for float-heavy inference traffic (DESIGN.md §13).
+//!
+//! The HTTP/JSON frontend (DESIGN.md §12) preserves f32 payloads
+//! bit-exactly, but pays a text round trip per value — shortest
+//! round-trip decimal encode on the way out, parse on the way in.  For
+//! realistic batch payloads that encode/parse cost dominates the GR-KAN
+//! forward itself: the transport-layer image of FlashKAT's thesis that
+//! FLOP-equivalent systems lose orders of magnitude to data movement.
+//! flashwire removes the text round trip: f32 rows cross the wire as
+//! the little-endian bytes they already are, inside gRPC-style
+//! length-prefixed frames.  Four layers, each testable on its own:
+//!
+//! - [`frame`] — the versioned frame codec: magic + version + msg-type
+//!   + u32 length, hard caps mirroring `net::Limits`,
+//!   timeout-resumable reads, strict rejection of truncated /
+//!   oversized / unknown frames *before* their payload is read.
+//! - [`proto`] — typed messages: `InferRequest`/`InferResponse` (flat
+//!   f32 LE payloads), `StatsRequest`/`StatsResponse`, `Ping`/`Pong`,
+//!   and `Error` frames carrying the same typed failure taxonomy the
+//!   HTTP router maps to statuses (queue full → retry-after-millis,
+//!   bad-model, bad-shape, non-finite-input, ...).
+//! - [`server`] — the threaded frontend: bounded accept loop + fixed
+//!   handler pool (sharing `net::listener`'s hand-off queue), graceful
+//!   SIGTERM drain, per-connection keep-alive under the shared
+//!   stall/deadline budget.
+//! - [`client`] — a thin blocking client (wire loadgen mode, e2e
+//!   tests, `examples/wire_client`).
+//!
+//! Served by `flashkat serve-wire`; measured against HTTP/JSON and
+//! in-process submission by `serve-bench --wire` → `BENCH_wire.json`.
+
+pub mod client;
+pub mod frame;
+pub mod proto;
+pub mod server;
+
+pub use client::WireClient;
+pub use frame::{Frame, FrameOutcome, MsgType, WireLimits, HEADER_LEN, MAGIC, VERSION};
+pub use proto::{
+    ErrCode, InferRequest, InferResponse, StatsModel, StatsResponse, WireError,
+};
+pub use server::{WireMetrics, WireOptions, WireServer};

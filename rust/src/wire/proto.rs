@@ -1,0 +1,587 @@
+//! Typed flashwire messages: the payload encodings for each
+//! [`super::frame::MsgType`] (DESIGN.md §13).
+//!
+//! All integers are little-endian; strings are UTF-8 behind a `u16`
+//! length; f32 arrays are a flat little-endian byte copy
+//! (`f32::to_le_bytes` per element), so a float crosses the wire
+//! **bit-exactly** — no decimal formatting, no parse, no rounding.
+//! That byte copy is the whole point of the protocol: the HTTP/JSON
+//! frontend preserves f32 bits too, but only by paying a
+//! shortest-round-trip decimal encode *and* a parse per value, which is
+//! exactly the FLOP-free data-movement cost the FlashKAT analysis says
+//! dominates — here the payload moves as the bytes it already is.
+//!
+//! Decoding is strict: every message must consume its payload exactly
+//! (trailing bytes are an error, as is truncation), and counts are
+//! cross-checked in u64 so hostile `rows * dim` values cannot overflow
+//! into a small allocation.  Decode errors are `String`s; the server
+//! answers them as [`ErrCode::BadMsg`] error frames but keeps the
+//! connection (the framing layer is still intact).
+
+use crate::serve::{FlushCause, ServeStats};
+
+use super::frame::HEADER_LEN;
+
+/// Typed error codes carried by [`WireError`] frames — one per distinct
+/// failure the HTTP router maps to a status, plus the frame/message
+/// codec's own rejects, so binary clients can branch on outcomes
+/// without string matching (the wire analogue of `serve::SubmitError`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u16)]
+pub enum ErrCode {
+    /// Framing violation (bad magic/version/type, oversized, truncated);
+    /// the server closes the connection after answering.
+    BadFrame = 1,
+    /// A well-framed payload that does not decode as its msg-type.
+    BadMsg = 2,
+    /// Request shape mismatch (`rows * dim != payload`, zero rows, or a
+    /// width the routed model rejects).
+    BadShape = 3,
+    /// Input values must be finite (parity with the JSON frontend's
+    /// `400`; see DESIGN.md §13 on why *outputs* have no such rule).
+    NonFiniteInput = 4,
+    /// No such model in the registry.
+    BadModel = 5,
+    /// Admission queue at depth — retry after
+    /// [`WireError::retry_after_millis`].
+    QueueFull = 6,
+    /// Connection-handler backlog full at the door.
+    Backlog = 7,
+    /// Server is draining; no further request will be served.
+    Draining = 8,
+    /// Admitted, but the response timed out (wedged executor) — retry
+    /// after the hint.
+    Timeout = 9,
+    /// The model's executor failed the batch.
+    Internal = 10,
+    /// The *client's* frame stalled or drip-fed past the read budget —
+    /// the HTTP `408` analogue.  The peer's own fault: no retry hint.
+    RequestTimeout = 11,
+}
+
+impl ErrCode {
+    pub const ALL: [ErrCode; 11] = [
+        ErrCode::BadFrame,
+        ErrCode::BadMsg,
+        ErrCode::BadShape,
+        ErrCode::NonFiniteInput,
+        ErrCode::BadModel,
+        ErrCode::QueueFull,
+        ErrCode::Backlog,
+        ErrCode::Draining,
+        ErrCode::Timeout,
+        ErrCode::Internal,
+        ErrCode::RequestTimeout,
+    ];
+
+    pub fn from_u16(v: u16) -> Option<ErrCode> {
+        ErrCode::ALL.iter().copied().find(|c| *c as u16 == v)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ErrCode::BadFrame => "bad-frame",
+            ErrCode::BadMsg => "bad-msg",
+            ErrCode::BadShape => "bad-shape",
+            ErrCode::NonFiniteInput => "non-finite-input",
+            ErrCode::BadModel => "bad-model",
+            ErrCode::QueueFull => "queue-full",
+            ErrCode::Backlog => "backlog",
+            ErrCode::Draining => "draining",
+            ErrCode::Timeout => "timeout",
+            ErrCode::Internal => "internal",
+            ErrCode::RequestTimeout => "request-timeout",
+        }
+    }
+
+    /// The HTTP status the router maps the same failure to — the two
+    /// frontends expose one error taxonomy over two encodings.
+    pub fn http_equiv(self) -> u16 {
+        match self {
+            ErrCode::BadFrame | ErrCode::BadMsg | ErrCode::BadShape
+            | ErrCode::NonFiniteInput => 400,
+            ErrCode::BadModel => 404,
+            ErrCode::RequestTimeout => 408,
+            ErrCode::QueueFull => 429,
+            ErrCode::Backlog | ErrCode::Draining | ErrCode::Timeout => 503,
+            ErrCode::Internal => 500,
+        }
+    }
+}
+
+/// A typed server-side failure, carried in a [`MsgType::Error`] frame.
+///
+/// [`MsgType::Error`]: super::frame::MsgType::Error
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireError {
+    pub code: ErrCode,
+    /// Backoff hint in milliseconds (`0` = none); nonzero on
+    /// [`ErrCode::QueueFull`]/[`ErrCode::Backlog`]/[`ErrCode::Timeout`]
+    /// — the binary analogue of the HTTP `Retry-After` header.
+    pub retry_after_millis: u32,
+    pub message: String,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} ({}): {}", self.code.label(), self.code as u16, self.message)?;
+        if self.retry_after_millis > 0 {
+            write!(f, " [retry after {}ms]", self.retry_after_millis)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// `POST /v1/models/{model}/infer`, binary form: `rows` rows of `dim`
+/// f32s, flat row-major, little-endian.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferRequest {
+    pub model: String,
+    pub rows: u32,
+    pub dim: u32,
+    pub x: Vec<f32>,
+}
+
+/// The served rows plus the same batching telemetry the JSON response
+/// carries (`batch_size`, flush `cause`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferResponse {
+    pub y: Vec<f32>,
+    pub batch_size: u32,
+    pub cause: FlushCause,
+}
+
+/// Per-model counter snapshot (the binary `/metrics` analogue).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StatsModel {
+    pub name: String,
+    pub d_in: u32,
+    pub d_out: u32,
+    pub requests: u64,
+    pub rows: u64,
+    pub batches: u64,
+    pub failed: u64,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct StatsResponse {
+    pub models: Vec<StatsModel>,
+    pub shard_peaks: Vec<u64>,
+}
+
+impl StatsResponse {
+    pub fn from_stats(stats: &ServeStats) -> StatsResponse {
+        StatsResponse {
+            models: stats
+                .per_model
+                .iter()
+                .map(|m| StatsModel {
+                    name: m.name.clone(),
+                    d_in: m.d_in as u32,
+                    d_out: m.d_out as u32,
+                    requests: m.stats.requests as u64,
+                    rows: m.stats.rows as u64,
+                    batches: m.stats.batches as u64,
+                    failed: m.stats.failed as u64,
+                })
+                .collect(),
+            shard_peaks: stats.shard_peaks.iter().map(|&p| p as u64).collect(),
+        }
+    }
+}
+
+/// Ping/Pong payload: an opaque token the server echoes verbatim.
+pub const PING_TOKEN_LEN: usize = 8;
+
+// ---- encoding helpers -------------------------------------------------
+
+/// `u16` length + UTF-8 bytes.  A string over `u16::MAX` bytes is
+/// truncated at a char boundary rather than letting `as u16` silently
+/// wrap the length prefix into a self-inconsistent encoding (callers
+/// that must not lose bytes — the client's model-name path — validate
+/// the length before encoding).
+fn put_str16(out: &mut Vec<u8>, s: &str) {
+    let mut end = s.len().min(u16::MAX as usize);
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    out.extend_from_slice(&(end as u16).to_le_bytes());
+    out.extend_from_slice(&s.as_bytes()[..end]);
+}
+
+/// Flat little-endian f32 copy — the zero-text-round-trip hot path.
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for &v in xs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Strict little-endian reader over one payload: every getter errors on
+/// truncation, and [`Cur::done`] errors on trailing bytes, so a message
+/// either decodes exactly or not at all.
+struct Cur<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, off: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.off
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated {what}: {} bytes left, {n} needed",
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, String> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, String> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, String> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, String> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn str16(&mut self, what: &str) -> Result<String, String> {
+        let n = self.u16(what)? as usize;
+        let b = self.take(n, what)?;
+        String::from_utf8(b.to_vec()).map_err(|_| format!("non-UTF-8 {what}"))
+    }
+
+    /// Exactly `count` f32s; `count` is cross-checked in u64 so a
+    /// hostile header cannot overflow the byte math.
+    fn f32s(&mut self, count: u64, what: &str) -> Result<Vec<f32>, String> {
+        let want_bytes = count.checked_mul(4).ok_or_else(|| format!("{what} count overflows"))?;
+        if want_bytes != self.remaining() as u64 {
+            return Err(format!(
+                "{what}: {} payload bytes for {count} f32s (want {want_bytes})",
+                self.remaining()
+            ));
+        }
+        let b = self.take(self.remaining(), what)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn done(self, what: &str) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err(format!("{} trailing bytes after {what}", self.remaining()));
+        }
+        Ok(())
+    }
+}
+
+// ---- message codecs ---------------------------------------------------
+
+impl InferRequest {
+    /// Wire size of this request including the frame header — the
+    /// bytes-per-request accounting the bench records.
+    pub fn wire_bytes(&self) -> usize {
+        HEADER_LEN + 2 + self.model.len() + 4 + 4 + self.x.len() * 4
+    }
+
+    /// Encode straight from borrowed parts — the client hot path, so a
+    /// caller (or a retry loop) never copies the floats into an owned
+    /// [`InferRequest`] just to serialize them.
+    pub fn encode_parts(model: &str, rows: u32, dim: u32, x: &[f32]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(2 + model.len() + 8 + x.len() * 4);
+        put_str16(&mut out, model);
+        out.extend_from_slice(&rows.to_le_bytes());
+        out.extend_from_slice(&dim.to_le_bytes());
+        put_f32s(&mut out, x);
+        out
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        Self::encode_parts(&self.model, self.rows, self.dim, &self.x)
+    }
+
+    pub fn decode(p: &[u8]) -> Result<InferRequest, String> {
+        let mut c = Cur::new(p);
+        let model = c.str16("model name")?;
+        let rows = c.u32("rows")?;
+        let dim = c.u32("dim")?;
+        let x = c.f32s(rows as u64 * dim as u64, "x")?;
+        c.done("InferRequest")?;
+        Ok(InferRequest { model, rows, dim, x })
+    }
+}
+
+impl InferResponse {
+    pub fn wire_bytes(&self) -> usize {
+        HEADER_LEN + 4 + 1 + 4 + self.y.len() * 4
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bytes() - HEADER_LEN);
+        out.extend_from_slice(&self.batch_size.to_le_bytes());
+        out.push(self.cause.index() as u8);
+        out.extend_from_slice(&(self.y.len() as u32).to_le_bytes());
+        put_f32s(&mut out, &self.y);
+        out
+    }
+
+    pub fn decode(p: &[u8]) -> Result<InferResponse, String> {
+        let mut c = Cur::new(p);
+        let batch_size = c.u32("batch_size")?;
+        let cause_idx = c.u8("cause")? as usize;
+        let cause = *FlushCause::ALL
+            .get(cause_idx)
+            .ok_or_else(|| format!("unknown flush cause {cause_idx}"))?;
+        let n = c.u32("y length")?;
+        let y = c.f32s(n as u64, "y")?;
+        c.done("InferResponse")?;
+        Ok(InferResponse { y, batch_size, cause })
+    }
+}
+
+impl WireError {
+    pub fn new(code: ErrCode, message: impl Into<String>) -> WireError {
+        WireError { code, retry_after_millis: 0, message: message.into() }
+    }
+
+    pub fn with_retry_after(mut self, millis: u32) -> WireError {
+        self.retry_after_millis = millis;
+        self
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(2 + 4 + 2 + self.message.len().min(64));
+        out.extend_from_slice(&(self.code as u16).to_le_bytes());
+        out.extend_from_slice(&self.retry_after_millis.to_le_bytes());
+        // Messages can embed client-supplied text (model names);
+        // put_str16's char-boundary truncation bounds the error path
+        // without ever panicking mid-UTF-8.
+        put_str16(&mut out, &self.message);
+        out
+    }
+
+    pub fn decode(p: &[u8]) -> Result<WireError, String> {
+        let mut c = Cur::new(p);
+        let raw = c.u16("error code")?;
+        let code =
+            ErrCode::from_u16(raw).ok_or_else(|| format!("unknown error code {raw}"))?;
+        let retry_after_millis = c.u32("retry-after")?;
+        let message = c.str16("error message")?;
+        c.done("Error")?;
+        Ok(WireError { code, retry_after_millis, message })
+    }
+}
+
+impl StatsResponse {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&(self.models.len() as u32).to_le_bytes());
+        for m in &self.models {
+            put_str16(&mut out, &m.name);
+            out.extend_from_slice(&m.d_in.to_le_bytes());
+            out.extend_from_slice(&m.d_out.to_le_bytes());
+            for v in [m.requests, m.rows, m.batches, m.failed] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out.extend_from_slice(&(self.shard_peaks.len() as u32).to_le_bytes());
+        for &p in &self.shard_peaks {
+            out.extend_from_slice(&p.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn decode(p: &[u8]) -> Result<StatsResponse, String> {
+        let mut c = Cur::new(p);
+        let n_models = c.u32("model count")?;
+        // Truncation-safe pre-check: each entry is at least 2+4+4+32 bytes.
+        if n_models as u64 * 42 > c.remaining() as u64 {
+            return Err(format!("model count {n_models} larger than the payload"));
+        }
+        let mut models = Vec::with_capacity(n_models as usize);
+        for _ in 0..n_models {
+            let name = c.str16("model name")?;
+            let d_in = c.u32("d_in")?;
+            let d_out = c.u32("d_out")?;
+            let requests = c.u64("requests")?;
+            let rows = c.u64("rows")?;
+            let batches = c.u64("batches")?;
+            let failed = c.u64("failed")?;
+            models.push(StatsModel { name, d_in, d_out, requests, rows, batches, failed });
+        }
+        let n_shards = c.u32("shard count")?;
+        if n_shards as u64 * 8 != c.remaining() as u64 {
+            return Err(format!("shard count {n_shards} does not match the payload"));
+        }
+        let mut shard_peaks = Vec::with_capacity(n_shards as usize);
+        for _ in 0..n_shards {
+            shard_peaks.push(c.u64("shard peak")?);
+        }
+        c.done("StatsResponse")?;
+        Ok(StatsResponse { models, shard_peaks })
+    }
+}
+
+/// Decode a Ping/Pong token: exactly [`PING_TOKEN_LEN`] opaque bytes.
+pub fn decode_ping(p: &[u8]) -> Result<[u8; PING_TOKEN_LEN], String> {
+    <[u8; PING_TOKEN_LEN]>::try_from(p)
+        .map_err(|_| format!("ping token is {} bytes, want {PING_TOKEN_LEN}", p.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_request_round_trips_bit_exactly() {
+        let x = vec![
+            0.0f32,
+            -0.0,
+            1.5,
+            f32::MIN_POSITIVE,
+            f32::from_bits(0x0000_0001), // subnormal
+            -3.25e-7,
+            f32::MAX,
+        ];
+        let req = InferRequest { model: "grkan".into(), rows: 1, dim: 7, x: x.clone() };
+        let enc = req.encode();
+        assert_eq!(enc.len() + super::HEADER_LEN, req.wire_bytes());
+        let back = InferRequest::decode(&enc).unwrap();
+        assert_eq!(back.model, "grkan");
+        assert_eq!((back.rows, back.dim), (1, 7));
+        let bits: Vec<u32> = back.x.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want, "every f32 must survive bit-for-bit");
+    }
+
+    #[test]
+    fn infer_response_round_trips_including_non_finite() {
+        // Binary transport carries NaN/inf bit-exactly — the capability
+        // JSON lacks (DESIGN.md §13).
+        let y = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 2.0];
+        let resp = InferResponse { y: y.clone(), batch_size: 3, cause: FlushCause::Deadline };
+        let back = InferResponse::decode(&resp.encode()).unwrap();
+        assert_eq!(back.batch_size, 3);
+        assert_eq!(back.cause, FlushCause::Deadline);
+        let bits: Vec<u32> = back.y.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want);
+    }
+
+    #[test]
+    fn infer_request_rejects_mismatched_counts_and_trailing_bytes() {
+        let req = InferRequest { model: "m".into(), rows: 2, dim: 3, x: vec![0.0; 6] };
+        let mut enc = req.encode();
+        assert!(InferRequest::decode(&enc).is_ok());
+        enc.push(0);
+        assert!(InferRequest::decode(&enc).is_err(), "trailing byte");
+        let mut short = req.encode();
+        short.pop();
+        assert!(InferRequest::decode(&short).is_err(), "truncated");
+        // rows*dim disagreeing with the actual payload is an error, not
+        // a resize.
+        let lying = InferRequest { model: "m".into(), rows: 9, dim: 9, x: vec![0.0; 6] };
+        assert!(InferRequest::decode(&lying.encode()).is_err());
+    }
+
+    #[test]
+    fn hostile_rows_times_dim_cannot_overflow() {
+        // rows = dim = u32::MAX: rows*dim*4 overflows u64 math only if
+        // done in u32/usize — the checked u64 path must reject cleanly.
+        let mut enc = Vec::new();
+        super::put_str16(&mut enc, "m");
+        enc.extend_from_slice(&u32::MAX.to_le_bytes());
+        enc.extend_from_slice(&u32::MAX.to_le_bytes());
+        enc.extend_from_slice(&[0u8; 12]);
+        assert!(InferRequest::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn error_codes_round_trip_with_http_equivalents() {
+        for code in ErrCode::ALL {
+            assert_eq!(ErrCode::from_u16(code as u16), Some(code));
+            assert!([400, 404, 408, 429, 500, 503].contains(&code.http_equiv()), "{code:?}");
+            let e = WireError::new(code, format!("synthetic {}", code.label()))
+                .with_retry_after(if code == ErrCode::QueueFull { 1000 } else { 0 });
+            let back = WireError::decode(&e.encode()).unwrap();
+            assert_eq!(back, e);
+            assert!(e.to_string().contains(code.label()));
+        }
+        assert!(ErrCode::from_u16(999).is_none());
+    }
+
+    #[test]
+    fn stats_response_round_trips() {
+        let s = StatsResponse {
+            models: vec![
+                StatsModel {
+                    name: "wide".into(),
+                    d_in: 96,
+                    d_out: 96,
+                    requests: 41,
+                    rows: 99,
+                    batches: 7,
+                    failed: 1,
+                },
+                StatsModel {
+                    name: "narrow".into(),
+                    d_in: 32,
+                    d_out: 32,
+                    requests: 0,
+                    rows: 0,
+                    batches: 0,
+                    failed: 0,
+                },
+            ],
+            shard_peaks: vec![3, 0],
+        };
+        assert_eq!(StatsResponse::decode(&s.encode()).unwrap(), s);
+        // A count larger than the payload is rejected up front.
+        let mut lying = 100u32.to_le_bytes().to_vec();
+        lying.extend_from_slice(&[0u8; 8]);
+        assert!(StatsResponse::decode(&lying).is_err());
+    }
+
+    #[test]
+    fn oversized_strings_truncate_at_char_boundaries_not_wrap() {
+        // 80_000 bytes of 2-byte chars: `as u16` would wrap the length
+        // prefix to garbage; put_str16 instead cuts at the last char
+        // boundary at or below u16::MAX and stays self-consistent.
+        let long = "\u{e9}".repeat(40_000);
+        let mut out = Vec::new();
+        super::put_str16(&mut out, &long);
+        let n = u16::from_le_bytes([out[0], out[1]]) as usize;
+        assert_eq!(n, 65_534, "65_535 splits a 2-byte char");
+        assert_eq!(out.len(), 2 + n, "length prefix matches the bytes written");
+        assert!(std::str::from_utf8(&out[2..]).is_ok(), "cut on a char boundary");
+    }
+
+    #[test]
+    fn ping_token_is_exactly_eight_bytes() {
+        assert_eq!(decode_ping(b"abcdefgh").unwrap(), *b"abcdefgh");
+        assert!(decode_ping(b"short").is_err());
+        assert!(decode_ping(b"way-too-long!").is_err());
+    }
+}

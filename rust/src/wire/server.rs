@@ -1,0 +1,524 @@
+//! Threaded flashwire frontend: bounded accept loop + fixed
+//! connection-handler pool speaking length-prefixed binary frames onto
+//! the same sharded [`Server`] the HTTP frontend serves.
+//!
+//! Thread layout is deliberately identical to `net::listener` (one
+//! accept thread → bounded [`ConnQueue`] → fixed handler pool; the
+//! queue type is literally shared), so the two frontends differ only in
+//! what bytes they speak — which is exactly what `serve-bench --wire`
+//! measures.  Overload degrades by protocol at every layer: hand-off
+//! queue full → [`ErrCode::Backlog`] error frame at the door, serve
+//! admission queue full → [`ErrCode::QueueFull`] with a retry-after
+//! hint (via `Server::try_submit`), drain → in-flight frames are
+//! answered, then connections close at the next frame boundary and the
+//! engine drains so every admitted request is served.
+//!
+//! Per-connection semantics mirror HTTP keep-alive: many frames per
+//! connection, one response frame per request frame, the shared
+//! stall/deadline budget per frame read.  **Message**-level errors (a
+//! well-framed payload that fails to decode or validate) are answered
+//! and the connection stays open — the framing is intact; **frame**-
+//! level errors are answered and the connection closes, because the
+//! byte stream can no longer be trusted.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::frame::{read_frame, write_frame, BadKind, Frame, FrameOutcome, MsgType, WireLimits};
+use super::proto::{
+    decode_ping, ErrCode, InferRequest, InferResponse, StatsResponse, WireError,
+};
+use crate::net::listener::ConnQueue;
+use crate::serve::{ServeStats, Server, SubmitError};
+
+/// Frontend tuning knobs (mirrors `net::HttpOptions`).
+#[derive(Clone, Debug)]
+pub struct WireOptions {
+    /// Connection-handler threads (max concurrent connections).
+    pub conn_threads: usize,
+    /// Accepted-but-unclaimed connections the accept thread may hold
+    /// before answering a `Backlog` error frame itself.
+    pub backlog: usize,
+    pub limits: WireLimits,
+}
+
+impl Default for WireOptions {
+    fn default() -> Self {
+        Self { conn_threads: 8, backlog: 64, limits: WireLimits::default() }
+    }
+}
+
+/// Wire-layer counters (serve-layer counters live in [`ServeStats`] and
+/// are served over the protocol itself via `StatsRequest`).
+#[derive(Default)]
+pub struct WireMetrics {
+    pub connections: AtomicU64,
+    /// Successful `InferResponse` frames written.
+    pub infer_ok: AtomicU64,
+    /// Error frames written, indexed by [`ErrCode::ALL`] position.
+    errors: [AtomicU64; ErrCode::ALL.len()],
+}
+
+impl WireMetrics {
+    fn count_err(&self, code: ErrCode) {
+        let idx = ErrCode::ALL.iter().position(|c| *c == code).expect("known code");
+        self.errors[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Error frames written so far for `code`.
+    pub fn error_count(&self, code: ErrCode) -> u64 {
+        let idx = ErrCode::ALL.iter().position(|c| *c == code).expect("known code");
+        self.errors[idx].load(Ordering::Relaxed)
+    }
+}
+
+/// Backoff hint carried on shed-load error frames: mirrors the HTTP
+/// frontend's `Retry-After: 1` (whole seconds is all HTTP can say;
+/// flashwire says it in milliseconds).
+pub const SHED_RETRY_AFTER_MILLIS: u32 = 1000;
+
+pub struct WireServer {
+    addr: SocketAddr,
+    server: Arc<Server>,
+    metrics: Arc<WireMetrics>,
+    stop: Arc<AtomicBool>,
+    queue: Arc<ConnQueue>,
+    limits: WireLimits,
+    threads: Mutex<Option<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl WireServer {
+    /// Bind `addr` (port 0 → ephemeral; see [`Self::local_addr`]) and
+    /// start the accept thread plus the handler pool.
+    pub fn bind(addr: &str, server: Arc<Server>, opts: WireOptions) -> Result<WireServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr().context("reading bound address")?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(WireMetrics::default());
+        let queue = Arc::new(ConnQueue::new(opts.backlog));
+
+        let mut threads = Vec::with_capacity(opts.conn_threads.max(1) + 1);
+        {
+            let (stop, queue, metrics) = (stop.clone(), queue.clone(), metrics.clone());
+            threads.push(
+                std::thread::Builder::new()
+                    .name("flashkat-wire-accept".into())
+                    .spawn(move || accept_loop(&listener, &queue, &stop, &metrics))
+                    .context("spawning accept thread")?,
+            );
+        }
+        for i in 0..opts.conn_threads.max(1) {
+            let (stop_t, queue, metrics) = (stop.clone(), queue.clone(), metrics.clone());
+            let server = server.clone();
+            let limits = opts.limits;
+            let spawned = std::thread::Builder::new()
+                .name(format!("flashkat-wire-{i}"))
+                .spawn(move || handler_loop(&queue, &server, &metrics, &limits, &stop_t));
+            match spawned {
+                Ok(handle) => threads.push(handle),
+                Err(e) => {
+                    // Same partial-start discipline as HttpServer::bind:
+                    // never leak the accept thread and the bound port.
+                    stop.store(true, Ordering::SeqCst);
+                    for t in threads {
+                        let _ = t.join();
+                    }
+                    anyhow::bail!("spawning handler thread {i}: {e}");
+                }
+            }
+        }
+        Ok(WireServer {
+            addr: local,
+            server,
+            metrics,
+            stop,
+            queue,
+            limits: opts.limits,
+            threads: Mutex::new(Some(threads)),
+        })
+    }
+
+    /// The actually-bound address (resolves `--port 0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> &WireMetrics {
+        &self.metrics
+    }
+
+    /// The serve engine behind this frontend.
+    pub fn server(&self) -> &Arc<Server> {
+        &self.server
+    }
+
+    /// Graceful drain (idempotent): stop accepting, let in-flight
+    /// frames finish, join every frontend thread, then drain the serve
+    /// engine.  Returns the final [`ServeStats`] on the call that
+    /// performed the engine shutdown.
+    pub fn shutdown(&self) -> Option<ServeStats> {
+        let threads = self.threads.lock().unwrap().take()?;
+        self.stop.store(true, Ordering::SeqCst);
+        for t in threads {
+            let _ = t.join();
+        }
+        // Answer any connection that was accepted but never claimed.
+        while let Some(stream) = self.queue.pop(Duration::from_millis(1)) {
+            handle_connection(stream, &self.server, &self.metrics, &self.limits, &self.stop);
+        }
+        self.server.shutdown()
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    queue: &ConnQueue,
+    stop: &AtomicBool,
+    metrics: &WireMetrics,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                metrics.connections.fetch_add(1, Ordering::Relaxed);
+                if let Err(mut stream) = queue.push(stream) {
+                    // Shed at the door: the binary analogue of the HTTP
+                    // 503-with-Retry-After on a full hand-off queue.
+                    metrics.count_err(ErrCode::Backlog);
+                    let err = WireError::new(ErrCode::Backlog, "connection backlog full")
+                        .with_retry_after(SHED_RETRY_AFTER_MILLIS);
+                    let _ = write_frame(&mut stream, MsgType::Error, &err.encode());
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn handler_loop(
+    queue: &ConnQueue,
+    server: &Server,
+    metrics: &WireMetrics,
+    limits: &WireLimits,
+    stop: &AtomicBool,
+) {
+    loop {
+        let Some(stream) = queue.pop(Duration::from_millis(50)) else {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            continue;
+        };
+        handle_connection(stream, server, metrics, limits, stop);
+        if stop.load(Ordering::SeqCst) {
+            while let Some(stream) = queue.pop(Duration::from_millis(1)) {
+                handle_connection(stream, server, metrics, limits, stop);
+            }
+            return;
+        }
+    }
+}
+
+/// One response to one request frame, plus whether the connection can
+/// carry further frames afterwards.  `code` keeps the typed error (for
+/// the metrics counters) alongside its already-encoded frame, so the
+/// accounting never depends on re-decoding bytes we just built.
+struct Reply {
+    msg_type: MsgType,
+    payload: Vec<u8>,
+    keep: bool,
+    code: Option<ErrCode>,
+}
+
+impl Reply {
+    fn ok(msg_type: MsgType, payload: Vec<u8>) -> Reply {
+        Reply { msg_type, payload, keep: true, code: None }
+    }
+
+    /// Message-level error: answered, connection stays open.
+    fn err(e: WireError) -> Reply {
+        Reply { msg_type: MsgType::Error, code: Some(e.code), payload: e.encode(), keep: true }
+    }
+
+    /// Protocol-confusion error: answered, then close.
+    fn fatal(e: WireError) -> Reply {
+        Reply { msg_type: MsgType::Error, code: Some(e.code), payload: e.encode(), keep: false }
+    }
+}
+
+/// Serve one connection until close, framing error, or drain.
+fn handle_connection(
+    stream: TcpStream,
+    server: &Server,
+    metrics: &WireMetrics,
+    limits: &WireLimits,
+    stop: &AtomicBool,
+) {
+    stream.set_nodelay(true).ok();
+    // Short read timeout: idle connections poll the shutdown flag at
+    // this cadence (the frame reader resumes across timeout ticks).
+    stream.set_read_timeout(Some(Duration::from_millis(50))).ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let outcome = match read_frame(&mut reader, limits, stop) {
+            Ok(o) => o,
+            Err(_) => return, // transport failure: nothing to answer
+        };
+        match outcome {
+            FrameOutcome::Closed => return,
+            FrameOutcome::Bad { kind, msg } => {
+                // Framing is broken; answer and close rather than guess
+                // where the next frame starts.
+                let code = match kind {
+                    BadKind::Malformed => ErrCode::BadFrame,
+                    // The peer's own stall/drip-feed, not a wedged
+                    // server: the 408 analogue, no retry hint.
+                    BadKind::Timeout => ErrCode::RequestTimeout,
+                };
+                metrics.count_err(code);
+                let _ = write_frame(
+                    &mut writer,
+                    MsgType::Error,
+                    &WireError::new(code, msg).encode(),
+                );
+                return;
+            }
+            FrameOutcome::Ok(frame) => {
+                let reply = dispatch(frame, server, metrics);
+                // During drain, finish this response but close the
+                // connection so the handler can exit.
+                let keep = reply.keep && !stop.load(Ordering::SeqCst);
+                if write_frame(&mut writer, reply.msg_type, &reply.payload).is_err() || !keep {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Map one well-framed request to its reply and record it in the
+/// counters — pure apart from the serve engine, so unit tests drive it
+/// without sockets.
+fn dispatch(frame: Frame, server: &Server, metrics: &WireMetrics) -> Reply {
+    let reply = dispatch_inner(frame, server);
+    match reply.code {
+        Some(code) => metrics.count_err(code),
+        None if reply.msg_type == MsgType::InferResponse => {
+            metrics.infer_ok.fetch_add(1, Ordering::Relaxed);
+        }
+        None => {}
+    }
+    reply
+}
+
+fn dispatch_inner(frame: Frame, server: &Server) -> Reply {
+    match frame.msg_type {
+        MsgType::Ping => match decode_ping(&frame.payload) {
+            Ok(token) => Reply::ok(MsgType::Pong, token.to_vec()),
+            Err(msg) => Reply::err(WireError::new(ErrCode::BadMsg, msg)),
+        },
+        MsgType::StatsRequest => {
+            if !frame.payload.is_empty() {
+                return Reply::err(WireError::new(
+                    ErrCode::BadMsg,
+                    "StatsRequest carries no payload",
+                ));
+            }
+            let stats = StatsResponse::from_stats(&server.stats());
+            Reply::ok(MsgType::StatsResponse, stats.encode())
+        }
+        MsgType::InferRequest => match InferRequest::decode(&frame.payload) {
+            Ok(req) => infer(req, server),
+            Err(msg) => Reply::err(WireError::new(ErrCode::BadMsg, msg)),
+        },
+        // Server-to-client types arriving from a client mean the peer is
+        // not speaking the protocol; answer and close.
+        MsgType::InferResponse | MsgType::StatsResponse | MsgType::Pong | MsgType::Error => {
+            Reply::fatal(WireError::new(
+                ErrCode::BadMsg,
+                format!("{:?} is a server-to-client msg-type", frame.msg_type),
+            ))
+        }
+    }
+}
+
+/// The infer path: validate, admit via `try_submit` (load shedding, not
+/// blocking), and map every [`SubmitError`] onto the shared error
+/// taxonomy — the same outcomes the HTTP router maps to statuses.
+fn infer(req: InferRequest, server: &Server) -> Reply {
+    if req.rows == 0 {
+        // Parity with the HTTP router: a 0-row request would burn a
+        // queue slot and an executor wakeup on a no-op.
+        return Reply::err(WireError::new(ErrCode::BadShape, "rows must be positive"));
+    }
+    // Parity with the JSON frontend's 400 on non-finite inputs: the
+    // binary encoding *could* carry them, but the serving contract is
+    // finite inputs (see DESIGN.md §13).
+    if req.x.iter().any(|v| !v.is_finite()) {
+        return Reply::err(WireError::new(
+            ErrCode::NonFiniteInput,
+            "x must contain only finite values",
+        ));
+    }
+    match server.try_submit(&req.model, req.x, req.rows) {
+        Ok(resp) => {
+            let out = InferResponse {
+                y: resp.y,
+                batch_size: resp.batch_size as u32,
+                cause: resp.cause,
+            };
+            Reply::ok(MsgType::InferResponse, out.encode())
+        }
+        Err(SubmitError::QueueFull { queue_depth }) => Reply::err(
+            WireError::new(
+                ErrCode::QueueFull,
+                format!("admission queue full (depth {queue_depth})"),
+            )
+            .with_retry_after(SHED_RETRY_AFTER_MILLIS),
+        ),
+        Err(SubmitError::ShuttingDown) => {
+            Reply::err(WireError::new(ErrCode::Draining, "server is draining"))
+        }
+        Err(e @ SubmitError::ResponseTimeout) => Reply::err(
+            WireError::new(ErrCode::Timeout, e.to_string())
+                .with_retry_after(SHED_RETRY_AFTER_MILLIS),
+        ),
+        Err(SubmitError::UnknownModel(what)) => {
+            Reply::err(WireError::new(ErrCode::BadModel, format!("unknown model {what}")))
+        }
+        Err(SubmitError::BadRequest(msg)) => Reply::err(WireError::new(ErrCode::BadShape, msg)),
+        Err(SubmitError::Failed(msg)) => Reply::err(WireError::new(ErrCode::Internal, msg)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rational::{forward, Coeffs};
+    use crate::serve::{BatchPolicy, RationalExecutor};
+    use crate::util::rng::Pcg64;
+    use crate::wire::client::WireClient;
+
+    const D: usize = 16;
+
+    fn start() -> (WireServer, Coeffs<f32>) {
+        let mut rng = Pcg64::new(91);
+        let coeffs = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+        let server = Arc::new(
+            Server::start(
+                vec![Box::new(RationalExecutor::new("grkan", D, coeffs.clone()).unwrap())],
+                BatchPolicy::default(),
+            )
+            .unwrap(),
+        );
+        let wire = WireServer::bind("127.0.0.1:0", server, WireOptions::default()).unwrap();
+        (wire, coeffs)
+    }
+
+    #[test]
+    fn serves_infer_over_loopback_with_keep_alive() {
+        let (wire, coeffs) = start();
+        let mut client = WireClient::connect(wire.local_addr()).unwrap();
+        for i in 0..3u64 {
+            let mut rng = Pcg64::with_stream(91, i);
+            let x: Vec<f32> = (0..D).map(|_| rng.normal_f32()).collect();
+            let want = forward(&x, 1, D, &coeffs);
+            // Same connection across iterations: keep-alive works.
+            let resp = client.infer("grkan", &x, 1).unwrap().unwrap();
+            assert_eq!(resp.y, want, "request {i}");
+            assert!(resp.batch_size >= 1);
+        }
+        client.ping(7).unwrap();
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.models.len(), 1);
+        assert_eq!(stats.models[0].requests, 3);
+        assert_eq!(wire.metrics().infer_ok.load(Ordering::Relaxed), 3);
+        let stats = wire.shutdown().expect("first shutdown yields stats");
+        assert_eq!(stats.total().requests, 3);
+        assert!(wire.shutdown().is_none(), "idempotent");
+    }
+
+    #[test]
+    fn message_errors_keep_the_connection_framing_errors_close_it() {
+        let (wire, coeffs) = start();
+        let mut client = WireClient::connect(wire.local_addr()).unwrap();
+        // Unknown model: typed error, connection still usable.
+        let err = client.infer("nope", &[0.0; D], 1).unwrap().unwrap_err();
+        assert_eq!(err.code, ErrCode::BadModel);
+        // Bad shape: typed error, connection still usable.
+        let err = client.infer("grkan", &[0.0; D - 1], 1).unwrap().unwrap_err();
+        assert_eq!(err.code, ErrCode::BadShape);
+        // Non-finite input: typed error.
+        let mut x = vec![0.0f32; D];
+        x[3] = f32::NAN;
+        let err = client.infer("grkan", &x, 1).unwrap().unwrap_err();
+        assert_eq!(err.code, ErrCode::NonFiniteInput);
+        // Zero rows never reaches the queue.
+        let err = client.infer("grkan", &[], 0).unwrap().unwrap_err();
+        assert_eq!(err.code, ErrCode::BadShape);
+        // ...and the same connection still serves.
+        let mut rng = Pcg64::with_stream(91, 99);
+        let x: Vec<f32> = (0..D).map(|_| rng.normal_f32()).collect();
+        let want = forward(&x, 1, D, &coeffs);
+        assert_eq!(client.infer("grkan", &x, 1).unwrap().unwrap().y, want);
+        assert_eq!(wire.metrics().error_count(ErrCode::BadModel), 1);
+        assert_eq!(wire.metrics().error_count(ErrCode::BadShape), 2);
+        assert_eq!(wire.metrics().error_count(ErrCode::NonFiniteInput), 1);
+
+        // Garbage magic: the server answers a BadFrame error frame and
+        // closes the connection.
+        use std::io::{Read, Write};
+        let mut raw = std::net::TcpStream::connect(wire.local_addr()).unwrap();
+        raw.write_all(b"GARBAGE!").unwrap();
+        let mut buf = Vec::new();
+        raw.read_to_end(&mut buf).unwrap(); // server closes after answering
+        assert!(buf.len() >= super::super::frame::HEADER_LEN);
+        assert_eq!(&buf[0..2], b"FW");
+        assert_eq!(buf[3], MsgType::Error as u8);
+        let err = WireError::decode(&buf[super::super::frame::HEADER_LEN..]).unwrap();
+        assert_eq!(err.code, ErrCode::BadFrame);
+        assert_eq!(wire.metrics().error_count(ErrCode::BadFrame), 1);
+        wire.shutdown();
+    }
+
+    #[test]
+    fn drain_answers_inflight_then_refuses_new_work() {
+        let (wire, coeffs) = start();
+        let addr = wire.local_addr();
+        let mut client = WireClient::connect(addr).unwrap();
+        let mut rng = Pcg64::with_stream(91, 5);
+        let x: Vec<f32> = (0..D).map(|_| rng.normal_f32()).collect();
+        let want = forward(&x, 1, D, &coeffs);
+        assert_eq!(client.infer("grkan", &x, 1).unwrap().unwrap().y, want);
+
+        let stats = wire.shutdown().expect("stats");
+        assert_eq!(stats.total().requests, 1);
+        // After drain: either the connect is refused or the engine
+        // answers a typed error — never a served request.
+        if let Ok(mut c) = WireClient::connect(addr) {
+            match c.infer("grkan", &x, 1) {
+                Ok(Ok(_)) => panic!("served after drain"),
+                Ok(Err(_)) | Err(_) => {}
+            }
+        }
+    }
+}

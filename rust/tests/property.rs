@@ -265,3 +265,167 @@ fn prop_rational_forward_finite_for_wild_inputs() {
         assert!(y.iter().all(|v| v.is_finite()), "seed {seed}");
     });
 }
+
+#[test]
+fn prop_wire_frames_round_trip_any_payload() {
+    // ANY msg-type with ANY payload (arbitrary bytes, up to the cap)
+    // survives write → read bit-exactly, including pipelined sequences
+    // on one stream.
+    use flashkat::wire::frame::{read_frame, write_frame, FrameOutcome, MsgType, WireLimits};
+    use std::io::Cursor;
+    use std::sync::atomic::AtomicBool;
+
+    cases(60, |seed, rng| {
+        let limits = WireLimits::default();
+        let stop = AtomicBool::new(false);
+        let n_frames = 1 + rng.below(4);
+        let mut raw = Vec::new();
+        let mut sent = Vec::new();
+        for _ in 0..n_frames {
+            let msg_type = MsgType::ALL[rng.below(MsgType::ALL.len())];
+            let payload: Vec<u8> =
+                (0..rng.below(2048)).map(|_| rng.next_u64() as u8).collect();
+            write_frame(&mut raw, msg_type, &payload).unwrap();
+            sent.push((msg_type, payload));
+        }
+        let mut cur = Cursor::new(raw);
+        for (i, (msg_type, payload)) in sent.iter().enumerate() {
+            match read_frame(&mut cur, &limits, &stop).unwrap() {
+                FrameOutcome::Ok(f) => {
+                    assert_eq!(f.msg_type, *msg_type, "seed {seed} frame {i}");
+                    assert_eq!(&f.payload, payload, "seed {seed} frame {i}");
+                }
+                other => panic!("seed {seed} frame {i}: {other:?}"),
+            }
+        }
+        assert!(
+            matches!(read_frame(&mut cur, &limits, &stop).unwrap(), FrameOutcome::Closed),
+            "seed {seed}: clean EOF after the last frame"
+        );
+    });
+}
+
+#[test]
+fn prop_wire_codec_rejects_abuse_without_panicking_or_over_reading() {
+    // The frame codec's hard contract: 1-byte truncations anywhere, a
+    // length field past the cap, unknown msg-types, and random garbage
+    // must all error (never panic, never hang) — and a reject decided
+    // at the header must not have consumed a single payload byte.
+    use flashkat::wire::frame::{
+        read_frame, write_frame, FrameOutcome, MsgType, WireLimits, HEADER_LEN,
+    };
+    use std::io::Cursor;
+    use std::sync::atomic::AtomicBool;
+
+    cases(80, |seed, rng| {
+        let limits = WireLimits { max_payload_bytes: 4096, ..Default::default() };
+        let stop = AtomicBool::new(false);
+        let msg_type = MsgType::ALL[rng.below(MsgType::ALL.len())];
+        let payload: Vec<u8> = (0..1 + rng.below(256)).map(|_| rng.next_u64() as u8).collect();
+        let mut good = Vec::new();
+        write_frame(&mut good, msg_type, &payload).unwrap();
+
+        // (1) Truncate at a random cut: Bad (mid-frame) — never Ok.
+        let cut = 1 + rng.below(good.len() - 1);
+        match read_frame(&mut Cursor::new(good[..cut].to_vec()), &limits, &stop).unwrap() {
+            FrameOutcome::Bad { .. } => {}
+            other => panic!("seed {seed}: cut {cut} gave {other:?}"),
+        }
+
+        // (2) Length over the cap: rejected at the header, zero payload
+        // bytes consumed.
+        let mut oversized = good.clone();
+        let lie = limits.max_payload_bytes as u32 + 1 + rng.below(1 << 20) as u32;
+        oversized[4..8].copy_from_slice(&lie.to_le_bytes());
+        let mut cur = Cursor::new(oversized);
+        match read_frame(&mut cur, &limits, &stop).unwrap() {
+            FrameOutcome::Bad { msg, .. } => assert!(msg.contains("cap"), "seed {seed}: {msg}"),
+            other => panic!("seed {seed}: oversized gave {other:?}"),
+        }
+        assert_eq!(cur.position(), HEADER_LEN as u64, "seed {seed}: over-read past header");
+
+        // (3) Unknown msg-type: same no-over-read guarantee.
+        let mut unknown = good.clone();
+        unknown[3] = 8 + rng.below(247) as u8; // anything past MsgType::ALL
+        let mut cur = Cursor::new(unknown);
+        match read_frame(&mut cur, &limits, &stop).unwrap() {
+            FrameOutcome::Bad { msg, .. } => {
+                assert!(msg.contains("unknown msg-type"), "seed {seed}: {msg}")
+            }
+            other => panic!("seed {seed}: unknown type gave {other:?}"),
+        }
+        assert_eq!(cur.position(), HEADER_LEN as u64, "seed {seed}: over-read past header");
+
+        // (4) Random garbage never panics and never yields Ok unless it
+        // happens to start with a valid header (vanishingly unlikely:
+        // the magic would have to be literal "FW").
+        let garbage: Vec<u8> =
+            (0..rng.below(64)).map(|_| rng.next_u64() as u8).collect();
+        let outcome = read_frame(&mut Cursor::new(garbage.clone()), &limits, &stop).unwrap();
+        if garbage.first() != Some(&b'F') {
+            assert!(
+                !matches!(outcome, FrameOutcome::Ok(_)),
+                "seed {seed}: garbage decoded as a frame"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_wire_infer_messages_round_trip_random_floats_bit_exactly() {
+    // Every f32 bit pattern the generator produces — including
+    // subnormals and negative zero — survives the typed message codecs
+    // unchanged; mutated payloads never panic the decoder.
+    use flashkat::wire::{InferRequest, InferResponse};
+
+    cases(60, |seed, rng| {
+        let rows = 1 + rng.below(4) as u32;
+        let dim = 1 + rng.below(64) as u32;
+        let x: Vec<f32> = (0..(rows * dim) as usize)
+            .map(|_| {
+                // Mix plain normals with raw bit patterns (any u32 is a
+                // valid f32 bit pattern), filtered to finite for the
+                // request path, which rejects non-finite by contract.
+                if rng.bernoulli(0.5) {
+                    rng.normal_f32()
+                } else {
+                    let v = f32::from_bits(rng.next_u64() as u32);
+                    if v.is_finite() { v } else { -0.0 }
+                }
+            })
+            .collect();
+        let req = InferRequest { model: format!("m{seed}"), rows, dim, x: x.clone() };
+        let back = InferRequest::decode(&req.encode()).unwrap();
+        let bits: Vec<u32> = back.x.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = x.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want, "seed {seed}: request floats changed bits");
+
+        // Responses may carry any bit pattern, finite or not.
+        let y: Vec<f32> = (0..(rows * dim) as usize)
+            .map(|_| f32::from_bits(rng.next_u64() as u32))
+            .collect();
+        let resp = InferResponse {
+            y: y.clone(),
+            batch_size: 1 + rng.below(64) as u32,
+            cause: flashkat::serve::FlushCause::ALL[rng.below(4)],
+        };
+        let back = InferResponse::decode(&resp.encode()).unwrap();
+        let bits: Vec<u32> = back.y.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = y.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits, want, "seed {seed}: response floats changed bits");
+        assert_eq!(back.batch_size, resp.batch_size);
+
+        // A single flipped/truncated byte must error or decode — never
+        // panic, never over-read.
+        let mut mutated = req.encode();
+        if !mutated.is_empty() {
+            let at = rng.below(mutated.len());
+            if rng.bernoulli(0.5) {
+                mutated[at] = mutated[at].wrapping_add(1 + rng.below(255) as u8);
+            } else {
+                mutated.truncate(at);
+            }
+            let _ = InferRequest::decode(&mutated); // Ok or Err, no panic
+        }
+    });
+}

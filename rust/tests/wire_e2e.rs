@@ -1,0 +1,296 @@
+//! End-to-end: the flashwire binary frontend over a **sharded** serve
+//! engine.
+//!
+//! Acceptance properties (ISSUE 5):
+//! - responses over loopback flashwire are **f32 bit-identical** to
+//!   in-process `Server::submit` for the same requests, across a mixed
+//!   multi-model registry on ≥2 shards, under concurrent load;
+//! - a saturated admission queue surfaces as a typed `QueueFull` error
+//!   frame carrying a retry-after-millis hint — never a hang, never a
+//!   dropped response: **every** request is answered;
+//! - protocol abuse (unknown models, bad shapes, non-finite inputs,
+//!   garbage frames, oversized frames) maps to typed error codes and
+//!   the server keeps serving.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+use flashkat::rational::Coeffs;
+use flashkat::serve::{BatchPolicy, ModelExecutor, RationalExecutor, Server};
+use flashkat::util::rng::Pcg64;
+use flashkat::wire::{
+    ErrCode, MsgType, WireClient, WireError, WireLimits, WireOptions, WireServer, HEADER_LEN,
+};
+
+const D_WIDE: usize = 96;
+const D_NARROW: usize = 32;
+
+fn registry(seed: u64) -> Vec<Box<dyn ModelExecutor>> {
+    let mut rng = Pcg64::new(seed);
+    let cw = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+    let cn = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+    vec![
+        Box::new(RationalExecutor::new("wide", D_WIDE, cw).unwrap()),
+        Box::new(RationalExecutor::new("narrow", D_NARROW, cn).unwrap()),
+    ]
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The headline acceptance test: concurrent mixed-model traffic over a
+/// 2-shard flashwire server, every response compared **bit for bit**
+/// (`f32::to_bits`, not `==`) against an identically-seeded in-process
+/// server answering the same requests.
+#[test]
+fn wire_responses_bit_identical_to_in_process_submit() {
+    let seed = 4321;
+    let oracle = Server::start(registry(seed), BatchPolicy::default()).unwrap();
+    let served = Server::start_sharded(
+        registry(seed),
+        BatchPolicy { max_batch: 8, deadline_us: 400, queue_depth: 128, eager: true },
+        2,
+    )
+    .unwrap();
+    assert_eq!(served.shards(), 2);
+    let wire =
+        WireServer::bind("127.0.0.1:0", Arc::new(served), WireOptions::default()).unwrap();
+    let addr = wire.local_addr();
+
+    let clients = 6u64;
+    let reqs_each = 12u64;
+    std::thread::scope(|s| {
+        for client in 0..clients {
+            let oracle = &oracle;
+            s.spawn(move || {
+                let mut conn = WireClient::connect(addr).expect("connect");
+                for i in 0..reqs_each {
+                    let mut rng = Pcg64::with_stream(seed, client * 1000 + i);
+                    let (name, idx, d) = if (client + i) % 2 == 0 {
+                        ("wide", 0u32, D_WIDE)
+                    } else {
+                        ("narrow", 1u32, D_NARROW)
+                    };
+                    let rows = 1 + rng.below(3) as u32;
+                    let x: Vec<f32> =
+                        (0..rows as usize * d).map(|_| rng.normal_f32()).collect();
+                    let want =
+                        oracle.submit_at(idx, x.clone(), rows).expect("oracle submit").y;
+                    let resp = conn
+                        .infer(name, &x, rows)
+                        .expect("wire transport")
+                        .expect("wire request served");
+                    assert_eq!(
+                        bits(&resp.y),
+                        bits(&want),
+                        "client {client} req {i} ({name}): flashwire != in-process"
+                    );
+                    assert!(resp.batch_size >= 1);
+                }
+            });
+        }
+    });
+
+    let stats = wire.shutdown().expect("stats");
+    let total = stats.total();
+    let n = (clients * reqs_each) as usize;
+    assert_eq!(total.requests, n);
+    assert_eq!(total.failed, 0);
+    // Per-model split sums exactly to the totals, counter by counter.
+    assert_eq!(stats.per_model.len(), 2);
+    let req_sum: usize = stats.per_model.iter().map(|m| m.stats.requests).sum();
+    let row_sum: usize = stats.per_model.iter().map(|m| m.stats.rows).sum();
+    let batch_sum: usize = stats.per_model.iter().map(|m| m.stats.batches).sum();
+    assert_eq!(req_sum, total.requests);
+    assert_eq!(row_sum, total.rows);
+    assert_eq!(batch_sum, total.batches);
+    assert_eq!(stats.model("wide").unwrap().stats.requests, n / 2);
+    assert_eq!(stats.model("narrow").unwrap().stats.requests, n / 2);
+    assert_eq!(stats.shard_peaks.len(), 2);
+    oracle.shutdown();
+}
+
+/// An executor that blocks until released (counts entries so the test
+/// can wedge the queue deterministically).
+struct Gate {
+    entered: Arc<AtomicUsize>,
+    release: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl ModelExecutor for Gate {
+    fn name(&self) -> &str {
+        "gated"
+    }
+    fn d_in(&self) -> usize {
+        4
+    }
+    fn d_out(&self) -> usize {
+        4
+    }
+    fn run(&mut self, x: &[f32], _rows: usize, out: &mut Vec<f32>) -> Result<()> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        let (lock, cv) = &*self.release;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        out.clear();
+        out.extend_from_slice(x);
+        Ok(())
+    }
+}
+
+/// Saturate the admission queue behind a wedged executor: concurrent
+/// wire requests must split into served-later (InferResponse after
+/// release) and shed (typed `QueueFull` error frame with a nonzero
+/// retry-after-millis) — with **every** request answered.
+#[test]
+fn saturated_queue_returns_typed_retry_after_frame_never_hangs() {
+    let entered = Arc::new(AtomicUsize::new(0));
+    let release = Arc::new((Mutex::new(false), Condvar::new()));
+    let gate = Gate { entered: entered.clone(), release: release.clone() };
+    let depth = 2;
+    let server = Server::start(
+        vec![Box::new(gate)],
+        BatchPolicy { max_batch: 1, deadline_us: 100, queue_depth: depth, eager: true },
+    )
+    .unwrap();
+    let wire = WireServer::bind(
+        "127.0.0.1:0",
+        Arc::new(server),
+        WireOptions { conn_threads: 12, ..Default::default() },
+    )
+    .unwrap();
+    let addr = wire.local_addr();
+
+    // 1 wedged in the executor + `depth` queued; everything beyond that
+    // must be shed as a typed QueueFull frame.
+    let fired = 9usize;
+    let outcomes: Vec<Result<(), WireError>> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for i in 0..fired {
+            let release = release.clone();
+            let entered = entered.clone();
+            handles.push(s.spawn(move || {
+                // Thread 0 wedges the executor first; the rest pile on
+                // once it is provably inside `run`.
+                if i > 0 {
+                    while entered.load(Ordering::SeqCst) == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                }
+                if i == fired - 1 {
+                    // Last thread opens the gate after everyone else has
+                    // had time to be admitted or shed.
+                    std::thread::sleep(std::time::Duration::from_millis(150));
+                    let (lock, cv) = &*release;
+                    *lock.lock().unwrap() = true;
+                    cv.notify_all();
+                }
+                let mut conn = WireClient::connect(addr).expect("connect");
+                conn.infer("gated", &[0.5; 4], 1)
+                    .expect("every request gets an answer")
+                    .map(|_| ())
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("no hung client")).collect()
+    });
+
+    let ok = outcomes.iter().filter(|o| o.is_ok()).count();
+    let shed: Vec<&WireError> = outcomes.iter().filter_map(|o| o.as_ref().err()).collect();
+    assert_eq!(ok + shed.len(), fired, "only InferResponse and Error frames: {outcomes:?}");
+    assert!(ok >= 1, "the wedged request itself completes after release");
+    assert!(
+        !shed.is_empty(),
+        "a {depth}-deep queue under {fired} concurrent requests must shed"
+    );
+    for e in &shed {
+        assert_eq!(e.code, ErrCode::QueueFull, "{e}");
+        assert!(e.retry_after_millis > 0, "shed frame must carry a retry hint: {e}");
+    }
+    let stats = wire.shutdown().expect("stats");
+    assert_eq!(stats.total().requests, ok, "every InferResponse is a served request");
+    assert!(stats.peak_queued <= depth);
+}
+
+/// Protocol-level rejects: each abuse gets its typed code, and the
+/// server keeps serving afterwards.
+#[test]
+fn malformed_traffic_gets_typed_errors_and_service_survives() {
+    let server = Server::start_sharded(registry(9), BatchPolicy::default(), 2).unwrap();
+    let wire = WireServer::bind(
+        "127.0.0.1:0",
+        Arc::new(server),
+        WireOptions {
+            limits: WireLimits { max_payload_bytes: 4096, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = wire.local_addr();
+    let mut conn = WireClient::connect(addr).unwrap();
+
+    // Unknown model → BadModel; wrong shape → BadShape; NaN → NonFinite.
+    let e = conn.infer("nope", &[0.0; 4], 1).unwrap().unwrap_err();
+    assert_eq!((e.code, e.code.http_equiv()), (ErrCode::BadModel, 404));
+    let e = conn.infer("wide", &[1.0; 3], 1).unwrap().unwrap_err();
+    assert_eq!((e.code, e.code.http_equiv()), (ErrCode::BadShape, 400));
+    let e = conn.infer("wide", &[f32::INFINITY; D_WIDE], 1).unwrap().unwrap_err();
+    assert_eq!((e.code, e.code.http_equiv()), (ErrCode::NonFiniteInput, 400));
+    // The connection survives message-level errors and still serves.
+    let mut rng = Pcg64::new(10);
+    let x: Vec<f32> = (0..D_WIDE).map(|_| rng.normal_f32()).collect();
+    assert!(conn.infer("wide", &x, 1).unwrap().is_ok());
+
+    // Oversized frame: a header declaring more than the cap is refused
+    // at the header — the body was never uploaded — and the connection
+    // closes.  Raw socket to hand-craft the header.
+    {
+        use std::io::{Read, Write};
+        let mut raw = std::net::TcpStream::connect(addr).unwrap();
+        let mut header = Vec::from(*b"FW");
+        header.push(1); // version
+        header.push(MsgType::InferRequest as u8);
+        header.extend_from_slice(&999_999u32.to_le_bytes());
+        raw.write_all(&header).unwrap();
+        let mut buf = Vec::new();
+        raw.read_to_end(&mut buf).unwrap(); // server answers then closes
+        assert!(buf.len() > HEADER_LEN);
+        let err = WireError::decode(&buf[HEADER_LEN..]).unwrap();
+        assert_eq!(err.code, ErrCode::BadFrame);
+        assert!(err.message.contains("over the 4096 cap"), "{}", err.message);
+    }
+
+    // Garbage bytes → BadFrame, connection closed.
+    {
+        use std::io::{Read, Write};
+        let mut raw = std::net::TcpStream::connect(addr).unwrap();
+        raw.write_all(b"POST /v1/models/wide/infer HTTP/1.1\r\n\r\n").unwrap();
+        let mut buf = Vec::new();
+        raw.read_to_end(&mut buf).unwrap();
+        let err = WireError::decode(&buf[HEADER_LEN..]).unwrap();
+        assert_eq!(err.code, ErrCode::BadFrame, "HTTP spoken at a wire port is rejected");
+    }
+
+    // The server still serves good traffic afterwards, and the binary
+    // stats frame accounts for exactly the served requests.
+    let mut conn = WireClient::connect(addr).unwrap();
+    conn.ping(42).unwrap();
+    let x: Vec<f32> = (0..2 * D_NARROW).map(|_| rng.normal_f32()).collect();
+    assert!(conn.infer("narrow", &x, 2).unwrap().is_ok());
+    let stats = conn.stats().unwrap();
+    assert_eq!(stats.models.len(), 2);
+    assert_eq!(stats.models[0].name, "wide");
+    assert_eq!(stats.models[0].requests, 1);
+    assert_eq!(stats.models[1].name, "narrow");
+    assert_eq!(stats.models[1].requests, 1);
+    assert_eq!(stats.shard_peaks.len(), 2);
+
+    let final_stats = wire.shutdown().expect("stats");
+    assert_eq!(final_stats.total().requests, 2, "only the good requests reached an executor");
+    assert_eq!(final_stats.total().failed, 0);
+    assert_eq!(wire.metrics().error_count(ErrCode::BadFrame), 2);
+    assert_eq!(wire.metrics().error_count(ErrCode::BadModel), 1);
+}
