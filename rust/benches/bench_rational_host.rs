@@ -19,10 +19,11 @@
 mod bench_util;
 
 use flashkat::rational::accumulate::{backward, PairwiseAcc, Strategy};
-use flashkat::rational::{backward_elem_ref, Coeffs, Float};
+use flashkat::rational::kernel::{self, TileAcc};
+use flashkat::rational::{backward_elem_ref, forward_elem, Coeffs, Float};
 use flashkat::tensor::Scalar;
 use flashkat::util::json::Json;
-use flashkat::util::parallel::default_threads;
+use flashkat::util::parallel::{default_threads, par_chunks_mut, par_map, SendPtr};
 use flashkat::util::rng::Pcg64;
 
 // ---------------- seed implementation (frozen copy) ----------------
@@ -188,6 +189,8 @@ impl Scalar for RtF32 {
 }
 
 impl Float for RtF32 {
+    type Acc = TileAcc<RtF32>;
+
     fn abs(self) -> Self {
         RtF32(self.0.abs())
     }
@@ -203,6 +206,88 @@ impl Float for RtF32 {
     fn mul_add2(self, a: Self, b: Self) -> Self {
         RtF32(self.0 * a.0 + b.0)
     }
+}
+
+// -------- scalar-forced variants (bypass the `simd` dispatch) --------
+//
+// Under `--features simd` the library's forward/backward dispatch to the
+// lane-parallel kernel through `Float::Acc` / `forward_seg_fast`.  These
+// twins pin the scalar oracle path through public APIs — per-element
+// `forward_elem` (never SIMD-dispatched) and `TileAcc` +
+// `backward_row_seg` in the exact structure of `backward_block`'s
+// register branch — so one binary can time both variants and report the
+// simd-vs-scalar ratio.  On a stable build both paths are the same code.
+
+fn scalar_forward(x: &[f32], rows: usize, d: usize, c: &Coeffs<f32>) -> Vec<f32> {
+    let d_g = d / c.n_groups;
+    let mut out = vec![0f32; rows * d];
+    par_chunks_mut(&mut out, d, |r, out_row| {
+        let row = &x[r * d..(r + 1) * d];
+        for g in 0..c.n_groups {
+            let a = c.a_row(g);
+            let b = c.b_row(g);
+            for k in 0..d_g {
+                let idx = g * d_g + k;
+                out_row[idx] = forward_elem(row[idx], a, b);
+            }
+        }
+    });
+    out
+}
+
+fn scalar_backward_block_tree(
+    x: &[f32],
+    dout: &[f32],
+    rows: usize,
+    d: usize,
+    c: &Coeffs<f32>,
+    s_block: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let d_g = d / c.n_groups;
+    let (m1, n, n_g) = (c.m1, c.n, c.n_groups);
+    let n_blocks = rows.div_ceil(s_block);
+    let jobs: Vec<(usize, usize)> =
+        (0..n_blocks).flat_map(|blk| (0..n_g).map(move |g| (blk, g))).collect();
+    let mut dx = vec![0f32; x.len()];
+    let dx_base = SendPtr(dx.as_mut_ptr());
+    let partials: Vec<(usize, usize, [f32; kernel::MAX_M1], [f32; kernel::MAX_N])> =
+        par_map(&jobs, |&(blk, g)| {
+            let a = c.a_row(g);
+            let b = c.b_row(g);
+            let r0 = blk * s_block;
+            let r1 = (r0 + s_block).min(rows);
+            let mut acc = TileAcc::new(m1, n, true);
+            for r in r0..r1 {
+                let base = r * d + g * d_g;
+                // SAFETY: each (blk, g) job owns a disjoint dx span and the
+                // Vec outlives par_map (same pattern as accumulate.rs).
+                let dx_seg =
+                    unsafe { std::slice::from_raw_parts_mut(dx_base.0.add(base), d_g) };
+                kernel::backward_row_seg(
+                    &x[base..base + d_g],
+                    &dout[base..base + d_g],
+                    dx_seg,
+                    a,
+                    b,
+                    &mut acc,
+                );
+            }
+            let (da, db) = acc.finish();
+            (blk, g, da, db)
+        });
+    let mut da = vec![0f32; n_g * m1];
+    let mut db = vec![0f32; n_g * n];
+    let mut ordered: Vec<_> = partials.iter().collect();
+    ordered.sort_by_key(|&&(blk, g, _, _)| (g, blk));
+    for &(_, g, pa, pb) in ordered {
+        for i in 0..m1 {
+            da[g * m1 + i] += pa[i];
+        }
+        for j in 0..n {
+            db[g * n + j] += pb[j];
+        }
+    }
+    (dx, da, db)
 }
 
 fn arg_usize(name: &str, default: usize) -> usize {
@@ -271,15 +356,48 @@ fn main() {
     }
     drop((dx_new, da_new, dx_seed, da_seed));
 
+    // Which variant the dispatched library paths run in this binary.
+    let variant = kernel::variant();
+    rec.meta("kernel_variant", Json::Str(variant.to_string()));
+
+    // Bit-exactness gate before timing (DESIGN.md §14): the dispatched
+    // forward/backward must match the scalar-forced oracle bit for bit —
+    // on a simd build this is the SIMD-vs-scalar contract, on stable it
+    // is trivially the same code.
+    {
+        let y_disp = flashkat::rational::forward(&x, rows, d, &coeffs);
+        let y_scal = scalar_forward(&x, rows, d, &coeffs);
+        for (k, (u, v)) in y_disp.iter().zip(&y_scal).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "forward variant mismatch at {k}");
+        }
+        let (dx_d, da_d, db_d) =
+            backward(&x, &dout, rows, d, &coeffs, Strategy::BlockTree { s_block });
+        let (dx_s, da_s, db_s) = scalar_backward_block_tree(&x, &dout, rows, d, &coeffs, s_block);
+        for (k, (u, v)) in dx_d.iter().zip(&dx_s).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "dx variant mismatch at {k}");
+        }
+        for (k, (u, v)) in da_d.iter().zip(&da_s).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "dA variant mismatch at {k}");
+        }
+        for (k, (u, v)) in db_d.iter().zip(&db_s).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "dB variant mismatch at {k}");
+        }
+    }
+
     let st = bench_util::bench("fwd f32", 1, reps, || {
         let _ = flashkat::rational::forward(&x, rows, d, &coeffs);
     });
-    rec.add("forward_f32", &st, n_el);
+    rec.add_variant("forward_f32", variant, &st, n_el);
+
+    let st_fwd_scalar = bench_util::bench("fwd f32 (scalar-forced)", 1, reps, || {
+        let _ = scalar_forward(&x, rows, d, &coeffs);
+    });
+    rec.add_variant("forward_f32_scalar", "scalar", &st_fwd_scalar, n_el);
 
     let st_seed = bench_util::bench("bwd block-tree f32 (seed impl)", 1, reps, || {
         let _ = seed_backward_block_tree(&x, &dout, rows, d, &coeffs, s_block);
     });
-    rec.add("backward_f32_block_tree_seed", &st_seed, n_el);
+    rec.add_variant("backward_f32_block_tree_seed", "seed", &st_seed, n_el);
 
     let st_rt = bench_util::bench("bwd block-tree f32 (round-trip elem)", 1, reps, || {
         let _ = backward(&xr, &dor, rows, d, &cr, Strategy::BlockTree { s_block });
@@ -289,7 +407,12 @@ fn main() {
     let st_fast = bench_util::bench("bwd block-tree f32 (fast)", 1, reps, || {
         let _ = backward(&x, &dout, rows, d, &coeffs, Strategy::BlockTree { s_block });
     });
-    rec.add("backward_f32_block_tree", &st_fast, n_el);
+    rec.add_variant("backward_f32_block_tree", variant, &st_fast, n_el);
+
+    let st_bwd_scalar = bench_util::bench("bwd block-tree f32 (scalar-forced)", 1, reps, || {
+        let _ = scalar_backward_block_tree(&x, &dout, rows, d, &coeffs, s_block);
+    });
+    rec.add_variant("backward_f32_block_tree_scalar", "scalar", &st_bwd_scalar, n_el);
 
     for (label, json_label, strat) in [
         (
@@ -309,15 +432,25 @@ fn main() {
     let st64 = bench_util::bench("bwd block-tree f64 (fast)", 1, reps, || {
         let _ = backward(&x64, &do64, rows, d, &c64, Strategy::BlockTree { s_block });
     });
-    rec.add("backward_f64_block_tree", &st64, n_el);
+    rec.add_variant("backward_f64_block_tree", variant, &st64, n_el);
 
     let speedup_seed = st_seed.mean() / st_fast.mean();
     let speedup_rt = st_rt.mean() / st_fast.mean();
     rec.meta("speedup_block_tree_vs_seed", Json::Num(speedup_seed));
     rec.meta("speedup_block_tree_vs_roundtrip_elem", Json::Num(speedup_rt));
+    // Dispatched-vs-scalar-forced ratio: ~1.0 on a stable (scalar) build,
+    // the SIMD win under `--features simd` — the kernel-level perf datum
+    // the nightly CI lane commits per run.
+    let speedup_fwd = st_fwd_scalar.mean() / st.mean();
+    let speedup_bwd = st_bwd_scalar.mean() / st_fast.mean();
+    rec.meta("speedup_simd_vs_scalar_forward", Json::Num(speedup_fwd));
+    rec.meta("speedup_simd_vs_scalar_backward", Json::Num(speedup_bwd));
     println!(
         "block-tree backward speedup: {speedup_seed:.2}x vs seed impl \
          ({speedup_rt:.2}x of it from native elem math)"
+    );
+    println!(
+        "{variant} vs scalar-forced: forward {speedup_fwd:.2}x, backward {speedup_bwd:.2}x"
     );
     rec.write("BENCH_rational.json");
 }

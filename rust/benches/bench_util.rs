@@ -62,6 +62,17 @@ impl Records {
     /// Record one timed result; `elements` (if nonzero) adds a
     /// melem-per-second throughput column derived from the mean.
     pub fn add(&mut self, label: &str, st: &OnlineStats, elements: usize) {
+        self.push_result(label, None, st, elements);
+    }
+
+    /// [`Records::add`] with a `variant` column — which kernel variant
+    /// (`scalar`, `simd`, `seed`) produced the row, so per-variant perf
+    /// is comparable across CI runs regardless of the feature flag.
+    pub fn add_variant(&mut self, label: &str, variant: &str, st: &OnlineStats, elements: usize) {
+        self.push_result(label, Some(variant), st, elements);
+    }
+
+    fn push_result(&mut self, label: &str, variant: Option<&str>, st: &OnlineStats, elements: usize) {
         let mut obj = vec![
             ("label".to_string(), Json::Str(label.to_string())),
             ("mean_ms".to_string(), Json::Num(st.mean() * 1e3)),
@@ -69,6 +80,9 @@ impl Records {
             ("min_ms".to_string(), Json::Num(st.min() * 1e3)),
             ("reps".to_string(), Json::Int(st.count() as i64)),
         ];
+        if let Some(v) = variant {
+            obj.insert(1, ("variant".to_string(), Json::Str(v.to_string())));
+        }
         if elements > 0 && st.mean() > 0.0 {
             obj.push((
                 "melem_per_s".to_string(),

@@ -16,6 +16,10 @@
 //!   (`wire`) for float-heavy payloads where text JSON dominates request
 //!   cost.
 
+// Nightly-only lane types for the `simd` feature; the default stable
+// build never sees this attribute (DESIGN.md §14).
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 pub mod cli;
 pub mod config;
 pub mod coordinator;

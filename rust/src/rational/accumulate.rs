@@ -9,7 +9,7 @@
 //! point summation error grows with chain length, hence the ~2 orders of
 //! magnitude MAE gap the paper reports.
 
-use super::kernel::{self, SpillAcc, TileAcc};
+use super::kernel::{self, SegAccum, SpillAcc};
 use super::{backward_elem, Coeffs, Float};
 use crate::util::parallel::{default_threads, par_map, par_map_capped, SendPtr};
 
@@ -199,7 +199,10 @@ fn backward_block<T: Float>(
         let r0 = blk * s_block;
         let r1 = (r0 + s_block).min(rows);
         if use_registers {
-            let mut acc = TileAcc::new(m1, n, tree);
+            // The accumulator is the type's `Float::Acc`: scalar TileAcc
+            // by default, the SIMD twin for f32/f64 under the `simd`
+            // feature — bit-identical either way (DESIGN.md §14).
+            let mut acc = <T::Acc as SegAccum<T>>::new(m1, n, tree);
             for r in r0..r1 {
                 let base = r * d + g * d_g;
                 // SAFETY: each (blk, g) job owns a disjoint set of dx
@@ -207,14 +210,7 @@ fn backward_block<T: Float>(
                 // Vec outlives par_map.
                 let dx_seg =
                     unsafe { std::slice::from_raw_parts_mut(dx_base.0.add(base), d_g) };
-                kernel::backward_row_seg(
-                    &x[base..base + d_g],
-                    &dout[base..base + d_g],
-                    dx_seg,
-                    a,
-                    b,
-                    &mut acc,
-                );
+                acc.row_seg(&x[base..base + d_g], &dout[base..base + d_g], dx_seg, a, b);
             }
             let (da, db) = acc.finish();
             Partial { blk, g, da: da[..m1].to_vec(), db: db[..n].to_vec() }

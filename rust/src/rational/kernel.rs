@@ -239,6 +239,50 @@ pub fn fits_registers(m1: usize, n: usize) -> bool {
     m1 <= MAX_M1 && n <= MAX_N
 }
 
+/// Which kernel variant this build dispatches f32/f64 hot paths to.
+/// Recorded by `serve-bench` into every transport benchmark artifact so
+/// cross-run comparisons are not silently confounded by the feature flag.
+pub const fn variant() -> &'static str {
+    if cfg!(feature = "simd") {
+        "simd"
+    } else {
+        "scalar"
+    }
+}
+
+/// Register-resident tile accumulation over row segments — the seam where
+/// the `simd` feature swaps implementations.  [`TileAcc`] (via
+/// [`backward_row_seg`]) is the scalar bit-exactness oracle; the SIMD
+/// twin in [`super::simd`] must match it bit for bit (DESIGN.md §14).
+/// `backward_block` drives whichever accumulator the element type's
+/// [`Float::Acc`](super::Float::Acc) names.
+pub trait SegAccum<T: Float> {
+    /// Fresh accumulator for one `(block, group)` tile.  Panics if the
+    /// coefficient counts exceed the register caps ([`fits_registers`]);
+    /// callers route those to the heap [`SpillAcc`] instead.
+    fn new(m1: usize, n: usize, tree: bool) -> Self;
+    /// Fused backward over one contiguous row segment: write `dx` in
+    /// place, fold every dA/dB contribution into the tile state.
+    fn row_seg(&mut self, x: &[T], dout: &[T], dx: &mut [T], a: &[T], b: &[T]);
+    /// Reduce to the tile's dA / dB partials (entries past `m1`/`n` zero).
+    fn finish(self) -> ([T; MAX_M1], [T; MAX_N]);
+}
+
+impl<T: Float> SegAccum<T> for TileAcc<T> {
+    fn new(m1: usize, n: usize, tree: bool) -> Self {
+        TileAcc::new(m1, n, tree)
+    }
+
+    #[inline]
+    fn row_seg(&mut self, x: &[T], dout: &[T], dx: &mut [T], a: &[T], b: &[T]) {
+        backward_row_seg(x, dout, dx, a, b, self);
+    }
+
+    fn finish(self) -> ([T; MAX_M1], [T; MAX_N]) {
+        TileAcc::finish(self)
+    }
+}
+
 /// Fused backward over one contiguous row segment (one row × one group,
 /// `d_g` elements): writes `dx` in place and folds every contribution
 /// into `acc`.  The segment's `x`/`dout` are streamed exactly once.

@@ -15,6 +15,8 @@
 pub mod accumulate;
 pub mod experiment;
 pub mod kernel;
+#[cfg(feature = "simd")]
+pub mod simd;
 
 use crate::tensor::Scalar;
 
@@ -80,6 +82,12 @@ impl<T: Scalar> Coeffs<T> {
 
 /// Arithmetic needed beyond `Scalar` for the rational math.
 pub trait Float: Scalar {
+    /// Tile accumulator driving `backward_block`'s register path: the
+    /// scalar [`kernel::TileAcc`] everywhere, except f32/f64 under
+    /// `--features simd`, which name the lane-parallel twin in [`simd`]
+    /// (bit-identical by construction — DESIGN.md §14).
+    type Acc: kernel::SegAccum<Self>;
+
     fn abs(self) -> Self;
     fn signum0(self) -> Self; // sign with signum0(0) == 0, matching jnp.sign
     fn mul_add2(self, a: Self, b: Self) -> Self;
@@ -108,9 +116,26 @@ pub trait Float: Scalar {
     ) -> Self {
         backward_elem_ref(x, dout, a, b, da_out, db_out)
     }
+
+    /// Forward over one contiguous `(row, group)` segment (all elements
+    /// share `a`/`b`).  The default is the per-element fast path in a
+    /// loop; f32/f64 under `--features simd` override with the
+    /// lane-parallel kernel (bit-identical per element — DESIGN.md §14).
+    #[inline]
+    fn forward_seg_fast(xs: &[Self], out: &mut [Self], a: &[Self], b: &[Self]) {
+        debug_assert_eq!(xs.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(xs) {
+            *o = Self::forward_elem_fast(x, a, b);
+        }
+    }
 }
 
 impl Float for f32 {
+    #[cfg(not(feature = "simd"))]
+    type Acc = kernel::TileAcc<f32>;
+    #[cfg(feature = "simd")]
+    type Acc = simd::SimdSegAcc32;
+
     #[inline]
     fn abs(self) -> Self {
         self.abs()
@@ -143,10 +168,21 @@ impl Float for f32 {
         db_out: &mut [Self],
     ) -> Self {
         kernel::backward_elem_native(x, dout, a, b, da_out, db_out)
+    }
+
+    #[cfg(feature = "simd")]
+    #[inline]
+    fn forward_seg_fast(xs: &[Self], out: &mut [Self], a: &[Self], b: &[Self]) {
+        simd::k32::forward_seg(xs, out, a, b)
     }
 }
 
 impl Float for f64 {
+    #[cfg(not(feature = "simd"))]
+    type Acc = kernel::TileAcc<f64>;
+    #[cfg(feature = "simd")]
+    type Acc = simd::SimdSegAcc64;
+
     #[inline]
     fn abs(self) -> Self {
         self.abs()
@@ -179,6 +215,12 @@ impl Float for f64 {
         db_out: &mut [Self],
     ) -> Self {
         kernel::backward_elem_native(x, dout, a, b, da_out, db_out)
+    }
+
+    #[cfg(feature = "simd")]
+    #[inline]
+    fn forward_seg_fast(xs: &[Self], out: &mut [Self], a: &[Self], b: &[Self]) {
+        simd::k64::forward_seg(xs, out, a, b)
     }
 }
 
@@ -228,6 +270,8 @@ impl crate::tensor::Scalar for Bf16 {
 }
 
 impl Float for Bf16 {
+    type Acc = kernel::TileAcc<Bf16>;
+
     #[inline]
     fn abs(self) -> Self {
         Bf16(self.0 & 0x7fff)
@@ -374,14 +418,17 @@ pub fn forward_into<T: Float>(x: &[T], rows: usize, d: usize, c: &Coeffs<T>, out
     let d_g = d / c.n_groups;
     out.clear();
     out.resize(x.len(), T::ZERO);
-    crate::util::parallel::par_chunks_mut(out, d, |r, out_row| {
-        let row = &x[r * d..(r + 1) * d];
-        for g in 0..c.n_groups {
-            let a = c.a_row(g);
-            let b = c.b_row(g);
-            for k in 0..d_g {
-                let idx = g * d_g + k;
-                out_row[idx] = forward_elem(row[idx], a, b);
+    // Row-aligned parallel chunks: a lane tile never crosses a `(row,
+    // group)` segment boundary, so aligning splits to whole rows (align =
+    // d) is strictly stronger than lane alignment — no parallel split can
+    // bisect a tile, for any lane width.
+    crate::util::parallel::par_chunks_mut_aligned(out, d, d, |offset, chunk| {
+        for (row_i, out_row) in chunk.chunks_mut(d).enumerate() {
+            let r = offset / d + row_i;
+            let row = &x[r * d..(r + 1) * d];
+            for g in 0..c.n_groups {
+                let s = g * d_g;
+                T::forward_seg_fast(&row[s..s + d_g], &mut out_row[s..s + d_g], c.a_row(g), c.b_row(g));
             }
         }
     });

@@ -1,0 +1,510 @@
+//! SIMD-wide GR-KAN rational kernel (`--features simd`, nightly
+//! `portable_simd`).
+//!
+//! FlashKAT's lesson — restructure data movement, don't shave FLOPs —
+//! applied one level below PR 1's tile accumulators: the per-core vector
+//! units.  The scalar `NativeFloat` path in [`super::kernel`] stays the
+//! bit-exactness oracle; this module restructures the same expression
+//! trees into explicit wide lanes (DESIGN.md §14):
+//!
+//! - **Element lanes** (`f32x8` / `f64x4`): the Horner numerator /
+//!   denominator evaluations, `sign(A)`/abs handling, and every fused
+//!   backward expression (`1/Q`, `P/Q²`, `P'`, `A'`, `dx`) run one
+//!   element per lane.  Each lane executes exactly the scalar kernel's
+//!   op sequence — one rounded IEEE op per step, no FMA contraction —
+//!   so every per-element output (forward `y`, backward `dx`, and the
+//!   per-element `dout/Q`, `-dout·sign(A)·P/Q²` factors) is bit-identical
+//!   to the scalar fast path for **both** f32 and f64.
+//! - **Coefficient lanes** ([`MAX_M1`]` = `[`MAX_N`]` = 8` wide): the
+//!   register-resident gradient accumulator holds its running dA / dB
+//!   sums as one SIMD vector each and folds in one element per step —
+//!   `seq += splat(factor) * powers(x)` — in the exact element order of
+//!   the scalar [`TileAcc`].  Per coefficient, the add chain sees the
+//!   same operands in the same order, so the accumulated partials are
+//!   bit-identical too.  Lane-*transposed* element accumulators (one
+//!   element stream per lane, horizontally reduced at segment
+//!   boundaries) would be a different summation order — in this
+//!   codebase's own vocabulary, a different accumulation
+//!   [`Strategy`](super::accumulate::Strategy) — and could never meet
+//!   the f64 bitwise acceptance bar; see DESIGN.md §14.  The vector
+//!   state is reduced into the scalar pairwise carry stacks only at run
+//!   boundaries ([`RUN`] elements) and at tile finish, mirroring
+//!   Algorithm 2's fast-memory tile reduction.
+//! - **Masked tails**: widths that are not a lane multiple compute the
+//!   final tile vector-wide on a zero-padded load and then store / fold
+//!   only the live lanes.  A scalar-loop fallback is banned: live lanes
+//!   must take the same code path (hence the same rounding story and the
+//!   same NaN/±0/subnormal handling) regardless of where the segment
+//!   ends.  Padding lanes are computed but never stored and never
+//!   pushed into the accumulator, for two reasons: a zero-padded lane
+//!   can evaluate to NaN even when every live lane is finite (e.g.
+//!   `0 · Inf` inside Q when a coefficient is non-finite) and would
+//!   poison the running sums, and folding it would advance the
+//!   [`RUN`] counter, shifting every later flush boundary and
+//!   regrouping the pairwise carry stacks — a different summation
+//!   tree, hence different bits.
+//!
+//! NaN caveat: IEEE-754 does not pin NaN payloads, and scalar vs vector
+//! instructions may canonicalize them differently.  The bit-identity
+//! contract (and the tests) therefore treat any-NaN == any-NaN; all
+//! non-NaN values compare by exact bits.
+
+use std::simd::prelude::*;
+
+use super::accumulate::PairwiseAcc;
+use super::kernel::{SegAccum, MAX_M1, MAX_N, RUN};
+
+/// Element lanes per tile for f32 (256-bit AVX2-native; portable SIMD
+/// legalizes to narrower hardware transparently).
+pub const LANES_F32: usize = 8;
+/// Element lanes per tile for f64.
+pub const LANES_F64: usize = 4;
+/// Coefficient-axis vector width; the compile-time guard keeps it in
+/// lock-step with the scalar register caps.
+const CW: usize = 8;
+const _: () = assert!(MAX_M1 == CW && MAX_N == CW);
+
+macro_rules! simd_kernel {
+    ($t:ident, $lanes:expr, $m:ident) => {
+        pub mod $m {
+            use super::*;
+
+            /// Element-lane count for this scalar type.
+            pub const LANES: usize = $lanes;
+            /// Element-lane vector.
+            pub type V = Simd<$t, LANES>;
+            /// Coefficient-axis vector (dA / dB accumulator rows).
+            type C = Simd<$t, CW>;
+
+            /// Lane-wise `sign` with `signum0(±0) == signum0(NaN) == 0`,
+            /// matching [`crate::rational::Float::signum0`]: the `>`/`<`
+            /// comparisons are false for NaN in both scalar and vector
+            /// forms, so NaN lanes select 0.
+            #[inline]
+            fn signum0(v: V) -> V {
+                let zero = V::splat(0.0);
+                v.simd_gt(zero)
+                    .select(V::splat(1.0), v.simd_lt(zero).select(V::splat(-1.0), zero))
+            }
+
+            /// Lane-wise `(P, Q, sign(A))` — op-for-op the mirror of
+            /// [`crate::rational::kernel::pq_elem_native`]: every step is
+            /// one rounded IEEE op per lane (mul then add, never a fused
+            /// mul-add), so each lane is bit-identical to the scalar fast
+            /// path.
+            #[inline]
+            pub fn pq_vec(x: V, a: &[$t], b: &[$t]) -> (V, V, V) {
+                let m1 = a.len();
+                let mut p = V::splat(a[m1 - 1]);
+                for i in (0..m1 - 1).rev() {
+                    p = p * x + V::splat(a[i]);
+                }
+                let n = b.len();
+                let mut h = V::splat(b[n - 1]);
+                for j in (0..n - 1).rev() {
+                    h = h * x + V::splat(b[j]);
+                }
+                let abig = x * h;
+                let q = V::splat(1.0) + abig.abs();
+                (p, q, signum0(abig))
+            }
+
+            /// Lane-wise forward value `F(x) = P(x) / (1 + |A(x)|)`.
+            #[inline]
+            pub fn forward_vec(x: V, a: &[$t], b: &[$t]) -> V {
+                let (p, q, _) = pq_vec(x, a, b);
+                p / q
+            }
+
+            /// Forward over one contiguous `(row, group)` segment (all
+            /// elements share `a`/`b`).  Full tiles use vector
+            /// loads/stores; the ragged tail computes vector-wide on a
+            /// zero-padded tile and stores only the live lanes (masked
+            /// tail — see the module docs for why there is no scalar
+            /// fallback).
+            pub fn forward_seg(xs: &[$t], out: &mut [$t], a: &[$t], b: &[$t]) {
+                debug_assert_eq!(xs.len(), out.len());
+                let full = xs.len() - xs.len() % LANES;
+                let mut k = 0;
+                while k < full {
+                    let x = V::from_slice(&xs[k..]);
+                    forward_vec(x, a, b).copy_to_slice(&mut out[k..k + LANES]);
+                    k += LANES;
+                }
+                let rem = xs.len() - full;
+                if rem > 0 {
+                    let mut pad = [0.0 as $t; LANES];
+                    pad[..rem].copy_from_slice(&xs[full..]);
+                    let y = forward_vec(V::from_array(pad), a, b).to_array();
+                    out[full..].copy_from_slice(&y[..rem]);
+                }
+            }
+
+            /// Vector stage of the fused backward: per-lane `dx` plus the
+            /// two per-element coefficient-gradient factors (`dout/Q` and
+            /// `-dout·sign(A)·P/Q²`) — the mirror of
+            /// [`crate::rational::kernel::backward_elem_native`] up to,
+            /// but not including, the contribution fills.  The lane-
+            /// invariant degree products (`a[i]·i`, `b[j]·(j+1)`) are
+            /// computed in scalar and splatted: one rounded op either
+            /// way.
+            #[inline]
+            fn backward_vec(x: V, dout: V, a: &[$t], b: &[$t]) -> (V, V, V) {
+                let m1 = a.len();
+                let n = b.len();
+                let (p, q, sgn) = pq_vec(x, a, b);
+                let inv_q = V::splat(1.0) / q;
+                let p_over_q2 = p * inv_q * inv_q;
+
+                let mut dp = V::splat(0.0);
+                if m1 > 1 {
+                    dp = V::splat(a[m1 - 1] * (m1 - 1) as $t);
+                    for i in (1..m1 - 1).rev() {
+                        dp = dp * x + V::splat(a[i] * i as $t);
+                    }
+                }
+                let mut dadx = V::splat(b[n - 1] * n as $t);
+                for j in (0..n - 1).rev() {
+                    dadx = dadx * x + V::splat(b[j] * (j + 1) as $t);
+                }
+
+                let dx = dout * (dp * inv_q - sgn * dadx * p_over_q2);
+                let do_q = dout * inv_q;
+                let neg_do_spq2 = -dout * sgn * p_over_q2;
+                (dx, do_q, neg_do_spq2)
+            }
+
+            /// Register-resident SIMD tile accumulator for one
+            /// `(block, group)` tile — the lane-parallel twin of
+            /// [`crate::rational::kernel::TileAcc`], bit-identical to it
+            /// by construction (coefficient-axis lanes, element-sequential
+            /// fold; see the module docs).
+            pub struct SegAcc {
+                m1: usize,
+                n: usize,
+                tree: bool,
+                run: usize,
+                seq_a: C,
+                seq_b: C,
+                tree_a: [PairwiseAcc<$t>; MAX_M1],
+                tree_b: [PairwiseAcc<$t>; MAX_N],
+            }
+
+            impl SegAcc {
+                /// Fold one element's contributions: `da_e[i] = do_q·xⁱ`
+                /// and `db_e[j] = neg_do_spq2·x^(j+1)` become two vector
+                /// mul+adds over the coefficient axis.  The power ladder
+                /// is the same left-to-right `pw *= x` chain as the
+                /// scalar fill loops, so every lane's product — and the
+                /// per-coefficient running sum it feeds — rounds
+                /// identically to the scalar path.  Lanes at or above
+                /// `m1`/`n` accumulate garbage that [`Self::finish`]
+                /// masks off (lane arithmetic cannot contaminate
+                /// neighbours).
+                #[inline]
+                fn push_elem(&mut self, x: $t, do_q: $t, neg_do_spq2: $t) {
+                    let mut pows = [1.0 as $t; CW + 1];
+                    for k in 1..=CW {
+                        pows[k] = pows[k - 1] * x;
+                    }
+                    let pa = C::from_slice(&pows[..CW]);
+                    let pb = C::from_slice(&pows[1..]);
+                    self.seq_a = self.seq_a + C::splat(do_q) * pa;
+                    self.seq_b = self.seq_b + C::splat(neg_do_spq2) * pb;
+                    self.run += 1;
+                    if self.tree && self.run == RUN {
+                        self.flush_run();
+                    }
+                }
+
+                /// Horizontal hand-off point: the vector running sums are
+                /// pushed into the per-coefficient pairwise carry stacks
+                /// only here — at [`RUN`]-element boundaries — and at
+                /// [`SegAccum::finish`], never per element.
+                fn flush_run(&mut self) {
+                    let sa = self.seq_a.to_array();
+                    let sb = self.seq_b.to_array();
+                    for i in 0..self.m1 {
+                        self.tree_a[i].push(sa[i]);
+                    }
+                    for j in 0..self.n {
+                        self.tree_b[j].push(sb[j]);
+                    }
+                    self.seq_a = C::splat(0.0);
+                    self.seq_b = C::splat(0.0);
+                    self.run = 0;
+                }
+            }
+
+            impl SegAccum<$t> for SegAcc {
+                fn new(m1: usize, n: usize, tree: bool) -> Self {
+                    assert!(
+                        m1 <= MAX_M1 && n <= MAX_N,
+                        "SegAcc: m1={m1} n={n} exceed register caps ({MAX_M1}, {MAX_N})"
+                    );
+                    Self {
+                        m1,
+                        n,
+                        tree,
+                        run: 0,
+                        seq_a: C::splat(0.0),
+                        seq_b: C::splat(0.0),
+                        tree_a: std::array::from_fn(|_| PairwiseAcc::default()),
+                        tree_b: std::array::from_fn(|_| PairwiseAcc::default()),
+                    }
+                }
+
+                fn row_seg(
+                    &mut self,
+                    x: &[$t],
+                    dout: &[$t],
+                    dx: &mut [$t],
+                    a: &[$t],
+                    b: &[$t],
+                ) {
+                    debug_assert_eq!(x.len(), dout.len());
+                    debug_assert_eq!(x.len(), dx.len());
+                    debug_assert_eq!(a.len(), self.m1);
+                    debug_assert_eq!(b.len(), self.n);
+                    let len = x.len();
+                    let full = len - len % LANES;
+                    let mut k = 0;
+                    while k < full {
+                        let xv = V::from_slice(&x[k..]);
+                        let dov = V::from_slice(&dout[k..]);
+                        let (dxv, do_q, neg) = backward_vec(xv, dov, a, b);
+                        dxv.copy_to_slice(&mut dx[k..k + LANES]);
+                        let xa = xv.to_array();
+                        let qa = do_q.to_array();
+                        let na = neg.to_array();
+                        for l in 0..LANES {
+                            self.push_elem(xa[l], qa[l], na[l]);
+                        }
+                        k += LANES;
+                    }
+                    let rem = len - full;
+                    if rem > 0 {
+                        // Masked tail: vector-wide compute on zero padding,
+                        // then store / fold the live lanes only.  Dead
+                        // lanes never reach dx or the accumulator: their
+                        // contributions can be NaN (0·Inf against
+                        // non-finite coefficients) and folding them would
+                        // advance the RUN counter, moving every later
+                        // flush boundary (see the module docs).
+                        let mut xp = [0.0 as $t; LANES];
+                        let mut dp = [0.0 as $t; LANES];
+                        xp[..rem].copy_from_slice(&x[full..]);
+                        dp[..rem].copy_from_slice(&dout[full..]);
+                        let (dxv, do_q, neg) =
+                            backward_vec(V::from_array(xp), V::from_array(dp), a, b);
+                        let dxa = dxv.to_array();
+                        dx[full..].copy_from_slice(&dxa[..rem]);
+                        let qa = do_q.to_array();
+                        let na = neg.to_array();
+                        for l in 0..rem {
+                            self.push_elem(xp[l], qa[l], na[l]);
+                        }
+                    }
+                }
+
+                fn finish(mut self) -> ([$t; MAX_M1], [$t; MAX_N]) {
+                    let mut da = [0.0 as $t; MAX_M1];
+                    let mut db = [0.0 as $t; MAX_N];
+                    if self.tree {
+                        if self.run > 0 {
+                            self.flush_run();
+                        }
+                        for i in 0..self.m1 {
+                            da[i] = self.tree_a[i].finish();
+                        }
+                        for j in 0..self.n {
+                            db[j] = self.tree_b[j].finish();
+                        }
+                    } else {
+                        let sa = self.seq_a.to_array();
+                        let sb = self.seq_b.to_array();
+                        da[..self.m1].copy_from_slice(&sa[..self.m1]);
+                        db[..self.n].copy_from_slice(&sb[..self.n]);
+                    }
+                    (da, db)
+                }
+            }
+        }
+    };
+}
+
+simd_kernel!(f32, LANES_F32, k32);
+simd_kernel!(f64, LANES_F64, k64);
+
+pub use k32::SegAcc as SimdSegAcc32;
+pub use k64::SegAcc as SimdSegAcc64;
+
+#[cfg(test)]
+mod tests {
+    use super::super::kernel::{backward_row_seg, SegAccum, TileAcc};
+    use super::super::{forward_elem, Float};
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn bits_eq32(a: f32, b: f32) -> bool {
+        a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+    }
+
+    fn bits_eq64(a: f64, b: f64) -> bool {
+        a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+    }
+
+    #[test]
+    fn forward_seg_bitwise_matches_scalar_all_widths_f32() {
+        let mut rng = Pcg64::new(11);
+        let a: Vec<f32> = (0..6).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..4).map(|_| rng.normal_f32()).collect();
+        for w in 1..=(3 * LANES_F32 + 1) {
+            let xs: Vec<f32> = (0..w).map(|_| rng.normal_f32()).collect();
+            let mut out = vec![0f32; w];
+            k32::forward_seg(&xs, &mut out, &a, &b);
+            for (k, &x) in xs.iter().enumerate() {
+                assert!(bits_eq32(out[k], forward_elem(x, &a, &b)), "w={w} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_seg_bitwise_matches_scalar_all_widths_f64() {
+        let mut rng = Pcg64::new(12);
+        let a: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..4).map(|_| rng.normal()).collect();
+        for w in 1..=(3 * LANES_F64 + 1) {
+            let xs: Vec<f64> = (0..w).map(|_| rng.normal()).collect();
+            let mut out = vec![0f64; w];
+            k64::forward_seg(&xs, &mut out, &a, &b);
+            for (k, &x) in xs.iter().enumerate() {
+                assert!(bits_eq64(out[k], forward_elem(x, &a, &b)), "w={w} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn seg_acc_bitwise_matches_tile_acc_across_runs_and_tails() {
+        // Same segments through the SIMD accumulator and the scalar
+        // TileAcc oracle: dx and the finished dA/dB partials must match
+        // bit for bit, across run-boundary remainders, ragged tails, and
+        // both tree variants.
+        let mut rng = Pcg64::new(13);
+        for &count in &[1usize, 3, 7, 8, 9, 63, 64, 65, 130, 1024 + 5] {
+            for &tree in &[true, false] {
+                let (m1, n) = (6, 4);
+                let a: Vec<f32> = (0..m1).map(|_| rng.normal_f32()).collect();
+                let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+                let x: Vec<f32> = (0..count).map(|_| rng.normal_f32()).collect();
+                let dout: Vec<f32> = (0..count).map(|_| rng.normal_f32()).collect();
+                let mut dx_s = vec![0f32; count];
+                let mut dx_v = vec![0f32; count];
+                let mut oracle = TileAcc::<f32>::new(m1, n, tree);
+                backward_row_seg(&x, &dout, &mut dx_s, &a, &b, &mut oracle);
+                let mut acc = <SimdSegAcc32 as SegAccum<f32>>::new(m1, n, tree);
+                acc.row_seg(&x, &dout, &mut dx_v, &a, &b);
+                for k in 0..count {
+                    assert!(bits_eq32(dx_v[k], dx_s[k]), "dx count={count} k={k}");
+                }
+                let (da_s, db_s) = oracle.finish();
+                let (da_v, db_v) = acc.finish();
+                for i in 0..m1 {
+                    assert!(bits_eq32(da_v[i], da_s[i]), "da[{i}] count={count} tree={tree}");
+                }
+                for j in 0..n {
+                    assert!(bits_eq32(db_v[j], db_s[j]), "db[{j}] count={count} tree={tree}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seg_acc_persists_run_state_across_row_segs() {
+        // The run counter spans rows within a tile: feeding the same
+        // elements as one 96-element segment or as rows of 13 must land
+        // identical bits (flush points depend only on cumulative count).
+        let mut rng = Pcg64::new(14);
+        let (m1, n) = (6, 4);
+        let a: Vec<f64> = (0..m1).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let total = 96usize;
+        let x: Vec<f64> = (0..total).map(|_| rng.normal()).collect();
+        let dout: Vec<f64> = (0..total).map(|_| rng.normal()).collect();
+        let mut dx_one = vec![0f64; total];
+        let mut acc_one = <SimdSegAcc64 as SegAccum<f64>>::new(m1, n, true);
+        acc_one.row_seg(&x, &dout, &mut dx_one, &a, &b);
+        let mut dx_rows = vec![0f64; total];
+        let mut acc_rows = <SimdSegAcc64 as SegAccum<f64>>::new(m1, n, true);
+        let mut s = 0;
+        while s < total {
+            let e = (s + 13).min(total);
+            acc_rows.row_seg(&x[s..e], &dout[s..e], &mut dx_rows[s..e], &a, &b);
+            s = e;
+        }
+        assert_eq!(dx_one, dx_rows);
+        let (da1, db1) = acc_one.finish();
+        let (da2, db2) = acc_rows.finish();
+        for i in 0..m1 {
+            assert_eq!(da1[i].to_bits(), da2[i].to_bits());
+        }
+        for j in 0..n {
+            assert_eq!(db1[j].to_bits(), db2[j].to_bits());
+        }
+    }
+
+    #[test]
+    fn masked_tail_dead_lanes_never_poison_the_accumulator() {
+        // The discriminating case for fold-vs-skip on padding lanes: with
+        // a non-finite denominator coefficient, a zero-padded lane
+        // evaluates 0·Inf = NaN inside Q while every *live* lane stays
+        // finite (q = Inf, so do_q = dout/Inf = ±0).  Folding a dead lane
+        // would turn the dA running sum into NaN; skipping it keeps the
+        // bit-exact zero the scalar oracle produces.  Exercised at every
+        // tail raggedness and both accumulator variants.
+        let (m1, n) = (2, 1);
+        let a = [0.5f32, 0.25];
+        let b = [f32::INFINITY];
+        for count in 1..=(2 * LANES_F32 + 1) {
+            for &tree in &[true, false] {
+                let x = vec![1.0f32; count];
+                let dout = vec![1.0f32; count];
+                let mut dx_s = vec![0f32; count];
+                let mut dx_v = vec![0f32; count];
+                let mut oracle = TileAcc::<f32>::new(m1, n, tree);
+                backward_row_seg(&x, &dout, &mut dx_s, &a, &b, &mut oracle);
+                let mut acc = <SimdSegAcc32 as SegAccum<f32>>::new(m1, n, tree);
+                acc.row_seg(&x, &dout, &mut dx_v, &a, &b);
+                for k in 0..count {
+                    assert!(bits_eq32(dx_v[k], dx_s[k]), "dx count={count} k={k}");
+                }
+                let (da_s, db_s) = oracle.finish();
+                let (da_v, db_v) = acc.finish();
+                for i in 0..m1 {
+                    assert!(da_s[i].is_finite(), "oracle premise da[{i}]");
+                    assert_eq!(da_v[i].to_bits(), da_s[i].to_bits(), "count={count} da[{i}]");
+                }
+                for j in 0..n {
+                    assert_eq!(db_v[j].to_bits(), db_s[j].to_bits(), "count={count} db[{j}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn signum0_handles_nan_and_signed_zero() {
+        let v = k32::V::from_array([f32::NAN, 0.0, -0.0, 1.5, -2.0, f32::INFINITY, f32::NEG_INFINITY, -0.0]);
+        let expect = [0.0f32, 0.0, 0.0, 1.0, -1.0, 1.0, -1.0, 0.0];
+        let (_, _, sgn) = k32::pq_vec(v, &[0.0, 1.0], &[1.0]);
+        // pq_vec's sign is sign(x·H(x)) with H = b[0] = 1, i.e. sign(x).
+        let got = sgn.to_array();
+        for l in 0..8 {
+            assert!(bits_eq32(got[l], expect[l]), "lane {l}: {} vs {}", got[l], expect[l]);
+        }
+        // and the scalar oracle agrees lane-for-lane
+        for l in 0..8 {
+            let s = <f32 as Float>::signum0(v.to_array()[l]);
+            assert!(bits_eq32(got[l], s), "lane {l} vs scalar");
+        }
+    }
+}

@@ -842,6 +842,13 @@ fn config_json(cfg: &LoadConfig) -> Json {
         })
         .collect();
     Json::Obj(vec![
+        // Which kernel variant (scalar/simd) served the run: transport
+        // comparisons across CI runs must not be silently confounded by
+        // the `simd` feature flag.
+        (
+            "kernel_variant".to_string(),
+            Json::Str(crate::rational::kernel::variant().to_string()),
+        ),
         ("requests".to_string(), Json::Int(cfg.requests as i64)),
         ("concurrency".to_string(), Json::Int(cfg.concurrency as i64)),
         ("rows_min".to_string(), Json::Int(cfg.rows_min as i64)),
@@ -1005,6 +1012,21 @@ mod tests {
         assert!((cfg.rows_min..=cfg.rows_max).contains(&r1));
         let (_, _, other) = request(&cfg, 43);
         assert_ne!(x1, other);
+    }
+
+    #[test]
+    fn config_json_records_kernel_variant() {
+        // Every serve-bench artifact embeds the config object, so this
+        // one key flows into BENCH_serve.json, BENCH_http.json and
+        // BENCH_wire.json alike.  The value is fixed at compile time by
+        // the `simd` feature.
+        let text = config_json(&LoadConfig::default()).to_string();
+        let want = format!("\"kernel_variant\":\"{}\"", crate::rational::kernel::variant());
+        assert!(text.contains(&want), "{text}");
+        #[cfg(not(feature = "simd"))]
+        assert!(text.contains("\"kernel_variant\":\"scalar\""));
+        #[cfg(feature = "simd")]
+        assert!(text.contains("\"kernel_variant\":\"simd\""));
     }
 
     #[test]

@@ -277,6 +277,38 @@ pub fn par_chunks_mut<T: Send>(
     });
 }
 
+/// [`par_chunks_mut`] with chunk boundaries aligned to a lane width: the
+/// requested `chunk` size is rounded up to the next multiple of `align`,
+/// so every chunk except a single ragged final one is lane-multiple sized
+/// and starts at a lane-multiple offset.  Parallel splits therefore never
+/// bisect a SIMD lane tile (the `simd` feature's requirement — DESIGN.md
+/// §14).  The callback receives the chunk's **element offset** into `buf`
+/// (not its index): with the effective chunk size computed in here,
+/// offsets are what callers need to recover row/segment positions.
+pub fn par_chunks_mut_aligned<T: Send>(
+    buf: &mut [T],
+    chunk: usize,
+    align: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    if buf.is_empty() {
+        return;
+    }
+    let align = align.max(1);
+    let eff = chunk.max(1).div_ceil(align) * align;
+    let len = buf.len();
+    let n_chunks = len.div_ceil(eff);
+    let base = SendPtr(buf.as_mut_ptr());
+    par_run(n_chunks, |idx| {
+        let start = idx * eff;
+        let end = (start + eff).min(len);
+        // SAFETY: chunk index ranges are disjoint and in-bounds, and the
+        // buffer outlives par_run.
+        let slice = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        f(start, slice);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -320,6 +352,61 @@ mod tests {
         for (i, v) in buf.iter().enumerate() {
             assert_eq!(*v, (i * 3) as u64);
         }
+    }
+
+    #[test]
+    fn aligned_chunks_respect_lane_boundaries_for_odd_counts() {
+        // Odd element counts × odd requested chunks × every plausible lane
+        // width: all chunk starts must sit on a lane boundary, every chunk
+        // except (at most) the final one must be lane-multiple sized, and
+        // together they must cover the buffer exactly once.
+        use std::sync::Mutex;
+        for &len in &[1usize, 7, 64, 97, 1000, 1023] {
+            for &chunk in &[1usize, 3, 7, 16, 250] {
+                for &align in &[1usize, 2, 4, 8, 16] {
+                    let mut buf = vec![0u32; len];
+                    let spans = Mutex::new(Vec::new());
+                    par_chunks_mut_aligned(&mut buf, chunk, align, |offset, c| {
+                        for v in c.iter_mut() {
+                            *v += 1;
+                        }
+                        spans.lock().unwrap().push((offset, c.len()));
+                    });
+                    assert!(buf.iter().all(|&v| v == 1), "coverage len={len}");
+                    let mut spans = spans.into_inner().unwrap();
+                    spans.sort_unstable();
+                    let eff = chunk.max(1).div_ceil(align) * align;
+                    let mut expect_start = 0;
+                    for (i, &(start, n)) in spans.iter().enumerate() {
+                        assert_eq!(start, expect_start, "gap/overlap len={len}");
+                        assert_eq!(start % align, 0, "unaligned start len={len} chunk={chunk} align={align}");
+                        if i + 1 < spans.len() {
+                            assert_eq!(n, eff, "non-final chunk not lane-multiple sized");
+                            assert_eq!(n % align, 0);
+                        }
+                        expect_start += n;
+                    }
+                    assert_eq!(expect_start, len);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_chunks_degenerate_cases() {
+        // Empty buffer: no calls; align larger than the buffer: one
+        // ragged chunk holding everything.
+        let mut empty: Vec<u8> = Vec::new();
+        par_chunks_mut_aligned(&mut empty, 4, 8, |_, _| panic!("empty buf"));
+        let mut buf = vec![0u8; 5];
+        let mut seen = Vec::new();
+        {
+            let seen_cell = std::sync::Mutex::new(&mut seen);
+            par_chunks_mut_aligned(&mut buf, 2, 16, |offset, c| {
+                seen_cell.lock().unwrap().push((offset, c.len()));
+            });
+        }
+        assert_eq!(seen, vec![(0, 5)]);
     }
 
     #[test]

@@ -218,3 +218,159 @@ fn register_caps_cover_the_paper_config() {
     assert!(kernel::fits_registers(6, 4));
     assert!(kernel::MAX_M1 >= 6 && kernel::MAX_N >= 4);
 }
+
+// ---- dispatched (possibly SIMD) paths vs the scalar oracle ----
+//
+// On a stable build the dispatched hooks ARE the scalar path, so these
+// hold trivially; under `--features simd` they are the bit-exactness
+// contract of DESIGN.md §14: f64 bitwise-identical, and f32 bitwise too
+// (the SIMD kernel mirrors the scalar *fast path* op for op — stronger
+// than the §4 envelope, which bounds fast-vs-reference, not SIMD-vs-
+// scalar).  Widths 1..=33 sweep every masked-tail remainder for both
+// lane counts (8 for f32, 4 for f64).
+
+use flashkat::rational::kernel::{SegAccum, TileAcc};
+use flashkat::rational::Float;
+
+fn bits_eq_f64(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan())
+}
+
+#[test]
+fn dispatched_forward_seg_bitwise_matches_scalar_elem_all_widths() {
+    let mut rng = Pcg64::new(606);
+    for w in 1..=33usize {
+        let (a64, b64) = rand_coeffs(&mut rng, 6, 4);
+        let xs64: Vec<f64> = (0..w).map(|_| rng.normal() * 3.0).collect();
+        let mut out64 = vec![0f64; w];
+        <f64 as Float>::forward_seg_fast(&xs64, &mut out64, &a64, &b64);
+        for (k, &x) in xs64.iter().enumerate() {
+            assert_eq!(
+                out64[k].to_bits(),
+                forward_elem(x, &a64, &b64).to_bits(),
+                "f64 w={w} k={k}"
+            );
+        }
+
+        let a: Vec<f32> = a64.iter().map(|&v| v as f32).collect();
+        let b: Vec<f32> = b64.iter().map(|&v| v as f32).collect();
+        let xs: Vec<f32> = xs64.iter().map(|&v| v as f32).collect();
+        let mut out = vec![0f32; w];
+        <f32 as Float>::forward_seg_fast(&xs, &mut out, &a, &b);
+        for (k, &x) in xs.iter().enumerate() {
+            assert_eq!(
+                out[k].to_bits(),
+                forward_elem(x, &a, &b).to_bits(),
+                "f32 w={w} k={k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dispatched_backward_acc_bitwise_matches_tile_acc_including_masked_tails() {
+    // Multi-row segments at every width remainder: the dispatched
+    // accumulator (`Float::Acc`) must reproduce the scalar TileAcc's dx
+    // and dA/dB partials bit for bit — with the masked-tail elements
+    // (indices past the last full lane tile) asserted separately so a
+    // tail-handling regression cannot hide behind the full tiles.
+    let (m1, n) = (6usize, 4usize);
+    let mut rng = Pcg64::new(707);
+    for d_g in 1..=33usize {
+        for &(rows, tree) in &[(3usize, true), (2usize, false)] {
+            let (a64, b64) = rand_coeffs(&mut rng, m1, n);
+            let a: Vec<f32> = a64.iter().map(|&v| v as f32).collect();
+            let b: Vec<f32> = b64.iter().map(|&v| v as f32).collect();
+            let x: Vec<f32> = (0..rows * d_g).map(|_| rng.normal_f32()).collect();
+            let dout: Vec<f32> = (0..rows * d_g).map(|_| rng.normal_f32()).collect();
+
+            let mut dx_o = vec![0f32; rows * d_g];
+            let mut oracle = TileAcc::<f32>::new(m1, n, tree);
+            let mut dx_d = vec![0f32; rows * d_g];
+            let mut disp = <<f32 as Float>::Acc as SegAccum<f32>>::new(m1, n, tree);
+            for r in 0..rows {
+                let s = r * d_g;
+                kernel::backward_row_seg(
+                    &x[s..s + d_g],
+                    &dout[s..s + d_g],
+                    &mut dx_o[s..s + d_g],
+                    &a,
+                    &b,
+                    &mut oracle,
+                );
+                disp.row_seg(&x[s..s + d_g], &dout[s..s + d_g], &mut dx_d[s..s + d_g], &a, &b);
+            }
+
+            // Masked-tail indices first: the last d_g % LANES elements of
+            // each row segment (LANES=8 covers f32; every remainder class
+            // appears across d_g=1..=33).
+            for lanes in [8usize, 4] {
+                let tail = d_g % lanes;
+                if tail > 0 {
+                    for r in 0..rows {
+                        let s = r * d_g + (d_g - tail);
+                        for k in s..s + tail {
+                            assert_eq!(
+                                dx_d[k].to_bits(),
+                                dx_o[k].to_bits(),
+                                "tail dx d_g={d_g} lanes={lanes} k={k}"
+                            );
+                        }
+                    }
+                }
+            }
+            for k in 0..rows * d_g {
+                assert_eq!(dx_d[k].to_bits(), dx_o[k].to_bits(), "dx d_g={d_g} k={k}");
+            }
+            let (da_o, db_o) = oracle.finish();
+            let (da_d, db_d) = disp.finish();
+            for i in 0..m1 {
+                assert_eq!(da_d[i].to_bits(), da_o[i].to_bits(), "da[{i}] d_g={d_g} tree={tree}");
+            }
+            for j in 0..n {
+                assert_eq!(db_d[j].to_bits(), db_o[j].to_bits(), "db[{j}] d_g={d_g} tree={tree}");
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatched_backward_acc_bitwise_matches_tile_acc_f64_tails() {
+    // Same contract in f64 (lane count 4): the acceptance criterion is
+    // bitwise identity for every tested width including tails.
+    let (m1, n) = (6usize, 4usize);
+    let mut rng = Pcg64::new(808);
+    for d_g in 1..=17usize {
+        let (a, b) = rand_coeffs(&mut rng, m1, n);
+        let rows = 3usize;
+        let x: Vec<f64> = (0..rows * d_g).map(|_| rng.normal()).collect();
+        let dout: Vec<f64> = (0..rows * d_g).map(|_| rng.normal()).collect();
+        let mut dx_o = vec![0f64; rows * d_g];
+        let mut oracle = TileAcc::<f64>::new(m1, n, true);
+        let mut dx_d = vec![0f64; rows * d_g];
+        let mut disp = <<f64 as Float>::Acc as SegAccum<f64>>::new(m1, n, true);
+        for r in 0..rows {
+            let s = r * d_g;
+            kernel::backward_row_seg(
+                &x[s..s + d_g],
+                &dout[s..s + d_g],
+                &mut dx_o[s..s + d_g],
+                &a,
+                &b,
+                &mut oracle,
+            );
+            disp.row_seg(&x[s..s + d_g], &dout[s..s + d_g], &mut dx_d[s..s + d_g], &a, &b);
+        }
+        for k in 0..rows * d_g {
+            assert!(bits_eq_f64(dx_d[k], dx_o[k]), "dx d_g={d_g} k={k}");
+        }
+        let (da_o, db_o) = oracle.finish();
+        let (da_d, db_d) = disp.finish();
+        for i in 0..m1 {
+            assert!(bits_eq_f64(da_d[i], da_o[i]), "da[{i}] d_g={d_g}");
+        }
+        for j in 0..n {
+            assert!(bits_eq_f64(db_d[j], db_o[j]), "db[{j}] d_g={d_g}");
+        }
+    }
+}

@@ -267,6 +267,111 @@ fn prop_rational_forward_finite_for_wild_inputs() {
 }
 
 #[test]
+fn prop_simd_dispatch_bitwise_matches_scalar_oracle_for_random_bit_patterns() {
+    // The DESIGN.md §14 contract under adversarial inputs: push raw
+    // random bit patterns — with NaN / ±0 / subnormal / ±Inf lanes forced
+    // at fixed strides — and random non-lane-multiple widths through the
+    // dispatched forward/backward (SIMD under `--features simd`, the same
+    // scalar code otherwise) and the scalar oracle.  Everything must
+    // agree bit for bit; NaNs compare as a class (payloads are not
+    // pinned by IEEE-754 across scalar/vector instruction forms).
+    use flashkat::rational::kernel::{backward_row_seg, SegAccum, TileAcc};
+    use flashkat::rational::{forward_elem, Float};
+
+    fn specials32(i: usize) -> f32 {
+        [f32::NAN, 0.0, -0.0, f32::MIN_POSITIVE / 64.0, -f32::MIN_POSITIVE / 8.0, f32::INFINITY, f32::NEG_INFINITY][i % 7]
+    }
+    fn specials64(i: usize) -> f64 {
+        [f64::NAN, 0.0, -0.0, f64::MIN_POSITIVE / 64.0, -f64::MIN_POSITIVE / 8.0, f64::INFINITY, f64::NEG_INFINITY][i % 7]
+    }
+
+    cases(40, |seed, rng| {
+        let (m1, n) = (1 + rng.below(6), 1 + rng.below(4));
+        // Widths biased away from lane multiples: 8k+r covers every tail
+        // remainder for both lane counts (8 and 4) over the seeds.
+        let w = 1 + rng.below(40);
+        let a32: Vec<f32> = (0..m1).map(|_| rng.normal_f32()).collect();
+        let b32: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let x32: Vec<f32> = (0..w)
+            .map(|i| {
+                if i % 5 == 3 {
+                    specials32(i / 5 + seed as usize)
+                } else {
+                    f32::from_bits(rng.next_u64() as u32)
+                }
+            })
+            .collect();
+        let dout32: Vec<f32> = (0..w).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+
+        let bits32 = |u: f32, v: f32| u.to_bits() == v.to_bits() || (u.is_nan() && v.is_nan());
+
+        // f32 forward.
+        let mut out = vec![0f32; w];
+        <f32 as Float>::forward_seg_fast(&x32, &mut out, &a32, &b32);
+        for (k, &x) in x32.iter().enumerate() {
+            assert!(bits32(out[k], forward_elem(x, &a32, &b32)), "seed {seed} fwd32 k={k}");
+        }
+        // f32 backward (tree and sequential tile variants).
+        for tree in [true, false] {
+            let mut dx_o = vec![0f32; w];
+            let mut oracle = TileAcc::<f32>::new(m1, n, tree);
+            backward_row_seg(&x32, &dout32, &mut dx_o, &a32, &b32, &mut oracle);
+            let mut dx_d = vec![0f32; w];
+            let mut disp = <<f32 as Float>::Acc as SegAccum<f32>>::new(m1, n, tree);
+            disp.row_seg(&x32, &dout32, &mut dx_d, &a32, &b32);
+            for k in 0..w {
+                assert!(bits32(dx_d[k], dx_o[k]), "seed {seed} dx32 k={k} tree={tree}");
+            }
+            let (da_o, db_o) = oracle.finish();
+            let (da_d, db_d) = disp.finish();
+            for i in 0..m1 {
+                assert!(bits32(da_d[i], da_o[i]), "seed {seed} da32[{i}] tree={tree}");
+            }
+            for j in 0..n {
+                assert!(bits32(db_d[j], db_o[j]), "seed {seed} db32[{j}] tree={tree}");
+            }
+        }
+
+        // f64: same drill from raw u64 bit patterns.
+        let bits64 = |u: f64, v: f64| u.to_bits() == v.to_bits() || (u.is_nan() && v.is_nan());
+        let a64: Vec<f64> = (0..m1).map(|_| rng.normal()).collect();
+        let b64: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let x64: Vec<f64> = (0..w)
+            .map(|i| {
+                if i % 5 == 3 {
+                    specials64(i / 5 + seed as usize)
+                } else {
+                    f64::from_bits(rng.next_u64())
+                }
+            })
+            .collect();
+        let dout64: Vec<f64> = (0..w).map(|_| f64::from_bits(rng.next_u64())).collect();
+        let mut out = vec![0f64; w];
+        <f64 as Float>::forward_seg_fast(&x64, &mut out, &a64, &b64);
+        for (k, &x) in x64.iter().enumerate() {
+            assert!(bits64(out[k], forward_elem(x, &a64, &b64)), "seed {seed} fwd64 k={k}");
+        }
+        let mut dx_o = vec![0f64; w];
+        let mut oracle = TileAcc::<f64>::new(m1, n, true);
+        backward_row_seg(&x64, &dout64, &mut dx_o, &a64, &b64, &mut oracle);
+        let mut dx_d = vec![0f64; w];
+        let mut disp = <<f64 as Float>::Acc as SegAccum<f64>>::new(m1, n, true);
+        disp.row_seg(&x64, &dout64, &mut dx_d, &a64, &b64);
+        for k in 0..w {
+            assert!(bits64(dx_d[k], dx_o[k]), "seed {seed} dx64 k={k}");
+        }
+        let (da_o, db_o) = oracle.finish();
+        let (da_d, db_d) = disp.finish();
+        for i in 0..m1 {
+            assert!(bits64(da_d[i], da_o[i]), "seed {seed} da64[{i}]");
+        }
+        for j in 0..n {
+            assert!(bits64(db_d[j], db_o[j]), "seed {seed} db64[{j}]");
+        }
+    });
+}
+
+#[test]
 fn prop_wire_frames_round_trip_any_payload() {
     // ANY msg-type with ANY payload (arbitrary bytes, up to the cap)
     // survives write → read bit-exactly, including pipelined sequences
