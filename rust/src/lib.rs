@@ -32,5 +32,6 @@ pub mod report;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;
+pub mod trace;
 pub mod util;
 pub mod wire;

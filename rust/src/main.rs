@@ -15,6 +15,7 @@
 //!   serve-http [--addr A] [--port P|0] [--shards N]
 //!          [--models name:d[:groups],... | --pipeline TAG]
 //!          -- HTTP/JSON serving frontend; runs until SIGTERM, then drains
+//!   trace-stat PATH   -- sanity-scan a Perfetto trace written by --trace-out
 //!   selfcheck [--artifacts DIR]   -- runtime vs Rust-oracle numerics
 //!   flops
 //!
@@ -226,14 +227,54 @@ fn serve_model_specs(args: &Args) -> Result<Vec<flashkat::serve::ModelSpec>> {
     Ok(specs)
 }
 
+/// `--trace-out base.pftrace` writes one trace file per bench leg; the
+/// per-leg name inserts the leg tag before the extension
+/// (`base-http.pftrace`) so all legs land next to the BENCH JSON.
+fn trace_leg_path(base: &str, leg: &str) -> String {
+    match base.rsplit_once('.') {
+        Some((stem, ext)) if !stem.is_empty() && !stem.ends_with('/') => {
+            format!("{stem}-{leg}.{ext}")
+        }
+        _ => format!("{base}-{leg}"),
+    }
+}
+
+/// Render a collector to `path`, self-scan the bytes (a trace we cannot
+/// parse back must fail the run, not load blank in the UI), and return
+/// the record for the bench JSON's `tracing` section.
+fn write_trace(
+    tracer: &flashkat::trace::TraceCollector,
+    path: &str,
+) -> Result<flashkat::serve::TraceRun> {
+    let bytes = tracer.render();
+    let stat = flashkat::trace::stat(&bytes)
+        .map_err(|e| anyhow!("rendered trace failed self-scan: {e}"))?;
+    std::fs::write(path, &bytes).with_context(|| format!("writing {path}"))?;
+    let dropped = tracer.dropped();
+    if dropped > 0 {
+        eprintln!("warning: {dropped} trace events dropped (ring capacity); {path} is partial");
+    }
+    println!("wrote trace {path} ({} packets, {} bytes)", stat.packets, bytes.len());
+    Ok(flashkat::serve::TraceRun {
+        path: path.to_string(),
+        packets: stat.packets,
+        bytes: bytes.len(),
+    })
+}
+
 /// Dynamic micro-batching inference benchmark: drive the serve subsystem
 /// with a seeded workload at the requested policy — against one or more
 /// named rational models (`--models`) or a whole AOT-compiled pipeline
 /// (`--pipeline <tag>`) — compare against an unbatched (`max-batch 1`)
 /// baseline or sweep policies (`--autotune`), and persist the
-/// `BENCH_serve.json`-shaped record.
+/// `BENCH_serve.json`-shaped record.  `--trace-out PATH` additionally
+/// captures Perfetto traces (per leg for the transport modes) and an
+/// in-process traced-vs-untraced overhead measurement.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
     use flashkat::serve::{loadgen, Arrival, BatchPolicy, LoadConfig, ModelExecutor, ModelSpec};
+    use flashkat::trace::TraceCollector;
+    use flashkat::util::json::Json;
+    use std::sync::Arc;
 
     let requests = args.flag_usize("requests", 2000)?.max(1);
     let concurrency = args.flag_usize("concurrency", 16)?.max(1);
@@ -264,6 +305,16 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     if !autotune && args.flag("slo-p99-us").is_some() {
         bail!("--slo-p99-us only applies with --autotune");
     }
+    let trace_out = args.flag("trace-out");
+    if autotune && trace_out.is_some() {
+        bail!("--trace-out and --autotune are mutually exclusive (trace one policy, not a sweep)");
+    }
+    // Append the `tracing` section to a bench artifact in place.
+    let push_tracing = |json: &mut Json, section: Json| {
+        if let Json::Obj(fields) = json {
+            fields.push(("tracing".to_string(), section));
+        }
+    };
 
     // --wire: the same workload in-process, over loopback HTTP/JSON,
     // and over the flashwire binary protocol — all three legs at the
@@ -284,13 +335,54 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         // clamps to the registry size, and the published artifact must
         // not claim a sharding it never had.
         let shards = args.flag_usize("shards", 2)?.clamp(1, cfg.models.len());
-        let inproc = loadgen::run_sharded(&cfg, policy, "in-process", shards)?;
-        let http_res = loadgen::run_http(&cfg, policy, "loopback-http", shards)?;
-        let wire_res = loadgen::run_wire(&cfg, policy, "loopback-wire", shards)?;
+        // With --trace-out every transport leg runs traced (one trace
+        // file per leg), and one extra *untraced* in-process run pins
+        // down the collector's throughput cost.
+        let (inproc, http_res, wire_res, tracing) = if let Some(base) = trace_out {
+            let t_in = Arc::new(TraceCollector::new());
+            let inproc =
+                loadgen::run_sharded_traced(&cfg, policy, "in-process", shards, t_in.clone())?;
+            let t_http = Arc::new(TraceCollector::new());
+            let http_res = loadgen::run_http_traced(
+                &cfg,
+                policy,
+                "loopback-http",
+                shards,
+                Some(t_http.clone()),
+            )?;
+            let t_wire = Arc::new(TraceCollector::new());
+            let wire_res = loadgen::run_wire_traced(
+                &cfg,
+                policy,
+                "loopback-wire",
+                shards,
+                Some(t_wire.clone()),
+            )?;
+            let untraced = loadgen::run_sharded(&cfg, policy, "in-process-untraced", shards)?;
+            let runs = vec![
+                write_trace(&t_in, &trace_leg_path(base, "inproc"))?,
+                write_trace(&t_http, &trace_leg_path(base, "http"))?,
+                write_trace(&t_wire, &trace_leg_path(base, "wire"))?,
+            ];
+            let tj =
+                loadgen::tracing_json(base, untraced.throughput_rps, inproc.throughput_rps, &runs);
+            (inproc, http_res, wire_res, Some(tj))
+        } else {
+            (
+                loadgen::run_sharded(&cfg, policy, "in-process", shards)?,
+                loadgen::run_http(&cfg, policy, "loopback-http", shards)?,
+                loadgen::run_wire(&cfg, policy, "loopback-wire", shards)?,
+                None,
+            )
+        };
         let bytes = loadgen::transport_bytes(&cfg)?;
         print!("{}", report::serve_wire(&inproc, &http_res, &wire_res, shards, &bytes));
         let out = args.flag_str("out", "BENCH_wire.json");
-        let json = loadgen::wire_bench_json(&cfg, &inproc, &http_res, &wire_res, shards, &bytes);
+        let mut json =
+            loadgen::wire_bench_json(&cfg, &inproc, &http_res, &wire_res, shards, &bytes);
+        if let Some(section) = tracing {
+            push_tracing(&mut json, section);
+        }
         std::fs::write(out, json.to_string()).with_context(|| format!("writing {out}"))?;
         println!("wrote {out}");
         return Ok(());
@@ -310,11 +402,39 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         // the transport and nothing else — and the recorded shard count
         // is the one the legs actually ran on.
         let shards = args.flag_usize("shards", 2)?.clamp(1, cfg.models.len());
-        let inproc = loadgen::run_sharded(&cfg, policy, "in-process", shards)?;
-        let http_res = loadgen::run_http(&cfg, policy, "loopback-http", shards)?;
+        let (inproc, http_res, tracing) = if let Some(base) = trace_out {
+            let t_in = Arc::new(TraceCollector::new());
+            let inproc =
+                loadgen::run_sharded_traced(&cfg, policy, "in-process", shards, t_in.clone())?;
+            let t_http = Arc::new(TraceCollector::new());
+            let http_res = loadgen::run_http_traced(
+                &cfg,
+                policy,
+                "loopback-http",
+                shards,
+                Some(t_http.clone()),
+            )?;
+            let untraced = loadgen::run_sharded(&cfg, policy, "in-process-untraced", shards)?;
+            let runs = vec![
+                write_trace(&t_in, &trace_leg_path(base, "inproc"))?,
+                write_trace(&t_http, &trace_leg_path(base, "http"))?,
+            ];
+            let tj =
+                loadgen::tracing_json(base, untraced.throughput_rps, inproc.throughput_rps, &runs);
+            (inproc, http_res, Some(tj))
+        } else {
+            (
+                loadgen::run_sharded(&cfg, policy, "in-process", shards)?,
+                loadgen::run_http(&cfg, policy, "loopback-http", shards)?,
+                None,
+            )
+        };
         print!("{}", report::serve_http(&inproc, &http_res, shards));
         let out = args.flag_str("out", "BENCH_http.json");
-        let json = loadgen::http_bench_json(&cfg, &inproc, &http_res, shards);
+        let mut json = loadgen::http_bench_json(&cfg, &inproc, &http_res, shards);
+        if let Some(section) = tracing {
+            push_tracing(&mut json, section);
+        }
         std::fs::write(out, json.to_string()).with_context(|| format!("writing {out}"))?;
         println!("wrote {out}");
         return Ok(());
@@ -405,7 +525,33 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             None
         };
         print!("{}", report::serve(&main_res, baseline.as_ref()));
-        loadgen::bench_json(&cfg, &main_res, baseline.as_ref())
+        let mut json = loadgen::bench_json(&cfg, &main_res, baseline.as_ref());
+        // One extra *traced* run of the main policy: the headline
+        // numbers above stay untraced (comparable with past artifacts),
+        // the trace file captures the same workload, and the rps pair
+        // is the measured collector overhead.
+        if let Some(path) = trace_out {
+            let tracer = Arc::new(TraceCollector::new());
+            let traced = loadgen::run_with_traced(
+                &cfg,
+                build()?,
+                policy,
+                &format!("{label_prefix}max-batch {max_batch} traced"),
+                tracer.clone(),
+            )?;
+            let runs = vec![write_trace(&tracer, path)?];
+            println!(
+                "tracing overhead: {:.0} rps untraced vs {:.0} rps traced ({:.3}x)",
+                main_res.throughput_rps,
+                traced.throughput_rps,
+                traced.throughput_rps / main_res.throughput_rps.max(1e-9),
+            );
+            push_tracing(
+                &mut json,
+                loadgen::tracing_json(path, main_res.throughput_rps, traced.throughput_rps, &runs),
+            );
+        }
+        json
     };
 
     std::fs::write(out, json.to_string()).with_context(|| format!("writing {out}"))?;
@@ -480,7 +626,9 @@ fn serve_until_signaled(
 /// then drain gracefully: `flashkat serve-http --addr A --port P
 /// --shards N [--models ... | --pipeline TAG]`.  `--port 0` binds an
 /// ephemeral port; the bound address is printed (and flushed) so
-/// scripts can scrape it.
+/// scripts can scrape it.  `--trace-out PATH` attaches a trace
+/// collector for the server's lifetime and writes the Perfetto dump
+/// after the drain completes.
 fn cmd_serve_http(args: &Args) -> Result<()> {
     use flashkat::net::{HttpOptions, HttpServer, Limits};
     use flashkat::serve::{LoadConfig, Server};
@@ -493,7 +641,15 @@ fn cmd_serve_http(args: &Args) -> Result<()> {
     let mut cfg = LoadConfig { seed: args.flag_u64("seed", 7)?, ..Default::default() };
     let executors = serve_registry(args, &mut cfg)?;
     let n_models = executors.len();
-    let server = std::sync::Arc::new(Server::start_sharded(executors, policy, shards)?);
+    let tracer = args
+        .flag("trace-out")
+        .map(|_| std::sync::Arc::new(flashkat::trace::TraceCollector::new()));
+    let server = std::sync::Arc::new(Server::start_sharded_traced(
+        executors,
+        policy,
+        shards,
+        tracer.clone(),
+    )?);
     let shards = server.shards(); // clamped to the registry size
     let opts = HttpOptions {
         conn_threads: args.flag_usize("conn-threads", 8)?.max(1),
@@ -513,14 +669,18 @@ fn cmd_serve_http(args: &Args) -> Result<()> {
     // The bound-port line is scraped by scripts (CI starts us with
     // --port 0); a piped stdout is block-buffered, so flush explicitly.
     std::io::stdout().flush().ok();
-    serve_until_signaled(|| http.shutdown())
+    serve_until_signaled(|| http.shutdown())?;
+    if let (Some(t), Some(path)) = (&tracer, args.flag("trace-out")) {
+        write_trace(t, path)?;
+    }
+    Ok(())
 }
 
 /// Stand up the flashwire binary serving frontend (DESIGN.md §13) and
 /// run until SIGTERM/SIGINT, then drain gracefully: `flashkat
 /// serve-wire --addr A --port P --shards N [--models ... | --pipeline
-/// TAG]`.  Same registry, policy, and drain semantics as serve-http —
-/// only the bytes on the socket differ.
+/// TAG]`.  Same registry, policy, drain, and `--trace-out` semantics
+/// as serve-http — only the bytes on the socket differ.
 fn cmd_serve_wire(args: &Args) -> Result<()> {
     use flashkat::serve::{LoadConfig, Server};
     use flashkat::wire::{WireLimits, WireOptions, WireServer};
@@ -533,7 +693,15 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
     let mut cfg = LoadConfig { seed: args.flag_u64("seed", 7)?, ..Default::default() };
     let executors = serve_registry(args, &mut cfg)?;
     let n_models = executors.len();
-    let server = std::sync::Arc::new(Server::start_sharded(executors, policy, shards)?);
+    let tracer = args
+        .flag("trace-out")
+        .map(|_| std::sync::Arc::new(flashkat::trace::TraceCollector::new()));
+    let server = std::sync::Arc::new(Server::start_sharded_traced(
+        executors,
+        policy,
+        shards,
+        tracer.clone(),
+    )?);
     let shards = server.shards(); // clamped to the registry size
     let opts = WireOptions {
         conn_threads: args.flag_usize("conn-threads", 8)?.max(1),
@@ -553,7 +721,45 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
         "frames: InferRequest/InferResponse, StatsRequest/StatsResponse, Ping/Pong (DESIGN.md \u{a7}13)"
     );
     std::io::stdout().flush().ok();
-    serve_until_signaled(|| wire.shutdown())
+    serve_until_signaled(|| wire.shutdown())?;
+    if let (Some(t), Some(path)) = (&tracer, args.flag("trace-out")) {
+        write_trace(t, path)?;
+    }
+    Ok(())
+}
+
+/// Sanity-scan a Perfetto trace written by `--trace-out`: `flashkat
+/// trace-stat PATH`.  Walks the packet stream with the same varint/field
+/// decoder the renderer is tested against, prints the counts, and fails
+/// (exit 1) on an empty or slice-unbalanced trace — the machine-checkable
+/// "this trace will load in ui.perfetto.dev" assertion CI runs.
+fn cmd_trace_stat(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: flashkat trace-stat PATH"))?;
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    let stat = flashkat::trace::stat(&bytes).map_err(|e| anyhow!("{path}: {e}"))?;
+    println!(
+        "{path}: {} packets ({} track descriptors, {} slice begins, {} slice ends, {} instants) in {} bytes",
+        stat.packets,
+        stat.track_descriptors,
+        stat.slice_begins,
+        stat.slice_ends,
+        stat.instants,
+        bytes.len()
+    );
+    if stat.packets == 0 {
+        bail!("{path}: empty trace (0 packets)");
+    }
+    if stat.slice_begins != stat.slice_ends {
+        bail!(
+            "{path}: unbalanced slices ({} begins vs {} ends)",
+            stat.slice_begins,
+            stat.slice_ends
+        );
+    }
+    Ok(())
 }
 
 /// Runtime integration check: run the standalone rational kernels through
@@ -641,6 +847,7 @@ fn main() -> Result<()> {
         "serve-bench" => cmd_serve_bench(&args),
         "serve-http" => cmd_serve_http(&args),
         "serve-wire" => cmd_serve_wire(&args),
+        "trace-stat" => cmd_trace_stat(&args),
         "selfcheck" => cmd_selfcheck(&args),
         "flops" => {
             print!("{}", report::table1());
@@ -649,7 +856,7 @@ fn main() -> Result<()> {
         "" | "help" | "--help" => {
             println!(
                 "flashkat — FlashKAT reproduction (see DESIGN.md)\n\n\
-                 usage: flashkat <report|train|profile|serve-bench|serve-http|serve-wire|selfcheck|flops> [flags]\n\
+                 usage: flashkat <report|train|profile|serve-bench|serve-http|serve-wire|trace-stat|selfcheck|flops> [flags]\n\
                  \x20 report <fig1|table1|table2|fig2|fig3|table3|table4|table5|configs|all>\n\
                  \x20 train  [--model kat_micro|vit_micro|kat_micro_katbwd] [--steps N] [--ckpt PATH]\n\
                  \x20 profile [--kernel fwd|kat|flash] [--loops N] [--gpu 4060ti|h200]\n\
@@ -661,18 +868,24 @@ fn main() -> Result<()> {
                  \x20             [--http [--shards N]]  (also run over loopback HTTP; writes BENCH_http.json)\n\
                  \x20             [--wire [--shards N]]  (in-process vs HTTP/JSON vs flashwire binary;\n\
                  \x20              writes BENCH_wire.json with bytes-per-request)\n\
-                 \x20             [--seed N] [--out PATH]\n\
-                 \x20             (micro-batching inference bench; writes BENCH_serve.json)\n\
+                 \x20             [--seed N] [--out PATH] [--trace-out PATH]\n\
+                 \x20             (micro-batching inference bench; writes BENCH_serve.json;\n\
+                 \x20              --trace-out also runs a traced leg per transport and writes\n\
+                 \x20              Perfetto traces next to the bench JSON)\n\
                  \x20 serve-http [--addr A] [--port P|0] [--shards N] [--conn-threads N]\n\
                  \x20             [--models name:d[:groups],... | --pipeline TAG] [--max-batch B]\n\
                  \x20             [--deadline-us D] [--queue-depth N] [--max-body-bytes N] [--seed N]\n\
+                 \x20             [--trace-out PATH]  (write a Perfetto trace on drain)\n\
                  \x20             (HTTP/JSON frontend; POST /v1/models/<name>/infer, GET /v1/models\n\
                  \x20              /healthz /metrics; runs until SIGTERM, then drains)\n\
                  \x20 serve-wire [--addr A] [--port P|0] [--shards N] [--conn-threads N]\n\
                  \x20             [--models name:d[:groups],... | --pipeline TAG] [--max-batch B]\n\
                  \x20             [--deadline-us D] [--queue-depth N] [--max-payload-bytes N] [--seed N]\n\
+                 \x20             [--trace-out PATH]  (write a Perfetto trace on drain)\n\
                  \x20             (flashwire length-prefixed binary frontend, DESIGN.md \u{a7}13;\n\
                  \x20              runs until SIGTERM, then drains)\n\
+                 \x20 trace-stat PATH   -- scan a Perfetto trace written by --trace-out and\n\
+                 \x20             print packet/slice counts (non-empty + balanced, else exit 1)\n\
                  \x20 selfcheck [--artifacts DIR]"
             );
             Ok(())

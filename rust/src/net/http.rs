@@ -379,6 +379,10 @@ pub struct HttpResponse {
     pub headers: Vec<(String, String)>,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Trace span of the request this response answers (set by the
+    /// infer route on a traced server).  Never serialized — it exists
+    /// so the connection handler can annotate its handler-track slice.
+    pub span_id: Option<u64>,
 }
 
 impl HttpResponse {
@@ -388,6 +392,7 @@ impl HttpResponse {
             headers: Vec::new(),
             content_type: "application/json",
             body: body.to_string().into_bytes(),
+            span_id: None,
         }
     }
 
@@ -397,11 +402,18 @@ impl HttpResponse {
             headers: Vec::new(),
             content_type: "text/plain; charset=utf-8",
             body: body.into().into_bytes(),
+            span_id: None,
         }
     }
 
     pub fn with_header(mut self, name: &str, value: impl Into<String>) -> Self {
         self.headers.push((name.to_string(), value.into()));
+        self
+    }
+
+    /// Tag this response with the trace span it answers.
+    pub fn with_span(mut self, span_id: Option<u64>) -> Self {
+        self.span_id = span_id;
         self
     }
 

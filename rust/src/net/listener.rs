@@ -35,6 +35,35 @@ use anyhow::{Context, Result};
 use super::http::{read_request, HttpResponse, Limits, ReadOutcome};
 use super::router::{handle, HttpMetrics};
 use crate::serve::{ServeStats, Server};
+use crate::trace::{AnnValue, TraceCollector, TraceEvent, TrackId};
+
+/// Per-handler-thread tracing context: the collector plus this thread's
+/// own track (`http-{i}` / `wire-{i}`), so handler slices from
+/// different threads never interleave on one track.  `pub(crate)`
+/// because the flashwire frontend has the same shape and reuses it.
+pub(crate) struct HandlerTrace {
+    pub(crate) tracer: Arc<TraceCollector>,
+    pub(crate) track: TrackId,
+}
+
+impl HandlerTrace {
+    /// Record one handler slice covering `[t0_us, now]`, annotated with
+    /// the response status and (when the route produced one) the span
+    /// id of the inference it answered.
+    pub(crate) fn record(&self, name: String, t0_us: u64, status: u64, span_id: Option<u64>) {
+        let mut args = vec![("status", AnnValue::U64(status))];
+        if let Some(id) = span_id {
+            args.push(("span_id", AnnValue::U64(id)));
+        }
+        self.tracer.record(TraceEvent {
+            track: self.track,
+            name,
+            t0_us,
+            t1_us: self.tracer.now_us(),
+            args,
+        });
+    }
+}
 
 /// Frontend tuning knobs.
 #[derive(Clone, Debug)]
@@ -131,9 +160,18 @@ impl HttpServer {
             let (stop_t, queue, metrics) = (stop.clone(), queue.clone(), metrics.clone());
             let server = server.clone();
             let limits = opts.limits;
+            // One handler track per thread: each thread is a serial
+            // writer, so its slices are disjoint by construction (the
+            // nesting precondition of the Perfetto renderer).
+            let trace = server.tracer().map(|t| HandlerTrace {
+                tracer: t.clone(),
+                track: t.register_track(&format!("http-{i}")),
+            });
             let spawned = std::thread::Builder::new()
                 .name(format!("flashkat-http-{i}"))
-                .spawn(move || handler_loop(&queue, &server, &metrics, &limits, &stop_t));
+                .spawn(move || {
+                    handler_loop(&queue, &server, &metrics, &limits, &stop_t, trace.as_ref())
+                });
             match spawned {
                 Ok(handle) => threads.push(handle),
                 Err(e) => {
@@ -186,7 +224,7 @@ impl HttpServer {
         // never claimed by a handler (all handlers may race out through
         // the idle path at the instant of shutdown).
         while let Some(stream) = self.queue.pop(Duration::from_millis(1)) {
-            handle_connection(stream, &self.server, &self.metrics, &self.limits, &self.stop);
+            handle_connection(stream, &self.server, &self.metrics, &self.limits, &self.stop, None);
         }
         self.server.shutdown()
     }
@@ -231,6 +269,7 @@ fn handler_loop(
     metrics: &HttpMetrics,
     limits: &Limits,
     stop: &AtomicBool,
+    trace: Option<&HandlerTrace>,
 ) {
     loop {
         let Some(stream) = queue.pop(Duration::from_millis(50)) else {
@@ -239,12 +278,12 @@ fn handler_loop(
             }
             continue;
         };
-        handle_connection(stream, server, metrics, limits, stop);
+        handle_connection(stream, server, metrics, limits, stop, trace);
         if stop.load(Ordering::SeqCst) {
             // Drain what is already queued before exiting, so accepted
             // connections are answered, not abandoned.
             while let Some(stream) = queue.pop(Duration::from_millis(1)) {
-                handle_connection(stream, server, metrics, limits, stop);
+                handle_connection(stream, server, metrics, limits, stop, trace);
             }
             return;
         }
@@ -258,6 +297,7 @@ fn handle_connection(
     metrics: &HttpMetrics,
     limits: &Limits,
     stop: &AtomicBool,
+    trace: Option<&HandlerTrace>,
 ) {
     stream.set_nodelay(true).ok();
     // Short read timeout: idle keep-alive connections poll the shutdown
@@ -290,7 +330,16 @@ fn handle_connection(
                 return;
             }
             ReadOutcome::Ok(req) => {
+                let t0 = trace.map(|tr| tr.tracer.now_us());
                 let resp = handle(&req, server, metrics);
+                if let (Some(tr), Some(t0)) = (trace, t0) {
+                    tr.record(
+                        format!("http {}", req.path()),
+                        t0,
+                        resp.status as u64,
+                        resp.span_id,
+                    );
+                }
                 metrics.count(resp.status);
                 // During drain, finish this response but close the
                 // connection so the handler can exit.

@@ -8,7 +8,8 @@
 //!   [`Server::try_submit`], so a saturated shard queue is **shed** as
 //!   `429 Too Many Requests` + `Retry-After` instead of stalling the
 //!   connection handler — backpressure surfaces at the protocol layer.
-//!   Success returns `{"y": [...], "batch_size": B, "cause": "..."}`.
+//!   Success returns `{"y": [...], "batch_size": B, "cause": "...",
+//!   "timing": {...}}` plus `"span_id"` when the server traces.
 //! - `GET /v1/models` — registry metadata (name, widths, shard).
 //! - `GET /healthz` — liveness probe.
 //! - `GET /metrics` — Prometheus text: HTTP status counters plus the
@@ -163,7 +164,12 @@ fn infer(req: &Request, server: &Server, name: &str) -> HttpResponse {
             _ => return error_json(400, "\"rows\" must be a positive integer"),
         },
     };
-    match server.try_submit(name, x, rows) {
+    // Mint the span at the protocol edge so `t_admit_us` covers queue
+    // wait from the moment the request was understood, not from shard
+    // admission.  On an untraced server this is `None` and submission
+    // falls back to its own (also-None) minting.
+    let span = server.mint_span(name, rows);
+    match server.try_submit_span(name, x, rows, span) {
         Ok(resp) => {
             // JSON numbers cannot carry NaN/inf (the writer would emit
             // null and the documented bit-identity would silently
@@ -172,14 +178,25 @@ fn infer(req: &Request, server: &Server, name: &str) -> HttpResponse {
                 return error_json(500, "model produced non-finite values");
             }
             let y: Vec<Json> = resp.y.iter().map(|&v| Json::Num(v as f64)).collect();
-            HttpResponse::json(
-                200,
-                &Json::Obj(vec![
-                    ("y".to_string(), Json::Arr(y)),
-                    ("batch_size".to_string(), Json::Int(resp.batch_size as i64)),
-                    ("cause".to_string(), Json::Str(resp.cause.label().to_string())),
-                ]),
-            )
+            let t = resp.timing;
+            let mut fields = vec![
+                ("y".to_string(), Json::Arr(y)),
+                ("batch_size".to_string(), Json::Int(resp.batch_size as i64)),
+                ("cause".to_string(), Json::Str(resp.cause.label().to_string())),
+                (
+                    "timing".to_string(),
+                    Json::Obj(vec![
+                        ("queue_wait_us".to_string(), Json::Int(t.queue_wait_us as i64)),
+                        ("batch_form_us".to_string(), Json::Int(t.batch_form_us as i64)),
+                        ("exec_us".to_string(), Json::Int(t.exec_us as i64)),
+                        ("reply_us".to_string(), Json::Int(t.reply_us as i64)),
+                    ]),
+                ),
+            ];
+            if let Some(id) = resp.span_id {
+                fields.push(("span_id".to_string(), Json::Int(id as i64)));
+            }
+            HttpResponse::json(200, &Json::Obj(fields)).with_span(resp.span_id)
         }
         Err(SubmitError::QueueFull { queue_depth }) => error_json(
             429,
@@ -246,6 +263,23 @@ fn render_metrics(server: &Server, metrics: &HttpMetrics) -> String {
                 _ => m.stats.failed,
             };
             out.push_str(&format!("{metric}{{model=\"{}\"}} {v}\n", prom_escape(&m.name)));
+        }
+    }
+    // Why each batch left the queue, per model: the cause mix is the
+    // batcher's fingerprint (all-deadline = latency-bound, all-full =
+    // saturated, all-idle = trickle traffic).
+    out.push_str(
+        "# HELP flashkat_flush_total batches flushed per model by cause\n\
+         # TYPE flashkat_flush_total counter\n",
+    );
+    for m in &stats.per_model {
+        for cause in crate::serve::FlushCause::ALL {
+            out.push_str(&format!(
+                "flashkat_flush_total{{model=\"{}\",cause=\"{}\"}} {}\n",
+                prom_escape(&m.name),
+                cause.label(),
+                m.stats.causes[cause.index()]
+            ));
         }
     }
     out.push_str("# TYPE flashkat_serve_busy_seconds_total counter\n");
@@ -329,6 +363,34 @@ mod tests {
         assert_eq!(y, want, "HTTP JSON round trip must be bit-exact");
         assert!(parsed.get("batch_size").unwrap().as_usize().unwrap() >= 1);
         assert!(parsed.get("cause").unwrap().as_str().is_some());
+        // Timing breakdown rides along even without a tracer attached;
+        // span_id does not (this server is untraced).
+        let timing = parsed.get("timing").expect("timing object present");
+        for phase in ["queue_wait_us", "batch_form_us", "exec_us", "reply_us"] {
+            assert!(timing.get(phase).and_then(Json::as_i64).is_some(), "{phase}");
+        }
+        assert!(parsed.get("span_id").is_none(), "untraced server leaks no span id");
+    }
+
+    #[test]
+    fn traced_server_reports_span_id_over_http() {
+        let mut rng = Pcg64::new(74);
+        let coeffs = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+        let tracer = std::sync::Arc::new(crate::trace::TraceCollector::new());
+        let server = Server::start_sharded_traced(
+            vec![Box::new(RationalExecutor::new("grkan", D, coeffs).unwrap())],
+            BatchPolicy::default(),
+            1,
+            Some(tracer.clone()),
+        )
+        .unwrap();
+        let ok_body = format!("{{\"x\":[{}],\"rows\":1}}", vec!["0"; D].join(","));
+        let resp = post(&server, "/v1/models/grkan/infer", &ok_body);
+        assert_eq!(resp.status, 200);
+        let parsed = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let id = parsed.get("span_id").and_then(Json::as_i64).expect("span id in body");
+        assert!(id >= 1);
+        assert_eq!(resp.span_id, Some(id as u64), "response carries the handler-slice span");
     }
 
     #[test]

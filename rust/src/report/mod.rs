@@ -288,10 +288,21 @@ fn ratio_cell(v: f64) -> String {
     }
 }
 
+/// Column header matching [`serve_row`], shared by the serve-family
+/// reports (first column label varies by table).
+fn serve_header(first: &str) -> String {
+    format!(
+        "{first:<24}    img/s   rows/s   mean-b     p50      p95      p99    qw-p50    qw-p99    ex-p50    ex-p99\n"
+    )
+}
+
 /// One transport/run table row shared by the serve-family reports.
+/// The last four columns split server-side time per request out of the
+/// client latency: queue wait (admission → batch release) and executor
+/// run, p50/p99 each (log-histogram resolution, µs rendered as ms).
 fn serve_row(r: &crate::serve::BenchResult) -> String {
     format!(
-        "{:<24} {:>8.0} {:>8.0} {:>8.1} {} {} {}\n",
+        "{:<24} {:>8.0} {:>8.0} {:>8.1} {} {} {} {} {} {} {}\n",
         r.label,
         r.throughput_rps,
         r.rows_per_sec,
@@ -299,6 +310,10 @@ fn serve_row(r: &crate::serve::BenchResult) -> String {
         ms_cell(r.p50_ms),
         ms_cell(r.p95_ms),
         ms_cell(r.p99_ms),
+        ms_cell(r.exec.queue_wait.percentile(50.0) / 1e3),
+        ms_cell(r.exec.queue_wait.percentile(99.0) / 1e3),
+        ms_cell(r.exec.exec.percentile(50.0) / 1e3),
+        ms_cell(r.exec.exec.percentile(99.0) / 1e3),
     )
 }
 
@@ -311,9 +326,7 @@ pub fn serve(
     baseline: Option<&crate::serve::BenchResult>,
 ) -> String {
     let mut out = hdr("Serve: dynamic micro-batching KAT inference");
-    out.push_str(
-        "run                        img/s   rows/s   mean-b     p50      p95      p99\n",
-    );
+    out.push_str(&serve_header("run"));
     out.push_str(&serve_row(main));
     if let Some(base) = baseline {
         out.push_str(&serve_row(base));
@@ -367,9 +380,7 @@ pub fn serve_http(
 ) -> String {
     let mut out = hdr("Serve: loopback HTTP frontend vs in-process submit");
     out.push_str(&format!("executor shards: {shards}\n"));
-    out.push_str(
-        "transport                  img/s   rows/s   mean-b     p50      p95      p99\n",
-    );
+    out.push_str(&serve_header("transport"));
     for r in [inproc, http] {
         out.push_str(&serve_row(r));
     }
@@ -401,9 +412,7 @@ pub fn serve_wire(
 ) -> String {
     let mut out = hdr("Serve: flashwire binary frontend vs HTTP/JSON vs in-process");
     out.push_str(&format!("executor shards: {shards}\n"));
-    out.push_str(
-        "transport                  img/s   rows/s   mean-b     p50      p95      p99\n",
-    );
+    out.push_str(&serve_header("transport"));
     for r in [inproc, http, wire] {
         out.push_str(&serve_row(r));
     }
@@ -549,6 +558,7 @@ mod tests {
             batch_hist: vec![0, 0, 5],
             causes: [5, 0, 0, 0],
             busy_secs: 0.05,
+            ..Default::default()
         };
         let mk = |label: &str, rps: f64| BenchResult {
             label: label.into(),

@@ -106,6 +106,11 @@ pub struct Batch {
     pub key: ShapeKey,
     pub tickets: Vec<Ticket>,
     pub cause: FlushCause,
+    /// Release time (µs, the `now_us` handed to `pop`/`drain`).  The
+    /// span timeline splits each request's wait here: `enq_us →
+    /// released_us` is queue wait, `released_us →` executor call is
+    /// batch formation.
+    pub released_us: u64,
 }
 
 /// Shape-keyed admission queue (see module docs).
@@ -177,7 +182,7 @@ impl Batcher {
             .min();
         if let Some((enq_us, key)) = oldest {
             if now_us >= enq_us.saturating_add(self.policy.deadline_us) {
-                return Some(self.release(key, FlushCause::Deadline));
+                return Some(self.release(key, FlushCause::Deadline, now_us));
             }
         }
         let full = self
@@ -186,35 +191,36 @@ impl Batcher {
             .find(|(_, b)| b.len() >= self.policy.max_batch)
             .map(|(k, _)| *k);
         if let Some(key) = full {
-            return Some(self.release(key, FlushCause::Full));
+            return Some(self.release(key, FlushCause::Full, now_us));
         }
         if let Some((_, key)) = oldest {
             if idle && self.policy.eager {
-                return Some(self.release(key, FlushCause::Idle));
+                return Some(self.release(key, FlushCause::Idle, now_us));
             }
         }
         None
     }
 
     /// Unconditionally release every pending request (shutdown path);
-    /// batches still respect `max_batch`.
-    pub fn drain(&mut self) -> Vec<Batch> {
+    /// batches still respect `max_batch`.  `now_us` stamps each batch's
+    /// `released_us` so drained requests keep an honest queue-wait.
+    pub fn drain(&mut self, now_us: u64) -> Vec<Batch> {
         let mut out = Vec::new();
         let keys: Vec<ShapeKey> = self.buckets.keys().copied().collect();
         for key in keys {
             while self.buckets.get(&key).is_some_and(|b| !b.is_empty()) {
-                out.push(self.release(key, FlushCause::Drain));
+                out.push(self.release(key, FlushCause::Drain, now_us));
             }
         }
         out
     }
 
-    fn release(&mut self, key: ShapeKey, cause: FlushCause) -> Batch {
+    fn release(&mut self, key: ShapeKey, cause: FlushCause, now_us: u64) -> Batch {
         let bucket = self.buckets.get_mut(&key).expect("releasing a known bucket");
         let take = bucket.len().min(self.policy.max_batch);
         let tickets: Vec<Ticket> = bucket.drain(..take).collect();
         self.queued -= tickets.len();
-        Batch { key, tickets, cause }
+        Batch { key, tickets, cause, released_us: now_us }
     }
 }
 
@@ -316,8 +322,9 @@ mod tests {
         for i in 0..10 {
             b.admit(key(i % 2, 8), 0).unwrap();
         }
-        let batches = b.drain();
+        let batches = b.drain(77);
         assert!(batches.iter().all(|x| x.cause == FlushCause::Drain));
+        assert!(batches.iter().all(|x| x.released_us == 77));
         assert!(batches.iter().all(|x| x.tickets.len() <= 4));
         let total: usize = batches.iter().map(|x| x.tickets.len()).sum();
         assert_eq!(total, 10);
@@ -398,11 +405,31 @@ mod tests {
                     .extend(batch.tickets.iter().map(|t| t.id));
             }
         }
-        for batch in b.drain() {
+        for batch in b.drain(200) {
             released[batch.key.model as usize].extend(batch.tickets.iter().map(|t| t.id));
         }
         for k in 0..3 {
             assert_eq!(released[k], admitted[k], "key {k} must release in admission order");
+        }
+    }
+
+    /// Every released batch stamps the virtual `now` it was popped at,
+    /// and no ticket is ever released before it was enqueued — the
+    /// batcher half of the span-nesting invariant (admit ≤ release).
+    #[test]
+    fn released_us_is_pop_time_and_bounds_enqueue() {
+        let mut b = Batcher::new(policy(3, 50, 64, true));
+        let mut rng = Pcg64::new(5);
+        let mut now = 0u64;
+        for step in 0..300u64 {
+            now += rng.below(30) as u64;
+            let _ = b.admit(key(rng.below(2) as u32, 8), now);
+            if let Some(batch) = b.pop(now, step % 2 == 0) {
+                assert_eq!(batch.released_us, now);
+                for t in &batch.tickets {
+                    assert!(t.enq_us <= batch.released_us, "ticket released before enqueue");
+                }
+            }
         }
     }
 
@@ -428,7 +455,7 @@ mod tests {
                     ));
                 }
             }
-            for batch in b.drain() {
+            for batch in b.drain(now) {
                 trace.push((batch.key, batch.tickets.iter().map(|t| t.id).collect(), batch.cause));
             }
             trace

@@ -26,6 +26,7 @@ use anyhow::{Context, Result};
 use super::batcher::FlushCause;
 use crate::rational::{forward_into, Coeffs};
 use crate::runtime::{HostTensor, RowsAdapter, Runtime};
+use crate::util::stats::LogHist;
 
 /// One named, servable model.  `Send` because the registry moves onto
 /// the executor thread; `&mut self` so implementations can keep scratch.
@@ -160,6 +161,11 @@ pub struct ExecStats {
     pub causes: [usize; 4],
     /// Wall time inside the executor's `run` (busy time).
     pub busy_secs: f64,
+    /// Per-request queue wait (admission to batch release, µs).
+    pub queue_wait: LogHist,
+    /// Per-request executor time (µs; every request of a batch records
+    /// the batch's `run` duration — that is the latency it observed).
+    pub exec: LogHist,
 }
 
 impl ExecStats {
@@ -184,6 +190,13 @@ impl ExecStats {
         self.batch_hist[requests] += 1;
     }
 
+    /// Record one served request's timing breakdown (µs).  Separate
+    /// from [`Self::record`]: batches record once, requests each.
+    pub fn record_request_timing(&mut self, queue_wait_us: u64, exec_us: u64) {
+        self.queue_wait.record(queue_wait_us);
+        self.exec.record(exec_us);
+    }
+
     /// Fold `other` into `self` (used to form server-wide totals).
     pub fn merge(&mut self, other: &ExecStats) {
         self.batches += other.batches;
@@ -200,6 +213,8 @@ impl ExecStats {
         for (h, o) in self.batch_hist.iter_mut().zip(&other.batch_hist) {
             *h += o;
         }
+        self.queue_wait.merge(&other.queue_wait);
+        self.exec.merge(&other.exec);
     }
 }
 
@@ -311,6 +326,8 @@ mod tests {
         a.record(1, 2, FlushCause::Deadline, 0.5);
         let mut b = ExecStats::default();
         b.record(3, 5, FlushCause::Idle, 0.125);
+        b.record_request_timing(120, 30);
+        b.record_request_timing(15, 30);
         b.failed += 3;
         let mut total = ExecStats::default();
         total.merge(&a);
@@ -323,6 +340,11 @@ mod tests {
         assert_eq!(total.causes, [1, 1, 1, 0]);
         assert_eq!(total.batch_hist, vec![0, 1, 0, 2]);
         assert!((total.mean_batch() - 7.0 / 3.0).abs() < 1e-12);
+        // Timing histograms merge by count; exec had two identical
+        // samples so the full percentile range maps into one bucket.
+        assert_eq!(total.queue_wait.count(), 2);
+        assert_eq!(total.exec.count(), 2);
+        assert_eq!(total.exec.percentile(0.0), total.exec.percentile(100.0));
 
         let serve = ServeStats {
             per_model: vec![

@@ -200,6 +200,14 @@ fn exec_json(exec: &ExecStats) -> Vec<(String, Json)> {
         ("failed".to_string(), Json::Int(exec.failed as i64)),
         ("mean_batch".to_string(), Json::Num(exec.mean_batch())),
         ("exec_busy_secs".to_string(), Json::Num(exec.busy_secs)),
+        // Server-side phase percentiles (µs, log-histogram resolution;
+        // `null` when no requests were recorded).  Client latency above
+        // covers the whole round trip — these split out where inside
+        // the server the time went.
+        ("queue_wait_p50_us".to_string(), Json::Num(exec.queue_wait.percentile(50.0))),
+        ("queue_wait_p99_us".to_string(), Json::Num(exec.queue_wait.percentile(99.0))),
+        ("exec_p50_us".to_string(), Json::Num(exec.exec.percentile(50.0))),
+        ("exec_p99_us".to_string(), Json::Num(exec.exec.percentile(99.0))),
         ("batch_hist".to_string(), Json::Arr(hist)),
         ("flush_causes".to_string(), Json::Obj(causes)),
     ]
@@ -265,6 +273,19 @@ pub fn run_sharded(
     run_with_sharded(cfg, executors(cfg)?, policy, label, shards)
 }
 
+/// [`run_sharded`] with a trace collector attached to the server, for
+/// `serve-bench --trace-out`: identical workload and accounting, plus a
+/// span per request in `tracer`.
+pub fn run_sharded_traced(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    label: &str,
+    shards: usize,
+    tracer: std::sync::Arc<crate::trace::TraceCollector>,
+) -> Result<BenchResult> {
+    run_with_sharded_inner(cfg, executors(cfg)?, policy, label, shards, Some(tracer))
+}
+
 /// Run the workload against caller-provided executors (e.g. a
 /// [`super::PipelineExecutor`] over an AOT artifact).  `cfg.models` must
 /// describe the registry in order: names and widths are cross-checked so
@@ -286,6 +307,30 @@ pub fn run_with_sharded(
     label: &str,
     shards: usize,
 ) -> Result<BenchResult> {
+    run_with_sharded_inner(cfg, executors, policy, label, shards, None)
+}
+
+/// [`run_with`] with a trace collector attached — the traced analogue
+/// for caller-provided executors (e.g. `serve-bench --pipeline
+/// --trace-out`).
+pub fn run_with_traced(
+    cfg: &LoadConfig,
+    executors: Vec<Box<dyn ModelExecutor>>,
+    policy: BatchPolicy,
+    label: &str,
+    tracer: std::sync::Arc<crate::trace::TraceCollector>,
+) -> Result<BenchResult> {
+    run_with_sharded_inner(cfg, executors, policy, label, 1, Some(tracer))
+}
+
+fn run_with_sharded_inner(
+    cfg: &LoadConfig,
+    executors: Vec<Box<dyn ModelExecutor>>,
+    policy: BatchPolicy,
+    label: &str,
+    shards: usize,
+    tracer: Option<std::sync::Arc<crate::trace::TraceCollector>>,
+) -> Result<BenchResult> {
     if cfg.requests == 0 || cfg.concurrency == 0 {
         bail!("load config needs at least one request and one client");
     }
@@ -303,7 +348,7 @@ pub fn run_with_sharded(
             bail!("model {:?}: spec d={} but executor d_in={}", spec.name, spec.d, ex.d_in());
         }
     }
-    let server = Server::start_sharded(executors, policy, shards)?;
+    let server = Server::start_sharded_traced(executors, policy, shards, tracer)?;
     let (wall_secs, per_client) = drive(cfg, || {
         let server = &server;
         move |id| {
@@ -490,6 +535,19 @@ pub fn run_http(
     label: &str,
     shards: usize,
 ) -> Result<BenchResult> {
+    run_http_traced(cfg, policy, label, shards, None)
+}
+
+/// [`run_http`] with an optional trace collector attached to the serve
+/// engine — the HTTP frontend then also records one handler slice per
+/// request on its per-thread `http-{i}` tracks.
+pub fn run_http_traced(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    label: &str,
+    shards: usize,
+    tracer: Option<std::sync::Arc<crate::trace::TraceCollector>>,
+) -> Result<BenchResult> {
     use crate::net::{HttpClient, HttpOptions, HttpServer};
 
     if cfg.requests == 0 || cfg.concurrency == 0 {
@@ -498,7 +556,8 @@ pub fn run_http(
     if cfg.models.is_empty() {
         bail!("load config needs at least one model spec");
     }
-    let server = std::sync::Arc::new(Server::start_sharded(executors(cfg)?, policy, shards)?);
+    let server =
+        std::sync::Arc::new(Server::start_sharded_traced(executors(cfg)?, policy, shards, tracer)?);
     let http = HttpServer::bind(
         "127.0.0.1:0",
         server,
@@ -580,6 +639,19 @@ pub fn run_wire(
     label: &str,
     shards: usize,
 ) -> Result<BenchResult> {
+    run_wire_traced(cfg, policy, label, shards, None)
+}
+
+/// [`run_wire`] with an optional trace collector attached to the serve
+/// engine — the flashwire frontend then also records one handler slice
+/// per frame on its per-thread `wire-{i}` tracks.
+pub fn run_wire_traced(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    label: &str,
+    shards: usize,
+    tracer: Option<std::sync::Arc<crate::trace::TraceCollector>>,
+) -> Result<BenchResult> {
     use crate::wire::{ErrCode, WireClient, WireOptions, WireServer};
 
     if cfg.requests == 0 || cfg.concurrency == 0 {
@@ -588,7 +660,8 @@ pub fn run_wire(
     if cfg.models.is_empty() {
         bail!("load config needs at least one model spec");
     }
-    let server = std::sync::Arc::new(Server::start_sharded(executors(cfg)?, policy, shards)?);
+    let server =
+        std::sync::Arc::new(Server::start_sharded_traced(executors(cfg)?, policy, shards, tracer)?);
     let wire = WireServer::bind(
         "127.0.0.1:0",
         server,
@@ -746,6 +819,18 @@ pub fn transport_bytes(cfg: &LoadConfig) -> Result<TransportBytes> {
             ("y".to_string(), Json::Arr(y.iter().map(|&v| Json::Num(v as f64)).collect())),
             ("batch_size".to_string(), Json::Int(1)),
             ("cause".to_string(), Json::Str(FlushCause::Idle.label().to_string())),
+            // The live response always carries the timing breakdown;
+            // representative small values keep the accounting honest
+            // (real digits vary by a few bytes per request at most).
+            (
+                "timing".to_string(),
+                Json::Obj(vec![
+                    ("queue_wait_us".to_string(), Json::Int(0)),
+                    ("batch_form_us".to_string(), Json::Int(0)),
+                    ("exec_us".to_string(), Json::Int(0)),
+                    ("reply_us".to_string(), Json::Int(0)),
+                ]),
+            ),
         ]);
         sums.json_response += resp_json.to_string().len() as f64;
         let resp = InferResponse { y: std::mem::take(&mut y), batch_size: 1, cause: FlushCause::Idle };
@@ -865,6 +950,46 @@ fn config_json(cfg: &LoadConfig) -> Json {
         ),
         ("models".to_string(), Json::Arr(models)),
         ("threads".to_string(), Json::Int(crate::util::parallel::default_threads() as i64)),
+    ])
+}
+
+/// One trace file written by a `--trace-out` bench run.
+#[derive(Clone, Debug)]
+pub struct TraceRun {
+    pub path: String,
+    /// `TracePacket` count ([`crate::trace::stat`]).
+    pub packets: usize,
+    pub bytes: usize,
+}
+
+/// The `"tracing"` section of a `--trace-out` bench artifact: which
+/// files were written, and the measured collector overhead (untraced vs
+/// traced throughput on the same in-process workload).
+pub fn tracing_json(
+    trace_out: &str,
+    untraced_rps: f64,
+    traced_rps: f64,
+    traces: &[TraceRun],
+) -> Json {
+    let files: Vec<Json> = traces
+        .iter()
+        .map(|t| {
+            Json::Obj(vec![
+                ("path".to_string(), Json::Str(t.path.clone())),
+                ("packets".to_string(), Json::Int(t.packets as i64)),
+                ("bytes".to_string(), Json::Int(t.bytes as i64)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("trace_out".to_string(), Json::Str(trace_out.to_string())),
+        ("throughput_rps_untraced".to_string(), Json::Num(untraced_rps)),
+        ("throughput_rps_traced".to_string(), Json::Num(traced_rps)),
+        (
+            "overhead_ratio".to_string(),
+            Json::Num(traced_rps / untraced_rps.max(1e-9)),
+        ),
+        ("traces".to_string(), Json::Arr(files)),
     ])
 }
 
@@ -1201,6 +1326,47 @@ mod tests {
         assert_eq!(back.get("shards").unwrap().as_usize(), Some(2));
         assert!(back.get("http_overhead").unwrap().get("throughput_ratio").is_some());
         assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    /// Tracing must not change what the bench measures: same request
+    /// accounting, one request span per served request, and a render
+    /// that the trace scanner accepts.
+    #[test]
+    fn traced_run_keeps_results_and_records_every_span() {
+        let cfg = small_cfg(30, 4, 64);
+        let policy = BatchPolicy { max_batch: 8, ..Default::default() };
+        let tracer = std::sync::Arc::new(crate::trace::TraceCollector::new());
+        let traced = run_sharded_traced(&cfg, policy, "traced", 1, tracer.clone()).unwrap();
+        assert_eq!(traced.errors, 0);
+        assert_eq!(traced.exec.requests, 30);
+        let req_events: usize = tracer
+            .snapshot()
+            .iter()
+            .filter(|(name, _)| name.ends_with(" req"))
+            .map(|(_, events)| events.len())
+            .sum();
+        assert_eq!(req_events, 30, "one request slice per served request");
+        let bytes = tracer.render();
+        let stat = crate::trace::stat(&bytes).unwrap();
+        assert!(stat.packets > 0);
+        assert_eq!(stat.slice_begins, stat.slice_ends);
+
+        // The bench JSON carries the server-side phase percentiles...
+        let j = Json::Obj(exec_json(&traced.exec));
+        for key in ["queue_wait_p50_us", "queue_wait_p99_us", "exec_p50_us", "exec_p99_us"] {
+            assert!(j.get(key).and_then(Json::as_f64).is_some(), "{key}");
+        }
+        // ...and the tracing section assembles and round-trips.
+        let run = TraceRun {
+            path: "trace.pftrace".to_string(),
+            packets: stat.packets,
+            bytes: bytes.len(),
+        };
+        let rps = traced.throughput_rps;
+        let tj = tracing_json("trace.pftrace", rps, rps, &[run]);
+        let back = Json::parse(&tj.to_string()).unwrap();
+        assert!(back.get("overhead_ratio").and_then(Json::as_f64).is_some());
+        assert_eq!(back.get("traces").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

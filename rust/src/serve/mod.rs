@@ -26,6 +26,13 @@
 //!   latency/throughput report behind `flashkat serve-bench`, and the
 //!   `(max_batch, deadline_us)` autotune sweep; both persist to the
 //!   `BENCH_serve.json` record shape.
+//!
+//! Cross-cutting: every admission mints a [`crate::trace::SpanCtx`]
+//! when a [`crate::trace::TraceCollector`] is attached
+//! (`Server::start_sharded_traced`), and every [`Response`] carries a
+//! [`crate::trace::Timing`] phase breakdown either way — the span/trace
+//! machinery only ever *reads* clocks, so forwards stay bit-identical
+//! with tracing on.
 
 pub mod batcher;
 pub mod executor;
@@ -37,6 +44,7 @@ pub use executor::{
     ExecStats, ModelExecutor, ModelStats, PipelineExecutor, RationalExecutor, ServeStats,
 };
 pub use loadgen::{
-    Arrival, AutotuneResult, BenchResult, LoadConfig, ModelBench, ModelSpec, TransportBytes,
+    Arrival, AutotuneResult, BenchResult, LoadConfig, ModelBench, ModelSpec, TraceRun,
+    TransportBytes,
 };
 pub use server::{ModelMeta, Response, Server, SubmitError};

@@ -35,6 +35,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::batcher::{Batch, Batcher, BatchPolicy, FlushCause, ShapeKey};
 use super::executor::{ExecStats, ModelExecutor, ModelStats, ServeStats};
+use crate::trace::{AnnValue, SpanCtx, Timing, TraceCollector, TraceEvent, TrackId};
 
 /// A fulfilled request.
 #[derive(Clone, Debug)]
@@ -43,6 +44,12 @@ pub struct Response {
     /// Requests coalesced into the batch that served this one.
     pub batch_size: usize,
     pub cause: FlushCause,
+    /// Where this request's time went (always recorded; the marks are a
+    /// handful of monotonic-clock reads per batch).
+    pub timing: Timing,
+    /// The request's span id when the server runs with a trace
+    /// collector ([`Server::start_sharded_traced`]); `None` otherwise.
+    pub span_id: Option<u64>,
 }
 
 /// Typed submission failure, so callers (the HTTP frontend above all)
@@ -73,11 +80,14 @@ pub enum SubmitError {
     ResponseTimeout,
 }
 
-/// Ceiling on how long [`Server::try_submit`] waits for an admitted
-/// request's response.  Batching delay is deadline-bounded, so this only
-/// triggers on an executor wedged far beyond any sane batch duration —
-/// it exists so a slow model cannot pin every HTTP handler thread
-/// indefinitely (the frontend maps it to `503 Retry-After`).
+/// Ceiling on how long a submitter waits for an admitted request's
+/// response — and, for the blocking path, on its admission wait.
+/// Batching delay is deadline-bounded, so this only triggers on an
+/// executor wedged far beyond any sane batch duration.  It bounds
+/// *every* submission path: `try_submit` so a slow model cannot pin
+/// every HTTP handler thread (the frontend maps it to `503
+/// Retry-After`), and the blocking `submit`/`submit_at` so a wedged
+/// executor cannot pin in-process callers forever either.
 pub const TRY_RESPONSE_TIMEOUT: Duration = Duration::from_secs(30);
 
 impl fmt::Display for SubmitError {
@@ -114,6 +124,11 @@ struct Job {
     x: Vec<f32>,
     rows: u32,
     resp: mpsc::Sender<std::result::Result<Response, String>>,
+    /// Span minted at this request's admission point (`Some` exactly
+    /// when the server has a trace collector).  Rides with the payload
+    /// — batcher tickets stay span-agnostic and the ticket id keys the
+    /// two together.
+    span: Option<SpanCtx>,
 }
 
 struct State {
@@ -138,13 +153,29 @@ struct Shard {
     stats: Mutex<Vec<ExecStats>>,
 }
 
+/// The two trace tracks owned by one shard: batch slices on one, the
+/// per-request slices of those batches on a companion track (slices on
+/// a single Perfetto track must nest, and a batch's requests overlap
+/// their batch but not each other's parents).
+#[derive(Clone, Copy)]
+struct ShardTracks {
+    batch: TrackId,
+    req: TrackId,
+}
+
 struct Shared {
     shards: Vec<Shard>,
     /// Global registry order (= `submit_at` index order).
     meta: Vec<ModelMeta>,
     /// Global registry index → (shard, shard-local index).
     route: Vec<(u32, u32)>,
+    /// Clock epoch for every µs timestamp (ticket enqueue, batch
+    /// release, span marks).  When a tracer is attached this is *its*
+    /// epoch, so server and handler timestamps share one timeline.
     epoch: Instant,
+    tracer: Option<Arc<TraceCollector>>,
+    /// Per-shard trace tracks; empty without a tracer.
+    shard_tracks: Vec<ShardTracks>,
 }
 
 fn now_us(shared: &Shared) -> u64 {
@@ -173,6 +204,22 @@ impl Server {
         executors: Vec<Box<dyn ModelExecutor>>,
         policy: BatchPolicy,
         n_shards: usize,
+    ) -> Result<Server> {
+        Self::start_sharded_traced(executors, policy, n_shards, None)
+    }
+
+    /// [`Self::start_sharded`] with an optional trace collector.  With
+    /// `Some`, every submission gets a [`SpanCtx`] (minted here or
+    /// passed in by a frontend via [`Self::try_submit_span`]), each
+    /// shard registers a batch track and a request track, and the
+    /// server's clock epoch is the collector's, so all timestamps share
+    /// one timeline.  Forwards stay bit-identical either way: tracing
+    /// only reads clocks and appends to per-shard ring buffers.
+    pub fn start_sharded_traced(
+        executors: Vec<Box<dyn ModelExecutor>>,
+        policy: BatchPolicy,
+        n_shards: usize,
+        tracer: Option<Arc<TraceCollector>>,
     ) -> Result<Server> {
         if executors.is_empty() {
             bail!("server needs at least one executor");
@@ -217,7 +264,17 @@ impl Server {
                 stats: Mutex::new(vec![ExecStats::default(); n as usize]),
             })
             .collect();
-        let shared = Arc::new(Shared { shards, meta, route, epoch: Instant::now() });
+        let shard_tracks = match &tracer {
+            Some(t) => (0..n_shards)
+                .map(|s| ShardTracks {
+                    batch: t.register_track(&format!("shard {s}")),
+                    req: t.register_track(&format!("shard {s} req")),
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+        let epoch = tracer.as_ref().map(|t| t.epoch()).unwrap_or_else(Instant::now);
+        let shared = Arc::new(Shared { shards, meta, route, epoch, tracer, shard_tracks });
 
         // Hand each shard its slice of the registry, preserving
         // shard-local order (global index i lives at local slot i / n).
@@ -261,6 +318,20 @@ impl Server {
     /// Executor shard count.
     pub fn shards(&self) -> usize {
         self.shared.shards.len()
+    }
+
+    /// The trace collector this server was started with, if any.  The
+    /// network frontends use it to register their handler tracks and
+    /// mint spans at *their* admission points.
+    pub fn tracer(&self) -> Option<&Arc<TraceCollector>> {
+        self.shared.tracer.as_ref()
+    }
+
+    /// Mint a span at an outer admission point (HTTP route, wire
+    /// handler) so `t_admit_us` covers the frontend's own work.  `None`
+    /// without a collector — spans cost nothing when tracing is off.
+    pub fn mint_span(&self, model: &str, rows: u32) -> Option<SpanCtx> {
+        self.shared.tracer.as_ref().map(|t| t.mint(model, rows))
     }
 
     /// Registry index of a model name.
@@ -326,7 +397,7 @@ impl Server {
     /// begun, or when the model's executor reports an error for this
     /// batch.
     pub fn submit_at(&self, model: u32, x: Vec<f32>, rows: u32) -> Result<Response> {
-        self.submit_inner(model, x, rows, true).map_err(|e| anyhow!("{e}"))
+        self.submit_inner(model, x, rows, true, None).map_err(|e| anyhow!("{e}"))
     }
 
     /// Non-blocking admission to the named model: where [`Self::submit`]
@@ -340,10 +411,25 @@ impl Server {
         x: Vec<f32>,
         rows: u32,
     ) -> std::result::Result<Response, SubmitError> {
+        self.try_submit_span(model, x, rows, None)
+    }
+
+    /// [`Self::try_submit`] carrying a span minted earlier at an outer
+    /// admission point (the HTTP route / wire handler), so the span's
+    /// `t_admit_us` includes the frontend's parse time.  `None` behaves
+    /// exactly like `try_submit` (a span is minted here if the server
+    /// has a collector).
+    pub fn try_submit_span(
+        &self,
+        model: &str,
+        x: Vec<f32>,
+        rows: u32,
+        span: Option<SpanCtx>,
+    ) -> std::result::Result<Response, SubmitError> {
         let idx = self
             .model_index(model)
             .ok_or_else(|| SubmitError::UnknownModel(format!("{model:?}")))?;
-        self.submit_inner(idx, x, rows, false)
+        self.submit_inner(idx, x, rows, false, span)
     }
 
     /// [`Self::try_submit`] by global registry index.
@@ -353,7 +439,7 @@ impl Server {
         x: Vec<f32>,
         rows: u32,
     ) -> std::result::Result<Response, SubmitError> {
-        self.submit_inner(model, x, rows, false)
+        self.submit_inner(model, x, rows, false, None)
     }
 
     fn submit_inner(
@@ -362,6 +448,7 @@ impl Server {
         x: Vec<f32>,
         rows: u32,
         block: bool,
+        span: Option<SpanCtx>,
     ) -> std::result::Result<Response, SubmitError> {
         let m = self
             .shared
@@ -377,10 +464,19 @@ impl Server {
                 m.d_in
             )));
         }
+        // Mint here (the in-process admission point) unless a frontend
+        // already minted at its own, earlier one.
+        let span = span.or_else(|| self.shared.tracer.as_ref().map(|t| t.mint(&m.name, rows)));
         let (s, local) = self.shared.route[model as usize];
         let shard = &self.shared.shards[s as usize];
         let key = ShapeKey { model: local, d: m.d_in as u32 };
         let (tx, rx) = mpsc::channel();
+        // The blocking path's backpressure wait is bounded too: against
+        // a wedged executor nothing ever frees queue space, and an
+        // unbounded wait would pin in-process callers forever while
+        // HTTP/wire callers shed with a 503.  Expiry is a truthful
+        // `QueueFull` — the request was never admitted and may retry.
+        let admit_deadline = Instant::now() + TRY_RESPONSE_TIMEOUT;
         {
             let mut st = shard.state.lock().unwrap();
             loop {
@@ -389,31 +485,34 @@ impl Server {
                 }
                 let now = now_us(&self.shared);
                 if let Some(ticket) = st.batcher.admit(key, now) {
-                    st.jobs.insert(ticket.id, Job { x, rows, resp: tx });
+                    st.jobs.insert(ticket.id, Job { x, rows, resp: tx, span });
                     st.peak_queued = st.peak_queued.max(st.batcher.queued());
                     break;
                 }
+                let queue_full = SubmitError::QueueFull {
+                    queue_depth: st.batcher.policy().queue_depth,
+                };
                 if !block {
-                    return Err(SubmitError::QueueFull {
-                        queue_depth: st.batcher.policy().queue_depth,
-                    });
+                    return Err(queue_full);
                 }
-                st = shard.space.wait(st).unwrap();
+                let left = admit_deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    return Err(queue_full);
+                }
+                st = shard.space.wait_timeout(st, left).unwrap().0;
             }
             shard.work.notify_one();
         }
-        let outcome = if block {
-            rx.recv().map_err(|_| SubmitError::Failed("server dropped the request".to_string()))
-        } else {
-            // The non-blocking path bounds its wait: batching delay is
-            // deadline-bounded, so only a wedged executor reaches this.
-            rx.recv_timeout(TRY_RESPONSE_TIMEOUT).map_err(|e| match e {
-                mpsc::RecvTimeoutError::Timeout => SubmitError::ResponseTimeout,
-                mpsc::RecvTimeoutError::Disconnected => {
-                    SubmitError::Failed("server dropped the request".to_string())
-                }
-            })
-        };
+        // Once admitted, every path bounds its response wait the same
+        // way: batching delay is deadline-bounded, so only a wedged
+        // executor reaches the timeout.  The request stays in flight
+        // and will still be executed.
+        let outcome = rx.recv_timeout(TRY_RESPONSE_TIMEOUT).map_err(|e| match e {
+            mpsc::RecvTimeoutError::Timeout => SubmitError::ResponseTimeout,
+            mpsc::RecvTimeoutError::Disconnected => {
+                SubmitError::Failed("server dropped the request".to_string())
+            }
+        });
         match outcome? {
             Ok(resp) => Ok(resp),
             Err(msg) => Err(SubmitError::Failed(format!("model {:?}: {msg}", m.name))),
@@ -462,14 +561,14 @@ fn executor_loop(shared: &Shared, shard_idx: usize, mut executors: Vec<Box<dyn M
             let jobs = detach_jobs(&mut st, &batch);
             drop(st);
             shard.space.notify_all();
-            execute(&mut executors, &batch, jobs, &shard.stats, &mut scratch);
+            execute(shared, shard_idx, &mut executors, &batch, jobs, &mut scratch);
             st = shard.state.lock().unwrap();
             continue;
         }
         if st.shutdown {
             // `pop` came back empty; with a non-eager policy requests may
             // still be waiting on deadlines — drain them unconditionally.
-            let batches = st.batcher.drain();
+            let batches = st.batcher.drain(now);
             let drained: Vec<(Batch, Vec<Job>)> = batches
                 .into_iter()
                 .map(|b| {
@@ -480,7 +579,7 @@ fn executor_loop(shared: &Shared, shard_idx: usize, mut executors: Vec<Box<dyn M
             drop(st);
             shard.space.notify_all();
             for (batch, jobs) in drained {
-                execute(&mut executors, &batch, jobs, &shard.stats, &mut scratch);
+                execute(shared, shard_idx, &mut executors, &batch, jobs, &mut scratch);
             }
             return;
         }
@@ -505,27 +604,36 @@ fn detach_jobs(st: &mut State, batch: &Batch) -> Vec<Job> {
 }
 
 /// Run one coalesced batch through its model's executor, record the
-/// outcome in the shard's live counters, and fan the rows back out to
-/// the requesters.
+/// outcome (including each request's timing breakdown) in the shard's
+/// live counters, fan the rows back out to the requesters, and — when
+/// a tracer is attached — emit the batch slice and one request slice
+/// per member onto the shard's tracks.
 fn execute(
+    shared: &Shared,
+    shard_idx: usize,
     executors: &mut [Box<dyn ModelExecutor>],
     batch: &Batch,
     jobs: Vec<Job>,
-    shard_stats: &Mutex<Vec<ExecStats>>,
     scratch: &mut Scratch,
 ) {
+    let shard = &shared.shards[shard_idx];
     let idx = batch.key.model as usize;
     let exec = &mut executors[idx];
     let d_in = exec.d_in();
     let d_out = exec.d_out();
     let total_rows: usize = jobs.iter().map(|j| j.rows as usize).sum();
 
-    let t0 = Instant::now();
     scratch.xcat.clear();
     scratch.xcat.reserve(total_rows * d_in);
     for job in &jobs {
         scratch.xcat.extend_from_slice(&job.x);
     }
+    // Span marks: release → exec0 is batch formation (the assembly
+    // above), exec0 → exec1 is the executor call.  All subtractions
+    // saturate — a ticket admitted between the pop's `now` capture and
+    // here can carry `enq_us` a hair past `released_us`.
+    let t_exec0 = now_us(shared);
+    let t0 = Instant::now();
     // Executors are documented never to panic, but a third-party
     // implementation (or an FFI abort surfacing as a panic) must not
     // unwind this thread: that would strand every queued and future
@@ -535,6 +643,9 @@ fn execute(
     }))
     .unwrap_or_else(|_| Err(anyhow::anyhow!("executor panicked")));
     let busy = t0.elapsed().as_secs_f64();
+    let t_exec1 = now_us(shared);
+    let batch_form_us = t_exec0.saturating_sub(batch.released_us);
+    let exec_us = t_exec1.saturating_sub(t_exec0);
 
     let size = jobs.len();
     let failure = match run {
@@ -547,26 +658,95 @@ fn execute(
         Err(e) => Some(format!("{e:#}")),
     };
     {
-        let stats = &mut shard_stats.lock().unwrap()[idx];
+        let stats = &mut shard.stats.lock().unwrap()[idx];
         stats.record(size, total_rows, batch.cause, busy);
         if failure.is_some() {
             stats.failed += size;
+        } else {
+            // Per-request timing samples (served requests only): queue
+            // wait is admission → release, exec is the batch's run.
+            for ticket in &batch.tickets {
+                stats.record_request_timing(
+                    batch.released_us.saturating_sub(ticket.enq_us),
+                    exec_us,
+                );
+            }
         }
     }
+
+    let tracer = shared.tracer.as_ref();
+    let mut events: Vec<TraceEvent> = Vec::new();
+    if tracer.is_some() {
+        let tracks = &shared.shard_tracks[shard_idx];
+        let mut args = vec![
+            ("cause", AnnValue::Str(batch.cause.label().to_string())),
+            ("batch_size", AnnValue::U64(size as u64)),
+            ("rows", AnnValue::U64(total_rows as u64)),
+        ];
+        if failure.is_some() {
+            args.push(("failed", AnnValue::U64(size as u64)));
+        }
+        events.push(TraceEvent {
+            track: tracks.batch,
+            name: format!("batch {}", exec.name()),
+            t0_us: batch.released_us,
+            t1_us: t_exec1,
+            args,
+        });
+    }
+
     if let Some(msg) = failure {
         for job in jobs {
             // A requester that gave up is not an executor error.
             let _ = job.resp.send(Err(msg.clone()));
         }
+        if let Some(t) = tracer {
+            t.record_many(events);
+        }
         return;
     }
 
     let mut off = 0usize;
-    for job in jobs {
+    for (ticket, job) in batch.tickets.iter().zip(jobs) {
         let n = job.rows as usize * d_out;
         let y = scratch.ycat[off..off + n].to_vec();
         off += n;
-        let _ = job.resp.send(Ok(Response { y, batch_size: size, cause: batch.cause }));
+        let t_reply = now_us(shared);
+        let timing = Timing {
+            queue_wait_us: batch.released_us.saturating_sub(ticket.enq_us),
+            batch_form_us,
+            exec_us,
+            reply_us: t_reply.saturating_sub(t_exec1),
+        };
+        // `shard_tracks` is non-empty exactly when a tracer is attached
+        // (a caller-supplied span on an untraced server records nothing).
+        if let (Some(span), Some(tracks)) = (&job.span, shared.shard_tracks.get(shard_idx)) {
+            // Request slices share the batch's exec start and end at
+            // their reply, so slices of one batch nest on the request
+            // track; the wait breakdown rides as annotations.
+            events.push(TraceEvent {
+                track: tracks.req,
+                name: format!("req {}", span.model),
+                t0_us: t_exec0,
+                t1_us: t_reply,
+                args: vec![
+                    ("span_id", AnnValue::U64(span.span_id)),
+                    ("rows", AnnValue::U64(u64::from(job.rows))),
+                    ("admit_us", AnnValue::U64(span.t_admit_us)),
+                    ("queue_wait_us", AnnValue::U64(timing.queue_wait_us)),
+                    ("batch_form_us", AnnValue::U64(timing.batch_form_us)),
+                    ("exec_us", AnnValue::U64(timing.exec_us)),
+                    ("reply_us", AnnValue::U64(timing.reply_us)),
+                ],
+            });
+        }
+        let span_id = job.span.as_ref().map(|s| s.span_id);
+        let _ = job
+            .resp
+            .send(Ok(Response { y, batch_size: size, cause: batch.cause, timing, span_id }));
+    }
+    if let Some(t) = tracer {
+        t.record_many(events);
     }
 }
 
@@ -1070,6 +1250,84 @@ mod tests {
         assert!(server.submit("grkan", vec![0.0; D - 1], 1).is_err(), "shape mismatch");
         let stats = server.shutdown().unwrap();
         assert_eq!(stats.total().requests, 0);
+    }
+
+    /// A traced server mints a span per request, reports its timing on
+    /// the response, and records exactly one request slice per served
+    /// request — with the slice's marks properly nested (admit ≤
+    /// release ≤ exec start ≤ reply).
+    #[test]
+    fn traced_server_spans_every_request_exactly_once() {
+        let (m, coeffs) = model(11);
+        let tracer = Arc::new(TraceCollector::new());
+        let server = Server::start_sharded_traced(
+            vec![m],
+            BatchPolicy { max_batch: 8, deadline_us: 500, queue_depth: 64, eager: true },
+            1,
+            Some(tracer.clone()),
+        )
+        .unwrap();
+        let mut span_ids = Vec::new();
+        for i in 0..20u64 {
+            let (rows, x) = request(11, i);
+            let want = forward(&x, rows as usize, D, &coeffs);
+            let resp = server.submit("grkan", x, rows).expect("served");
+            assert_eq!(resp.y, want, "tracing must not perturb outputs");
+            span_ids.push(resp.span_id.expect("traced server sets span ids"));
+        }
+        let stats = server.shutdown().unwrap();
+        span_ids.sort_unstable();
+        span_ids.dedup();
+        assert_eq!(span_ids.len(), 20, "span ids must be unique");
+
+        let snapshot = tracer.snapshot();
+        assert_eq!(snapshot.len(), 2, "batch + request track for one shard");
+        let batches = &snapshot[0].1;
+        let reqs = &snapshot[1].1;
+        assert_eq!(batches.len(), stats.total().batches);
+        assert_eq!(reqs.len(), 20, "one request slice per served request");
+        let mut seen: Vec<u64> = Vec::new();
+        for ev in reqs {
+            assert!(ev.t0_us <= ev.t1_us);
+            let arg = |name: &str| {
+                ev.args
+                    .iter()
+                    .find_map(|(k, v)| match v {
+                        AnnValue::U64(u) if *k == name => Some(*u),
+                        _ => None,
+                    })
+                    .unwrap_or_else(|| panic!("missing annotation {name}"))
+            };
+            // admit ≤ exec start (slice t0) and the slice covers the
+            // exec + reply phases exactly.
+            assert!(arg("admit_us") <= ev.t0_us);
+            assert_eq!(ev.t1_us - ev.t0_us, arg("exec_us") + arg("reply_us"));
+            seen.push(arg("span_id"));
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, span_ids, "trace spans = responded spans, each exactly once");
+        // The dump renders to a well-formed trace.
+        let st = crate::trace::stat(&tracer.render()).unwrap();
+        assert_eq!(st.slice_begins, st.slice_ends);
+        assert!(st.packets > 0);
+    }
+
+    /// An untraced server reports timing but no spans, and records no
+    /// trace events anywhere.
+    #[test]
+    fn untraced_server_has_timing_but_no_spans() {
+        let (m, _) = model(12);
+        let server = Server::start(vec![m], BatchPolicy::default()).unwrap();
+        let (rows, x) = request(12, 0);
+        let resp = server.submit("grkan", x, rows).expect("served");
+        assert!(resp.span_id.is_none());
+        // The exec phase really ran, so the breakdown is populated
+        // (exec time can round to 0µs only on a pathologically fast
+        // clock; queue/batch/reply may legitimately be 0).
+        let t = resp.timing;
+        assert!(t.queue_wait_us < 60_000_000, "sane magnitude: {t:?}");
+        assert!(server.tracer().is_none());
+        assert!(server.mint_span("grkan", 1).is_none());
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! Per-request span tracing for the serving stack (DESIGN.md §15).
+//!
+//! FlashKAT's kernel-level lesson was that aggregate counters hid the
+//! real bottleneck until time was *attributed* — the same applies one
+//! level up.  BENCH_serve's p50/p99 histograms say how slow requests
+//! were, not where the time went; this module gives every request an
+//! explicit [`SpanCtx`] minted at its admission point, threads it
+//! through batching and execution, and renders the result as a
+//! [Perfetto](https://ui.perfetto.dev) trace: one track per shard with
+//! a slice per executed batch (annotated with flush cause and size),
+//! a companion track with a slice per request, and one track per
+//! network handler thread.
+//!
+//! The collector is deliberately lock-light so tracing cannot perturb
+//! the p99 it is measuring: every track has exactly one writer thread,
+//! events land in that track's own fixed-capacity ring behind an
+//! uncontended `Mutex`, and rendering happens once, at shutdown, off
+//! the hot path.  When the ring fills, new events are dropped and
+//! counted — a bounded trace beats an unbounded stall.
+
+pub mod perfetto;
+
+pub use perfetto::{stat, TraceStat};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// Per-track event capacity.  At ~100 bytes/event this bounds a track
+/// at a few MB; serve-bench's default 2000-request runs use a fraction
+/// of it, and overflow drops (counted) rather than blocks.
+pub const TRACK_CAPACITY: usize = 1 << 16;
+
+/// Per-request span context, minted at the admission point (in-process
+/// `submit*`, the HTTP infer route, or the wire infer handler) and
+/// carried with the request through batching and execution.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanCtx {
+    /// Globally unique across shards and transports for one collector.
+    pub span_id: u64,
+    /// Mint time on the collector's clock (µs since its epoch).
+    pub t_admit_us: u64,
+    pub model: String,
+    pub rows: u32,
+}
+
+/// Where one request's time went, on the serving clock (µs).  Recorded
+/// on every [`crate::serve::Response`] whether or not a trace collector
+/// is attached — the marks are four monotonic-clock reads per batch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Timing {
+    /// Admission (batcher enqueue) to batch release.
+    pub queue_wait_us: u64,
+    /// Batch release to executor call (input assembly).
+    pub batch_form_us: u64,
+    /// Executor call duration (shared by all requests of the batch).
+    pub exec_us: u64,
+    /// Executor return to this request's reply send.
+    pub reply_us: u64,
+}
+
+/// Handle to one registered track (index into the collector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TrackId(pub usize);
+
+/// One annotation value on a slice.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AnnValue {
+    U64(u64),
+    Str(String),
+}
+
+/// One slice on one track: `[t0_us, t1_us]` on the collector's clock,
+/// with debug annotations.  Slices recorded on a track must nest or be
+/// disjoint (each track has a single writer working serially), which
+/// is what lets [`perfetto::render`] lay them out as a slice stack.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub track: TrackId,
+    pub name: String,
+    pub t0_us: u64,
+    pub t1_us: u64,
+    pub args: Vec<(&'static str, AnnValue)>,
+}
+
+struct Ring {
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+struct TrackBuf {
+    name: String,
+    ring: Mutex<Ring>,
+}
+
+/// Ring-buffered trace collector shared by the server shards and the
+/// network handler threads.  Also owns the span-id counter and the
+/// clock epoch, so span ids are unique across every admission point
+/// and all timestamps are comparable.
+pub struct TraceCollector {
+    epoch: Instant,
+    next_span: AtomicU64,
+    /// Tracks are registered up-front (server start / frontend bind);
+    /// recording takes the read side, so concurrent writers on
+    /// different tracks never contend with each other.
+    tracks: RwLock<Vec<Arc<TrackBuf>>>,
+}
+
+impl Default for TraceCollector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceCollector {
+    pub fn new() -> Self {
+        Self {
+            epoch: Instant::now(),
+            next_span: AtomicU64::new(1),
+            tracks: RwLock::new(Vec::new()),
+        }
+    }
+
+    /// The collector's clock epoch.  A server built with this collector
+    /// adopts it, so span, batch, and handler timestamps all share one
+    /// µs timeline.
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Microseconds since the collector's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Mint a new span at an admission point.  Ids are allocated from
+    /// one atomic counter, so they are unique across shards and
+    /// transports (batcher ticket ids are per-shard and are not).
+    pub fn mint(&self, model: &str, rows: u32) -> SpanCtx {
+        SpanCtx {
+            span_id: self.next_span.fetch_add(1, Ordering::Relaxed),
+            t_admit_us: self.now_us(),
+            model: model.to_string(),
+            rows,
+        }
+    }
+
+    /// Register a named track.  Call once per writer thread at setup
+    /// time, before traffic; the returned id is what events carry.
+    pub fn register_track(&self, name: &str) -> TrackId {
+        let mut tracks = self.tracks.write().expect("trace track registry poisoned");
+        tracks.push(Arc::new(TrackBuf {
+            name: name.to_string(),
+            ring: Mutex::new(Ring { events: Vec::new(), dropped: 0 }),
+        }));
+        TrackId(tracks.len() - 1)
+    }
+
+    /// Record a batch of events.  The track registry is read-locked
+    /// once and each event takes only its own track's (single-writer,
+    /// uncontended) mutex, so this stays off every other thread's path.
+    pub fn record_many(&self, events: Vec<TraceEvent>) {
+        let tracks = self.tracks.read().expect("trace track registry poisoned");
+        for ev in events {
+            let Some(track) = tracks.get(ev.track.0) else {
+                debug_assert!(false, "event on unregistered track {}", ev.track.0);
+                continue;
+            };
+            let mut ring = track.ring.lock().expect("trace ring poisoned");
+            if ring.events.len() < TRACK_CAPACITY {
+                ring.events.push(ev);
+            } else {
+                ring.dropped += 1;
+            }
+        }
+    }
+
+    pub fn record(&self, event: TraceEvent) {
+        self.record_many(vec![event]);
+    }
+
+    /// Total events dropped to ring overflow, across all tracks.
+    pub fn dropped(&self) -> u64 {
+        let tracks = self.tracks.read().expect("trace track registry poisoned");
+        tracks.iter().map(|t| t.ring.lock().expect("trace ring poisoned").dropped).sum()
+    }
+
+    /// Clone out every track's name and events (test/render seam).
+    pub fn snapshot(&self) -> Vec<(String, Vec<TraceEvent>)> {
+        let tracks = self.tracks.read().expect("trace track registry poisoned");
+        tracks
+            .iter()
+            .map(|t| (t.name.clone(), t.ring.lock().expect("trace ring poisoned").events.clone()))
+            .collect()
+    }
+
+    /// Render the collected events as a serialized Perfetto trace.
+    pub fn render(&self) -> Vec<u8> {
+        perfetto::render(&self.snapshot())
+    }
+
+    /// Render and write the trace to `path`.
+    pub fn write_file(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_ids_unique_across_threads() {
+        let c = Arc::new(TraceCollector::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                (0..500).map(|_| c.mint("m", 1).span_id).collect::<Vec<_>>()
+            }));
+        }
+        let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "span ids collided");
+    }
+
+    #[test]
+    fn rings_are_bounded_and_count_drops() {
+        let c = TraceCollector::new();
+        let t = c.register_track("t");
+        let ev = |n: usize| TraceEvent {
+            track: t,
+            name: format!("e{n}"),
+            t0_us: n as u64,
+            t1_us: n as u64 + 1,
+            args: Vec::new(),
+        };
+        c.record_many((0..TRACK_CAPACITY + 10).map(ev).collect());
+        assert_eq!(c.snapshot()[0].1.len(), TRACK_CAPACITY);
+        assert_eq!(c.dropped(), 10);
+    }
+
+    #[test]
+    fn snapshot_and_render_round_trip() {
+        let c = TraceCollector::new();
+        let a = c.register_track("shard 0");
+        let b = c.register_track("shard 0 req");
+        c.record(TraceEvent {
+            track: a,
+            name: "batch m".into(),
+            t0_us: 5,
+            t1_us: 9,
+            args: vec![("cause", AnnValue::Str("full".into())), ("batch_size", AnnValue::U64(2))],
+        });
+        c.record(TraceEvent {
+            track: b,
+            name: "req m".into(),
+            t0_us: 6,
+            t1_us: 9,
+            args: vec![("span_id", AnnValue::U64(42))],
+        });
+        let st = stat(&c.render()).unwrap();
+        assert_eq!(st.slice_begins, 2);
+        assert_eq!(st.slice_ends, 2);
+        assert_eq!(st.track_descriptors, 3); // process + 2 tracks
+    }
+}

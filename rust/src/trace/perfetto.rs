@@ -1,0 +1,419 @@
+//! Hand-rolled Perfetto protobuf writer and scanner (DESIGN.md §15).
+//!
+//! A Perfetto trace is the simplest possible protobuf: a root `Trace`
+//! message that is nothing but `repeated TracePacket packet = 1`.  The
+//! packets we emit use four fields, all stable since the format was
+//! frozen:
+//!
+//! | message           | field                        | number | wire type |
+//! |-------------------|------------------------------|--------|-----------|
+//! | TracePacket       | timestamp (ns)               | 8      | varint    |
+//! | TracePacket       | trusted_packet_sequence_id   | 10     | varint    |
+//! | TracePacket       | track_event                  | 11     | len-delim |
+//! | TracePacket       | sequence_flags               | 13     | varint    |
+//! | TracePacket       | track_descriptor             | 60     | len-delim |
+//! | TrackDescriptor   | uuid                         | 1      | varint    |
+//! | TrackDescriptor   | name                         | 2      | string    |
+//! | TrackDescriptor   | process                      | 3      | len-delim |
+//! | TrackDescriptor   | parent_uuid                  | 5      | varint    |
+//! | ProcessDescriptor | pid                          | 1      | varint    |
+//! | ProcessDescriptor | process_name                 | 6      | string    |
+//! | TrackEvent        | debug_annotations            | 4      | len-delim |
+//! | TrackEvent        | type (1=begin 2=end 3=inst)  | 9      | varint    |
+//! | TrackEvent        | track_uuid                   | 11     | varint    |
+//! | TrackEvent        | name                         | 23     | string    |
+//! | DebugAnnotation   | uint_value                   | 3      | varint    |
+//! | DebugAnnotation   | string_value                 | 6      | string    |
+//! | DebugAnnotation   | name                         | 10     | string    |
+//!
+//! Like `util/json`, everything is written by hand against the wire
+//! format instead of pulling in a protobuf crate: the writer is a page
+//! of varint arithmetic, and owning it keeps the serving stack
+//! zero-dependency.  [`stat`] is the matching minimal scanner — enough
+//! protobuf decoding to count packets and slices so `flashkat
+//! trace-stat` (and CI) can assert a dump is well-formed without
+//! shipping the trace to ui.perfetto.dev first.
+
+use super::{AnnValue, TraceEvent};
+
+/// Sequence id for every packet we emit.  All events come from one
+/// in-process collector drained at shutdown, so a single synthetic
+/// sequence (id 1, state cleared on the first packet) is sufficient.
+const SEQUENCE_ID: u64 = 1;
+
+/// TracePacket.sequence_flags: SEQ_INCREMENTAL_STATE_CLEARED.
+const SEQ_CLEARED: u64 = 1;
+
+/// Track uuid of the synthetic process that parents every track.
+const PROCESS_UUID: u64 = 1;
+
+// ---------------- encoding primitives ----------------
+
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Field key: (field_number << 3) | wire_type.
+fn put_key(out: &mut Vec<u8>, field: u64, wire: u64) {
+    put_varint(out, (field << 3) | wire);
+}
+
+fn put_u64(out: &mut Vec<u8>, field: u64, v: u64) {
+    put_key(out, field, 0);
+    put_varint(out, v);
+}
+
+fn put_str(out: &mut Vec<u8>, field: u64, s: &str) {
+    put_key(out, field, 2);
+    put_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_msg(out: &mut Vec<u8>, field: u64, inner: &[u8]) {
+    put_key(out, field, 2);
+    put_varint(out, inner.len() as u64);
+    out.extend_from_slice(inner);
+}
+
+// ---------------- packet builders ----------------
+
+fn packet(out: &mut Vec<u8>, body: &[u8]) {
+    put_msg(out, 1, body); // Trace.packet = 1
+}
+
+fn descriptor_packet(out: &mut Vec<u8>, desc: &[u8], first: bool) {
+    let mut p = Vec::with_capacity(desc.len() + 16);
+    put_u64(&mut p, 10, SEQUENCE_ID);
+    if first {
+        put_u64(&mut p, 13, SEQ_CLEARED);
+    }
+    put_msg(&mut p, 60, desc);
+    packet(out, &p);
+}
+
+fn annotation(name: &str, value: &AnnValue) -> Vec<u8> {
+    let mut a = Vec::with_capacity(name.len() + 16);
+    match value {
+        AnnValue::U64(v) => put_u64(&mut a, 3, *v),
+        AnnValue::Str(s) => put_str(&mut a, 6, s),
+    }
+    put_str(&mut a, 10, name);
+    a
+}
+
+/// TYPE_SLICE_BEGIN carries the name and annotations; TYPE_SLICE_END
+/// closes whatever is on top of the track's slice stack.
+fn event_packet(
+    out: &mut Vec<u8>,
+    t_us: u64,
+    track_uuid: u64,
+    ty: u64,
+    name: Option<&str>,
+    args: &[(&'static str, AnnValue)],
+) {
+    let mut ev = Vec::with_capacity(64);
+    for (k, v) in args {
+        put_msg(&mut ev, 4, &annotation(k, v));
+    }
+    put_u64(&mut ev, 9, ty);
+    put_u64(&mut ev, 11, track_uuid);
+    if let Some(n) = name {
+        put_str(&mut ev, 23, n);
+    }
+    let mut p = Vec::with_capacity(ev.len() + 16);
+    put_u64(&mut p, 8, t_us.saturating_mul(1000)); // µs clock -> ns
+    put_u64(&mut p, 10, SEQUENCE_ID);
+    put_msg(&mut p, 11, &ev);
+    packet(out, &p);
+}
+
+/// Render named tracks of slice events into a Perfetto trace.
+///
+/// Slices on one track form a stack, so packets must appear in
+/// timestamp order with proper nesting.  The collector guarantees
+/// slices on a track either nest or are disjoint (shard execution and
+/// connection handling are serial per track); here we interleave the
+/// BEGIN/END packets accordingly: at equal timestamps ENDs come first,
+/// ties among BEGINs open the longest slice first, and ties among ENDs
+/// close the innermost (latest-begun) slice first.
+pub fn render(tracks: &[(String, Vec<TraceEvent>)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4096);
+
+    // Synthetic process track parenting every real track.
+    let mut proc_desc = Vec::new();
+    put_u64(&mut proc_desc, 1, 1); // pid
+    put_str(&mut proc_desc, 6, "flashkat-serve");
+    let mut desc = Vec::new();
+    put_u64(&mut desc, 1, PROCESS_UUID);
+    put_msg(&mut desc, 3, &proc_desc);
+    descriptor_packet(&mut out, &desc, true);
+
+    for (i, (name, _)) in tracks.iter().enumerate() {
+        let mut desc = Vec::new();
+        put_u64(&mut desc, 1, track_uuid(i));
+        put_str(&mut desc, 2, name);
+        put_u64(&mut desc, 5, PROCESS_UUID);
+        descriptor_packet(&mut out, &desc, false);
+    }
+
+    for (i, (_, events)) in tracks.iter().enumerate() {
+        let uuid = track_uuid(i);
+        // (timestamp, end_rank, tiebreak, event index, is_begin):
+        // ENDs (rank 0) before BEGINs (rank 1) at the same timestamp;
+        // BEGIN ties open the longest slice first (descending t1);
+        // END ties close the innermost slice first (descending t0).
+        let mut marks: Vec<(u64, u8, u64, usize, bool)> = Vec::with_capacity(events.len() * 2);
+        for (j, e) in events.iter().enumerate() {
+            let t1 = e.t1_us.max(e.t0_us);
+            marks.push((e.t0_us, 1, u64::MAX - t1, j, true));
+            marks.push((t1, 0, u64::MAX - e.t0_us, j, false));
+        }
+        marks.sort();
+        for (ts, _, _, j, is_begin) in marks {
+            let e = &events[j];
+            if is_begin {
+                event_packet(&mut out, ts, uuid, 1, Some(&e.name), &e.args);
+            } else {
+                event_packet(&mut out, ts, uuid, 2, None, &[]);
+            }
+        }
+    }
+    out
+}
+
+fn track_uuid(index: usize) -> u64 {
+    PROCESS_UUID + 1 + index as u64
+}
+
+// ---------------- scanner ----------------
+
+/// Counts from a minimal decode of a serialized trace — enough to
+/// assert a dump is non-empty and well-formed (`flashkat trace-stat`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceStat {
+    pub packets: u64,
+    pub track_descriptors: u64,
+    pub slice_begins: u64,
+    pub slice_ends: u64,
+    pub instants: u64,
+}
+
+struct Scanner<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Scanner<'a> {
+    fn varint(&mut self) -> Result<u64, String> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let byte = *self.b.get(self.i).ok_or("truncated varint")?;
+            self.i += 1;
+            if shift >= 64 {
+                return Err("varint overflow".into());
+            }
+            v |= u64::from(byte & 0x7f) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    /// Read a field key; `None` at a clean end of the buffer.
+    fn key(&mut self) -> Result<Option<(u64, u64)>, String> {
+        if self.i == self.b.len() {
+            return Ok(None);
+        }
+        let key = self.varint()?;
+        Ok(Some((key >> 3, key & 7)))
+    }
+
+    /// Length-delimited payload (wire type 2).
+    fn bytes(&mut self) -> Result<&'a [u8], String> {
+        let len = self.varint()? as usize;
+        let end = self.i.checked_add(len).filter(|&e| e <= self.b.len());
+        let end = end.ok_or("length-delimited field past end of buffer")?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn skip(&mut self, wire: u64) -> Result<(), String> {
+        match wire {
+            0 => {
+                self.varint()?;
+            }
+            1 => {
+                self.i = self
+                    .i
+                    .checked_add(8)
+                    .filter(|&e| e <= self.b.len())
+                    .ok_or("truncated fixed64")?;
+            }
+            2 => {
+                self.bytes()?;
+            }
+            5 => {
+                self.i = self
+                    .i
+                    .checked_add(4)
+                    .filter(|&e| e <= self.b.len())
+                    .ok_or("truncated fixed32")?;
+            }
+            w => return Err(format!("unsupported wire type {w}")),
+        }
+        Ok(())
+    }
+}
+
+/// Scan a serialized trace and count packets / descriptors / slices.
+pub fn stat(bytes: &[u8]) -> Result<TraceStat, String> {
+    let mut s = Scanner { b: bytes, i: 0 };
+    let mut st = TraceStat::default();
+    while let Some((field, wire)) = s.key()? {
+        if field != 1 || wire != 2 {
+            return Err(format!("unexpected top-level field {field} (wire {wire})"));
+        }
+        st.packets += 1;
+        let mut p = Scanner { b: s.bytes()?, i: 0 };
+        while let Some((pf, pw)) = p.key()? {
+            match (pf, pw) {
+                (60, 2) => {
+                    st.track_descriptors += 1;
+                    p.bytes()?;
+                }
+                (11, 2) => {
+                    let mut ev = Scanner { b: p.bytes()?, i: 0 };
+                    while let Some((ef, ew)) = ev.key()? {
+                        if (ef, ew) == (9, 0) {
+                            match ev.varint()? {
+                                1 => st.slice_begins += 1,
+                                2 => st.slice_ends += 1,
+                                3 => st.instants += 1,
+                                t => return Err(format!("unknown track event type {t}")),
+                            }
+                        } else {
+                            ev.skip(ew)?;
+                        }
+                    }
+                }
+                (_, w) => p.skip(w)?,
+            }
+        }
+    }
+    Ok(st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TrackId;
+
+    fn ev(name: &str, t0: u64, t1: u64) -> TraceEvent {
+        TraceEvent {
+            track: TrackId(0),
+            name: name.to_string(),
+            t0_us: t0,
+            t1_us: t1,
+            args: vec![("size", AnnValue::U64(3)), ("cause", AnnValue::Str("full".into()))],
+        }
+    }
+
+    #[test]
+    fn varint_round_trip() {
+        for &v in &[0u64, 1, 127, 128, 300, 16_383, 16_384, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut s = Scanner { b: &buf, i: 0 };
+            assert_eq!(s.varint().unwrap(), v);
+            assert_eq!(s.i, buf.len(), "trailing bytes for {v}");
+        }
+    }
+
+    #[test]
+    fn render_then_stat_counts_match() {
+        let tracks = vec![
+            ("shard 0".to_string(), vec![ev("batch a", 10, 20), ev("batch b", 30, 40)]),
+            ("shard 0 req".to_string(), vec![ev("req a", 10, 18)]),
+        ];
+        let bytes = render(&tracks);
+        let st = stat(&bytes).unwrap();
+        // 1 process + 2 track descriptors, 3 slices => 3 + 6 packets.
+        assert_eq!(st.track_descriptors, 3);
+        assert_eq!(st.slice_begins, 3);
+        assert_eq!(st.slice_ends, 3);
+        assert_eq!(st.instants, 0);
+        assert_eq!(st.packets, 9);
+    }
+
+    #[test]
+    fn stat_rejects_garbage_and_truncation() {
+        assert!(stat(&[0xff]).is_err(), "truncated varint");
+        let mut ok = render(&[("t".to_string(), vec![ev("e", 0, 1)])]);
+        assert!(stat(&ok).is_ok());
+        ok.pop();
+        assert!(stat(&ok).is_err(), "truncated packet");
+        assert!(stat(&[0x12, 0x00]).is_err(), "wrong top-level field");
+        assert_eq!(stat(&[]).unwrap(), TraceStat::default());
+    }
+
+    /// Same-timestamp marks must interleave as a proper slice stack:
+    /// END before BEGIN, outer slices open first and close last.
+    #[test]
+    fn render_orders_nested_slices_as_a_stack() {
+        let tracks = vec![(
+            "t".to_string(),
+            // Outer [10,20], inner [10,15], then adjacent [15,18]:
+            // stack order must be B(outer) B(inner) E(inner) B(adj) E(adj) E(outer).
+            vec![ev("adj", 15, 18), ev("outer", 10, 20), ev("inner", 10, 15)],
+        )];
+        let bytes = render(&tracks);
+        // Decode just the (timestamp, type) sequence of track events.
+        let mut seq = Vec::new();
+        let mut s = Scanner { b: &bytes, i: 0 };
+        while let Some((_, _)) = s.key().unwrap() {
+            let mut p = Scanner { b: s.bytes().unwrap(), i: 0 };
+            let (mut ts, mut ty) = (None, None);
+            while let Some((pf, pw)) = p.key().unwrap() {
+                match (pf, pw) {
+                    (8, 0) => ts = Some(p.varint().unwrap()),
+                    (11, 2) => {
+                        let mut ev = Scanner { b: p.bytes().unwrap(), i: 0 };
+                        while let Some((ef, ew)) = ev.key().unwrap() {
+                            if (ef, ew) == (9, 0) {
+                                ty = Some(ev.varint().unwrap());
+                            } else {
+                                ev.skip(ew).unwrap();
+                            }
+                        }
+                    }
+                    (_, w) => p.skip(w).unwrap(),
+                }
+            }
+            if let (Some(ts), Some(ty)) = (ts, ty) {
+                seq.push((ts, ty));
+            }
+        }
+        assert_eq!(
+            seq,
+            vec![
+                (10_000, 1), // outer begins first (longest at t=10)
+                (10_000, 1), // inner
+                (15_000, 2), // inner ends before adj begins
+                (15_000, 1),
+                (18_000, 2),
+                (20_000, 2), // outer closes last
+            ]
+        );
+    }
+}

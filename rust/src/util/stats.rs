@@ -110,6 +110,91 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] + (sorted[hi] - sorted[lo]) * frac
 }
 
+/// Log-bucketed histogram over `u64` microsecond samples.
+///
+/// The serving stack records a queue-wait and an exec sample per
+/// request; keeping raw vectors per model would make `ExecStats::merge`
+/// and the live `/metrics` path O(requests).  Instead samples land in
+/// logarithmic buckets with [`SUB_BITS`] sub-buckets per octave
+/// (8/octave ⇒ ≤ 12.5% relative error), so the whole histogram is a
+/// few hundred counters regardless of traffic, merge is element-wise
+/// addition, and percentiles are a cumulative walk.  Values below
+/// `2^SUB_BITS` are exact.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LogHist {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+/// Sub-buckets per octave (as a power of two): 3 ⇒ 8 sub-buckets.
+const SUB_BITS: u32 = 3;
+
+impl LogHist {
+    /// Bucket index of `v`: identity below `2^SUB_BITS`, then the top
+    /// `SUB_BITS` bits after the MSB select the sub-bucket.
+    fn bucket(v: u64) -> usize {
+        if v < (1 << SUB_BITS) {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros();
+        let sub = (v >> (msb - SUB_BITS)) & ((1 << SUB_BITS) - 1);
+        (((msb - SUB_BITS + 1) << SUB_BITS) | sub as u32) as usize
+    }
+
+    /// Lower bound of bucket `b` (the value `percentile` reports).
+    fn bucket_lo(b: usize) -> u64 {
+        if b < (1 << SUB_BITS) {
+            return b as u64;
+        }
+        let sub = (b as u64) & ((1 << SUB_BITS) - 1);
+        let shift = (b >> SUB_BITS) as u32 - 1;
+        ((1 << SUB_BITS) | sub) << shift
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let b = Self::bucket(v);
+        if self.counts.len() <= b {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn merge(&mut self, other: &LogHist) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// p-th percentile as the lower bound of the bucket holding the
+    /// nearest-rank sample; `NaN` when empty.  Within-bucket position is
+    /// unknown, so the answer under-reads by at most one sub-bucket
+    /// width (≤ 12.5%).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let rank = ((p / 100.0).clamp(0.0, 1.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_lo(b) as f64;
+            }
+        }
+        // Unreachable while `total` matches the counts; a defensive max.
+        Self::bucket_lo(self.counts.len().saturating_sub(1)) as f64
+    }
+}
+
 /// Human formatting for big counts: 11.3M, 2.4T, ...
 pub fn human_count(x: f64) -> String {
     let ax = x.abs();
@@ -210,6 +295,60 @@ mod tests {
             assert!(q >= prev, "p={p}: {q} < {prev}");
             prev = q;
         }
+    }
+
+    #[test]
+    fn loghist_exact_below_one_octave() {
+        let mut h = LogHist::default();
+        for v in 0..8 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        // Values below 2^SUB_BITS land in identity buckets, so the
+        // percentile walk recovers them exactly.
+        assert_eq!(h.percentile(100.0 / 8.0), 0.0);
+        assert_eq!(h.percentile(100.0), 7.0);
+    }
+
+    #[test]
+    fn loghist_bucket_bounds_round_trip() {
+        // bucket_lo(bucket(v)) is the largest bucket boundary <= v, and
+        // the relative error is bounded by one sub-bucket width.
+        for &v in &[0u64, 1, 7, 8, 9, 15, 16, 17, 100, 1023, 1024, 123_456, u64::MAX / 3] {
+            let lo = LogHist::bucket_lo(LogHist::bucket(v));
+            assert!(lo <= v, "lo {lo} > v {v}");
+            assert!(v - lo <= v / 8, "v {v} lo {lo}: error beyond one sub-bucket");
+        }
+        // Bucket index is monotone in the value.
+        let mut prev = 0;
+        for v in 0..10_000u64 {
+            let b = LogHist::bucket(v);
+            assert!(b >= prev, "bucket not monotone at {v}");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn loghist_percentile_and_merge() {
+        let mut a = LogHist::default();
+        let mut b = LogHist::default();
+        for v in 1..=100u64 {
+            if v <= 50 {
+                a.record(v)
+            } else {
+                b.record(v)
+            }
+        }
+        assert!(a.percentile(50.0) <= 25.0 + 4.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        let p50 = a.percentile(50.0);
+        assert!((44.0..=50.0).contains(&p50), "p50 {p50}");
+        let p99 = a.percentile(99.0);
+        assert!((88.0..=99.0).contains(&p99), "p99 {p99}");
+        // Monotone in p.
+        assert!(a.percentile(99.0) >= a.percentile(50.0));
+        assert!(LogHist::default().percentile(50.0).is_nan());
     }
 
     #[test]

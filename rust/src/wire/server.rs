@@ -33,7 +33,7 @@ use super::frame::{read_frame, write_frame, BadKind, Frame, FrameOutcome, MsgTyp
 use super::proto::{
     decode_ping, ErrCode, InferRequest, InferResponse, StatsResponse, WireError,
 };
-use crate::net::listener::ConnQueue;
+use crate::net::listener::{ConnQueue, HandlerTrace};
 use crate::serve::{ServeStats, Server, SubmitError};
 
 /// Frontend tuning knobs (mirrors `net::HttpOptions`).
@@ -118,9 +118,17 @@ impl WireServer {
             let (stop_t, queue, metrics) = (stop.clone(), queue.clone(), metrics.clone());
             let server = server.clone();
             let limits = opts.limits;
+            // One handler track per thread, same discipline as the HTTP
+            // frontend: a serial writer keeps its slices disjoint.
+            let trace = server.tracer().map(|t| HandlerTrace {
+                tracer: t.clone(),
+                track: t.register_track(&format!("wire-{i}")),
+            });
             let spawned = std::thread::Builder::new()
                 .name(format!("flashkat-wire-{i}"))
-                .spawn(move || handler_loop(&queue, &server, &metrics, &limits, &stop_t));
+                .spawn(move || {
+                    handler_loop(&queue, &server, &metrics, &limits, &stop_t, trace.as_ref())
+                });
             match spawned {
                 Ok(handle) => threads.push(handle),
                 Err(e) => {
@@ -171,7 +179,7 @@ impl WireServer {
         }
         // Answer any connection that was accepted but never claimed.
         while let Some(stream) = self.queue.pop(Duration::from_millis(1)) {
-            handle_connection(stream, &self.server, &self.metrics, &self.limits, &self.stop);
+            handle_connection(stream, &self.server, &self.metrics, &self.limits, &self.stop, None);
         }
         self.server.shutdown()
     }
@@ -216,6 +224,7 @@ fn handler_loop(
     metrics: &WireMetrics,
     limits: &WireLimits,
     stop: &AtomicBool,
+    trace: Option<&HandlerTrace>,
 ) {
     loop {
         let Some(stream) = queue.pop(Duration::from_millis(50)) else {
@@ -224,10 +233,10 @@ fn handler_loop(
             }
             continue;
         };
-        handle_connection(stream, server, metrics, limits, stop);
+        handle_connection(stream, server, metrics, limits, stop, trace);
         if stop.load(Ordering::SeqCst) {
             while let Some(stream) = queue.pop(Duration::from_millis(1)) {
-                handle_connection(stream, server, metrics, limits, stop);
+                handle_connection(stream, server, metrics, limits, stop, trace);
             }
             return;
         }
@@ -243,21 +252,37 @@ struct Reply {
     payload: Vec<u8>,
     keep: bool,
     code: Option<ErrCode>,
+    /// Span of the inference this reply answers, for the handler's
+    /// trace slice.  Never serialized: the wire frame format is frozen,
+    /// so timing travels via the trace + stats, not the protocol.
+    span_id: Option<u64>,
 }
 
 impl Reply {
     fn ok(msg_type: MsgType, payload: Vec<u8>) -> Reply {
-        Reply { msg_type, payload, keep: true, code: None }
+        Reply { msg_type, payload, keep: true, code: None, span_id: None }
     }
 
     /// Message-level error: answered, connection stays open.
     fn err(e: WireError) -> Reply {
-        Reply { msg_type: MsgType::Error, code: Some(e.code), payload: e.encode(), keep: true }
+        Reply {
+            msg_type: MsgType::Error,
+            code: Some(e.code),
+            payload: e.encode(),
+            keep: true,
+            span_id: None,
+        }
     }
 
     /// Protocol-confusion error: answered, then close.
     fn fatal(e: WireError) -> Reply {
-        Reply { msg_type: MsgType::Error, code: Some(e.code), payload: e.encode(), keep: false }
+        Reply {
+            msg_type: MsgType::Error,
+            code: Some(e.code),
+            payload: e.encode(),
+            keep: false,
+            span_id: None,
+        }
     }
 }
 
@@ -268,6 +293,7 @@ fn handle_connection(
     metrics: &WireMetrics,
     limits: &WireLimits,
     stop: &AtomicBool,
+    trace: Option<&HandlerTrace>,
 ) {
     stream.set_nodelay(true).ok();
     // Short read timeout: idle connections poll the shutdown flag at
@@ -303,7 +329,13 @@ fn handle_connection(
                 return;
             }
             FrameOutcome::Ok(frame) => {
+                let msg_type = frame.msg_type;
+                let t0 = trace.map(|tr| tr.tracer.now_us());
                 let reply = dispatch(frame, server, metrics);
+                if let (Some(tr), Some(t0)) = (trace, t0) {
+                    let status = reply.code.map(|c| c as u64).unwrap_or(0);
+                    tr.record(format!("wire {msg_type:?}"), t0, status, reply.span_id);
+                }
                 // During drain, finish this response but close the
                 // connection so the handler can exit.
                 let keep = reply.keep && !stop.load(Ordering::SeqCst);
@@ -379,14 +411,17 @@ fn infer(req: InferRequest, server: &Server) -> Reply {
             "x must contain only finite values",
         ));
     }
-    match server.try_submit(&req.model, req.x, req.rows) {
+    // Mint the span at the protocol edge (parity with the HTTP router)
+    // so queue wait is measured from frame decode, not shard admission.
+    let span = server.mint_span(&req.model, req.rows);
+    match server.try_submit_span(&req.model, req.x, req.rows, span) {
         Ok(resp) => {
             let out = InferResponse {
                 y: resp.y,
                 batch_size: resp.batch_size as u32,
                 cause: resp.cause,
             };
-            Reply::ok(MsgType::InferResponse, out.encode())
+            Reply { span_id: resp.span_id, ..Reply::ok(MsgType::InferResponse, out.encode()) }
         }
         Err(SubmitError::QueueFull { queue_depth }) => Reply::err(
             WireError::new(

@@ -534,3 +534,71 @@ fn prop_wire_infer_messages_round_trip_random_floats_bit_exactly() {
         }
     });
 }
+
+#[test]
+fn prop_traced_runs_span_every_request_uniquely_under_any_policy() {
+    // For ANY batching policy (size-triggered, deadline-coalesced, eager
+    // or not, single- or multi-shard): a traced run serves every request,
+    // the dump holds exactly one request slice per request, span ids are
+    // globally unique, and every slice's phase marks nest in admission
+    // order (admit <= queue wait + batch formation <= exec start; exec +
+    // reply partition the slice exactly).
+    use flashkat::serve::{loadgen, BatchPolicy, LoadConfig, ModelSpec};
+    use flashkat::trace::{AnnValue, TraceCollector};
+    use std::sync::Arc;
+
+    cases(6, |seed, rng| {
+        let cfg = LoadConfig {
+            requests: 40 + rng.below(40),
+            concurrency: 1 + rng.below(8),
+            seed: seed * 31 + 5,
+            models: vec![ModelSpec::new("a", 32, 4), ModelSpec::new("b", 64, 8)],
+            ..Default::default()
+        };
+        let policy = BatchPolicy {
+            max_batch: 1 + rng.below(16),
+            deadline_us: [0, 100, 5_000][rng.below(3)],
+            queue_depth: 4 + rng.below(60),
+            eager: rng.bernoulli(0.5),
+        };
+        let shards = 1 + rng.below(2);
+        let tracer = Arc::new(TraceCollector::new());
+        let res =
+            loadgen::run_sharded_traced(&cfg, policy, "prop", shards, tracer.clone()).unwrap();
+        assert_eq!(res.errors, 0, "seed {seed}");
+        assert_eq!(res.exec.requests, cfg.requests, "seed {seed}");
+
+        let ann = |ev: &flashkat::trace::TraceEvent, name: &str| -> u64 {
+            ev.args
+                .iter()
+                .find_map(|(k, v)| match v {
+                    AnnValue::U64(n) if *k == name => Some(*n),
+                    _ => None,
+                })
+                .unwrap_or_else(|| panic!("seed {seed}: {:?} lacks {name:?}", ev.name))
+        };
+        let mut ids = Vec::new();
+        for (track, events) in tracer.snapshot() {
+            if !track.ends_with(" req") {
+                continue;
+            }
+            for ev in &events {
+                ids.push(ann(ev, "span_id"));
+                let admit = ann(ev, "admit_us");
+                assert!(
+                    admit + ann(ev, "queue_wait_us") + ann(ev, "batch_form_us") <= ev.t0_us,
+                    "seed {seed}: phases overrun exec start: {ev:?}"
+                );
+                assert_eq!(
+                    ev.t0_us + ann(ev, "exec_us") + ann(ev, "reply_us"),
+                    ev.t1_us,
+                    "seed {seed}: exec + reply must partition the slice: {ev:?}"
+                );
+            }
+        }
+        assert_eq!(ids.len(), cfg.requests, "seed {seed}: one slice per request");
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), cfg.requests, "seed {seed}: span ids collided");
+    });
+}

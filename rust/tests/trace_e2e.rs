@@ -1,0 +1,205 @@
+//! Integration: per-request span tracing end to end (DESIGN.md §15).
+//!
+//! The tracing contract has three legs, all asserted here against live
+//! multithreaded servers: (1) observation is free of side effects —
+//! outputs with a collector attached stay bit-identical to the
+//! unbatched oracle; (2) accounting is exact — every request the server
+//! answered appears in the trace dump exactly once, keyed by the span
+//! id the response carried; (3) the timeline is coherent — admission,
+//! queue wait, batch formation, execution, and reply nest in order on
+//! one shared clock, and the rendered bytes survive the same
+//! packet-level scan `flashkat trace-stat` runs in CI.
+
+use flashkat::rational::{forward, Coeffs};
+use flashkat::serve::{loadgen, BatchPolicy, LoadConfig, ModelSpec, RationalExecutor, Server};
+use flashkat::trace::{stat, AnnValue, TraceCollector, TraceEvent};
+use flashkat::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Pull a named u64 annotation off a trace event.
+fn ann(ev: &TraceEvent, name: &str) -> u64 {
+    ev.args
+        .iter()
+        .find_map(|(k, v)| match (k, v) {
+            (k, AnnValue::U64(n)) if *k == name => Some(*n),
+            _ => None,
+        })
+        .unwrap_or_else(|| panic!("event {:?} lacks u64 annotation {name:?}", ev.name))
+}
+
+/// Every request-track event across all shards of a snapshot.
+fn req_events(snapshot: &[(String, Vec<TraceEvent>)]) -> Vec<&TraceEvent> {
+    snapshot
+        .iter()
+        .filter(|(name, _)| name.ends_with(" req"))
+        .flat_map(|(_, evs)| evs.iter())
+        .collect()
+}
+
+/// Tracing must observe, not perturb: a traced server's outputs stay
+/// bit-identical to the unbatched oracle under concurrent multi-client
+/// traffic, every response carries a span id, and the dump holds each
+/// responded span exactly once with a coherent phase timeline.
+#[test]
+fn traced_serving_is_bit_identical_and_spans_every_request() {
+    let d = 64usize;
+    let mut rng = Pcg64::new(31);
+    let coeffs = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+    let tracer = Arc::new(TraceCollector::new());
+    let server = Server::start_sharded_traced(
+        vec![Box::new(RationalExecutor::new("grkan", d, coeffs.clone()).unwrap())],
+        BatchPolicy { max_batch: 8, deadline_us: 300, queue_depth: 64, eager: true },
+        1,
+        Some(tracer.clone()),
+    )
+    .unwrap();
+
+    let (clients, reqs_each) = (6u64, 15u64);
+    let mut span_ids: Vec<u64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|client| {
+                let server = &server;
+                let coeffs = &coeffs;
+                s.spawn(move || {
+                    let mut ids = Vec::new();
+                    for i in 0..reqs_each {
+                        let mut rng = Pcg64::with_stream(31, client * 1000 + i);
+                        let rows = 1 + rng.below(3);
+                        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+                        let want = forward(&x, rows, d, coeffs);
+                        let resp = server.submit("grkan", x, rows as u32).expect("served");
+                        assert_eq!(resp.y, want, "client {client} req {i}: traced != oracle");
+                        ids.push(resp.span_id.expect("traced server sets span ids"));
+                        // The phase breakdown is internally consistent on
+                        // every response (u64s, so `>= 0` is structural;
+                        // what matters is that exec covers a real batch).
+                        let t = resp.timing;
+                        assert!(
+                            t.queue_wait_us < 60_000_000 && t.reply_us < 60_000_000,
+                            "client {client} req {i}: wild timing {t:?}"
+                        );
+                    }
+                    ids
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let n = (clients * reqs_each) as usize;
+    span_ids.sort_unstable();
+    span_ids.dedup();
+    assert_eq!(span_ids.len(), n, "span ids must be unique across clients");
+
+    let stats = server.shutdown().expect("stats");
+    assert_eq!(stats.total().requests, n);
+
+    // Exactly one request slice per responded span, and the slices
+    // reconstruct the phase timeline: admit precedes exec start
+    // (queue wait + batch formation fit in between), and exec + reply
+    // partition the slice exactly.
+    let snapshot = tracer.snapshot();
+    let reqs = req_events(&snapshot);
+    assert_eq!(reqs.len(), n, "one request slice per request");
+    let mut traced_ids: Vec<u64> = reqs.iter().map(|ev| ann(ev, "span_id")).collect();
+    traced_ids.sort_unstable();
+    assert_eq!(traced_ids, span_ids, "trace dump spans = responded spans");
+    for ev in &reqs {
+        let admit = ann(ev, "admit_us");
+        assert!(admit <= ev.t0_us, "admit {admit} after exec start {} ", ev.t0_us);
+        assert!(
+            admit + ann(ev, "queue_wait_us") + ann(ev, "batch_form_us") <= ev.t0_us,
+            "wait phases overrun exec start: {ev:?}"
+        );
+        assert_eq!(
+            ev.t0_us + ann(ev, "exec_us") + ann(ev, "reply_us"),
+            ev.t1_us,
+            "exec + reply must partition the request slice: {ev:?}"
+        );
+    }
+    // Batch slices rode along on the shard track, annotated with cause.
+    let batches: Vec<&TraceEvent> = snapshot
+        .iter()
+        .filter(|(name, _)| !name.ends_with(" req"))
+        .flat_map(|(_, evs)| evs.iter())
+        .collect();
+    assert!(!batches.is_empty(), "no batch slices recorded");
+    for ev in &batches {
+        assert!(ev.args.iter().any(|(k, _)| *k == "cause"), "batch slice lacks cause: {ev:?}");
+        assert!(ev.t0_us <= ev.t1_us);
+    }
+
+    // The rendered bytes pass the same scan `flashkat trace-stat` runs.
+    let st = stat(&tracer.render()).expect("rendered trace parses");
+    assert_eq!(st.slice_begins, st.slice_ends, "unbalanced slices");
+    assert_eq!(st.slice_begins, n + batches.len());
+    assert_eq!(tracer.dropped(), 0);
+}
+
+/// Shared harness for the two network transports: run the seeded
+/// workload traced, then assert one request slice per request and at
+/// least one populated handler-thread track with the given prefix.
+fn assert_transport_trace(
+    run: impl FnOnce(&LoadConfig, BatchPolicy, Arc<TraceCollector>) -> loadgen::BenchResult,
+    handler_prefix: &str,
+) {
+    let cfg = LoadConfig {
+        requests: 80,
+        concurrency: 8,
+        models: vec![ModelSpec::new("wide", 64, 8), ModelSpec::new("narrow", 32, 8)],
+        ..Default::default()
+    };
+    let policy = BatchPolicy { max_batch: 8, deadline_us: 200, queue_depth: 64, eager: true };
+    let tracer = Arc::new(TraceCollector::new());
+    let res = run(&cfg, policy, tracer.clone());
+    assert_eq!(res.errors, 0);
+    assert_eq!(res.exec.requests, 80);
+
+    let snapshot = tracer.snapshot();
+    let reqs = req_events(&snapshot);
+    assert_eq!(reqs.len(), 80, "one request slice per request over {handler_prefix}");
+    let mut ids: Vec<u64> = reqs.iter().map(|ev| ann(ev, "span_id")).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 80, "span ids unique over {handler_prefix}");
+
+    // Handler threads got their own tracks, and the infer traffic landed
+    // on them (each handler slice carries the span it answered).
+    let handler_events: Vec<&TraceEvent> = snapshot
+        .iter()
+        .filter(|(name, _)| name.starts_with(handler_prefix))
+        .flat_map(|(_, evs)| evs.iter())
+        .collect();
+    assert!(
+        !handler_events.is_empty(),
+        "no {handler_prefix}* handler slices recorded"
+    );
+    let spanned = handler_events
+        .iter()
+        .filter(|ev| ev.args.iter().any(|(k, _)| *k == "span_id"))
+        .count();
+    assert!(spanned >= 80, "handler slices carry spans: {spanned} < 80");
+
+    let st = stat(&tracer.render()).expect("rendered trace parses");
+    assert_eq!(st.slice_begins, st.slice_ends);
+    assert!(st.track_descriptors > 3, "shard + request + handler tracks expected");
+}
+
+#[test]
+fn traced_http_leg_records_request_and_handler_slices() {
+    assert_transport_trace(
+        |cfg, policy, tracer| {
+            loadgen::run_http_traced(cfg, policy, "http-traced", 2, Some(tracer)).unwrap()
+        },
+        "http-",
+    );
+}
+
+#[test]
+fn traced_wire_leg_records_request_and_handler_slices() {
+    assert_transport_trace(
+        |cfg, policy, tracer| {
+            loadgen::run_wire_traced(cfg, policy, "wire-traced", 2, Some(tracer)).unwrap()
+        },
+        "wire-",
+    );
+}
