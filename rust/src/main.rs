@@ -8,11 +8,14 @@
 //!   profile [--kernel fwd|kat|flash] [--loops N] [--gpu 4060ti|h200] [--batch N]
 //!   serve-bench [--requests N] [--concurrency C] [--max-batch B] [--deadline-us D]
 //!          [--model NAME | --models name:d[:groups],... | --pipeline TAG]
-//!          [--autotune --slo-p99-us N] [--http --shards N]
+//!          [--autotune --slo-p99-us N] [--http --shards N] [--dup-frac F]
+//!          [--cache-bytes N]
 //!          -- dynamic micro-batching inference bench over named models or a
 //!             whole AOT pipeline (writes BENCH_serve.json; --http also runs
-//!             the workload over loopback HTTP and writes BENCH_http.json)
-//!   serve-http [--addr A] [--port P|0] [--shards N]
+//!             the workload over loopback HTTP and writes BENCH_http.json;
+//!             --cache-bytes runs cached-vs-uncached legs over all three
+//!             transports and writes BENCH_cache.json)
+//!   serve-http [--addr A] [--port P|0] [--shards N] [--cache-bytes N]
 //!          [--models name:d[:groups],... | --pipeline TAG]
 //!          -- HTTP/JSON serving frontend; runs until SIGTERM, then drains
 //!   trace-stat PATH   -- sanity-scan a Perfetto trace written by --trace-out
@@ -286,11 +289,22 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     } else {
         Arrival::Closed
     };
+    // --cache-bytes N switches serve-bench into the cached-vs-uncached
+    // comparison mode; a cache bench over a workload with no repeats
+    // can only miss, so the duplicate knob defaults to a repeat-heavy
+    // mix there (and to the historical 0.0 everywhere else).
+    let cache_mode = args.flag("cache-bytes").is_some();
+    let cache_bytes = args.flag_usize("cache-bytes", 0)?;
+    let dup_frac = args.flag_f64("dup-frac", if cache_mode { 0.5 } else { 0.0 })?;
+    if !(0.0..=1.0).contains(&dup_frac) {
+        bail!("--dup-frac {dup_frac} out of range (want a fraction in [0, 1])");
+    }
     let mut cfg = LoadConfig {
         requests,
         concurrency,
         seed: args.flag_u64("seed", 7)?,
         arrival,
+        dup_frac,
         ..Default::default()
     };
     let policy = BatchPolicy {
@@ -316,6 +330,79 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         }
     };
 
+    // --cache-bytes: the content-addressed forward cache comparison.
+    // Six legs — in-process, loopback HTTP, and flashwire, each run
+    // once uncached and once with the given cache budget over the same
+    // duplicate-heavy seeded workload — plus a serial bit-identity
+    // replay of every cached transport against the unbatched oracle.
+    // Writes BENCH_cache.json (DESIGN.md §16).
+    if cache_mode {
+        if cache_bytes == 0 {
+            bail!("--cache-bytes 0 disables the cache; pass a positive byte budget to bench it");
+        }
+        if args.flag_bool("http") || args.flag_bool("wire") {
+            bail!("--cache-bytes already runs in-process, HTTP, and wire legs; drop --http/--wire");
+        }
+        if autotune {
+            bail!("--cache-bytes and --autotune are mutually exclusive (autotune uncached first)");
+        }
+        if args.flag("pipeline").is_some() {
+            bail!("--cache-bytes benches the rational registry; --pipeline has no cached path yet");
+        }
+        if trace_out.is_some() {
+            bail!("--trace-out and --cache-bytes are mutually exclusive (trace one leg instead)");
+        }
+        cfg.models = serve_model_specs(args)?;
+        let shards = args.flag_usize("shards", 2)?.clamp(1, cfg.models.len());
+        // Uncached legs pass budget 0 through the same entry points the
+        // cached legs use, so the only difference between the paired
+        // runs is the cache itself.
+        let (in_u, _) =
+            loadgen::run_sharded_cached(&cfg, policy, "in-process uncached", shards, 0)?;
+        let (in_c, in_stats) =
+            loadgen::run_sharded_cached(&cfg, policy, "in-process cached", shards, cache_bytes)?;
+        let (http_u, _) =
+            loadgen::run_http_cached(&cfg, policy, "loopback-http uncached", shards, 0)?;
+        let (http_c, http_stats) =
+            loadgen::run_http_cached(&cfg, policy, "loopback-http cached", shards, cache_bytes)?;
+        let (wire_u, _) =
+            loadgen::run_wire_cached(&cfg, policy, "loopback-wire uncached", shards, 0)?;
+        let (wire_c, wire_stats) =
+            loadgen::run_wire_cached(&cfg, policy, "loopback-wire cached", shards, cache_bytes)?;
+        let identity = loadgen::verify_cached_bit_identity(&cfg, policy, shards, cache_bytes)?;
+        let leg = |transport: &str, uncached, cached, stats| loadgen::CacheLeg {
+            transport: transport.to_string(),
+            uncached,
+            cached,
+            stats,
+        };
+        let legs = vec![
+            leg("inproc", in_u, in_c, in_stats),
+            leg("http", http_u, http_c, http_stats),
+            leg("wire", wire_u, wire_c, wire_stats),
+        ];
+        print!("{}", report::serve_cache(&legs, &identity, shards, cache_bytes));
+        // One grep-able verdict line for CI: the hit rate the in-process
+        // cached leg measured, and the transport-wide identity gate.
+        println!(
+            "cache gate: hit rate {:.1}% (inproc), bit identity {}",
+            100.0 * legs[0].hit_rate(),
+            if identity.all_ok() { "PASS" } else { "FAIL" }
+        );
+        let out = args.flag_str("out", "BENCH_cache.json");
+        let json = loadgen::cache_bench_json(&cfg, shards, cache_bytes, &legs, &identity);
+        std::fs::write(out, json.to_string()).with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+        if !identity.all_ok() {
+            bail!(
+                "cached replay diverged from the unbatched oracle (inproc {}, http {}, wire {})",
+                identity.inproc,
+                identity.http,
+                identity.wire
+            );
+        }
+        return Ok(());
+    }
     // --wire: the same workload in-process, over loopback HTTP/JSON,
     // and over the flashwire binary protocol — all three legs at the
     // same shard count — so the transport comparison in BENCH_wire.json
@@ -443,7 +530,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     // benches and the serving frontends; the in-process bench paths are
     // single-server).
     if args.flag("shards").is_some() {
-        bail!("--shards only applies with --http/--wire (or the serve-http/serve-wire commands)");
+        bail!(
+            "--shards only applies with --http/--wire/--cache-bytes (or the serve-http/serve-wire commands)"
+        );
     }
     // Autotune sweep grid: the defaults plus any explicitly requested
     // policy point, so --max-batch / --deadline-us are folded into the
@@ -644,11 +733,16 @@ fn cmd_serve_http(args: &Args) -> Result<()> {
     let tracer = args
         .flag("trace-out")
         .map(|_| std::sync::Arc::new(flashkat::trace::TraceCollector::new()));
-    let server = std::sync::Arc::new(Server::start_sharded_traced(
+    // --cache-bytes N attaches the content-addressed forward cache
+    // (DESIGN.md §16); 0 (the default) leaves it off and the submit
+    // path byte-identical to previous releases.
+    let cache_bytes = args.flag_usize("cache-bytes", 0)?;
+    let server = std::sync::Arc::new(Server::start_configured(
         executors,
         policy,
         shards,
         tracer.clone(),
+        cache_bytes,
     )?);
     let shards = server.shards(); // clamped to the registry size
     let opts = HttpOptions {
@@ -696,11 +790,14 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
     let tracer = args
         .flag("trace-out")
         .map(|_| std::sync::Arc::new(flashkat::trace::TraceCollector::new()));
-    let server = std::sync::Arc::new(Server::start_sharded_traced(
+    // Same cache semantics as serve-http: 0 (default) = off.
+    let cache_bytes = args.flag_usize("cache-bytes", 0)?;
+    let server = std::sync::Arc::new(Server::start_configured(
         executors,
         policy,
         shards,
         tracer.clone(),
+        cache_bytes,
     )?);
     let shards = server.shards(); // clamped to the registry size
     let opts = WireOptions {
@@ -868,18 +965,25 @@ fn main() -> Result<()> {
                  \x20             [--http [--shards N]]  (also run over loopback HTTP; writes BENCH_http.json)\n\
                  \x20             [--wire [--shards N]]  (in-process vs HTTP/JSON vs flashwire binary;\n\
                  \x20              writes BENCH_wire.json with bytes-per-request)\n\
+                 \x20             [--cache-bytes N [--shards N]]  (content-addressed forward cache:\n\
+                 \x20              cached-vs-uncached legs over all three transports on a duplicate-\n\
+                 \x20              heavy workload + bit-identity gate; writes BENCH_cache.json)\n\
+                 \x20             [--dup-frac F]  (fraction of requests replaying a prior request's\n\
+                 \x20              exact bytes; defaults 0.5 with --cache-bytes, else 0)\n\
                  \x20             [--seed N] [--out PATH] [--trace-out PATH]\n\
                  \x20             (micro-batching inference bench; writes BENCH_serve.json;\n\
                  \x20              --trace-out also runs a traced leg per transport and writes\n\
                  \x20              Perfetto traces next to the bench JSON)\n\
                  \x20 serve-http [--addr A] [--port P|0] [--shards N] [--conn-threads N]\n\
                  \x20             [--models name:d[:groups],... | --pipeline TAG] [--max-batch B]\n\
+                 \x20             [--cache-bytes N]  (content-addressed result cache; 0 = off)\n\
                  \x20             [--deadline-us D] [--queue-depth N] [--max-body-bytes N] [--seed N]\n\
                  \x20             [--trace-out PATH]  (write a Perfetto trace on drain)\n\
                  \x20             (HTTP/JSON frontend; POST /v1/models/<name>/infer, GET /v1/models\n\
                  \x20              /healthz /metrics; runs until SIGTERM, then drains)\n\
                  \x20 serve-wire [--addr A] [--port P|0] [--shards N] [--conn-threads N]\n\
                  \x20             [--models name:d[:groups],... | --pipeline TAG] [--max-batch B]\n\
+                 \x20             [--cache-bytes N]  (content-addressed result cache; 0 = off)\n\
                  \x20             [--deadline-us D] [--queue-depth N] [--max-payload-bytes N] [--seed N]\n\
                  \x20             [--trace-out PATH]  (write a Perfetto trace on drain)\n\
                  \x20             (flashwire length-prefixed binary frontend, DESIGN.md \u{a7}13;\n\

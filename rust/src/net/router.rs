@@ -294,6 +294,41 @@ fn render_metrics(server: &Server, metrics: &HttpMetrics) -> String {
     for (s, peak) in stats.shard_peaks.iter().enumerate() {
         out.push_str(&format!("flashkat_serve_peak_queued{{shard=\"{s}\"}} {peak}\n"));
     }
+    // Content-addressed result cache counters — present only when the
+    // server was started with a cache (`--cache-bytes > 0`), so an
+    // uncached scrape is byte-identical to before the cache existed.
+    if let Some(cs) = server.cache_stats() {
+        for (metric, help) in [
+            ("flashkat_cache_hits_total", "verified cache hits per model"),
+            ("flashkat_cache_misses_total", "cache misses per model"),
+            ("flashkat_cache_evictions_total", "cache evictions per model"),
+            (
+                "flashkat_cache_coalesced_total",
+                "requests coalesced onto an identical in-flight request per model",
+            ),
+        ] {
+            out.push_str(&format!("# HELP {metric} {help}\n# TYPE {metric} counter\n"));
+            for (name, c) in &cs.per_model {
+                let v = match metric {
+                    "flashkat_cache_hits_total" => c.hits,
+                    "flashkat_cache_misses_total" => c.misses,
+                    "flashkat_cache_evictions_total" => c.evictions,
+                    _ => c.coalesced,
+                };
+                out.push_str(&format!("{metric}{{model=\"{}\"}} {v}\n", prom_escape(name)));
+            }
+        }
+        out.push_str(&format!(
+            "# TYPE flashkat_cache_bytes gauge\nflashkat_cache_bytes {}\n",
+            cs.bytes
+        ));
+    }
+    // Spans the trace collector discarded at ring capacity; nonzero
+    // means any exported trace is incomplete.  0 on an untraced server.
+    out.push_str(&format!(
+        "# TYPE flashkat_trace_dropped_total counter\nflashkat_trace_dropped_total {}\n",
+        server.tracer().map_or(0, |t| t.dropped())
+    ));
     out
 }
 
@@ -465,6 +500,41 @@ mod tests {
         assert!(text.contains("flashkat_http_requests_total{code=\"200\"} 1"), "{text}");
         assert!(text.contains("flashkat_serve_requests_total{model=\"grkan\"} 1"), "{text}");
         assert!(text.contains("flashkat_serve_peak_queued{shard=\"0\"}"), "{text}");
+    }
+
+    #[test]
+    fn metrics_export_cache_and_trace_dropped_counters() {
+        // Uncached, untraced server: no cache lines at all, and the
+        // trace-dropped counter reads 0.
+        let (server, _) = test_server();
+        let text = String::from_utf8(get(&server, "/metrics", &HttpMetrics::new()).body).unwrap();
+        assert!(!text.contains("flashkat_cache_"), "{text}");
+        assert!(text.contains("flashkat_trace_dropped_total 0"), "{text}");
+
+        // Cached server: the same body twice — the second serve is a
+        // verified hit, and the scrape shows the split.
+        let mut rng = Pcg64::new(75);
+        let coeffs = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+        let server = Server::start_configured(
+            vec![Box::new(RationalExecutor::new("grkan", D, coeffs).unwrap())],
+            BatchPolicy::default(),
+            1,
+            None,
+            1 << 20,
+        )
+        .unwrap();
+        let body = format!("{{\"x\":[{}],\"rows\":1}}", vec!["0"; D].join(","));
+        assert_eq!(post(&server, "/v1/models/grkan/infer", &body).status, 200);
+        let resp = post(&server, "/v1/models/grkan/infer", &body);
+        assert_eq!(resp.status, 200);
+        let parsed = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(parsed.get("cause").unwrap().as_str(), Some("cache"));
+        let text = String::from_utf8(get(&server, "/metrics", &HttpMetrics::new()).body).unwrap();
+        assert!(text.contains("flashkat_cache_hits_total{model=\"grkan\"} 1"), "{text}");
+        assert!(text.contains("flashkat_cache_misses_total{model=\"grkan\"} 1"), "{text}");
+        assert!(text.contains("flashkat_cache_coalesced_total{model=\"grkan\"} 0"), "{text}");
+        assert!(text.contains("flashkat_cache_evictions_total{model=\"grkan\"} 0"), "{text}");
+        assert!(text.contains("flashkat_cache_bytes "), "{text}");
     }
 
     #[test]

@@ -288,6 +288,17 @@ fn ratio_cell(v: f64) -> String {
     }
 }
 
+/// Percentage cell with the same dash guard as [`ms_cell`]: a cache-off
+/// leg has no counter snapshot and a zero-request run divides by zero —
+/// both must render `-`, never `NaN`.
+fn pct_cell(v: f64) -> String {
+    if v.is_finite() {
+        format!("{:.1}%", v * 100.0)
+    } else {
+        "-".to_string()
+    }
+}
+
 /// Column header matching [`serve_row`], shared by the serve-family
 /// reports (first column label varies by table).
 fn serve_header(first: &str) -> String {
@@ -451,6 +462,48 @@ pub fn serve_wire(
     out
 }
 
+/// Cached-vs-uncached report per transport over the same
+/// duplicate-heavy seeded workload — the `BENCH_cache.json` acceptance
+/// view (`serve-bench --cache-bytes`).  Hit-rate and speedup cells are
+/// dash-guarded like every latency cell: a cache-off leg (no counter
+/// snapshot) or a zero-request run renders `-`, never `NaN`.
+pub fn serve_cache(
+    legs: &[crate::serve::loadgen::CacheLeg],
+    identity: &crate::serve::loadgen::CacheIdentity,
+    shards: usize,
+    cache_bytes: usize,
+) -> String {
+    let mut out = hdr("Serve: content-addressed forward cache, cached vs uncached");
+    out.push_str(&format!("executor shards: {shards}, cache capacity: {cache_bytes} B\n"));
+    out.push_str(
+        "transport    hit-rate  speedup   p50-delta   p99-delta     hits   misses  coalesced  evictions\n",
+    );
+    for l in legs {
+        let count = |v: Option<u64>| v.map_or("-".to_string(), |n| n.to_string());
+        let c = l.stats.as_ref().map(|s| &s.total);
+        out.push_str(&format!(
+            "{:<12} {:>8} {:>8} {:>11} {:>11} {:>8} {:>8} {:>10} {:>10}\n",
+            l.transport,
+            pct_cell(l.hit_rate()),
+            ratio_cell(l.speedup()),
+            delta_ms(l.cached.p50_ms - l.uncached.p50_ms),
+            delta_ms(l.cached.p99_ms - l.uncached.p99_ms),
+            count(c.map(|c| c.hits)),
+            count(c.map(|c| c.misses)),
+            count(c.map(|c| c.coalesced)),
+            count(c.map(|c| c.evictions)),
+        ));
+    }
+    let verdict = |ok: bool| if ok { "ok" } else { "FAIL" };
+    out.push_str(&format!(
+        "bit identity vs unbatched oracle: inproc {}, http {}, wire {}\n",
+        verdict(identity.inproc),
+        verdict(identity.http),
+        verdict(identity.wire),
+    ));
+    out
+}
+
 /// Autotune report: every swept `(max_batch, deadline_us)` grid point
 /// with its throughput and p99, and the selected policy vs the SLO.
 pub fn serve_autotune(res: &crate::serve::AutotuneResult) -> String {
@@ -556,7 +609,7 @@ mod tests {
             rows: 20,
             failed: 0,
             batch_hist: vec![0, 0, 5],
-            causes: [5, 0, 0, 0],
+            causes: [5, 0, 0, 0, 0],
             busy_secs: 0.05,
             ..Default::default()
         };
@@ -703,6 +756,74 @@ mod tests {
         assert!(t.contains("1.20x"), "{t}"); // 3600/3000
         assert!(t.contains("json 5000+5200 B, flashwire 1200+1100 B (0.23x of json)"), "{t}");
         assert!(t.contains("shed retries"), "{t}");
+    }
+
+    #[test]
+    fn serve_cache_report_dash_guards_cache_off_legs() {
+        use crate::serve::loadgen::{CacheIdentity, CacheLeg};
+        use crate::serve::{BenchResult, CacheCounters, CacheStats, ExecStats};
+        let mk = |label: &str, rps: f64, p50: f64| BenchResult {
+            label: label.into(),
+            requests: 12,
+            concurrency: 2,
+            max_batch: 8,
+            deadline_us: 200,
+            wall_secs: 0.1,
+            throughput_rps: rps,
+            rows_per_sec: rps * 2.0,
+            mean_ms: p50,
+            p50_ms: p50,
+            p95_ms: p50 * 2.0,
+            p99_ms: p50 * 3.0,
+            max_ms: p50 * 4.0,
+            errors: 0,
+            retries: 0,
+            exec: ExecStats::default(),
+            peak_queued: 1,
+            per_model: vec![],
+        };
+        let stats = CacheStats {
+            capacity_bytes: 1 << 20,
+            bytes: 2048,
+            entries: 3,
+            in_flight: 0,
+            total: CacheCounters {
+                hits: 6,
+                misses: 4,
+                inserts: 4,
+                evictions: 1,
+                coalesced: 2,
+                collisions: 0,
+            },
+            per_model: vec![],
+        };
+        let on = CacheLeg {
+            transport: "inproc".to_string(),
+            uncached: mk("uncached", 1000.0, 1.0),
+            cached: mk("cached", 2000.0, 0.5),
+            stats: Some(stats),
+        };
+        // Cache-off leg that also served nothing: hit rate, speedup and
+        // both deltas are all undefined — every cell must dash-guard.
+        let mut dead = mk("cached", 0.0, f64::NAN);
+        dead.mean_ms = f64::NAN;
+        let off = CacheLeg {
+            transport: "http".to_string(),
+            uncached: mk("uncached", 1000.0, 1.0),
+            cached: dead,
+            stats: None,
+        };
+        let identity = CacheIdentity { inproc: true, http: true, wire: false };
+        let t = serve_cache(&[on, off], &identity, 2, 1 << 20);
+        assert!(t.contains("66.7%"), "{t}"); // (6 hits + 2 coalesced) / 12
+        assert!(t.contains("2.00x"), "{t}");
+        assert!(t.contains("-0.500ms"), "{t}");
+        assert!(!t.contains("NaN"), "{t}");
+        let row = t.lines().find(|l| l.starts_with("http")).unwrap();
+        for cell in row.split_whitespace().skip(1) {
+            assert_eq!(cell, "-", "cache-off leg must be all dashes: {row:?}");
+        }
+        assert!(t.contains("inproc ok, http ok, wire FAIL"), "{t}");
     }
 
     #[test]

@@ -75,11 +75,21 @@ pub enum FlushCause {
     Idle,
     /// Shutdown drain.
     Drain,
+    /// Served from the content-addressed result cache ([`super::cache`])
+    /// — no batch was formed at all.  Never produced by the batcher
+    /// itself; carried by [`super::Response`] so clients and the wire
+    /// protocol can distinguish cached replies.
+    Cache,
 }
 
 impl FlushCause {
-    pub const ALL: [FlushCause; 4] =
-        [FlushCause::Full, FlushCause::Deadline, FlushCause::Idle, FlushCause::Drain];
+    pub const ALL: [FlushCause; 5] = [
+        FlushCause::Full,
+        FlushCause::Deadline,
+        FlushCause::Idle,
+        FlushCause::Drain,
+        FlushCause::Cache,
+    ];
 
     pub fn index(self) -> usize {
         match self {
@@ -87,6 +97,7 @@ impl FlushCause {
             FlushCause::Deadline => 1,
             FlushCause::Idle => 2,
             FlushCause::Drain => 3,
+            FlushCause::Cache => 4,
         }
     }
 
@@ -96,6 +107,7 @@ impl FlushCause {
             FlushCause::Deadline => "deadline",
             FlushCause::Idle => "idle",
             FlushCause::Drain => "drain",
+            FlushCause::Cache => "cache",
         }
     }
 }

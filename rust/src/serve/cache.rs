@@ -1,0 +1,718 @@
+//! Content-addressed forward result cache with in-flight request
+//! coalescing (singleflight).  DESIGN.md §16.
+//!
+//! Every serving path in this repo is proven bit-identical to the
+//! unbatched GR-KAN reference (`tests/serve_e2e.rs`), so a forward's
+//! output is a pure function of `(model, row bytes)`.  That determinism
+//! has so far been a correctness story; here it becomes a throughput
+//! one — the fastest forward is the one never executed.  Three layers,
+//! all zero-dependency:
+//!
+//! - **Key derivation** — FNV-1a 64-bit over the model's registry index
+//!   and every input value's `f32::to_bits()` little-endian bytes.  The
+//!   full key (model + exact bit pattern) is stored alongside each
+//!   entry and re-verified on every probe, so a 64-bit hash collision
+//!   can never serve the wrong rows — it only costs the colliding key
+//!   its cacheability ([`Lookup::Solo`]).
+//! - **Segmented LRU** — per-shard probation/protected lists over a
+//!   slab with intrusive links.  New entries enter probation; a hit
+//!   promotes to protected (capped at ~80% of the shard's byte budget,
+//!   demoting the protected tail back to probation); eviction drains
+//!   the probation tail before touching protected.  Scan-resistant,
+//!   bounded by bytes, no background threads.
+//! - **Singleflight** — identical requests already being computed are
+//!   coalesced: the first becomes the *leader* ([`Lookup::Lead`],
+//!   executes and publishes), the rest *join* ([`Lookup::Join`]) and
+//!   park on a channel for the leader's bit-exact rows.  Leader failure
+//!   fans the typed [`SubmitError`] to every follower, and an abandoned
+//!   leader's [`FlightToken`] drop-guard does the same — followers can
+//!   never wedge on a leader that went away.
+//!
+//! The cache is attached to [`crate::serve::Server`] behind
+//! `cache_bytes` (0 = off, the default): with it off, the submit path
+//! is byte-for-byte the pre-cache code.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::serve::batcher::FlushCause;
+use crate::serve::server::SubmitError;
+use crate::trace::Timing;
+
+/// Sentinel slot index for intrusive list links.
+const NIL: usize = usize::MAX;
+
+/// Fixed per-entry bookkeeping charge (slab slot, map entry, vec
+/// headers) added to the key + payload bytes when billing the budget.
+const ENTRY_OVERHEAD: usize = 96;
+
+/// Protected segment budget as a fraction of the shard capacity.
+const PROTECTED_NUM: usize = 4;
+const PROTECTED_DEN: usize = 5;
+
+/// Budgets at or above this get the full shard fan-out; tiny budgets
+/// (eviction tests, pathological configs) stay single-sharded so the
+/// per-shard capacity is never silently rounded toward zero.
+const SHARD_THRESHOLD_BYTES: usize = 1 << 20;
+const N_SHARDS: usize = 8;
+
+/// FNV-1a 64-bit over `(model index, row bytes)`.  Zero-dependency,
+/// deterministic across runs, and fast enough that hashing is noise
+/// next to even a single-row forward.
+pub fn content_hash(model: u32, x: &[f32]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for b in model.to_le_bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+    }
+    for v in x {
+        for b in v.to_bits().to_le_bytes() {
+            h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+fn bits_eq(bits: &[u32], x: &[f32]) -> bool {
+    bits.len() == x.len() && bits.iter().zip(x).all(|(&b, v)| b == v.to_bits())
+}
+
+/// What a singleflight leader publishes: everything a follower needs to
+/// assemble its own [`crate::serve::Response`] (the follower keeps its
+/// own span id; rows, batch accounting and timing come from the leader).
+#[derive(Clone, Debug)]
+pub struct FlightValue {
+    pub y: Vec<f32>,
+    pub batch_size: usize,
+    pub cause: FlushCause,
+    pub timing: Timing,
+}
+
+/// Result a parked follower receives from its leader.
+pub type FlightResult = Result<FlightValue, SubmitError>;
+
+/// Outcome of a cache probe.
+pub enum Lookup {
+    /// Verified cache hit: the stored rows, bit-exact.
+    Hit(Vec<f32>),
+    /// An identical request is in flight; park on the receiver for the
+    /// leader's result (value or typed error).
+    Join(mpsc::Receiver<FlightResult>),
+    /// This request leads a new flight: execute, then
+    /// [`FlightToken::publish`] the outcome (dropping the token
+    /// unpublished fans a typed failure instead — never a wedge).
+    Lead(FlightToken),
+    /// A 64-bit hash collision with a different key (cached or in
+    /// flight): execute uncached.  Verification makes collisions a
+    /// throughput event, never a correctness one.
+    Solo,
+}
+
+/// Per-model (and, summed, global) cache counters.
+///
+/// Every request that enters the cache path is exactly one of
+/// `hits` / `misses` / `coalesced`; `misses` (leaders + solos) is also
+/// exactly the number of executor submissions the cache let through.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    pub coalesced: u64,
+    pub collisions: u64,
+}
+
+impl CacheCounters {
+    pub fn merge(&mut self, o: &CacheCounters) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.inserts += o.inserts;
+        self.evictions += o.evictions;
+        self.coalesced += o.coalesced;
+        self.collisions += o.collisions;
+    }
+
+    /// Requests that went through the cache path.
+    pub fn requests(&self) -> u64 {
+        self.hits + self.misses + self.coalesced
+    }
+
+    /// Fraction of cache-path requests answered without their own
+    /// executor submission (hits + coalesced followers).  `NaN` when no
+    /// requests were seen — render with a dash guard, never raw.
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.requests();
+        if n == 0 {
+            f64::NAN
+        } else {
+            (self.hits + self.coalesced) as f64 / n as f64
+        }
+    }
+}
+
+/// Snapshot of the whole cache: occupancy plus per-model counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub capacity_bytes: usize,
+    pub bytes: usize,
+    pub entries: usize,
+    /// Flights currently open (leaders executing).
+    pub in_flight: usize,
+    pub total: CacheCounters,
+    pub per_model: Vec<(String, CacheCounters)>,
+}
+
+impl CacheStats {
+    pub fn model(&self, name: &str) -> Option<&CacheCounters> {
+        self.per_model.iter().find(|(n, _)| n == name).map(|(_, c)| c)
+    }
+}
+
+struct Entry {
+    hash: u64,
+    model: u32,
+    bits: Vec<u32>,
+    y: Vec<f32>,
+    bytes: usize,
+    protected: bool,
+    prev: usize,
+    next: usize,
+}
+
+/// Intrusive doubly-linked list endpoints (slot indices, MRU at head).
+struct List {
+    head: usize,
+    tail: usize,
+}
+
+impl List {
+    fn new() -> Self {
+        List { head: NIL, tail: NIL }
+    }
+}
+
+struct Flight {
+    model: u32,
+    bits: Vec<u32>,
+    waiters: Vec<mpsc::Sender<FlightResult>>,
+}
+
+struct ShardState {
+    /// `content_hash -> slab slot`; full key verified on every probe.
+    map: HashMap<u64, usize>,
+    slab: Vec<Option<Entry>>,
+    free: Vec<usize>,
+    probation: List,
+    protected: List,
+    bytes: usize,
+    protected_bytes: usize,
+    flights: HashMap<u64, Flight>,
+    counters: Vec<CacheCounters>,
+}
+
+impl ShardState {
+    fn new(n_models: usize) -> Self {
+        ShardState {
+            map: HashMap::new(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            probation: List::new(),
+            protected: List::new(),
+            bytes: 0,
+            protected_bytes: 0,
+            flights: HashMap::new(),
+            counters: vec![CacheCounters::default(); n_models],
+        }
+    }
+
+    fn unlink(&mut self, slot: usize) {
+        let (prev, next, prot) = {
+            let e = self.slab[slot].as_ref().expect("linked slot");
+            (e.prev, e.next, e.protected)
+        };
+        if prev == NIL {
+            if prot {
+                self.protected.head = next;
+            } else {
+                self.probation.head = next;
+            }
+        } else {
+            self.slab[prev].as_mut().expect("prev slot").next = next;
+        }
+        if next == NIL {
+            if prot {
+                self.protected.tail = prev;
+            } else {
+                self.probation.tail = prev;
+            }
+        } else {
+            self.slab[next].as_mut().expect("next slot").prev = prev;
+        }
+        let e = self.slab[slot].as_mut().expect("linked slot");
+        e.prev = NIL;
+        e.next = NIL;
+    }
+
+    fn push_front(&mut self, slot: usize, prot: bool) {
+        let head = if prot { self.protected.head } else { self.probation.head };
+        {
+            let e = self.slab[slot].as_mut().expect("pushed slot");
+            e.prev = NIL;
+            e.next = head;
+            e.protected = prot;
+        }
+        if head != NIL {
+            self.slab[head].as_mut().expect("head slot").prev = slot;
+        }
+        let list = if prot { &mut self.protected } else { &mut self.probation };
+        list.head = slot;
+        if list.tail == NIL {
+            list.tail = slot;
+        }
+    }
+
+    fn pop_tail(&mut self, prot: bool) -> Option<usize> {
+        let tail = if prot { self.protected.tail } else { self.probation.tail };
+        if tail == NIL {
+            return None;
+        }
+        self.unlink(tail);
+        Some(tail)
+    }
+
+    /// Move a hit entry to the protected MRU position, demoting the
+    /// protected tail while the segment exceeds its budget.
+    fn touch(&mut self, slot: usize, shard_cap: usize) {
+        let (was_prot, ebytes) = {
+            let e = self.slab[slot].as_ref().expect("touched slot");
+            (e.protected, e.bytes)
+        };
+        self.unlink(slot);
+        self.push_front(slot, true);
+        if !was_prot {
+            self.protected_bytes += ebytes;
+        }
+        let budget = shard_cap / PROTECTED_DEN * PROTECTED_NUM;
+        while self.protected_bytes > budget {
+            let Some(t) = self.pop_tail(true) else { break };
+            let tb = self.slab[t].as_ref().expect("demoted slot").bytes;
+            self.protected_bytes -= tb;
+            self.push_front(t, false);
+        }
+    }
+
+    /// Evict one entry: probation tail first, protected tail only when
+    /// probation is empty.  Returns false when the shard is empty.
+    fn evict_one(&mut self) -> bool {
+        let slot = match self.pop_tail(false) {
+            Some(s) => s,
+            None => match self.pop_tail(true) {
+                Some(s) => s,
+                None => return false,
+            },
+        };
+        let e = self.slab[slot].take().expect("evicted slot");
+        self.map.remove(&e.hash);
+        self.free.push(slot);
+        self.bytes -= e.bytes;
+        if e.protected {
+            self.protected_bytes -= e.bytes;
+        }
+        self.counters[e.model as usize].evictions += 1;
+        true
+    }
+
+    fn insert(&mut self, hash: u64, model: u32, bits: Vec<u32>, y: &[f32], shard_cap: usize) {
+        let entry_bytes = bits.len() * 4 + y.len() * 4 + ENTRY_OVERHEAD;
+        if entry_bytes > shard_cap {
+            return; // would evict the whole shard for one entry
+        }
+        if let Some(&slot) = self.map.get(&hash) {
+            let e = self.slab[slot].as_ref().expect("indexed slot");
+            if e.model != model || !bits_match(&e.bits, &bits) {
+                // Same 64-bit hash, different key: the incumbent wins
+                // and the newcomer stays uncached (verification on
+                // probe keeps this safe; counting keeps it observable).
+                self.counters[model as usize].collisions += 1;
+            }
+            return;
+        }
+        while self.bytes + entry_bytes > shard_cap {
+            if !self.evict_one() {
+                break;
+            }
+        }
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slab.push(None);
+                self.slab.len() - 1
+            }
+        };
+        self.slab[slot] = Some(Entry {
+            hash,
+            model,
+            bits,
+            y: y.to_vec(),
+            bytes: entry_bytes,
+            protected: false,
+            prev: NIL,
+            next: NIL,
+        });
+        self.map.insert(hash, slot);
+        self.push_front(slot, false);
+        self.bytes += entry_bytes;
+        self.counters[model as usize].inserts += 1;
+    }
+}
+
+fn bits_match(a: &[u32], b: &[u32]) -> bool {
+    a == b
+}
+
+/// Leader handle for an open flight.  Exactly one of three things
+/// happens to it: `publish(Ok(..))` (fans the value and inserts it into
+/// the cache), `publish(Err(..))` (fans the typed error), or drop
+/// (fans [`SubmitError::Failed`] so followers never wedge).
+pub struct FlightToken {
+    cache: Arc<ForwardCache>,
+    hash: u64,
+    shard: usize,
+    published: bool,
+}
+
+impl FlightToken {
+    pub fn publish(mut self, result: FlightResult) {
+        self.resolve(result);
+    }
+
+    fn resolve(&mut self, result: FlightResult) {
+        if self.published {
+            return;
+        }
+        self.published = true;
+        let waiters = {
+            let mut st = self.cache.shards[self.shard].lock().expect("cache shard lock");
+            let Some(flight) = st.flights.remove(&self.hash) else { return };
+            let Flight { model, bits, waiters } = flight;
+            if let Ok(v) = &result {
+                st.insert(self.hash, model, bits, &v.y, self.cache.shard_capacity);
+            }
+            waiters
+        };
+        // Fan out after releasing the shard lock: unbounded senders
+        // never block, but waiter wakeup should not serialize behind
+        // unrelated cache traffic either.  A follower that already gave
+        // up (timed out) just drops its receiver; ignore those.
+        for w in &waiters {
+            let _ = w.send(result.clone());
+        }
+    }
+}
+
+impl Drop for FlightToken {
+    fn drop(&mut self) {
+        if !self.published {
+            self.resolve(Err(SubmitError::Failed(
+                "cache leader abandoned the request".to_string(),
+            )));
+        }
+    }
+}
+
+/// The sharded content-addressed result cache.  Construct with
+/// [`ForwardCache::new`]; probe with [`ForwardCache::lookup`]; the
+/// insert path is driven entirely by leaders publishing.
+pub struct ForwardCache {
+    capacity_bytes: usize,
+    shard_capacity: usize,
+    models: Vec<String>,
+    shards: Vec<Mutex<ShardState>>,
+}
+
+impl ForwardCache {
+    /// `models[i]` names registry index `i` (counter labels only — keys
+    /// use the index, so renames never alias entries).
+    pub fn new(capacity_bytes: usize, models: Vec<String>) -> Arc<Self> {
+        let n_shards = if capacity_bytes >= SHARD_THRESHOLD_BYTES { N_SHARDS } else { 1 };
+        let shard_capacity = (capacity_bytes / n_shards).max(1);
+        let shards = (0..n_shards).map(|_| Mutex::new(ShardState::new(models.len()))).collect();
+        Arc::new(ForwardCache { capacity_bytes, shard_capacity, models, shards })
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    /// One lock round-trip: verified cache probe, then the singleflight
+    /// table.  Exactly one counter (`hits`/`misses`/`coalesced`) is
+    /// bumped per call.
+    pub fn lookup(self: &Arc<Self>, model: u32, x: &[f32]) -> Lookup {
+        let hash = content_hash(model, x);
+        let shard = (hash % self.shards.len() as u64) as usize;
+        let mut st = self.shards[shard].lock().expect("cache shard lock");
+        if let Some(&slot) = st.map.get(&hash) {
+            let verified = {
+                let e = st.slab[slot].as_ref().expect("indexed slot");
+                e.model == model && bits_eq(&e.bits, x)
+            };
+            if verified {
+                st.touch(slot, self.shard_capacity);
+                st.counters[model as usize].hits += 1;
+                return Lookup::Hit(st.slab[slot].as_ref().expect("indexed slot").y.clone());
+            }
+            st.counters[model as usize].collisions += 1;
+            st.counters[model as usize].misses += 1;
+            return Lookup::Solo;
+        }
+        if let Some(f) = st.flights.get_mut(&hash) {
+            if f.model == model && bits_eq(&f.bits, x) {
+                let (tx, rx) = mpsc::channel();
+                f.waiters.push(tx);
+                st.counters[model as usize].coalesced += 1;
+                return Lookup::Join(rx);
+            }
+            st.counters[model as usize].collisions += 1;
+            st.counters[model as usize].misses += 1;
+            return Lookup::Solo;
+        }
+        st.flights.insert(
+            hash,
+            Flight { model, bits: x.iter().map(|v| v.to_bits()).collect(), waiters: Vec::new() },
+        );
+        st.counters[model as usize].misses += 1;
+        Lookup::Lead(FlightToken { cache: Arc::clone(self), hash, shard, published: false })
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut per = vec![CacheCounters::default(); self.models.len()];
+        let (mut bytes, mut entries, mut in_flight) = (0usize, 0usize, 0usize);
+        for shard in &self.shards {
+            let st = shard.lock().expect("cache shard lock");
+            bytes += st.bytes;
+            entries += st.map.len();
+            in_flight += st.flights.len();
+            for (acc, c) in per.iter_mut().zip(&st.counters) {
+                acc.merge(c);
+            }
+        }
+        let mut total = CacheCounters::default();
+        for c in &per {
+            total.merge(c);
+        }
+        CacheStats {
+            capacity_bytes: self.capacity_bytes,
+            bytes,
+            entries,
+            in_flight,
+            total,
+            per_model: self.models.iter().cloned().zip(per).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(capacity: usize) -> Arc<ForwardCache> {
+        ForwardCache::new(capacity, vec!["a".to_string(), "b".to_string()])
+    }
+
+    fn value(y: Vec<f32>) -> FlightValue {
+        FlightValue { y, batch_size: 1, cause: FlushCause::Full, timing: Timing::default() }
+    }
+
+    /// Lead, publish, then hit — the stored rows come back bit-exact,
+    /// including payloads ordinary float equality would mangle.
+    #[test]
+    fn publish_then_hit_is_bit_exact() {
+        let c = cache(1 << 16);
+        let x = vec![-0.0f32, f32::MIN_POSITIVE, 1.5, f32::NAN];
+        let y = vec![f32::NAN, -0.0, 3.25];
+        let Lookup::Lead(tok) = c.lookup(0, &x) else { panic!("first probe must lead") };
+        tok.publish(Ok(value(y.clone())));
+        let Lookup::Hit(got) = c.lookup(0, &x) else { panic!("second probe must hit") };
+        assert_eq!(got.len(), y.len());
+        assert!(got.iter().zip(&y).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // -0.0 and +0.0 are different keys: content addressing is over
+        // bits, not float equality.
+        let x2 = vec![0.0f32, f32::MIN_POSITIVE, 1.5, f32::NAN];
+        assert!(matches!(c.lookup(0, &x2), Lookup::Lead(_)), "sign of zero is part of the key");
+        let st = c.stats();
+        assert_eq!(st.total.hits, 1);
+        assert_eq!(st.total.misses, 2);
+        assert_eq!(st.total.inserts, 1);
+        assert_eq!(st.total.requests(), 3);
+    }
+
+    #[test]
+    fn same_bytes_different_model_are_distinct_keys() {
+        let c = cache(1 << 16);
+        let x = vec![1.0f32, 2.0];
+        let Lookup::Lead(t0) = c.lookup(0, &x) else { panic!("lead 0") };
+        t0.publish(Ok(value(vec![10.0])));
+        assert!(matches!(c.lookup(1, &x), Lookup::Lead(_)), "model index is part of the key");
+        let st = c.stats();
+        assert_eq!(st.model("a").unwrap().hits, 0);
+        assert_eq!(st.model("b").unwrap().misses, 1);
+    }
+
+    /// A hash collision (forced via the shard-internal insert) keeps
+    /// the incumbent and counts, rather than corrupting either key.
+    #[test]
+    fn forced_hash_collision_keeps_incumbent() {
+        let c = cache(1 << 16);
+        {
+            let mut st = c.shards[0].lock().unwrap();
+            st.insert(42, 0, vec![1u32], &[1.0], c.shard_capacity);
+            st.insert(42, 0, vec![2u32], &[2.0], c.shard_capacity);
+            assert_eq!(st.counters[0].inserts, 1);
+            assert_eq!(st.counters[0].collisions, 1);
+            let slot = st.map[&42];
+            assert_eq!(st.slab[slot].as_ref().unwrap().y, vec![1.0]);
+        }
+        assert_eq!(c.stats().entries, 1);
+    }
+
+    /// Inserting past the byte budget evicts from the probation tail
+    /// (oldest un-hit entry first), and occupancy never exceeds the
+    /// budget.
+    #[test]
+    fn eviction_is_lru_and_respects_budget() {
+        // Each entry: 4 key bytes + 4 payload bytes + overhead = 104;
+        // capacity fits exactly 3 (single shard below the threshold).
+        let c = cache(312);
+        for i in 0..5 {
+            let x = [i as f32];
+            let Lookup::Lead(tok) = c.lookup(0, &x) else { panic!("lead {i}") };
+            tok.publish(Ok(value(vec![i as f32 * 10.0])));
+        }
+        let st = c.stats();
+        assert_eq!(st.total.inserts, 5);
+        assert_eq!(st.total.evictions, 2);
+        assert_eq!(st.entries, 3);
+        assert!(st.bytes <= 312, "occupancy {} over budget", st.bytes);
+        // Oldest two are gone, newest three still hit.  (The probe's
+        // Lead token is a temporary; its drop-guard closes the flight.)
+        assert!(matches!(c.lookup(0, &[0.0f32]), Lookup::Lead(_)));
+        for i in 2..5 {
+            assert!(matches!(c.lookup(0, &[i as f32]), Lookup::Hit(_)), "entry {i} evicted early");
+        }
+    }
+
+    /// A hit entry is promoted to the protected segment and survives a
+    /// scan of cold insertions that evicts everything around it.
+    #[test]
+    fn promoted_entry_survives_a_cold_scan() {
+        let c = cache(312); // 3 entries
+        let hot = [123.0f32];
+        let Lookup::Lead(tok) = c.lookup(0, &hot) else { panic!("lead hot") };
+        tok.publish(Ok(value(vec![1.0])));
+        assert!(matches!(c.lookup(0, &hot), Lookup::Hit(_)), "promote to protected");
+        for i in 0..6 {
+            let x = [1000.0 + i as f32];
+            let Lookup::Lead(t) = c.lookup(0, &x) else { panic!("lead scan {i}") };
+            t.publish(Ok(value(vec![0.0])));
+        }
+        assert!(matches!(c.lookup(0, &hot), Lookup::Hit(_)), "hot entry scanned out");
+    }
+
+    #[test]
+    fn oversized_entry_is_never_inserted() {
+        let c = cache(256);
+        let x: Vec<f32> = (0..128).map(|i| i as f32).collect(); // 512 key bytes alone
+        let Lookup::Lead(tok) = c.lookup(0, &x) else { panic!("lead") };
+        tok.publish(Ok(value(vec![0.0; 128])));
+        let st = c.stats();
+        assert_eq!(st.total.inserts, 0);
+        assert_eq!(st.bytes, 0);
+        assert!(matches!(c.lookup(0, &x), Lookup::Lead(_)), "oversized entry must not cache");
+    }
+
+    #[test]
+    fn followers_receive_the_leader_value() {
+        let c = cache(1 << 16);
+        let x = vec![7.0f32, 8.0];
+        let Lookup::Lead(tok) = c.lookup(0, &x) else { panic!("lead") };
+        let Lookup::Join(rx1) = c.lookup(0, &x) else { panic!("join 1") };
+        let Lookup::Join(rx2) = c.lookup(0, &x) else { panic!("join 2") };
+        tok.publish(Ok(FlightValue {
+            y: vec![9.0, 10.0],
+            batch_size: 3,
+            cause: FlushCause::Deadline,
+            timing: Timing::default(),
+        }));
+        for rx in [rx1, rx2] {
+            let v = rx.recv().unwrap().unwrap();
+            assert_eq!(v.y, vec![9.0, 10.0]);
+            assert_eq!(v.batch_size, 3);
+            assert_eq!(v.cause, FlushCause::Deadline);
+        }
+        let st = c.stats();
+        assert_eq!(st.total.coalesced, 2);
+        assert_eq!(st.total.misses, 1);
+        assert_eq!(st.total.hits, 0);
+        assert_eq!(st.in_flight, 0, "flight closed on publish");
+        // The published value is now cached for later arrivals.
+        assert!(matches!(c.lookup(0, &x), Lookup::Hit(_)));
+    }
+
+    #[test]
+    fn leader_error_fans_to_all_followers_and_caches_nothing() {
+        let c = cache(1 << 16);
+        let x = vec![3.0f32];
+        let Lookup::Lead(tok) = c.lookup(0, &x) else { panic!("lead") };
+        let Lookup::Join(rx) = c.lookup(0, &x) else { panic!("join") };
+        tok.publish(Err(SubmitError::Failed("boom".to_string())));
+        assert_eq!(rx.recv().unwrap(), Err(SubmitError::Failed("boom".to_string())));
+        assert_eq!(c.stats().entries, 0, "errors are not cached");
+        assert!(matches!(c.lookup(0, &x), Lookup::Lead(_)), "flight closed, next arrival leads");
+    }
+
+    /// Dropping the token without publishing (leader panicked or bailed
+    /// early) must still unpark every follower with a typed error.
+    #[test]
+    fn abandoned_leader_unwedges_followers() {
+        let c = cache(1 << 16);
+        let x = vec![4.0f32];
+        let tok = match c.lookup(0, &x) {
+            Lookup::Lead(t) => t,
+            _ => panic!("lead"),
+        };
+        let Lookup::Join(rx) = c.lookup(0, &x) else { panic!("join") };
+        drop(tok);
+        match rx.recv().unwrap() {
+            Err(SubmitError::Failed(msg)) => assert!(msg.contains("abandoned"), "{msg}"),
+            other => panic!("expected abandoned-leader failure, got {other:?}"),
+        }
+        assert_eq!(c.stats().in_flight, 0);
+    }
+
+    /// The counter invariant the e2e suite leans on: every cache-path
+    /// probe bumps exactly one of hits/misses/coalesced.
+    #[test]
+    fn probes_partition_into_hits_misses_coalesced() {
+        let c = cache(1 << 16);
+        let mut probes = 0u64;
+        for round in 0..4u32 {
+            for key in 0..8u32 {
+                let x = [key as f32];
+                probes += 1;
+                match c.lookup(key % 2, &x) {
+                    Lookup::Hit(_) => {}
+                    Lookup::Lead(tok) => tok.publish(Ok(value(vec![round as f32]))),
+                    Lookup::Join(_) | Lookup::Solo => panic!("serial probes never coalesce"),
+                }
+            }
+        }
+        let st = c.stats();
+        assert_eq!(st.total.requests(), probes);
+        assert_eq!(st.total.hits + st.total.misses + st.total.coalesced, probes);
+        let per: u64 = st.per_model.iter().map(|(_, c)| c.requests()).sum();
+        assert_eq!(per, probes, "per-model counters sum to the global view");
+    }
+}

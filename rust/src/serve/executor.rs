@@ -157,8 +157,11 @@ pub struct ExecStats {
     pub failed: usize,
     /// `batch_hist[k]` = number of batches that coalesced `k` requests.
     pub batch_hist: Vec<usize>,
-    /// Batches by [`FlushCause::index`].
-    pub causes: [usize; 4],
+    /// Batches by [`FlushCause::index`].  The `Cache` slot stays zero
+    /// here — cached replies never form a batch, so the executor never
+    /// records that cause; the cache's own counters live in
+    /// [`super::cache::CacheStats`].
+    pub causes: [usize; 5],
     /// Wall time inside the executor's `run` (busy time).
     pub busy_secs: f64,
     /// Per-request queue wait (admission to batch release, µs).
@@ -337,7 +340,7 @@ mod tests {
         assert_eq!(total.rows, 14);
         assert_eq!(total.failed, 3);
         assert_eq!(total.busy_secs, 0.875);
-        assert_eq!(total.causes, [1, 1, 1, 0]);
+        assert_eq!(total.causes, [1, 1, 1, 0, 0]);
         assert_eq!(total.batch_hist, vec![0, 1, 0, 2]);
         assert!((total.mean_batch() - 7.0 / 3.0).abs() < 1e-12);
         // Timing histograms merge by count; exec had two identical

@@ -29,6 +29,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::batcher::{BatchPolicy, FlushCause};
+use super::cache::CacheStats;
 use super::executor::{ExecStats, ModelExecutor, RationalExecutor, ServeStats};
 use super::server::Server;
 use crate::rational::Coeffs;
@@ -71,6 +72,14 @@ pub struct LoadConfig {
     pub rows_max: u32,
     pub seed: u64,
     pub arrival: Arrival,
+    /// Fraction of requests that *duplicate* an earlier request —
+    /// replaying its exact payload bytes, model, and row count (see
+    /// [`source_id`]).  `0.0` (the default) keeps every request
+    /// distinct, so historical workloads are byte-identical to before
+    /// the knob existed.  Duplicate-heavy streams feed the
+    /// content-addressed cache (`serve-bench --cache-bytes`) and stress
+    /// the batcher with repeated shape keys.
+    pub dup_frac: f64,
     /// Registry to serve; request `id` targets model `id % models.len()`.
     pub models: Vec<ModelSpec>,
 }
@@ -84,6 +93,7 @@ impl Default for LoadConfig {
             rows_max: 4,
             seed: 7,
             arrival: Arrival::Closed,
+            dup_frac: 0.0,
             models: vec![ModelSpec::new("grkan", 256, 8)],
         }
     }
@@ -97,12 +107,51 @@ pub fn model_for(cfg: &LoadConfig, id: u64) -> usize {
     (id % cfg.models.len() as u64) as usize
 }
 
+/// Stream salt for the duplication coin flips: the coins must come from
+/// a stream *disjoint* from the payload streams, or turning `dup_frac`
+/// on would perturb the bytes of the non-duplicate requests too.
+const DUP_STREAM_SALT: u64 = 0xd00d_f00d;
+
+/// The request id whose payload request `id` actually carries.
+///
+/// With `dup_frac = 0` this is `id` itself — every request distinct.
+/// With `dup_frac = F`, each id flips a seeded coin: with probability
+/// `F` it becomes a duplicate of a uniformly chosen earlier id, which
+/// may itself chain to an even earlier one (the chain strictly
+/// decreases, so it terminates, and repeated redirection skews the
+/// duplicate mass toward early "popular" ids — the shape a
+/// content-addressed cache feeds on).  Pure in `(seed, id)` and
+/// idempotent (`source_id(source_id(id)) == source_id(id)`): a resolved
+/// source never redirects again, so the originals' payloads are
+/// byte-identical to the `dup_frac = 0` stream.
+pub fn source_id(cfg: &LoadConfig, mut id: u64) -> u64 {
+    if cfg.dup_frac <= 0.0 {
+        return id;
+    }
+    loop {
+        if id == 0 {
+            return 0;
+        }
+        let mut rng = Pcg64::with_stream(cfg.seed ^ DUP_STREAM_SALT, id);
+        if !rng.bernoulli(cfg.dup_frac) {
+            return id;
+        }
+        id = rng.below(id as usize) as u64;
+    }
+}
+
 /// Target model, row count, and input payload for request `id` — a pure
-/// function of `(seed, id)`, independent of which thread materializes it.
+/// function of `(seed, id)`, independent of which thread materializes
+/// it.  Under `dup_frac > 0` the id first resolves through
+/// [`source_id`], so duplicates reproduce their source's model routing
+/// and exact payload bytes (a different model would mean a different
+/// row width — duplicates must be byte-for-byte replays to hit the
+/// content-addressed cache).
 pub fn request(cfg: &LoadConfig, id: u64) -> (usize, u32, Vec<f32>) {
-    let m = model_for(cfg, id);
+    let sid = source_id(cfg, id);
+    let m = model_for(cfg, sid);
     let d = cfg.models[m].d;
-    let mut rng = Pcg64::with_stream(cfg.seed, id);
+    let mut rng = Pcg64::with_stream(cfg.seed, sid);
     let span = cfg.rows_max.max(cfg.rows_min) - cfg.rows_min;
     let rows = cfg.rows_min + rng.below(span as usize + 1) as u32;
     let x = (0..rows as usize * d).map(|_| rng.normal_f32()).collect();
@@ -283,7 +332,23 @@ pub fn run_sharded_traced(
     shards: usize,
     tracer: std::sync::Arc<crate::trace::TraceCollector>,
 ) -> Result<BenchResult> {
-    run_with_sharded_inner(cfg, executors(cfg)?, policy, label, shards, Some(tracer))
+    run_with_sharded_inner(cfg, executors(cfg)?, policy, label, shards, Some(tracer), 0)
+        .map(|(r, _)| r)
+}
+
+/// [`run_sharded`] with a content-addressed forward cache of
+/// `cache_bytes` capacity in front of the batcher (`serve-bench
+/// --cache-bytes`).  Returns the bench record plus the cache's final
+/// counter snapshot; `cache_bytes == 0` means cache off — the run is
+/// then byte-identical to [`run_sharded`] and the snapshot is `None`.
+pub fn run_sharded_cached(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    label: &str,
+    shards: usize,
+    cache_bytes: usize,
+) -> Result<(BenchResult, Option<CacheStats>)> {
+    run_with_sharded_inner(cfg, executors(cfg)?, policy, label, shards, None, cache_bytes)
 }
 
 /// Run the workload against caller-provided executors (e.g. a
@@ -307,7 +372,7 @@ pub fn run_with_sharded(
     label: &str,
     shards: usize,
 ) -> Result<BenchResult> {
-    run_with_sharded_inner(cfg, executors, policy, label, shards, None)
+    run_with_sharded_inner(cfg, executors, policy, label, shards, None, 0).map(|(r, _)| r)
 }
 
 /// [`run_with`] with a trace collector attached — the traced analogue
@@ -320,7 +385,7 @@ pub fn run_with_traced(
     label: &str,
     tracer: std::sync::Arc<crate::trace::TraceCollector>,
 ) -> Result<BenchResult> {
-    run_with_sharded_inner(cfg, executors, policy, label, 1, Some(tracer))
+    run_with_sharded_inner(cfg, executors, policy, label, 1, Some(tracer), 0).map(|(r, _)| r)
 }
 
 fn run_with_sharded_inner(
@@ -330,7 +395,8 @@ fn run_with_sharded_inner(
     label: &str,
     shards: usize,
     tracer: Option<std::sync::Arc<crate::trace::TraceCollector>>,
-) -> Result<BenchResult> {
+    cache_bytes: usize,
+) -> Result<(BenchResult, Option<CacheStats>)> {
     if cfg.requests == 0 || cfg.concurrency == 0 {
         bail!("load config needs at least one request and one client");
     }
@@ -348,7 +414,7 @@ fn run_with_sharded_inner(
             bail!("model {:?}: spec d={} but executor d_in={}", spec.name, spec.d, ex.d_in());
         }
     }
-    let server = Server::start_sharded_traced(executors, policy, shards, tracer)?;
+    let server = Server::start_configured(executors, policy, shards, tracer, cache_bytes)?;
     let (wall_secs, per_client) = drive(cfg, || {
         let server = &server;
         move |id| {
@@ -362,7 +428,8 @@ fn run_with_sharded_inner(
         }
     });
     let stats = server.shutdown().expect("first shutdown");
-    Ok(aggregate(cfg, policy, label, wall_secs, per_client, &stats))
+    let cache = server.cache_stats();
+    Ok((aggregate(cfg, policy, label, wall_secs, per_client, &stats), cache))
 }
 
 /// The workload driver shared by every transport: fan `cfg.concurrency`
@@ -548,6 +615,30 @@ pub fn run_http_traced(
     shards: usize,
     tracer: Option<std::sync::Arc<crate::trace::TraceCollector>>,
 ) -> Result<BenchResult> {
+    run_http_inner(cfg, policy, label, shards, tracer, 0).map(|(r, _)| r)
+}
+
+/// [`run_http`] with a content-addressed forward cache of `cache_bytes`
+/// capacity in front of the batcher; returns the cache's final counter
+/// snapshot alongside the record (`None` when `cache_bytes == 0`).
+pub fn run_http_cached(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    label: &str,
+    shards: usize,
+    cache_bytes: usize,
+) -> Result<(BenchResult, Option<CacheStats>)> {
+    run_http_inner(cfg, policy, label, shards, None, cache_bytes)
+}
+
+fn run_http_inner(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    label: &str,
+    shards: usize,
+    tracer: Option<std::sync::Arc<crate::trace::TraceCollector>>,
+    cache_bytes: usize,
+) -> Result<(BenchResult, Option<CacheStats>)> {
     use crate::net::{HttpClient, HttpOptions, HttpServer};
 
     if cfg.requests == 0 || cfg.concurrency == 0 {
@@ -556,8 +647,13 @@ pub fn run_http_traced(
     if cfg.models.is_empty() {
         bail!("load config needs at least one model spec");
     }
-    let server =
-        std::sync::Arc::new(Server::start_sharded_traced(executors(cfg)?, policy, shards, tracer)?);
+    let server = std::sync::Arc::new(Server::start_configured(
+        executors(cfg)?,
+        policy,
+        shards,
+        tracer,
+        cache_bytes,
+    )?);
     let http = HttpServer::bind(
         "127.0.0.1:0",
         server,
@@ -618,10 +714,11 @@ pub fn run_http_traced(
             (model, if ok { Ok(ts.elapsed().as_secs_f64()) } else { Err(()) })
         }
     });
+    let cache = http.server().cache_stats();
     let stats = http.shutdown().expect("first shutdown");
     let mut res = aggregate(cfg, policy, label, wall_secs, per_client, &stats);
     res.retries = retries.into_inner();
-    Ok(res)
+    Ok((res, cache))
 }
 
 /// Run the same seeded workload **over loopback flashwire**: a sharded
@@ -652,6 +749,30 @@ pub fn run_wire_traced(
     shards: usize,
     tracer: Option<std::sync::Arc<crate::trace::TraceCollector>>,
 ) -> Result<BenchResult> {
+    run_wire_inner(cfg, policy, label, shards, tracer, 0).map(|(r, _)| r)
+}
+
+/// [`run_wire`] with a content-addressed forward cache of `cache_bytes`
+/// capacity in front of the batcher; returns the cache's final counter
+/// snapshot alongside the record (`None` when `cache_bytes == 0`).
+pub fn run_wire_cached(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    label: &str,
+    shards: usize,
+    cache_bytes: usize,
+) -> Result<(BenchResult, Option<CacheStats>)> {
+    run_wire_inner(cfg, policy, label, shards, None, cache_bytes)
+}
+
+fn run_wire_inner(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    label: &str,
+    shards: usize,
+    tracer: Option<std::sync::Arc<crate::trace::TraceCollector>>,
+    cache_bytes: usize,
+) -> Result<(BenchResult, Option<CacheStats>)> {
     use crate::wire::{ErrCode, WireClient, WireOptions, WireServer};
 
     if cfg.requests == 0 || cfg.concurrency == 0 {
@@ -660,8 +781,13 @@ pub fn run_wire_traced(
     if cfg.models.is_empty() {
         bail!("load config needs at least one model spec");
     }
-    let server =
-        std::sync::Arc::new(Server::start_sharded_traced(executors(cfg)?, policy, shards, tracer)?);
+    let server = std::sync::Arc::new(Server::start_configured(
+        executors(cfg)?,
+        policy,
+        shards,
+        tracer,
+        cache_bytes,
+    )?);
     let wire = WireServer::bind(
         "127.0.0.1:0",
         server,
@@ -716,10 +842,11 @@ pub fn run_wire_traced(
             (model, if ok { Ok(ts.elapsed().as_secs_f64()) } else { Err(()) })
         }
     });
+    let cache = wire.server().cache_stats();
     let stats = wire.shutdown().expect("first shutdown");
     let mut res = aggregate(cfg, policy, label, wall_secs, per_client, &stats);
     res.retries = retries.into_inner();
-    Ok(res)
+    Ok((res, cache))
 }
 
 /// The `BENCH_http.json` artifact: the same workload in-process and over
@@ -914,6 +1041,227 @@ pub fn wire_bench_json(
     ])
 }
 
+/// Per-transport bit-identity outcome of [`verify_cached_bit_identity`]:
+/// `true` means every request's rows came back `to_bits()`-identical to
+/// the unbatched, uncached executor oracle.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheIdentity {
+    pub inproc: bool,
+    pub http: bool,
+    pub wire: bool,
+}
+
+impl CacheIdentity {
+    pub fn all_ok(&self) -> bool {
+        self.inproc && self.http && self.wire
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("inproc".to_string(), Json::Bool(self.inproc)),
+            ("http".to_string(), Json::Bool(self.http)),
+            ("wire".to_string(), Json::Bool(self.wire)),
+            ("all_ok".to_string(), Json::Bool(self.all_ok())),
+        ])
+    }
+}
+
+/// The cache-correctness gate behind `serve-bench --cache-bytes`: replay
+/// the whole seeded workload serially against a *cached* server on each
+/// transport and compare every response bit-for-bit against the
+/// unbatched executor oracle (the same ground truth `serve_e2e` uses).
+/// A duplicate-heavy `cfg` makes the replay traverse the verified-hit
+/// path on most requests; the cold and insert paths are covered by the
+/// misses.  Concurrent coalescing is exercised separately in
+/// `tests/cache_e2e.rs` — a serial replay can never have two identical
+/// requests in flight.
+///
+/// HTTP responses are compared through the JSON round trip, which is
+/// bit-exact by construction (`util::json` serializes `f64` with Rust's
+/// shortest-round-trip formatting, and `f32 -> f64 -> f32` is lossless).
+pub fn verify_cached_bit_identity(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    shards: usize,
+    cache_bytes: usize,
+) -> Result<CacheIdentity> {
+    use crate::net::{HttpClient, HttpOptions, HttpServer};
+    use crate::wire::{WireClient, WireOptions, WireServer};
+
+    if cfg.requests == 0 {
+        bail!("load config needs at least one request");
+    }
+    if cfg.models.is_empty() {
+        bail!("load config needs at least one model spec");
+    }
+
+    // Oracle: each request's rows through the bare executors, one
+    // request per batch — no batcher, no cache, no transport.
+    let mut oracle = executors(cfg)?;
+    let mut y = Vec::new();
+    let mut want: Vec<Vec<u32>> = Vec::with_capacity(cfg.requests);
+    for id in 0..cfg.requests as u64 {
+        let (model, rows, x) = request(cfg, id);
+        oracle[model]
+            .run(&x, rows as usize, &mut y)
+            .with_context(|| format!("oracle forward for request {id}"))?;
+        want.push(y.iter().map(|v| v.to_bits()).collect());
+    }
+    let bits_ok = |got: &[f32], id: u64| -> bool {
+        let w = &want[id as usize];
+        got.len() == w.len() && got.iter().zip(w).all(|(v, b)| v.to_bits() == *b)
+    };
+
+    // In-process replay.
+    let server = Server::start_configured(executors(cfg)?, policy, shards, None, cache_bytes)?;
+    let mut inproc = true;
+    for id in 0..cfg.requests as u64 {
+        let (model, rows, x) = request(cfg, id);
+        match server.submit_at(model as u32, x, rows) {
+            Ok(resp) => inproc &= bits_ok(&resp.y, id),
+            Err(_) => inproc = false,
+        }
+    }
+    let _ = server.shutdown();
+
+    // HTTP replay: parse `y` out of the JSON response body.
+    let server = std::sync::Arc::new(Server::start_configured(
+        executors(cfg)?,
+        policy,
+        shards,
+        None,
+        cache_bytes,
+    )?);
+    let http_srv = HttpServer::bind("127.0.0.1:0", server, HttpOptions::default())?;
+    let mut conn = HttpClient::connect(http_srv.local_addr())?;
+    let mut http = true;
+    for id in 0..cfg.requests as u64 {
+        let (model, rows, x) = request(cfg, id);
+        let path = format!("/v1/models/{}/infer", cfg.models[model].name);
+        let body = infer_body(&x, rows);
+        let mut ok = false;
+        for _attempt in 0..100 {
+            match conn.post_json(&path, &body) {
+                Ok(resp) if resp.status == 200 => {
+                    ok = Json::parse(&resp.body_str())
+                        .ok()
+                        .and_then(|j| {
+                            let arr = j.get("y")?.as_arr()?.to_vec();
+                            let got: Option<Vec<f32>> =
+                                arr.iter().map(|v| v.as_f64().map(|f| f as f32)).collect();
+                            got
+                        })
+                        .is_some_and(|got| bits_ok(&got, id));
+                    break;
+                }
+                Ok(resp) if resp.status == 429 => {
+                    std::thread::sleep(shed_backoff(resp.retry_after_millis()));
+                }
+                _ => break,
+            }
+        }
+        http &= ok;
+    }
+    let _ = http_srv.shutdown();
+
+    // flashwire replay: the binary response carries `y` verbatim.
+    let server = std::sync::Arc::new(Server::start_configured(
+        executors(cfg)?,
+        policy,
+        shards,
+        None,
+        cache_bytes,
+    )?);
+    let wire_srv = WireServer::bind("127.0.0.1:0", server, WireOptions::default())?;
+    let mut conn = WireClient::connect(wire_srv.local_addr())?;
+    let mut wire = true;
+    for id in 0..cfg.requests as u64 {
+        let (model, rows, x) = request(cfg, id);
+        let ok = matches!(
+            conn.infer(cfg.models[model].name.as_str(), &x, rows),
+            Ok(Ok(resp)) if bits_ok(&resp.y, id)
+        );
+        wire &= ok;
+    }
+    let _ = wire_srv.shutdown();
+
+    Ok(CacheIdentity { inproc, http, wire })
+}
+
+/// One transport's cached-vs-uncached pair for `BENCH_cache.json`.
+#[derive(Clone, Debug)]
+pub struct CacheLeg {
+    /// `"inproc"`, `"http"`, or `"wire"`.
+    pub transport: String,
+    pub uncached: BenchResult,
+    pub cached: BenchResult,
+    /// Final counter snapshot of the cached leg's cache.
+    pub stats: Option<CacheStats>,
+}
+
+impl CacheLeg {
+    /// Verified-hit + coalesced fraction of the cached leg's requests;
+    /// `NaN` when the leg recorded no cache snapshot (cache off) — the
+    /// report layer renders that as a dash, the JSON as `null`.
+    pub fn hit_rate(&self) -> f64 {
+        self.stats.as_ref().map_or(f64::NAN, |s| s.total.hit_rate())
+    }
+
+    /// Cached over uncached throughput; `NaN` when either leg served
+    /// nothing — a ratio against zero is meaningless, and the report
+    /// layer dash-guards it like the hit rate.
+    pub fn speedup(&self) -> f64 {
+        if self.cached.throughput_rps <= 0.0 || self.uncached.throughput_rps <= 0.0 {
+            return f64::NAN;
+        }
+        self.cached.throughput_rps / self.uncached.throughput_rps
+    }
+}
+
+/// The `BENCH_cache.json` artifact: cached-vs-uncached legs per
+/// transport over the same duplicate-heavy seeded workload, the cache
+/// counters that explain the deltas, and the bit-identity gate verdict.
+pub fn cache_bench_json(
+    cfg: &LoadConfig,
+    shards: usize,
+    cache_bytes: usize,
+    legs: &[CacheLeg],
+    identity: &CacheIdentity,
+) -> Json {
+    let leg_json = |l: &CacheLeg| {
+        let counters = l.stats.as_ref().map_or(Json::Null, |s| {
+            Json::Obj(vec![
+                ("hits".to_string(), Json::Int(s.total.hits as i64)),
+                ("misses".to_string(), Json::Int(s.total.misses as i64)),
+                ("coalesced".to_string(), Json::Int(s.total.coalesced as i64)),
+                ("inserts".to_string(), Json::Int(s.total.inserts as i64)),
+                ("evictions".to_string(), Json::Int(s.total.evictions as i64)),
+                ("collisions".to_string(), Json::Int(s.total.collisions as i64)),
+                ("bytes".to_string(), Json::Int(s.bytes as i64)),
+                ("entries".to_string(), Json::Int(s.entries as i64)),
+            ])
+        });
+        Json::Obj(vec![
+            ("transport".to_string(), Json::Str(l.transport.clone())),
+            ("hit_rate".to_string(), Json::Num(l.hit_rate())),
+            ("speedup".to_string(), Json::Num(l.speedup())),
+            ("p50_ms_delta".to_string(), Json::Num(l.cached.p50_ms - l.uncached.p50_ms)),
+            ("p99_ms_delta".to_string(), Json::Num(l.cached.p99_ms - l.uncached.p99_ms)),
+            ("cache".to_string(), counters),
+            ("uncached".to_string(), l.uncached.to_json()),
+            ("cached".to_string(), l.cached.to_json()),
+        ])
+    };
+    Json::Obj(vec![
+        ("bench".to_string(), Json::Str("serve_cache".to_string())),
+        ("config".to_string(), config_json(cfg)),
+        ("shards".to_string(), Json::Int(shards as i64)),
+        ("cache_bytes".to_string(), Json::Int(cache_bytes as i64)),
+        ("bit_identity".to_string(), identity.to_json()),
+        ("legs".to_string(), Json::Arr(legs.iter().map(leg_json).collect())),
+    ])
+}
+
 fn config_json(cfg: &LoadConfig) -> Json {
     let models: Vec<Json> = cfg
         .models
@@ -939,6 +1287,7 @@ fn config_json(cfg: &LoadConfig) -> Json {
         ("rows_min".to_string(), Json::Int(cfg.rows_min as i64)),
         ("rows_max".to_string(), Json::Int(cfg.rows_max as i64)),
         ("seed".to_string(), Json::Int(cfg.seed as i64)),
+        ("dup_frac".to_string(), Json::Num(cfg.dup_frac)),
         (
             "arrival".to_string(),
             match cfg.arrival {
@@ -1476,5 +1825,95 @@ mod tests {
     fn autotune_rejects_empty_grid() {
         let cfg = small_cfg(10, 2, 64);
         assert!(autotune(&cfg, BatchPolicy::default(), 1000, &[], &[200]).is_err());
+    }
+
+    /// `dup_frac` duplicates are exact replays: the resolved source id
+    /// is idempotent, duplicates reproduce their source's full request
+    /// tuple, and originals keep the exact `dup_frac = 0` payloads.
+    #[test]
+    fn duplicates_replay_exact_prior_request_bytes() {
+        let plain = LoadConfig {
+            models: vec![ModelSpec::new("a", 64, 8), ModelSpec::new("b", 32, 8)],
+            ..Default::default()
+        };
+        let dup = LoadConfig { dup_frac: 0.5, ..plain.clone() };
+        let mut dup_count = 0usize;
+        for id in 0..1000u64 {
+            let sid = source_id(&dup, id);
+            assert!(sid <= id);
+            assert_eq!(source_id(&dup, sid), sid, "idempotent at {id}");
+            assert_eq!(request(&dup, id), request(&dup, sid), "replay at {id}");
+            if sid != id {
+                dup_count += 1;
+            } else {
+                // Originals are byte-identical to the dup_frac = 0
+                // stream — the knob only redirects, never perturbs.
+                assert_eq!(request(&dup, id), request(&plain, id), "original at {id}");
+            }
+            assert_eq!(source_id(&plain, id), id, "dup_frac = 0 never redirects");
+        }
+        // Coin flips are Bernoulli(0.5) over 1000 ids; a seeded stream
+        // lands well inside this band.
+        assert!((350..=650).contains(&dup_count), "{dup_count} duplicates");
+    }
+
+    /// Cached in-process run: everything serves, the counters partition
+    /// the requests, and only cache misses reach the executors.
+    #[test]
+    fn cached_run_reports_stats_and_serves_everything() {
+        let cfg = LoadConfig {
+            requests: 80,
+            concurrency: 4,
+            dup_frac: 0.6,
+            models: vec![ModelSpec::new("wide", 64, 8), ModelSpec::new("narrow", 16, 4)],
+            ..Default::default()
+        };
+        let policy = BatchPolicy { max_batch: 8, ..Default::default() };
+        let (res, cs) = run_sharded_cached(&cfg, policy, "cached", 2, 1 << 20).unwrap();
+        let cs = cs.expect("cache on");
+        assert_eq!(res.errors, 0);
+        assert_eq!(cs.total.requests(), 80, "hits+misses+coalesced cover every request");
+        assert!(cs.total.hits + cs.total.coalesced > 0, "duplicate-heavy load must hit");
+        assert_eq!(
+            cs.total.misses as usize, res.exec.requests,
+            "only cache misses reach the executors"
+        );
+        assert!(cs.total.hit_rate() > 0.0);
+        // Cache off: same workload, no snapshot, all requests executed.
+        let (off, none) = run_sharded_cached(&cfg, policy, "uncached", 2, 0).unwrap();
+        assert!(none.is_none());
+        assert_eq!(off.exec.requests, 80);
+    }
+
+    /// The `--cache-bytes` correctness gate passes on all three
+    /// transports, and the `BENCH_cache.json` record assembles.
+    #[test]
+    fn cache_identity_gate_and_bench_record() {
+        let cfg = LoadConfig {
+            requests: 24,
+            concurrency: 4,
+            dup_frac: 0.5,
+            models: vec![ModelSpec::new("wide", 64, 8), ModelSpec::new("narrow", 16, 4)],
+            ..Default::default()
+        };
+        let policy = BatchPolicy { max_batch: 8, ..Default::default() };
+        let identity = verify_cached_bit_identity(&cfg, policy, 2, 1 << 20).unwrap();
+        assert!(identity.all_ok(), "{identity:?}");
+
+        let (uncached, _) = run_sharded_cached(&cfg, policy, "inproc uncached", 2, 0).unwrap();
+        let (cached, stats) =
+            run_sharded_cached(&cfg, policy, "inproc cached", 2, 1 << 20).unwrap();
+        let leg = CacheLeg { transport: "inproc".to_string(), uncached, cached, stats };
+        assert!(leg.hit_rate() > 0.0 && leg.speedup() > 0.0);
+        let j = cache_bench_json(&cfg, 2, 1 << 20, std::slice::from_ref(&leg), &identity);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("serve_cache"));
+        assert_eq!(back.get("cache_bytes").unwrap().as_usize(), Some(1 << 20));
+        assert_eq!(back.get("bit_identity").unwrap().get("all_ok").unwrap().as_bool(), Some(true));
+        assert_eq!(back.get("config").unwrap().get("dup_frac").unwrap().as_f64(), Some(0.5));
+        let legs = back.get("legs").unwrap().as_arr().unwrap();
+        assert_eq!(legs.len(), 1);
+        assert!(legs[0].get("hit_rate").unwrap().as_f64().unwrap() > 0.0);
+        assert!(legs[0].get("cache").unwrap().get("hits").is_some());
     }
 }

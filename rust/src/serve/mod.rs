@@ -35,16 +35,18 @@
 //! with tracing on.
 
 pub mod batcher;
+pub mod cache;
 pub mod executor;
 pub mod loadgen;
 pub mod server;
 
 pub use batcher::{Batch, BatchPolicy, Batcher, FlushCause, ShapeKey, Ticket};
+pub use cache::{CacheCounters, CacheStats, ForwardCache};
 pub use executor::{
     ExecStats, ModelExecutor, ModelStats, PipelineExecutor, RationalExecutor, ServeStats,
 };
 pub use loadgen::{
-    Arrival, AutotuneResult, BenchResult, LoadConfig, ModelBench, ModelSpec, TraceRun,
-    TransportBytes,
+    Arrival, AutotuneResult, BenchResult, CacheIdentity, CacheLeg, LoadConfig, ModelBench,
+    ModelSpec, TraceRun, TransportBytes,
 };
 pub use server::{ModelMeta, Response, Server, SubmitError};

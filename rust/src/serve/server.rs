@@ -34,6 +34,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::batcher::{Batch, Batcher, BatchPolicy, FlushCause, ShapeKey};
+use super::cache::{CacheStats, FlightValue, ForwardCache, Lookup};
 use super::executor::{ExecStats, ModelExecutor, ModelStats, ServeStats};
 use crate::trace::{AnnValue, SpanCtx, Timing, TraceCollector, TraceEvent, TrackId};
 
@@ -176,6 +177,13 @@ struct Shared {
     tracer: Option<Arc<TraceCollector>>,
     /// Per-shard trace tracks; empty without a tracer.
     shard_tracks: Vec<ShardTracks>,
+    /// Content-addressed result cache + singleflight ([`super::cache`]);
+    /// `None` (the default) leaves the submit path exactly as before.
+    cache: Option<Arc<ForwardCache>>,
+    /// Track for cache hit/coalesced slices (`Some` exactly when both a
+    /// tracer and a cache are attached).  Cached requests never reach a
+    /// shard's request track, so they get their own.
+    cache_track: Option<TrackId>,
 }
 
 fn now_us(shared: &Shared) -> u64 {
@@ -220,6 +228,26 @@ impl Server {
         policy: BatchPolicy,
         n_shards: usize,
         tracer: Option<Arc<TraceCollector>>,
+    ) -> Result<Server> {
+        Self::start_configured(executors, policy, n_shards, tracer, 0)
+    }
+
+    /// The full constructor: [`Self::start_sharded_traced`] plus an
+    /// optional content-addressed result cache of `cache_bytes` capacity
+    /// (0 = off — every other constructor delegates here with 0, so the
+    /// default submit path is byte-for-byte the pre-cache code).  With a
+    /// cache, submissions are probed first: verified hits return the
+    /// stored rows without touching a shard, identical in-flight
+    /// requests coalesce onto one executor submission (singleflight),
+    /// and cold results are inserted when their leader's batch replies.
+    /// Bit-identity is unaffected — the cache only ever replays rows the
+    /// executor itself produced for the exact same `(model, row bytes)`.
+    pub fn start_configured(
+        executors: Vec<Box<dyn ModelExecutor>>,
+        policy: BatchPolicy,
+        n_shards: usize,
+        tracer: Option<Arc<TraceCollector>>,
+        cache_bytes: usize,
     ) -> Result<Server> {
         if executors.is_empty() {
             bail!("server needs at least one executor");
@@ -274,7 +302,22 @@ impl Server {
             None => Vec::new(),
         };
         let epoch = tracer.as_ref().map(|t| t.epoch()).unwrap_or_else(Instant::now);
-        let shared = Arc::new(Shared { shards, meta, route, epoch, tracer, shard_tracks });
+        let cache = (cache_bytes > 0)
+            .then(|| ForwardCache::new(cache_bytes, meta.iter().map(|m| m.name.clone()).collect()));
+        let cache_track = match (&tracer, &cache) {
+            (Some(t), Some(_)) => Some(t.register_track("cache")),
+            _ => None,
+        };
+        let shared = Arc::new(Shared {
+            shards,
+            meta,
+            route,
+            epoch,
+            tracer,
+            shard_tracks,
+            cache,
+            cache_track,
+        });
 
         // Hand each shard its slice of the registry, preserving
         // shard-local order (global index i lives at local slot i / n).
@@ -467,6 +510,76 @@ impl Server {
         // Mint here (the in-process admission point) unless a frontend
         // already minted at its own, earlier one.
         let span = span.or_else(|| self.shared.tracer.as_ref().map(|t| t.mint(&m.name, rows)));
+        let Some(cache) = &self.shared.cache else {
+            return self.submit_cold(model, x, rows, block, span);
+        };
+        match cache.lookup(model, &x) {
+            Lookup::Hit(y) => {
+                // Verified hit: the stored rows are bit-exact replays of
+                // an earlier executor reply for this same key.  No batch
+                // exists, so the timing breakdown is all-zero and the
+                // cause says so.
+                self.record_cache_event(&span, "hit");
+                Ok(Response {
+                    y,
+                    batch_size: 1,
+                    cause: FlushCause::Cache,
+                    timing: Timing::default(),
+                    span_id: span.as_ref().map(|s| s.span_id),
+                })
+            }
+            Lookup::Join(rx) => {
+                // An identical request is already executing; park on the
+                // leader's completion.  The leader's typed error (or its
+                // drop-guard failure) fans out here — followers never
+                // wedge.
+                let outcome = rx.recv_timeout(TRY_RESPONSE_TIMEOUT).map_err(|e| match e {
+                    mpsc::RecvTimeoutError::Timeout => SubmitError::ResponseTimeout,
+                    mpsc::RecvTimeoutError::Disconnected => {
+                        SubmitError::Failed("cache leader dropped the flight".to_string())
+                    }
+                })?;
+                let v = outcome?;
+                self.record_cache_event(&span, "coalesced");
+                Ok(Response {
+                    y: v.y,
+                    batch_size: v.batch_size,
+                    cause: v.cause,
+                    timing: v.timing,
+                    span_id: span.as_ref().map(|s| s.span_id),
+                })
+            }
+            Lookup::Lead(token) => {
+                let res = self.submit_cold(model, x, rows, block, span);
+                match &res {
+                    Ok(r) => token.publish(Ok(FlightValue {
+                        y: r.y.clone(),
+                        batch_size: r.batch_size,
+                        cause: r.cause,
+                        timing: r.timing,
+                    })),
+                    Err(e) => token.publish(Err(e.clone())),
+                }
+                res
+            }
+            // Hash-slot collision with a different key: execute without
+            // publishing (verification keeps collisions harmless).
+            Lookup::Solo => self.submit_cold(model, x, rows, block, span),
+        }
+    }
+
+    /// The pre-cache submit path: route to the model's shard, admit into
+    /// its batcher (blocking or shedding per `block`), and wait for the
+    /// executed batch's reply.
+    fn submit_cold(
+        &self,
+        model: u32,
+        x: Vec<f32>,
+        rows: u32,
+        block: bool,
+        span: Option<SpanCtx>,
+    ) -> std::result::Result<Response, SubmitError> {
+        let m = &self.shared.meta[model as usize];
         let (s, local) = self.shared.route[model as usize];
         let shard = &self.shared.shards[s as usize];
         let key = ShapeKey { model: local, d: m.d_in as u32 };
@@ -517,6 +630,38 @@ impl Server {
             Ok(resp) => Ok(resp),
             Err(msg) => Err(SubmitError::Failed(format!("model {:?}: {msg}", m.name))),
         }
+    }
+
+    /// Cache occupancy + per-model hit/miss/coalesced counters; `None`
+    /// when the server runs without a cache.  Valid at any time,
+    /// including after [`Self::shutdown`] (the bench reads the final
+    /// numbers then).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.shared.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// Emit a slice on the cache track for a request served off the
+    /// cache path (it never reaches a shard's request track).  The
+    /// `cause` annotation distinguishes verified hits from coalesced
+    /// followers.
+    fn record_cache_event(&self, span: &Option<SpanCtx>, cause: &'static str) {
+        let (Some(tracer), Some(track), Some(span)) =
+            (&self.shared.tracer, self.shared.cache_track, span)
+        else {
+            return;
+        };
+        let t1 = tracer.now_us().max(span.t_admit_us);
+        tracer.record(TraceEvent {
+            track,
+            name: format!("cache {}", span.model),
+            t0_us: span.t_admit_us,
+            t1_us: t1,
+            args: vec![
+                ("span_id", AnnValue::U64(span.span_id)),
+                ("rows", AnnValue::U64(u64::from(span.rows))),
+                ("cause", AnnValue::Str(cause.to_string())),
+            ],
+        });
     }
 
     /// Stop admission on every shard, drain pending requests, and join
@@ -1337,5 +1482,89 @@ mod tests {
         assert!(server.shutdown().is_some());
         assert!(server.shutdown().is_none());
         assert!(server.submit("grkan", vec![0.0; D], 1).is_err(), "admission closed");
+    }
+
+    /// A cached server serves a repeated payload from the cache —
+    /// bit-identical rows, `FlushCause::Cache`, zero timing — and the
+    /// executor only ever sees the first copy.  Without `cache_bytes`
+    /// there is no cache at all.
+    #[test]
+    fn cached_server_serves_repeats_without_reexecution() {
+        let (m, coeffs) = model(50);
+        let server = Server::start_configured(
+            vec![m],
+            BatchPolicy { max_batch: 8, deadline_us: 200, queue_depth: 64, eager: true },
+            1,
+            None,
+            1 << 20,
+        )
+        .unwrap();
+        let (rows, x) = request(50, 0);
+        let want = forward(&x, rows as usize, D, &coeffs);
+        let cold = server.submit("grkan", x.clone(), rows).expect("cold");
+        assert_eq!(cold.y, want);
+        assert_ne!(cold.cause, FlushCause::Cache, "first copy must execute");
+        for _ in 0..3 {
+            let hit = server.submit("grkan", x.clone(), rows).expect("hit");
+            assert!(hit.y.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert_eq!(hit.cause, FlushCause::Cache);
+            assert_eq!(hit.batch_size, 1);
+            assert_eq!(hit.timing, Timing::default(), "no batch, no phases");
+        }
+        let stats = server.shutdown().unwrap();
+        assert_eq!(stats.total().requests, 1, "executor saw only the cold copy");
+        let cs = server.cache_stats().expect("cache attached");
+        assert_eq!(cs.total.hits, 3);
+        assert_eq!(cs.total.misses, 1);
+        assert_eq!(cs.total.coalesced, 0);
+        assert_eq!(cs.total.inserts, 1);
+        assert_eq!(cs.total.requests(), 4);
+        assert_eq!(cs.model("grkan").unwrap(), &cs.total);
+
+        let plain = {
+            let (m, _) = model(50);
+            Server::start(vec![m], BatchPolicy::default()).unwrap()
+        };
+        assert!(plain.cache_stats().is_none(), "cache off by default");
+    }
+
+    /// With a tracer attached, cached requests record slices on the
+    /// dedicated "cache" track (never on a shard's request track) with
+    /// the hit/coalesced cause annotation, and still carry span ids.
+    #[test]
+    fn traced_cached_server_records_cache_slices() {
+        let (m, _) = model(51);
+        let tracer = Arc::new(TraceCollector::new());
+        let server = Server::start_configured(
+            vec![m],
+            BatchPolicy { max_batch: 8, deadline_us: 200, queue_depth: 64, eager: true },
+            1,
+            Some(tracer.clone()),
+            1 << 20,
+        )
+        .unwrap();
+        let (rows, x) = request(51, 0);
+        let cold = server.submit("grkan", x.clone(), rows).expect("cold");
+        let hit = server.submit("grkan", x, rows).expect("hit");
+        assert!(hit.span_id.is_some(), "cached responses keep their own span ids");
+        assert_ne!(hit.span_id, cold.span_id, "each request minted its own span");
+        server.shutdown();
+        let snapshot = tracer.snapshot();
+        let cache_events = snapshot
+            .iter()
+            .find(|(name, _)| name == "cache")
+            .map(|(_, ev)| ev.as_slice())
+            .expect("cache track registered");
+        assert_eq!(cache_events.len(), 1, "one slice per cache-served request");
+        let ev = &cache_events[0];
+        assert!(ev.t0_us <= ev.t1_us);
+        assert!(ev.args.iter().any(|(k, v)| *k == "cause"
+            && matches!(v, AnnValue::Str(s) if s == "hit")));
+        let req_events: usize = snapshot
+            .iter()
+            .filter(|(name, _)| name.ends_with(" req"))
+            .map(|(_, ev)| ev.len())
+            .sum();
+        assert_eq!(req_events, 1, "only the cold request reached the executor track");
     }
 }

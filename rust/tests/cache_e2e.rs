@@ -1,0 +1,349 @@
+//! Integration: the content-addressed forward cache end to end — cached
+//! responses bit-identical to the unbatched oracle under concurrent
+//! duplicate-heavy mixed-model load, the hit/miss/coalesced partition
+//! summing to the request totals, singleflight fanning a leader's typed
+//! failure to every parked follower, eviction under a tiny byte budget,
+//! and the HTTP + flashwire frontends sharing one cache (a row warmed
+//! over one transport is a verified hit over the other).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use flashkat::rational::{forward, Coeffs};
+use flashkat::serve::{
+    loadgen, BatchPolicy, FlushCause, ModelExecutor, RationalExecutor, Server, SubmitError,
+};
+use flashkat::util::json::Json;
+use flashkat::util::rng::Pcg64;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+/// Concurrent clients over a two-model registry, ~70% of requests drawn
+/// from a small shared payload pool (so the hit and coalesced paths see
+/// real traffic), every response compared bit-for-bit against the
+/// unbatched `rational::forward` oracle — and afterwards the cache's
+/// partition invariant: every request was exactly one of hit, miss, or
+/// coalesced, and the misses are exactly the requests the executors saw.
+#[test]
+fn cached_mixed_model_traffic_is_bit_identical_and_counters_partition() {
+    let (d_wide, d_narrow) = (96usize, 32usize);
+    let mut rng = Pcg64::new(41);
+    let cw = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+    let cn = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+
+    // Shared pool: 5 payloads per model, rows 1-3, oracle precomputed.
+    let pool = |d: usize, c: &Coeffs<f32>, salt: u64| -> Vec<(Vec<f32>, usize, Vec<u32>)> {
+        (0..5u64)
+            .map(|i| {
+                let mut rng = Pcg64::with_stream(41, salt + i);
+                let rows = 1 + rng.below(3);
+                let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+                let want = bits(&forward(&x, rows, d, c));
+                (x, rows, want)
+            })
+            .collect()
+    };
+    let pool_w = pool(d_wide, &cw, 100);
+    let pool_n = pool(d_narrow, &cn, 200);
+
+    let server = Server::start_configured(
+        vec![
+            Box::new(RationalExecutor::new("wide", d_wide, cw.clone()).unwrap()),
+            Box::new(RationalExecutor::new("narrow", d_narrow, cn.clone()).unwrap()),
+        ],
+        BatchPolicy { max_batch: 8, deadline_us: 300, queue_depth: 128, eager: true },
+        2,
+        None,
+        1 << 20,
+    )
+    .unwrap();
+
+    let clients = 6u64;
+    let reqs_each = 30u64;
+    std::thread::scope(|s| {
+        for client in 0..clients {
+            let server = &server;
+            let (pool_w, pool_n) = (&pool_w, &pool_n);
+            let (cw, cn) = (&cw, &cn);
+            s.spawn(move || {
+                for i in 0..reqs_each {
+                    let mut rng = Pcg64::with_stream(43, client * 1000 + i);
+                    let wide = rng.below(2) == 0;
+                    let (name, d, c, pool) = if wide {
+                        ("wide", d_wide, cw, pool_w)
+                    } else {
+                        ("narrow", d_narrow, cn, pool_n)
+                    };
+                    let (x, rows, want) = if rng.below(10) < 7 {
+                        let (x, rows, want) = &pool[rng.below(pool.len())];
+                        (x.clone(), *rows, want.clone())
+                    } else {
+                        // Unique payload: always a miss, covers the
+                        // insert path interleaved with hits.
+                        let rows = 1 + rng.below(3);
+                        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+                        let want = bits(&forward(&x, rows, d, c));
+                        (x, rows, want)
+                    };
+                    let resp = server.submit(name, x, rows as u32).expect("served");
+                    assert_eq!(bits(&resp.y), want, "{name} client {client} req {i}");
+                }
+            });
+        }
+    });
+
+    let total_reqs = clients * reqs_each;
+    let cs = server.cache_stats().expect("cache attached");
+    let stats = server.shutdown().expect("stats");
+    assert_eq!(cs.total.requests(), total_reqs, "every request probed the cache exactly once");
+    assert_eq!(
+        cs.total.hits + cs.total.misses + cs.total.coalesced,
+        total_reqs,
+        "partition: each probe bumps exactly one counter"
+    );
+    assert!(cs.total.hits + cs.total.coalesced > 0, "pooled payloads must repeat: {cs:?}");
+    assert_eq!(
+        cs.total.misses as usize,
+        stats.total().requests,
+        "misses (leaders + solos) are exactly the executor submissions"
+    );
+    // The per-model split sums to the global cache totals.
+    let sum = |f: &dyn Fn(&flashkat::serve::CacheCounters) -> u64| -> u64 {
+        cs.per_model.iter().map(|(_, c)| f(c)).sum()
+    };
+    assert_eq!(sum(&|c| c.hits), cs.total.hits);
+    assert_eq!(sum(&|c| c.misses), cs.total.misses);
+    assert_eq!(sum(&|c| c.coalesced), cs.total.coalesced);
+    assert_eq!(cs.in_flight, 0, "no flight survives its leader");
+}
+
+/// Serial repeat: the second identical request is served off the cache
+/// (`FlushCause::Cache`, no batch) with a bit-identical row.
+#[test]
+fn repeated_request_is_served_from_cache_with_cache_cause() {
+    let d = 48;
+    let mut rng = Pcg64::new(5);
+    let coeffs = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+    let server = Server::start_configured(
+        vec![Box::new(RationalExecutor::new("grkan", d, coeffs.clone()).unwrap())],
+        BatchPolicy::default(),
+        1,
+        None,
+        1 << 20,
+    )
+    .unwrap();
+    let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+    let cold = server.submit("grkan", x.clone(), 1).unwrap();
+    assert_ne!(cold.cause, FlushCause::Cache, "first sighting executes");
+    let warm = server.submit("grkan", x.clone(), 1).unwrap();
+    assert_eq!(warm.cause, FlushCause::Cache);
+    assert_eq!(warm.batch_size, 1);
+    assert_eq!(bits(&warm.y), bits(&cold.y));
+    assert_eq!(bits(&warm.y), bits(&forward(&x, 1, d, &coeffs)));
+    let cs = server.cache_stats().unwrap();
+    assert_eq!((cs.total.hits, cs.total.misses, cs.total.coalesced), (1, 1, 0));
+    let _ = server.shutdown();
+}
+
+/// An executor that parks every batch on a gate, then fails it — the
+/// leader is provably in flight while followers coalesce, and its typed
+/// error must fan out to all of them.
+struct GateExecutor {
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl ModelExecutor for GateExecutor {
+    fn name(&self) -> &str {
+        "gate"
+    }
+
+    fn d_in(&self) -> usize {
+        4
+    }
+
+    fn d_out(&self) -> usize {
+        4
+    }
+
+    fn run(&mut self, _x: &[f32], _rows: usize, _out: &mut Vec<f32>) -> anyhow::Result<()> {
+        let (lock, cv) = &*self.gate;
+        let mut released = lock.lock().unwrap();
+        // Bounded wait: a test bug fails loudly instead of wedging CI.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !*released && Instant::now() < deadline {
+            let (g, _) = cv.wait_timeout(released, Duration::from_millis(50)).unwrap();
+            released = g;
+        }
+        anyhow::bail!("injected executor failure");
+    }
+}
+
+/// Leader failure: four identical concurrent requests coalesce onto one
+/// executor submission; when that batch fails, all four callers receive
+/// the same typed `SubmitError::Failed`, nobody wedges, and the failed
+/// flight is closed without inserting anything.
+#[test]
+fn leader_failure_fans_typed_error_to_all_followers() {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let server = Server::start_configured(
+        vec![Box::new(GateExecutor { gate: gate.clone() })],
+        BatchPolicy { max_batch: 1, deadline_us: 0, queue_depth: 16, eager: true },
+        1,
+        None,
+        1 << 16,
+    )
+    .unwrap();
+    let server = Arc::new(server);
+
+    let threads: Vec<_> = (0..4)
+        .map(|_| {
+            let server = server.clone();
+            std::thread::spawn(move || server.try_submit("gate", vec![1.0; 4], 1))
+        })
+        .collect();
+
+    // The coalesced counter bumps at lookup time, so it observing 3
+    // proves all followers joined the leader's flight *before* the gate
+    // releases and the failure propagates.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.cache_stats().unwrap().total.coalesced < 3 {
+        assert!(Instant::now() < deadline, "followers never coalesced");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let (lock, cv) = &*gate;
+    *lock.lock().unwrap() = true;
+    cv.notify_all();
+
+    let results: Vec<_> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    let mut msgs = Vec::new();
+    for r in results {
+        match r {
+            Err(SubmitError::Failed(msg)) => msgs.push(msg),
+            other => panic!("expected Failed for every caller, got {other:?}"),
+        }
+    }
+    assert_eq!(msgs.len(), 4);
+    assert!(msgs[0].contains("injected executor failure"), "{}", msgs[0]);
+    assert!(msgs.iter().all(|m| m == &msgs[0]), "followers receive the leader's exact error");
+
+    let cs = server.cache_stats().unwrap();
+    assert_eq!((cs.total.misses, cs.total.coalesced, cs.total.hits), (1, 3, 0));
+    assert_eq!(cs.total.inserts, 0, "failures are never cached");
+    assert_eq!(cs.in_flight, 0, "the failed flight is closed");
+    let _ = server.shutdown();
+}
+
+/// A byte budget far smaller than the working set: the cache evicts
+/// instead of growing, stays under capacity, and every response — hit,
+/// miss after eviction, re-insert — stays bit-identical to the oracle.
+#[test]
+fn tiny_budget_evicts_and_stays_bit_identical() {
+    let d = 32;
+    let mut rng = Pcg64::new(9);
+    let coeffs = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+    let server = Server::start_configured(
+        vec![Box::new(RationalExecutor::new("grkan", d, coeffs.clone()).unwrap())],
+        BatchPolicy::default(),
+        1,
+        None,
+        1024, // ~2-3 single-row entries of width 32
+    )
+    .unwrap();
+    let payloads: Vec<(Vec<f32>, Vec<u32>)> = (0..8)
+        .map(|_| {
+            let x: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+            let want = bits(&forward(&x, 1, d, &coeffs));
+            (x, want)
+        })
+        .collect();
+    for pass in 0..3 {
+        for (i, (x, want)) in payloads.iter().enumerate() {
+            let resp = server.submit("grkan", x.clone(), 1).unwrap();
+            assert_eq!(&bits(&resp.y), want, "pass {pass} payload {i}");
+        }
+    }
+    let cs = server.cache_stats().unwrap();
+    assert!(cs.total.evictions > 0, "8-entry working set must not fit 1 KiB: {cs:?}");
+    assert!(cs.bytes <= cs.capacity_bytes, "{} > {}", cs.bytes, cs.capacity_bytes);
+    assert_eq!(cs.total.requests(), 24);
+    let _ = server.shutdown();
+}
+
+/// Both network frontends over one cached server: a row warmed over
+/// HTTP is a verified hit over flashwire (the cache sits below the
+/// transports), the HTTP body reports `"cause":"cache"`, the wire
+/// response carries `FlushCause::Cache`, and `/metrics` exports the
+/// cache counters plus `flashkat_trace_dropped_total`.
+#[test]
+fn http_and_wire_share_one_cache_and_stay_bit_identical() {
+    use flashkat::net::{HttpClient, HttpOptions, HttpServer};
+    use flashkat::wire::{WireClient, WireOptions, WireServer};
+
+    let d = 16;
+    let mut rng = Pcg64::new(17);
+    let coeffs = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+    let server = Arc::new(
+        Server::start_configured(
+            vec![Box::new(RationalExecutor::new("grkan", d, coeffs.clone()).unwrap())],
+            BatchPolicy::default(),
+            1,
+            None,
+            1 << 20,
+        )
+        .unwrap(),
+    );
+    let http_srv = HttpServer::bind("127.0.0.1:0", server.clone(), HttpOptions::default()).unwrap();
+    let wire_srv = WireServer::bind("127.0.0.1:0", server.clone(), WireOptions::default()).unwrap();
+
+    let rows = 2usize;
+    let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+    let want = bits(&forward(&x, rows, d, &coeffs));
+    let body = loadgen::infer_body(&x, rows as u32);
+    let parse_y = |body: &str| -> (Vec<f32>, String) {
+        let j = Json::parse(body).expect("valid json");
+        let y: Vec<f32> = j
+            .get("y")
+            .and_then(Json::as_arr)
+            .expect("y array")
+            .iter()
+            .map(|v| v.as_f64().expect("numeric row") as f32)
+            .collect();
+        let cause = j.get("cause").and_then(Json::as_str).expect("cause").to_string();
+        (y, cause)
+    };
+
+    let mut http = HttpClient::connect(http_srv.local_addr()).unwrap();
+    let cold = http.post_json("/v1/models/grkan/infer", &body).unwrap();
+    assert_eq!(cold.status, 200);
+    let (y, cause) = parse_y(&cold.body_str());
+    assert_eq!(bits(&y), want, "cold HTTP response matches the oracle through JSON");
+    assert_ne!(cause, "cache");
+    let warm = http.post_json("/v1/models/grkan/infer", &body).unwrap();
+    assert_eq!(warm.status, 200);
+    let (y, cause) = parse_y(&warm.body_str());
+    assert_eq!(bits(&y), want);
+    assert_eq!(cause, "cache", "second identical request is a verified hit");
+
+    // Cross-transport: the wire frontend hits the row HTTP warmed.
+    let mut wire = WireClient::connect(wire_srv.local_addr()).unwrap();
+    let resp = wire.infer("grkan", &x, rows as u32).unwrap().expect("typed ok");
+    assert_eq!(bits(&resp.y), want, "wire replay of the HTTP-warmed row");
+    assert_eq!(resp.cause, FlushCause::Cache);
+
+    let metrics = http.get("/metrics").unwrap();
+    assert_eq!(metrics.status, 200);
+    let text = metrics.body_str().to_string();
+    assert!(
+        text.contains("flashkat_cache_hits_total{model=\"grkan\"} 2"),
+        "one HTTP + one wire hit: {text}"
+    );
+    assert!(text.contains("flashkat_cache_misses_total{model=\"grkan\"} 1"), "{text}");
+    assert!(text.contains("flashkat_trace_dropped_total 0"), "{text}");
+
+    let cs = server.cache_stats().unwrap();
+    assert_eq!((cs.total.hits, cs.total.misses), (2, 1));
+    let _ = wire_srv.shutdown();
+    let _ = http_srv.shutdown();
+}

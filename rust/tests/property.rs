@@ -536,6 +536,63 @@ fn prop_wire_infer_messages_round_trip_random_floats_bit_exactly() {
 }
 
 #[test]
+fn prop_cached_runs_partition_counters_under_any_dup_mix() {
+    // For ANY duplication ratio × shard count × cache budget (from
+    // "everything fits" down to "constant eviction"), a cached run
+    // serves the whole workload error-free and the cache's accounting
+    // holds: every request probed exactly once, each probe bumped
+    // exactly one of hits/misses/coalesced, the misses are exactly the
+    // requests the executors saw (the singleflight guarantee — no
+    // duplicate in-flight execution ever reached a batcher), the byte
+    // ledger respects capacity, and no flight outlives its leader.
+    use flashkat::serve::{loadgen, BatchPolicy, LoadConfig, ModelSpec};
+
+    cases(8, |seed, rng| {
+        let dup_frac = [0.0, 0.25, 0.5, 0.9][rng.below(4)];
+        let cfg = LoadConfig {
+            requests: 40 + rng.below(60),
+            concurrency: 1 + rng.below(8),
+            seed: seed * 97 + 3,
+            dup_frac,
+            models: vec![ModelSpec::new("a", 32, 4), ModelSpec::new("b", 64, 8)],
+            ..Default::default()
+        };
+        let policy = BatchPolicy {
+            max_batch: 1 + rng.below(16),
+            deadline_us: [0, 100, 5_000][rng.below(3)],
+            queue_depth: 4 + rng.below(60),
+            eager: rng.bernoulli(0.5),
+        };
+        let shards = 1 + rng.below(2);
+        let cache_bytes = [1 << 20, 16 << 10, 2 << 10][rng.below(3)];
+        let (res, cache) =
+            loadgen::run_sharded_cached(&cfg, policy, "prop-cache", shards, cache_bytes).unwrap();
+        assert_eq!(res.errors, 0, "seed {seed}");
+        let cs = cache.expect("a positive budget attaches a cache");
+        assert_eq!(cs.total.requests(), cfg.requests as u64, "seed {seed}: one probe per request");
+        assert_eq!(
+            cs.total.hits + cs.total.misses + cs.total.coalesced,
+            cfg.requests as u64,
+            "seed {seed}: partition"
+        );
+        assert_eq!(
+            cs.total.misses as usize,
+            res.exec.requests,
+            "seed {seed}: misses are exactly the executor submissions"
+        );
+        assert!(cs.bytes <= cs.capacity_bytes, "seed {seed}: {} > {}", cs.bytes, cs.capacity_bytes);
+        assert!(cs.total.inserts >= cs.total.evictions, "seed {seed}: evicted the never-inserted");
+        assert_eq!(cs.in_flight, 0, "seed {seed}: flight leaked past shutdown");
+        if dup_frac >= 0.5 {
+            assert!(
+                cs.total.hits + cs.total.coalesced > 0,
+                "seed {seed}: a duplicate-heavy workload must repeat at least once: {cs:?}"
+            );
+        }
+    });
+}
+
+#[test]
 fn prop_traced_runs_span_every_request_uniquely_under_any_policy() {
     // For ANY batching policy (size-triggered, deadline-coalesced, eager
     // or not, single- or multi-shard): a traced run serves every request,
