@@ -27,6 +27,7 @@ pub mod data;
 pub mod flops;
 pub mod gpusim;
 pub mod net;
+pub mod probe;
 pub mod rational;
 pub mod report;
 pub mod runtime;

@@ -6,6 +6,12 @@
 //!   train  [--model kat_micro|vit_micro|kat_micro_katbwd] [--steps N]
 //!          [--seed N] [--ckpt PATH] [--artifacts DIR]
 //!   profile [--kernel fwd|kat|flash] [--loops N] [--gpu 4060ti|h200] [--batch N]
+//!   profile-kernel [--rows N] [--d N] [--groups N] [--s-block N] [--iters N]
+//!          [--seed N] [--gpu 4060ti|h200] [--out PATH]
+//!          -- host-kernel roofline under the `probe` traffic counters:
+//!             bit-identity gate, per-phase measured bytes/element and
+//!             arithmetic intensity vs the gpusim analytic prediction
+//!             (needs --features probe; writes BENCH_profile.json)
 //!   serve-bench [--requests N] [--concurrency C] [--max-batch B] [--deadline-us D]
 //!          [--model NAME | --models name:d[:groups],... | --pipeline TAG]
 //!          [--autotune --slo-p99-us N] [--http --shards N] [--dup-frac F]
@@ -18,7 +24,8 @@
 //!   serve-http [--addr A] [--port P|0] [--shards N] [--cache-bytes N]
 //!          [--models name:d[:groups],... | --pipeline TAG]
 //!          -- HTTP/JSON serving frontend; runs until SIGTERM, then drains
-//!   trace-stat PATH   -- sanity-scan a Perfetto trace written by --trace-out
+//!   trace-stat [--json] PATH   -- sanity-scan a Perfetto trace written by
+//!          --trace-out (packet/slice/counter + per-track event counts)
 //!   selfcheck [--artifacts DIR]   -- runtime vs Rust-oracle numerics
 //!   flops
 //!
@@ -166,6 +173,225 @@ fn cmd_profile(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Kernel memory-traffic roofline profile (DESIGN.md §17): run the host
+/// rational kernels under the `probe` feature's traffic counters, time
+/// the forward / fused-backward / reduce phases, compute measured
+/// bytes/element and arithmetic intensity, compare the measured traffic
+/// against the analytic per-element traffic `gpusim` predicts for the
+/// matching kernels, and write `BENCH_profile.json` with a
+/// `predicted_vs_measured` error block.  Refuses to run on a build
+/// without `--features probe` (the counters would read all-zero).
+fn cmd_profile_kernel(args: &Args) -> Result<()> {
+    use flashkat::probe::{self, Phase, Snapshot, Stream};
+    use flashkat::rational::accumulate::{backward, Strategy};
+    use flashkat::rational::{forward, kernel, Coeffs};
+    use flashkat::util::json::Json;
+    use flashkat::util::rng::Pcg64;
+    use std::time::Instant;
+
+    if !Snapshot::enabled() {
+        bail!(
+            "profile-kernel needs a build with --features probe \
+             (the default build compiles the kernel traffic counters to no-ops)"
+        );
+    }
+    let rows = args.flag_usize("rows", 4096)?.max(1);
+    let d = args.flag_usize("d", 768)?.max(1);
+    let groups = args.flag_usize("groups", 8)?.max(1);
+    if d % groups != 0 {
+        bail!("--d {d} must be divisible by --groups {groups}");
+    }
+    let s_block = args.flag_usize("s-block", 128)?.max(1);
+    let iters = args.flag_usize("iters", 3)?.max(1);
+    let seed = args.flag_u64("seed", 7)?;
+    let gpu_name = args.flag_str("gpu", "4060ti").to_string();
+    let gpu = gpu_from(args)?;
+    let out = args.flag_str("out", "BENCH_profile.json");
+
+    let mut rng = Pcg64::new(seed);
+    let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+    let dout: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+    let coeffs = Coeffs::<f32>::randn(groups, 6, 4, &mut rng);
+    let strategy = Strategy::BlockTree { s_block };
+
+    // Bit-identity gate: with probes compiled in, two identical kernel
+    // invocations must still produce bitwise-identical outputs — the
+    // counters may only ever touch their own atomics, never the floats.
+    let y0 = forward(&x, rows, d, &coeffs);
+    let y1 = forward(&x, rows, d, &coeffs);
+    let (dx0, da0, db0) = backward(&x, &dout, rows, d, &coeffs, strategy);
+    let (dx1, da1, db1) = backward(&x, &dout, rows, d, &coeffs, strategy);
+    let bits = |a: &[f32], b: &[f32]| {
+        a.len() == b.len() && a.iter().zip(b).all(|(p, q)| p.to_bits() == q.to_bits())
+    };
+    if !(bits(&y0, &y1) && bits(&dx0, &dx1) && bits(&da0, &da1) && bits(&db0, &db1)) {
+        bail!("bit identity FAIL: probed kernels are not run-to-run deterministic");
+    }
+    println!(
+        "bit identity PASS ({} kernel, {rows}x{d}, {groups} groups, s_block {s_block})",
+        kernel::variant()
+    );
+
+    // Measured traffic: snapshot deltas around timed runs.  Other
+    // threads are idle here, so the delta is this workload's traffic.
+    let fwd_base = probe::snapshot();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(forward(&x, rows, d, &coeffs));
+    }
+    let fwd_secs = t0.elapsed().as_secs_f64() / iters as f64;
+    let fwd = probe::snapshot().delta_since(&fwd_base);
+
+    let bwd_base = probe::snapshot();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(backward(&x, &dout, rows, d, &coeffs, strategy));
+    }
+    let bwd_secs = t0.elapsed().as_secs_f64() / iters as f64;
+    let bwd = probe::snapshot().delta_since(&bwd_base);
+
+    let elems = (iters * rows * d) as f64;
+    let fwd_bpe = fwd.phase_bytes(Phase::Forward) as f64 / elems;
+    let bwd_fused_bpe = bwd.phase_bytes(Phase::Backward) as f64 / elems;
+    let reduce_bpe = bwd.phase_bytes(Phase::Reduce) as f64 / elems;
+    let bwd_bpe = bwd_fused_bpe + reduce_bpe;
+
+    // Analytic prediction from the gpusim kernel models: HBM bytes per
+    // element for the forward kernel and the Algorithm-2 (block-tree)
+    // backward at the same s_block.
+    let dims = RationalDims {
+        batch: rows as u64,
+        seq: 1,
+        d: d as u64,
+        n_groups: groups as u32,
+        m1: 6,
+        n: 4,
+        flop_loops: 1,
+    };
+    let fwd_pred = simulate(&gpu, &RationalFwdKernel::new(dims)).bytes_hbm as f64
+        / dims.elements() as f64;
+    let mut flash = RationalBwdFlashKernel::new(dims);
+    flash.s_block = s_block as u64;
+    let bwd_pred = simulate(&gpu, &flash).bytes_hbm as f64 / dims.elements() as f64;
+    let rel = |measured: f64, predicted: f64| (measured - predicted).abs() / predicted;
+
+    let fwd_ai = dims.fwd_flops_per_elem() as f64 / fwd_bpe.max(f64::MIN_POSITIVE);
+    let bwd_ai = dims.bwd_flops_per_elem() as f64 / bwd_bpe.max(f64::MIN_POSITIVE);
+    println!(
+        "forward : {fwd_bpe:7.2} B/elem measured vs {fwd_pred:7.2} predicted \
+         (rel err {:.3}), AI {fwd_ai:.2} flop/B, {:.1} ms/iter",
+        rel(fwd_bpe, fwd_pred),
+        1e3 * fwd_secs
+    );
+    println!(
+        "backward: {bwd_bpe:7.2} B/elem measured ({bwd_fused_bpe:.2} fused + {reduce_bpe:.2} \
+         reduce) vs {bwd_pred:7.2} predicted (rel err {:.3}), AI {bwd_ai:.2} flop/B, {:.1} ms/iter",
+        rel(bwd_bpe, bwd_pred),
+        1e3 * bwd_secs
+    );
+    // Combined per-phase table for the console (fwd and bwd deltas are
+    // disjoint in phase space, so a plain field-wise sum is the union).
+    let mut total = fwd.clone();
+    for p in 0..Phase::COUNT {
+        for s in 0..Stream::COUNT {
+            total.loads[p][s] += bwd.loads[p][s];
+            total.stores[p][s] += bwd.stores[p][s];
+        }
+    }
+    total.run_flushes += bwd.run_flushes;
+    total.spill_falls += bwd.spill_falls;
+    total.masked_tail_lanes += bwd.masked_tail_lanes;
+    print!("{}", probe_summary(&total));
+
+    // The artifact: per-phase measured traffic with stream breakdowns,
+    // the gpusim prediction, and the relative error CI gates on.
+    let streams_json = |snap: &probe::Snapshot, p: Phase| {
+        Json::Obj(
+            Stream::ALL
+                .iter()
+                .map(|&s| {
+                    (
+                        s.name().to_string(),
+                        Json::Obj(vec![
+                            ("loaded".to_string(), Json::Int(snap.loaded(p, s) as i64)),
+                            ("stored".to_string(), Json::Int(snap.stored(p, s) as i64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    };
+    let phase_json = |name: &str, snap: &probe::Snapshot, p: Phase, secs: f64, bpe: f64, ai: f64| {
+        (
+            name.to_string(),
+            Json::Obj(vec![
+                ("secs_per_iter".to_string(), Json::Num(secs)),
+                ("bytes".to_string(), Json::Int(snap.phase_bytes(p) as i64)),
+                ("bytes_per_elem".to_string(), Json::Num(bpe)),
+                ("arithmetic_intensity".to_string(), Json::Num(ai)),
+                ("streams".to_string(), streams_json(snap, p)),
+            ]),
+        )
+    };
+    let pvm = |predicted: f64, measured: f64| {
+        Json::Obj(vec![
+            ("predicted_bytes_per_elem".to_string(), Json::Num(predicted)),
+            ("measured_bytes_per_elem".to_string(), Json::Num(measured)),
+            ("rel_error".to_string(), Json::Num(rel(measured, predicted))),
+        ])
+    };
+    let json = Json::Obj(vec![
+        ("schema".to_string(), Json::Str("flashkat-profile-v1".to_string())),
+        (
+            "config".to_string(),
+            Json::Obj(vec![
+                ("rows".to_string(), Json::Int(rows as i64)),
+                ("d".to_string(), Json::Int(d as i64)),
+                ("groups".to_string(), Json::Int(groups as i64)),
+                ("s_block".to_string(), Json::Int(s_block as i64)),
+                ("iters".to_string(), Json::Int(iters as i64)),
+                ("seed".to_string(), Json::Int(seed as i64)),
+                ("gpu".to_string(), Json::Str(gpu_name)),
+                ("variant".to_string(), Json::Str(kernel::variant().to_string())),
+            ]),
+        ),
+        ("bit_identity".to_string(), Json::Str("PASS".to_string())),
+        (
+            "phases".to_string(),
+            Json::Obj(vec![
+                phase_json("forward", &fwd, Phase::Forward, fwd_secs, fwd_bpe, fwd_ai),
+                phase_json(
+                    "backward",
+                    &bwd,
+                    Phase::Backward,
+                    bwd_secs,
+                    bwd_fused_bpe,
+                    dims.bwd_flops_per_elem() as f64 / bwd_fused_bpe.max(f64::MIN_POSITIVE),
+                ),
+                phase_json("reduce", &bwd, Phase::Reduce, 0.0, reduce_bpe, 0.0),
+            ]),
+        ),
+        (
+            "events".to_string(),
+            Json::Obj(vec![
+                ("run_flushes".to_string(), Json::Int(total.run_flushes as i64)),
+                ("spill_falls".to_string(), Json::Int(total.spill_falls as i64)),
+                ("masked_tail_lanes".to_string(), Json::Int(total.masked_tail_lanes as i64)),
+            ]),
+        ),
+        (
+            "predicted_vs_measured".to_string(),
+            Json::Obj(vec![
+                ("forward".to_string(), pvm(fwd_pred, fwd_bpe)),
+                ("backward".to_string(), pvm(bwd_pred, bwd_bpe)),
+            ]),
+        ),
+    ]);
+    std::fs::write(out, json.to_string()).with_context(|| format!("writing {out}"))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 /// `--models name:d[:groups],...` (or the single `--model`/`--d`/
 /// `--groups` flags) → the rational-model registry to serve.
 fn serve_model_specs(args: &Args) -> Result<Vec<flashkat::serve::ModelSpec>> {
@@ -274,6 +500,53 @@ fn write_trace(
 /// captures Perfetto traces (per leg for the transport modes) and an
 /// in-process traced-vs-untraced overhead measurement.
 fn cmd_serve_bench(args: &Args) -> Result<()> {
+    // --profile wraps the whole bench (any leg combination) in a kernel
+    // traffic-probe snapshot delta and prints the per-phase byte totals
+    // after the run.  The counters are no-ops without the feature, so a
+    // default build must refuse the flag rather than print zeros.
+    let profile = args.flag_bool("profile");
+    if profile && !flashkat::probe::Snapshot::enabled() {
+        bail!(
+            "--profile needs a build with --features probe \
+             (the default build compiles the kernel traffic counters to no-ops)"
+        );
+    }
+    let base = profile.then(flashkat::probe::snapshot);
+    cmd_serve_bench_inner(args)?;
+    if let Some(base) = base {
+        print!("{}", probe_summary(&flashkat::probe::snapshot().delta_since(&base)));
+    }
+    Ok(())
+}
+
+/// Human-readable per-phase table of a probe snapshot delta, shared by
+/// `serve-bench --profile` and `profile-kernel`.
+fn probe_summary(d: &flashkat::probe::Snapshot) -> String {
+    use flashkat::probe::{Phase, Stream};
+    let mut out = String::new();
+    out.push_str("kernel traffic probes:\n");
+    for p in Phase::ALL {
+        let streams: Vec<String> = Stream::ALL
+            .iter()
+            .filter_map(|&s| {
+                let (l, st) = (d.loaded(p, s), d.stored(p, s));
+                (l + st > 0).then(|| format!("{s} {}B", l + st))
+            })
+            .collect();
+        out.push_str(&format!(
+            "  {p:<8} {:>14} B  ({})\n",
+            d.phase_bytes(p),
+            if streams.is_empty() { "idle".to_string() } else { streams.join(", ") }
+        ));
+    }
+    out.push_str(&format!(
+        "  events: {} run flushes, {} spill falls, {} masked tail lanes, {} threads\n",
+        d.run_flushes, d.spill_falls, d.masked_tail_lanes, d.threads
+    ));
+    out
+}
+
+fn cmd_serve_bench_inner(args: &Args) -> Result<()> {
     use flashkat::serve::{loadgen, Arrival, BatchPolicy, LoadConfig, ModelExecutor, ModelSpec};
     use flashkat::trace::TraceCollector;
     use flashkat::util::json::Json;
@@ -831,21 +1104,62 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
 /// (exit 1) on an empty or slice-unbalanced trace — the machine-checkable
 /// "this trace will load in ui.perfetto.dev" assertion CI runs.
 fn cmd_trace_stat(args: &Args) -> Result<()> {
-    let path = args
-        .positional
-        .first()
-        .ok_or_else(|| anyhow!("usage: flashkat trace-stat PATH"))?;
-    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    use flashkat::util::json::Json;
+
+    // The flag grammar greedily binds a following bare token to the
+    // flag, so `trace-stat --json PATH` parses as `json=PATH` with no
+    // positional; reclaim that value as the path.  `PATH --json` and
+    // `--json=true PATH` hit the ordinary cases.
+    let (as_json, path) = match (args.flag("json"), args.positional.first()) {
+        (Some(_), Some(p)) => (true, p.clone()),
+        (Some(v), None) if v != "true" => (true, v.to_string()),
+        (None, Some(p)) => (false, p.clone()),
+        _ => bail!("usage: flashkat trace-stat [--json] PATH"),
+    };
+    let bytes = std::fs::read(&path).with_context(|| format!("reading {path}"))?;
     let stat = flashkat::trace::stat(&bytes).map_err(|e| anyhow!("{path}: {e}"))?;
-    println!(
-        "{path}: {} packets ({} track descriptors, {} slice begins, {} slice ends, {} instants) in {} bytes",
-        stat.packets,
-        stat.track_descriptors,
-        stat.slice_begins,
-        stat.slice_ends,
-        stat.instants,
-        bytes.len()
-    );
+    let tracks = flashkat::trace::stat_by_track(&bytes).map_err(|e| anyhow!("{path}: {e}"))?;
+    if as_json {
+        let json = Json::Obj(vec![
+            ("path".to_string(), Json::Str(path.clone())),
+            ("bytes".to_string(), Json::Int(bytes.len() as i64)),
+            ("packets".to_string(), Json::Int(stat.packets as i64)),
+            ("track_descriptors".to_string(), Json::Int(stat.track_descriptors as i64)),
+            ("slice_begins".to_string(), Json::Int(stat.slice_begins as i64)),
+            ("slice_ends".to_string(), Json::Int(stat.slice_ends as i64)),
+            ("instants".to_string(), Json::Int(stat.instants as i64)),
+            ("counters".to_string(), Json::Int(stat.counters as i64)),
+            (
+                "tracks".to_string(),
+                Json::Arr(
+                    tracks
+                        .iter()
+                        .map(|(name, events)| {
+                            Json::Obj(vec![
+                                ("name".to_string(), Json::Str(name.clone())),
+                                ("events".to_string(), Json::Int(*events as i64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        println!("{}", json.to_string());
+    } else {
+        println!(
+            "{path}: {} packets ({} track descriptors, {} slice begins, {} slice ends, {} instants, {} counters) in {} bytes",
+            stat.packets,
+            stat.track_descriptors,
+            stat.slice_begins,
+            stat.slice_ends,
+            stat.instants,
+            stat.counters,
+            bytes.len()
+        );
+        for (name, events) in &tracks {
+            println!("  track {name:?}: {events} events");
+        }
+    }
     if stat.packets == 0 {
         bail!("{path}: empty trace (0 packets)");
     }
@@ -941,6 +1255,7 @@ fn main() -> Result<()> {
         "report" => cmd_report(&args),
         "train" => cmd_train(&args),
         "profile" => cmd_profile(&args),
+        "profile-kernel" => cmd_profile_kernel(&args),
         "serve-bench" => cmd_serve_bench(&args),
         "serve-http" => cmd_serve_http(&args),
         "serve-wire" => cmd_serve_wire(&args),
@@ -953,10 +1268,15 @@ fn main() -> Result<()> {
         "" | "help" | "--help" => {
             println!(
                 "flashkat — FlashKAT reproduction (see DESIGN.md)\n\n\
-                 usage: flashkat <report|train|profile|serve-bench|serve-http|serve-wire|trace-stat|selfcheck|flops> [flags]\n\
+                 usage: flashkat <report|train|profile|profile-kernel|serve-bench|serve-http|serve-wire|trace-stat|selfcheck|flops> [flags]\n\
                  \x20 report <fig1|table1|table2|fig2|fig3|table3|table4|table5|configs|all>\n\
                  \x20 train  [--model kat_micro|vit_micro|kat_micro_katbwd] [--steps N] [--ckpt PATH]\n\
                  \x20 profile [--kernel fwd|kat|flash] [--loops N] [--gpu 4060ti|h200]\n\
+                 \x20 profile-kernel [--rows N] [--d N] [--groups N] [--s-block N] [--iters N]\n\
+                 \x20             [--seed N] [--gpu 4060ti|h200] [--out PATH]\n\
+                 \x20             (host-kernel roofline: bit-identity gate, per-phase measured\n\
+                 \x20              bytes/element vs the gpusim prediction; needs --features probe;\n\
+                 \x20              writes BENCH_profile.json)\n\
                  \x20 serve-bench [--requests N] [--concurrency C] [--max-batch B] [--deadline-us D]\n\
                  \x20             [--queue-depth N] [--no-eager] [--open-loop --rate RPS]\n\
                  \x20             [--model NAME] [--models name:d[:groups],...] [--d N] [--groups N]\n\
@@ -971,6 +1291,8 @@ fn main() -> Result<()> {
                  \x20             [--dup-frac F]  (fraction of requests replaying a prior request's\n\
                  \x20              exact bytes; defaults 0.5 with --cache-bytes, else 0)\n\
                  \x20             [--seed N] [--out PATH] [--trace-out PATH]\n\
+                 \x20             [--profile]  (print kernel traffic-probe totals after the run;\n\
+                 \x20              needs a build with --features probe)\n\
                  \x20             (micro-batching inference bench; writes BENCH_serve.json;\n\
                  \x20              --trace-out also runs a traced leg per transport and writes\n\
                  \x20              Perfetto traces next to the bench JSON)\n\
@@ -988,8 +1310,10 @@ fn main() -> Result<()> {
                  \x20             [--trace-out PATH]  (write a Perfetto trace on drain)\n\
                  \x20             (flashwire length-prefixed binary frontend, DESIGN.md \u{a7}13;\n\
                  \x20              runs until SIGTERM, then drains)\n\
-                 \x20 trace-stat PATH   -- scan a Perfetto trace written by --trace-out and\n\
-                 \x20             print packet/slice counts (non-empty + balanced, else exit 1)\n\
+                 \x20 trace-stat [--json] PATH   -- scan a Perfetto trace written by --trace-out\n\
+                 \x20             and print packet/slice/counter counts plus per-track event\n\
+                 \x20             counts (non-empty + balanced, else exit 1; --json emits one\n\
+                 \x20             machine-readable object)\n\
                  \x20 selfcheck [--artifacts DIR]"
             );
             Ok(())

@@ -290,6 +290,56 @@ fn render_metrics(server: &Server, metrics: &HttpMetrics) -> String {
             m.stats.busy_secs
         ));
     }
+    // Payload bytes moved through the executors (successful batches
+    // only): the serving-level counterpart of the kernel traffic probes
+    // (DESIGN.md §17), split by direction.
+    out.push_str(
+        "# HELP flashkat_traffic_bytes_total executor payload bytes per model and direction\n\
+         # TYPE flashkat_traffic_bytes_total counter\n",
+    );
+    for m in &stats.per_model {
+        for (stream, v) in [("in", m.stats.bytes_in), ("out", m.stats.bytes_out)] {
+            out.push_str(&format!(
+                "flashkat_traffic_bytes_total{{model=\"{}\",stream=\"{stream}\"}} {v}\n",
+                prom_escape(&m.name)
+            ));
+        }
+    }
+    // Per-request latency histograms from the log-scaled LogHist
+    // accumulators: each occupied bucket's upper bound becomes a
+    // cumulative `le` bucket (Prometheus histogram convention), closed
+    // by the mandatory `+Inf` bucket, `_sum`, and `_count`.
+    type HistPick = fn(&crate::serve::ExecStats) -> &crate::util::stats::LogHist;
+    let hists: [(&str, &str, HistPick); 2] = [
+        (
+            "flashkat_queue_wait_us",
+            "per-request queue wait in microseconds (admission to batch release)",
+            |s| &s.queue_wait,
+        ),
+        (
+            "flashkat_exec_us",
+            "per-request executor time in microseconds (the batch's run duration)",
+            |s| &s.exec,
+        ),
+    ];
+    for (metric, help, pick) in hists {
+        out.push_str(&format!("# HELP {metric} {help}\n# TYPE {metric} histogram\n"));
+        for m in &stats.per_model {
+            let h = pick(&m.stats);
+            let name = prom_escape(&m.name);
+            for (le, cum) in h.cumulative_buckets() {
+                out.push_str(&format!(
+                    "{metric}_bucket{{model=\"{name}\",le=\"{le}\"}} {cum}\n"
+                ));
+            }
+            out.push_str(&format!(
+                "{metric}_bucket{{model=\"{name}\",le=\"+Inf\"}} {}\n",
+                h.count()
+            ));
+            out.push_str(&format!("{metric}_sum{{model=\"{name}\"}} {}\n", h.sum()));
+            out.push_str(&format!("{metric}_count{{model=\"{name}\"}} {}\n", h.count()));
+        }
+    }
     out.push_str("# TYPE flashkat_serve_peak_queued gauge\n");
     for (s, peak) in stats.shard_peaks.iter().enumerate() {
         out.push_str(&format!("flashkat_serve_peak_queued{{shard=\"{s}\"}} {peak}\n"));
@@ -325,10 +375,21 @@ fn render_metrics(server: &Server, metrics: &HttpMetrics) -> String {
     }
     // Spans the trace collector discarded at ring capacity; nonzero
     // means any exported trace is incomplete.  0 on an untraced server.
+    // With a tracer attached, a per-track split follows the total so
+    // the saturated ring (slice or counter) is identifiable from the
+    // scrape alone.
     out.push_str(&format!(
         "# TYPE flashkat_trace_dropped_total counter\nflashkat_trace_dropped_total {}\n",
         server.tracer().map_or(0, |t| t.dropped())
     ));
+    if let Some(t) = server.tracer() {
+        for (track, dropped) in t.dropped_by_track() {
+            out.push_str(&format!(
+                "flashkat_trace_dropped_total{{track=\"{}\"}} {dropped}\n",
+                prom_escape(&track)
+            ));
+        }
+    }
     out
 }
 
@@ -535,6 +596,64 @@ mod tests {
         assert!(text.contains("flashkat_cache_coalesced_total{model=\"grkan\"} 0"), "{text}");
         assert!(text.contains("flashkat_cache_evictions_total{model=\"grkan\"} 0"), "{text}");
         assert!(text.contains("flashkat_cache_bytes "), "{text}");
+    }
+
+    /// After serving, the scrape exports the per-model traffic counters
+    /// and latency histograms; on a traced server the dropped total also
+    /// splits per track (slice and counter rings).
+    #[test]
+    fn metrics_export_traffic_and_latency_histograms() {
+        let (server, _) = test_server();
+        let ok_body = format!("{{\"x\":[{}],\"rows\":1}}", vec!["0"; D].join(","));
+        assert_eq!(post(&server, "/v1/models/grkan/infer", &ok_body).status, 200);
+        let text = String::from_utf8(get(&server, "/metrics", &HttpMetrics::new()).body).unwrap();
+        let bytes = D * 4;
+        assert!(
+            text.contains(&format!(
+                "flashkat_traffic_bytes_total{{model=\"grkan\",stream=\"in\"}} {bytes}"
+            )),
+            "{text}"
+        );
+        assert!(
+            text.contains(&format!(
+                "flashkat_traffic_bytes_total{{model=\"grkan\",stream=\"out\"}} {bytes}"
+            )),
+            "{text}"
+        );
+        for metric in ["flashkat_queue_wait_us", "flashkat_exec_us"] {
+            assert!(text.contains(&format!("# TYPE {metric} histogram")), "{text}");
+            assert!(
+                text.contains(&format!("{metric}_bucket{{model=\"grkan\",le=\"+Inf\"}} 1")),
+                "{text}"
+            );
+            assert!(text.contains(&format!("{metric}_count{{model=\"grkan\"}} 1")), "{text}");
+            assert!(text.contains(&format!("{metric}_sum{{model=\"grkan\"}}")), "{text}");
+        }
+        // Untraced server: the dropped total has no per-track split.
+        assert!(!text.contains("flashkat_trace_dropped_total{track="), "{text}");
+
+        // Traced server: per-track dropped lines appear (all zero here),
+        // covering both slice and counter tracks.
+        let mut rng = Pcg64::new(76);
+        let coeffs = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+        let tracer = std::sync::Arc::new(crate::trace::TraceCollector::new());
+        let server = Server::start_sharded_traced(
+            vec![Box::new(RationalExecutor::new("grkan", D, coeffs).unwrap())],
+            BatchPolicy::default(),
+            1,
+            Some(tracer),
+        )
+        .unwrap();
+        let text = String::from_utf8(get(&server, "/metrics", &HttpMetrics::new()).body).unwrap();
+        assert!(text.contains("flashkat_trace_dropped_total 0"), "{text}");
+        assert!(
+            text.contains("flashkat_trace_dropped_total{track=\"shard 0\"} 0"),
+            "{text}"
+        );
+        assert!(
+            text.contains("flashkat_trace_dropped_total{track=\"shard 0 queue\"} 0"),
+            "{text}"
+        );
     }
 
     #[test]

@@ -1,0 +1,397 @@
+//! Kernel memory-traffic probes (DESIGN.md §17).
+//!
+//! FlashKAT's diagnosis ran on *traffic*, not FLOPs: the KAT backward
+//! was 123x slower than its FLOP-equivalent MLP because of memory
+//! stalls that only showed up once bytes moved per kernel phase were
+//! measured.  This module gives the host kernels the same instrument:
+//! per-thread counters of bytes loaded/stored per logical stream and
+//! kernel phase, plus structural events (accumulator run-flushes,
+//! spill-path falls, SIMD masked-tail lanes).
+//!
+//! Everything is behind the `probe` cargo feature.  With the feature
+//! off, every `on_*` function below is an empty `#[inline(always)]`
+//! no-op — the call sites in `rational/` compile to nothing, so the
+//! default build's kernels are byte-for-byte the unprobed kernels.
+//! With the feature on, counting touches only thread-local relaxed
+//! atomics, never the float data, so kernel outputs stay bit-identical
+//! (gated in `tests/kernel_parity.rs`).
+//!
+//! Counters are process-global: each worker thread lazily registers an
+//! atomic counter block in a global registry on first probe hit, and
+//! [`snapshot`] sums across all of them.  `cargo test` runs tests
+//! concurrently in one process, so tests assert monotonic deltas, not
+//! absolute values.
+
+use std::fmt;
+
+/// Kernel phase a byte of traffic is attributed to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// `rational::forward_into` segment evaluation.
+    Forward,
+    /// Fused backward tile pass (dx + per-tile dA/dB partials).
+    Backward,
+    /// Cross-tile partial reduction into the final dA/dB rows.
+    Reduce,
+}
+
+impl Phase {
+    pub const COUNT: usize = 3;
+    pub const ALL: [Phase; Phase::COUNT] = [Phase::Forward, Phase::Backward, Phase::Reduce];
+
+    pub fn index(self) -> usize {
+        match self {
+            Phase::Forward => 0,
+            Phase::Backward => 1,
+            Phase::Reduce => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Forward => "forward",
+            Phase::Backward => "backward",
+            Phase::Reduce => "reduce",
+        }
+    }
+}
+
+impl fmt::Display for Phase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Logical data stream a byte of traffic belongs to.  "Bytes" means
+/// the payload the kernel logically touches at each access site
+/// (`len * size_of::<T>()`), counted once per touch — the host analogue
+/// of the per-warp load/store bytes `gpusim::kernels` budgets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stream {
+    /// Input activations.
+    X,
+    /// Upstream gradient.
+    Dout,
+    /// Rational coefficient rows (a, b).
+    Coeffs,
+    /// Forward output.
+    Y,
+    /// Input gradient.
+    Dx,
+    /// dA/dB accumulator partials (tile-local and cross-tile).
+    Partials,
+}
+
+impl Stream {
+    pub const COUNT: usize = 6;
+    pub const ALL: [Stream; Stream::COUNT] =
+        [Stream::X, Stream::Dout, Stream::Coeffs, Stream::Y, Stream::Dx, Stream::Partials];
+
+    pub fn index(self) -> usize {
+        match self {
+            Stream::X => 0,
+            Stream::Dout => 1,
+            Stream::Coeffs => 2,
+            Stream::Y => 3,
+            Stream::Dx => 4,
+            Stream::Partials => 5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stream::X => "x",
+            Stream::Dout => "dout",
+            Stream::Coeffs => "coeffs",
+            Stream::Y => "y",
+            Stream::Dx => "dx",
+            Stream::Partials => "partials",
+        }
+    }
+}
+
+impl fmt::Display for Stream {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Point-in-time sum of every thread's counters.  With the `probe`
+/// feature off this is always [`Snapshot::default`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Snapshot {
+    /// Bytes loaded, `[phase][stream]`.
+    pub loads: [[u64; Stream::COUNT]; Phase::COUNT],
+    /// Bytes stored, `[phase][stream]`.
+    pub stores: [[u64; Stream::COUNT]; Phase::COUNT],
+    /// TileAcc / SpillAcc / SIMD accumulator run flushes.
+    pub run_flushes: u64,
+    /// Times `SpillAcc` was constructed (coefficient widths beyond the
+    /// register-resident tile fell back to the heap twin).
+    pub spill_falls: u64,
+    /// Dead SIMD lanes across all masked-tail segment iterations.
+    pub masked_tail_lanes: u64,
+    /// Threads that have recorded at least one probe event.
+    pub threads: usize,
+}
+
+impl Snapshot {
+    /// Whether the binary was built with probes compiled in.
+    pub fn enabled() -> bool {
+        cfg!(feature = "probe")
+    }
+
+    pub fn loaded(&self, p: Phase, s: Stream) -> u64 {
+        self.loads[p.index()][s.index()]
+    }
+
+    pub fn stored(&self, p: Phase, s: Stream) -> u64 {
+        self.stores[p.index()][s.index()]
+    }
+
+    /// Total bytes (loads + stores) attributed to one phase.
+    pub fn phase_bytes(&self, p: Phase) -> u64 {
+        let i = p.index();
+        self.loads[i].iter().chain(self.stores[i].iter()).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        Phase::ALL.iter().map(|&p| self.phase_bytes(p)).sum()
+    }
+
+    /// Element-wise `self - base` (saturating): the traffic recorded
+    /// between two snapshots.
+    pub fn delta_since(&self, base: &Snapshot) -> Snapshot {
+        let mut d = self.clone();
+        for p in 0..Phase::COUNT {
+            for s in 0..Stream::COUNT {
+                d.loads[p][s] = d.loads[p][s].saturating_sub(base.loads[p][s]);
+                d.stores[p][s] = d.stores[p][s].saturating_sub(base.stores[p][s]);
+            }
+        }
+        d.run_flushes = d.run_flushes.saturating_sub(base.run_flushes);
+        d.spill_falls = d.spill_falls.saturating_sub(base.spill_falls);
+        d.masked_tail_lanes = d.masked_tail_lanes.saturating_sub(base.masked_tail_lanes);
+        d
+    }
+}
+
+// ---------------------------------------------------------------------------
+// probes ON: thread-local relaxed atomics, lazily registered globally.
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "probe")]
+mod imp {
+    use super::{Phase, Snapshot, Stream};
+    use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+    use std::sync::{Arc, Mutex, OnceLock};
+
+    // `const` item so array repeat is allowed for a non-Copy type.
+    #[allow(clippy::declare_interior_mutable_const)]
+    const ZERO: AtomicU64 = AtomicU64::new(0);
+
+    pub struct ThreadCounters {
+        pub loads: [[AtomicU64; Stream::COUNT]; Phase::COUNT],
+        pub stores: [[AtomicU64; Stream::COUNT]; Phase::COUNT],
+        pub run_flushes: AtomicU64,
+        pub spill_falls: AtomicU64,
+        pub masked_tail_lanes: AtomicU64,
+    }
+
+    impl ThreadCounters {
+        fn new() -> Self {
+            Self {
+                loads: [[ZERO; Stream::COUNT]; Phase::COUNT],
+                stores: [[ZERO; Stream::COUNT]; Phase::COUNT],
+                run_flushes: ZERO,
+                spill_falls: ZERO,
+                masked_tail_lanes: ZERO,
+            }
+        }
+    }
+
+    fn registry() -> &'static Mutex<Vec<Arc<ThreadCounters>>> {
+        static REGISTRY: OnceLock<Mutex<Vec<Arc<ThreadCounters>>>> = OnceLock::new();
+        REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+    }
+
+    thread_local! {
+        static LOCAL: Arc<ThreadCounters> = {
+            let c = Arc::new(ThreadCounters::new());
+            registry().lock().expect("probe registry poisoned").push(c.clone());
+            c
+        };
+    }
+
+    #[inline]
+    pub fn with_local<R>(f: impl FnOnce(&ThreadCounters) -> R) -> R {
+        LOCAL.with(|c| f(c))
+    }
+
+    pub fn snapshot() -> Snapshot {
+        let reg = registry().lock().expect("probe registry poisoned");
+        let mut snap = Snapshot { threads: reg.len(), ..Snapshot::default() };
+        for t in reg.iter() {
+            for p in 0..Phase::COUNT {
+                for s in 0..Stream::COUNT {
+                    snap.loads[p][s] += t.loads[p][s].load(Relaxed);
+                    snap.stores[p][s] += t.stores[p][s].load(Relaxed);
+                }
+            }
+            snap.run_flushes += t.run_flushes.load(Relaxed);
+            snap.spill_falls += t.spill_falls.load(Relaxed);
+            snap.masked_tail_lanes += t.masked_tail_lanes.load(Relaxed);
+        }
+        snap
+    }
+
+    pub fn reset() {
+        let reg = registry().lock().expect("probe registry poisoned");
+        for t in reg.iter() {
+            for p in 0..Phase::COUNT {
+                for s in 0..Stream::COUNT {
+                    t.loads[p][s].store(0, Relaxed);
+                    t.stores[p][s].store(0, Relaxed);
+                }
+            }
+            t.run_flushes.store(0, Relaxed);
+            t.spill_falls.store(0, Relaxed);
+            t.masked_tail_lanes.store(0, Relaxed);
+        }
+    }
+}
+
+#[cfg(feature = "probe")]
+#[inline]
+pub fn on_load(phase: Phase, stream: Stream, bytes: u64) {
+    use std::sync::atomic::Ordering::Relaxed;
+    imp::with_local(|c| c.loads[phase.index()][stream.index()].fetch_add(bytes, Relaxed));
+}
+
+#[cfg(feature = "probe")]
+#[inline]
+pub fn on_store(phase: Phase, stream: Stream, bytes: u64) {
+    use std::sync::atomic::Ordering::Relaxed;
+    imp::with_local(|c| c.stores[phase.index()][stream.index()].fetch_add(bytes, Relaxed));
+}
+
+#[cfg(feature = "probe")]
+#[inline]
+pub fn on_run_flush() {
+    use std::sync::atomic::Ordering::Relaxed;
+    imp::with_local(|c| c.run_flushes.fetch_add(1, Relaxed));
+}
+
+#[cfg(feature = "probe")]
+#[inline]
+pub fn on_spill_fall() {
+    use std::sync::atomic::Ordering::Relaxed;
+    imp::with_local(|c| c.spill_falls.fetch_add(1, Relaxed));
+}
+
+#[cfg(feature = "probe")]
+#[inline]
+pub fn on_masked_tail(lanes: u64) {
+    use std::sync::atomic::Ordering::Relaxed;
+    imp::with_local(|c| c.masked_tail_lanes.fetch_add(lanes, Relaxed));
+}
+
+/// Sum every registered thread's counters.
+#[cfg(feature = "probe")]
+pub fn snapshot() -> Snapshot {
+    imp::snapshot()
+}
+
+/// Zero every registered thread's counters.  Other threads may be
+/// recording concurrently; use snapshot deltas when that matters.
+#[cfg(feature = "probe")]
+pub fn reset() {
+    imp::reset()
+}
+
+// ---------------------------------------------------------------------------
+// probes OFF: every hook is an empty inlined no-op.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "probe"))]
+#[inline(always)]
+pub fn on_load(_phase: Phase, _stream: Stream, _bytes: u64) {}
+
+#[cfg(not(feature = "probe"))]
+#[inline(always)]
+pub fn on_store(_phase: Phase, _stream: Stream, _bytes: u64) {}
+
+#[cfg(not(feature = "probe"))]
+#[inline(always)]
+pub fn on_run_flush() {}
+
+#[cfg(not(feature = "probe"))]
+#[inline(always)]
+pub fn on_spill_fall() {}
+
+#[cfg(not(feature = "probe"))]
+#[inline(always)]
+pub fn on_masked_tail(_lanes: u64) {}
+
+#[cfg(not(feature = "probe"))]
+pub fn snapshot() -> Snapshot {
+    Snapshot::default()
+}
+
+#[cfg(not(feature = "probe"))]
+pub fn reset() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_default_is_zero() {
+        let s = Snapshot::default();
+        assert_eq!(s.total_bytes(), 0);
+        assert_eq!(s.phase_bytes(Phase::Forward), 0);
+        assert_eq!(s.delta_since(&Snapshot::default()), Snapshot::default());
+    }
+
+    #[test]
+    fn phase_and_stream_indices_cover_all() {
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+            assert!(!p.name().is_empty());
+        }
+        for (i, s) in Stream::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert!(!s.name().is_empty());
+        }
+    }
+
+    #[cfg(feature = "probe")]
+    #[test]
+    fn counters_accumulate_and_delta() {
+        // Other tests may be recording concurrently on other threads,
+        // so assert monotone growth of this thread's contribution only.
+        let base = snapshot();
+        on_load(Phase::Forward, Stream::X, 128);
+        on_store(Phase::Forward, Stream::Y, 64);
+        on_run_flush();
+        on_masked_tail(3);
+        let d = snapshot().delta_since(&base);
+        assert!(d.loaded(Phase::Forward, Stream::X) >= 128);
+        assert!(d.stored(Phase::Forward, Stream::Y) >= 64);
+        assert!(d.run_flushes >= 1);
+        assert!(d.masked_tail_lanes >= 3);
+        assert!(snapshot().threads >= 1);
+    }
+
+    #[cfg(not(feature = "probe"))]
+    #[test]
+    fn probes_off_compile_to_nothing() {
+        on_load(Phase::Forward, Stream::X, 128);
+        on_store(Phase::Backward, Stream::Dx, 64);
+        on_run_flush();
+        on_spill_fall();
+        on_masked_tail(7);
+        assert_eq!(snapshot(), Snapshot::default());
+        assert!(!Snapshot::enabled());
+    }
+}

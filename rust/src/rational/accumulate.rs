@@ -81,10 +81,26 @@ fn backward_sequential<T: Float>(
         db_heap = vec![T::ZERO; n];
         (&mut da_heap, &mut db_heap)
     };
+    let elem = std::mem::size_of::<T>() as u64;
     for r in 0..rows {
         for g in 0..c.n_groups {
             let a = c.a_row(g);
             let b = c.b_row(g);
+            // Traffic probes, aggregated per (row, group) segment: x and
+            // dout stream in once, dx streams out once, coefficients are
+            // fetched once — and, Algorithm-1 style, every element does a
+            // read-modify-write of all (m1+n) global partials.
+            {
+                use crate::probe::{on_load, on_store, Phase, Stream};
+                let seg = d_g as u64 * elem;
+                let coef = (m1 + n) as u64 * elem;
+                on_load(Phase::Backward, Stream::X, seg);
+                on_load(Phase::Backward, Stream::Dout, seg);
+                on_load(Phase::Backward, Stream::Coeffs, coef);
+                on_store(Phase::Backward, Stream::Dx, seg);
+                on_load(Phase::Backward, Stream::Partials, coef * d_g as u64);
+                on_store(Phase::Backward, Stream::Partials, coef * d_g as u64);
+            }
             for k in 0..d_g {
                 let idx = r * d + g * d_g + k;
                 dx[idx] = backward_elem(x[idx], dout[idx], a, b, da_e, db_e);
@@ -198,6 +214,22 @@ fn backward_block<T: Float>(
         let b = c.b_row(g);
         let r0 = blk * s_block;
         let r1 = (r0 + s_block).min(rows);
+        // Traffic probes, aggregated per (block, group) tile: each tile
+        // streams its x/dout spans once, writes its dx spans once,
+        // fetches the coefficients once, and emits one set of (m1+n)
+        // partials — Algorithm 2's per-block global add.  This sits
+        // above the `Float::Acc` seam, so it covers the scalar TileAcc
+        // and the SIMD twin alike.
+        {
+            use crate::probe::{on_load, on_store, Phase, Stream};
+            let tile = ((r1 - r0) * d_g) as u64 * std::mem::size_of::<T>() as u64;
+            let coef = ((m1 + n) * std::mem::size_of::<T>()) as u64;
+            on_load(Phase::Backward, Stream::X, tile);
+            on_load(Phase::Backward, Stream::Dout, tile);
+            on_load(Phase::Backward, Stream::Coeffs, coef);
+            on_store(Phase::Backward, Stream::Dx, tile);
+            on_store(Phase::Backward, Stream::Partials, coef);
+        }
         if use_registers {
             // The accumulator is the type's `Float::Acc`: scalar TileAcc
             // by default, the SIMD twin for f32/f64 under the `simd`
@@ -234,7 +266,12 @@ fn backward_block<T: Float>(
     let mut db = vec![T::ZERO; n_g * n];
     let mut ordered: Vec<&Partial<T>> = partials.iter().collect();
     ordered.sort_by_key(|p| (p.g, p.blk));
+    let coef = ((m1 + n) * std::mem::size_of::<T>()) as u64;
     for p in ordered {
+        // Reduce-phase traffic: each per-block partial is read once and
+        // read-modify-written into the global dA/dB rows.
+        crate::probe::on_load(crate::probe::Phase::Reduce, crate::probe::Stream::Partials, coef);
+        crate::probe::on_store(crate::probe::Phase::Reduce, crate::probe::Stream::Partials, coef);
         for i in 0..m1 {
             da[p.g * m1 + i] = da[p.g * m1 + i].add_r(p.da[i]);
         }

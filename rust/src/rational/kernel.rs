@@ -200,6 +200,7 @@ impl<T: Float> TileAcc<T> {
 
     #[inline]
     fn flush_run(&mut self) {
+        crate::probe::on_run_flush();
         for i in 0..self.m1 {
             self.tree_a[i].push(self.seq_a[i]);
             self.seq_a[i] = T::ZERO;
@@ -323,6 +324,7 @@ pub struct SpillAcc<T: Float> {
 
 impl<T: Float> SpillAcc<T> {
     pub fn new(m1: usize, n: usize, tree: bool) -> Self {
+        crate::probe::on_spill_fall();
         Self {
             tree,
             run: 0,
@@ -354,6 +356,7 @@ impl<T: Float> SpillAcc<T> {
     }
 
     fn flush_run(&mut self) {
+        crate::probe::on_run_flush();
         for i in 0..self.seq_a.len() {
             self.tree_a[i].push(self.seq_a[i]);
             self.seq_a[i] = T::ZERO;

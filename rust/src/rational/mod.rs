@@ -423,13 +423,22 @@ pub fn forward_into<T: Float>(x: &[T], rows: usize, d: usize, c: &Coeffs<T>, out
     // d) is strictly stronger than lane alignment — no parallel split can
     // bisect a tile, for any lane width.
     crate::util::parallel::par_chunks_mut_aligned(out, d, d, |offset, chunk| {
+        use crate::probe::{on_load, on_store, Phase, Stream};
+        let elem = std::mem::size_of::<T>() as u64;
         for (row_i, out_row) in chunk.chunks_mut(d).enumerate() {
             let r = offset / d + row_i;
             let row = &x[r * d..(r + 1) * d];
+            // Traffic probes count what this row's evaluation logically
+            // touches: the x row once, each group's coefficient rows
+            // once, the output row once (no-ops unless `--features
+            // probe`; never read or written by the kernel math).
+            on_load(Phase::Forward, Stream::X, d as u64 * elem);
+            on_load(Phase::Forward, Stream::Coeffs, (c.n_groups * (c.m1 + c.n)) as u64 * elem);
             for g in 0..c.n_groups {
                 let s = g * d_g;
                 T::forward_seg_fast(&row[s..s + d_g], &mut out_row[s..s + d_g], c.a_row(g), c.b_row(g));
             }
+            on_store(Phase::Forward, Stream::Y, d as u64 * elem);
         }
     });
 }

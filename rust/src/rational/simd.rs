@@ -133,6 +133,7 @@ macro_rules! simd_kernel {
                 }
                 let rem = xs.len() - full;
                 if rem > 0 {
+                    crate::probe::on_masked_tail((LANES - rem) as u64);
                     let mut pad = [0.0 as $t; LANES];
                     pad[..rem].copy_from_slice(&xs[full..]);
                     let y = forward_vec(V::from_array(pad), a, b).to_array();
@@ -222,6 +223,7 @@ macro_rules! simd_kernel {
                 /// only here — at [`RUN`]-element boundaries — and at
                 /// [`SegAccum::finish`], never per element.
                 fn flush_run(&mut self) {
+                    crate::probe::on_run_flush();
                     let sa = self.seq_a.to_array();
                     let sb = self.seq_b.to_array();
                     for i in 0..self.m1 {
@@ -284,6 +286,7 @@ macro_rules! simd_kernel {
                     }
                     let rem = len - full;
                     if rem > 0 {
+                        crate::probe::on_masked_tail((LANES - rem) as u64);
                         // Masked tail: vector-wide compute on zero padding,
                         // then store / fold the live lanes only.  Dead
                         // lanes never reach dx or the accumulator: their

@@ -169,6 +169,13 @@ pub struct ExecStats {
     /// Per-request executor time (µs; every request of a batch records
     /// the batch's `run` duration — that is the latency it observed).
     pub exec: LogHist,
+    /// Request payload bytes executed for this model (`rows * d_in * 4`
+    /// over successful batches) — the serving-level traffic analogue of
+    /// the kernel probes, exported as
+    /// `flashkat_traffic_bytes_total{model,stream="in"}`.
+    pub bytes_in: u64,
+    /// Response payload bytes produced (`rows * d_out * 4`).
+    pub bytes_out: u64,
 }
 
 impl ExecStats {
@@ -200,6 +207,14 @@ impl ExecStats {
         self.exec.record(exec_us);
     }
 
+    /// Record one successful batch's payload traffic.  Separate from
+    /// [`Self::record`] (which also counts failed batches): traffic is
+    /// only rows actually executed and returned.
+    pub fn record_traffic(&mut self, bytes_in: u64, bytes_out: u64) {
+        self.bytes_in += bytes_in;
+        self.bytes_out += bytes_out;
+    }
+
     /// Fold `other` into `self` (used to form server-wide totals).
     pub fn merge(&mut self, other: &ExecStats) {
         self.batches += other.batches;
@@ -218,6 +233,8 @@ impl ExecStats {
         }
         self.queue_wait.merge(&other.queue_wait);
         self.exec.merge(&other.exec);
+        self.bytes_in += other.bytes_in;
+        self.bytes_out += other.bytes_out;
     }
 }
 

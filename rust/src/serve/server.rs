@@ -36,7 +36,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::batcher::{Batch, Batcher, BatchPolicy, FlushCause, ShapeKey};
 use super::cache::{CacheStats, FlightValue, ForwardCache, Lookup};
 use super::executor::{ExecStats, ModelExecutor, ModelStats, ServeStats};
-use crate::trace::{AnnValue, SpanCtx, Timing, TraceCollector, TraceEvent, TrackId};
+use crate::trace::{AnnValue, CounterId, SpanCtx, Timing, TraceCollector, TraceEvent, TrackId};
 
 /// A fulfilled request.
 #[derive(Clone, Debug)]
@@ -164,6 +164,17 @@ struct ShardTracks {
     req: TrackId,
 }
 
+/// The counter tracks owned by one shard (Perfetto COUNTER TrackEvents,
+/// kept in the collector's counter registry so slice-track consumers
+/// like [`TraceCollector::snapshot`] never see them): admission-queue
+/// depth sampled at every batch pop, and cumulative executed payload
+/// bytes sampled after every batch.
+#[derive(Clone, Copy)]
+struct ShardCounters {
+    queue: CounterId,
+    traffic: CounterId,
+}
+
 struct Shared {
     shards: Vec<Shard>,
     /// Global registry order (= `submit_at` index order).
@@ -177,6 +188,8 @@ struct Shared {
     tracer: Option<Arc<TraceCollector>>,
     /// Per-shard trace tracks; empty without a tracer.
     shard_tracks: Vec<ShardTracks>,
+    /// Per-shard counter tracks; empty without a tracer.
+    shard_counters: Vec<ShardCounters>,
     /// Content-addressed result cache + singleflight ([`super::cache`]);
     /// `None` (the default) leaves the submit path exactly as before.
     cache: Option<Arc<ForwardCache>>,
@@ -184,6 +197,9 @@ struct Shared {
     /// tracer and a cache are attached).  Cached requests never reach a
     /// shard's request track, so they get their own.
     cache_track: Option<TrackId>,
+    /// Counter track for cache occupancy bytes (`Some` exactly when both
+    /// a tracer and a cache are attached).
+    cache_counter: Option<CounterId>,
 }
 
 fn now_us(shared: &Shared) -> u64 {
@@ -301,11 +317,24 @@ impl Server {
                 .collect(),
             None => Vec::new(),
         };
+        let shard_counters = match &tracer {
+            Some(t) => (0..n_shards)
+                .map(|s| ShardCounters {
+                    queue: t.register_counter_track(&format!("shard {s} queue")),
+                    traffic: t.register_counter_track(&format!("shard {s} traffic bytes")),
+                })
+                .collect(),
+            None => Vec::new(),
+        };
         let epoch = tracer.as_ref().map(|t| t.epoch()).unwrap_or_else(Instant::now);
         let cache = (cache_bytes > 0)
             .then(|| ForwardCache::new(cache_bytes, meta.iter().map(|m| m.name.clone()).collect()));
         let cache_track = match (&tracer, &cache) {
             (Some(t), Some(_)) => Some(t.register_track("cache")),
+            _ => None,
+        };
+        let cache_counter = match (&tracer, &cache) {
+            (Some(t), Some(_)) => Some(t.register_counter_track("cache bytes")),
             _ => None,
         };
         let shared = Arc::new(Shared {
@@ -315,8 +344,10 @@ impl Server {
             epoch,
             tracer,
             shard_tracks,
+            shard_counters,
             cache,
             cache_track,
+            cache_counter,
         });
 
         // Hand each shard its slice of the registry, preserving
@@ -560,6 +591,9 @@ impl Server {
                     })),
                     Err(e) => token.publish(Err(e.clone())),
                 }
+                // Occupancy moved (insert and possibly evictions):
+                // sample the cache-bytes counter track.
+                self.sample_cache_bytes();
                 res
             }
             // Hash-slot collision with a different key: execute without
@@ -640,6 +674,17 @@ impl Server {
         self.shared.cache.as_ref().map(|c| c.stats())
     }
 
+    /// Sample the cache's current occupancy onto its counter track;
+    /// no-op unless both a tracer and a cache are attached.
+    fn sample_cache_bytes(&self) {
+        let (Some(tracer), Some(counter), Some(cache)) =
+            (&self.shared.tracer, self.shared.cache_counter, &self.shared.cache)
+        else {
+            return;
+        };
+        tracer.record_counter(counter, tracer.now_us(), cache.stats().bytes as u64);
+    }
+
     /// Emit a slice on the cache track for a request served off the
     /// cache path (it never reaches a shard's request track).  The
     /// `cause` annotation distinguishes verified hits from coalesced
@@ -703,9 +748,16 @@ fn executor_loop(shared: &Shared, shard_idx: usize, mut executors: Vec<Box<dyn M
     loop {
         let now = now_us(shared);
         if let Some(batch) = st.batcher.pop(now, true) {
+            // Queue-depth counter sample: depth *after* this batch left
+            // the queue, read while the lock is still held so the value
+            // and its timestamp are consistent.
+            let queued = st.batcher.queued() as u64;
             let jobs = detach_jobs(&mut st, &batch);
             drop(st);
             shard.space.notify_all();
+            if let (Some(t), Some(c)) = (&shared.tracer, shared.shard_counters.get(shard_idx)) {
+                t.record_counter(c.queue, now, queued);
+            }
             execute(shared, shard_idx, &mut executors, &batch, jobs, &mut scratch);
             st = shard.state.lock().unwrap();
             continue;
@@ -802,8 +854,10 @@ fn execute(
         )),
         Err(e) => Some(format!("{e:#}")),
     };
+    let shard_traffic;
     {
-        let stats = &mut shard.stats.lock().unwrap()[idx];
+        let stats_vec = &mut *shard.stats.lock().unwrap();
+        let stats = &mut stats_vec[idx];
         stats.record(size, total_rows, batch.cause, busy);
         if failure.is_some() {
             stats.failed += size;
@@ -816,7 +870,17 @@ fn execute(
                     exec_us,
                 );
             }
+            // Payload traffic for the /metrics feed and the shard's
+            // cumulative traffic counter track: rows actually executed
+            // times each side's f32 row width.
+            stats.record_traffic((total_rows * d_in * 4) as u64, (total_rows * d_out * 4) as u64);
         }
+        // Cumulative bytes moved by this shard (all its models), read
+        // under the same lock that just updated it.
+        shard_traffic = stats_vec.iter().map(|s| s.bytes_in + s.bytes_out).sum::<u64>();
+    }
+    if let (Some(t), Some(c)) = (&shared.tracer, shared.shard_counters.get(shard_idx)) {
+        t.record_counter(c.traffic, t_exec1, shard_traffic);
     }
 
     let tracer = shared.tracer.as_ref();
@@ -1455,6 +1519,50 @@ mod tests {
         let st = crate::trace::stat(&tracer.render()).unwrap();
         assert_eq!(st.slice_begins, st.slice_ends);
         assert!(st.packets > 0);
+    }
+
+    /// A traced server samples its per-shard counter tracks — queue
+    /// depth at every batch pop, cumulative payload bytes after every
+    /// batch — and the traffic counter's last sample equals the
+    /// per-model byte totals from the stats snapshot.
+    #[test]
+    fn traced_server_samples_shard_counter_tracks() {
+        let (m, _) = model(13);
+        let tracer = Arc::new(TraceCollector::new());
+        let server = Server::start_sharded_traced(
+            vec![m],
+            BatchPolicy { max_batch: 8, deadline_us: 500, queue_depth: 64, eager: true },
+            1,
+            Some(tracer.clone()),
+        )
+        .unwrap();
+        for i in 0..8u64 {
+            let (rows, x) = request(13, i);
+            server.submit("grkan", x, rows).expect("served");
+        }
+        let stats = server.shutdown().unwrap();
+        let total = stats.total();
+        assert_eq!(total.bytes_in, total.rows as u64 * D as u64 * 4);
+        assert_eq!(total.bytes_out, total.rows as u64 * D as u64 * 4);
+
+        let counters = tracer.counters_snapshot();
+        let series = |name: &str| {
+            counters
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, s)| s.as_slice())
+                .unwrap_or_else(|| panic!("counter track {name:?} registered"))
+        };
+        let queue = series("shard 0 queue");
+        assert_eq!(queue.len(), total.batches, "one depth sample per batch pop");
+        let traffic = series("shard 0 traffic bytes");
+        assert_eq!(traffic.len(), total.batches, "one traffic sample per batch");
+        let last = traffic.iter().max_by_key(|(t, _)| *t).unwrap().1;
+        assert_eq!(last, total.bytes_in + total.bytes_out);
+        // The rendered trace carries the counter packets.
+        let st = crate::trace::stat(&tracer.render()).unwrap();
+        assert_eq!(st.counters as usize, queue.len() + traffic.len());
+        assert_eq!(st.slice_begins, st.slice_ends);
     }
 
     /// An untraced server reports timing but no spans, and records no

@@ -20,7 +20,7 @@
 
 pub mod perfetto;
 
-pub use perfetto::{stat, TraceStat};
+pub use perfetto::{stat, stat_by_track, TraceStat};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -93,6 +93,22 @@ struct TrackBuf {
     ring: Mutex<Ring>,
 }
 
+/// Handle to one registered counter track (index into the collector's
+/// counter registry — a separate id space from [`TrackId`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CounterId(pub usize);
+
+struct CounterRing {
+    /// `(t_us, value)` samples; rendered as Perfetto TYPE_COUNTER events.
+    samples: Vec<(u64, u64)>,
+    dropped: u64,
+}
+
+struct CounterBuf {
+    name: String,
+    ring: Mutex<CounterRing>,
+}
+
 /// Ring-buffered trace collector shared by the server shards and the
 /// network handler threads.  Also owns the span-id counter and the
 /// clock epoch, so span ids are unique across every admission point
@@ -104,6 +120,10 @@ pub struct TraceCollector {
     /// recording takes the read side, so concurrent writers on
     /// different tracks never contend with each other.
     tracks: RwLock<Vec<Arc<TrackBuf>>>,
+    /// Counter tracks (queue depth, cache bytes, traffic) — a separate
+    /// registry so slice-track consumers ([`Self::snapshot`], the
+    /// per-request accounting tests) never see counter series.
+    counters: RwLock<Vec<Arc<CounterBuf>>>,
 }
 
 impl Default for TraceCollector {
@@ -118,6 +138,7 @@ impl TraceCollector {
             epoch: Instant::now(),
             next_span: AtomicU64::new(1),
             tracks: RwLock::new(Vec::new()),
+            counters: RwLock::new(Vec::new()),
         }
     }
 
@@ -179,10 +200,61 @@ impl TraceCollector {
         self.record_many(vec![event]);
     }
 
-    /// Total events dropped to ring overflow, across all tracks.
+    /// Register a named counter track.  Same setup-time discipline as
+    /// [`Self::register_track`]; samples carry the returned id.
+    pub fn register_counter_track(&self, name: &str) -> CounterId {
+        let mut counters = self.counters.write().expect("trace counter registry poisoned");
+        counters.push(Arc::new(CounterBuf {
+            name: name.to_string(),
+            ring: Mutex::new(CounterRing { samples: Vec::new(), dropped: 0 }),
+        }));
+        CounterId(counters.len() - 1)
+    }
+
+    /// Record one counter sample: the track's value at `t_us`.  Bounded
+    /// like slice rings — overflow drops (counted) rather than grows.
+    pub fn record_counter(&self, id: CounterId, t_us: u64, value: u64) {
+        let counters = self.counters.read().expect("trace counter registry poisoned");
+        let Some(track) = counters.get(id.0) else {
+            debug_assert!(false, "sample on unregistered counter track {}", id.0);
+            return;
+        };
+        let mut ring = track.ring.lock().expect("trace counter ring poisoned");
+        if ring.samples.len() < TRACK_CAPACITY {
+            ring.samples.push((t_us, value));
+        } else {
+            ring.dropped += 1;
+        }
+    }
+
+    /// Total events dropped to ring overflow, across all slice and
+    /// counter tracks.
     pub fn dropped(&self) -> u64 {
         let tracks = self.tracks.read().expect("trace track registry poisoned");
-        tracks.iter().map(|t| t.ring.lock().expect("trace ring poisoned").dropped).sum()
+        let slices: u64 =
+            tracks.iter().map(|t| t.ring.lock().expect("trace ring poisoned").dropped).sum();
+        let counters = self.counters.read().expect("trace counter registry poisoned");
+        let counter_drops: u64 = counters
+            .iter()
+            .map(|t| t.ring.lock().expect("trace counter ring poisoned").dropped)
+            .sum();
+        slices + counter_drops
+    }
+
+    /// `(track name, dropped count)` for every registered track — slice
+    /// tracks first, then counter tracks.  Feeds the per-track
+    /// `flashkat_trace_dropped_total{track=...}` metrics.
+    pub fn dropped_by_track(&self) -> Vec<(String, u64)> {
+        let tracks = self.tracks.read().expect("trace track registry poisoned");
+        let mut out: Vec<(String, u64)> = tracks
+            .iter()
+            .map(|t| (t.name.clone(), t.ring.lock().expect("trace ring poisoned").dropped))
+            .collect();
+        let counters = self.counters.read().expect("trace counter registry poisoned");
+        out.extend(counters.iter().map(|t| {
+            (t.name.clone(), t.ring.lock().expect("trace counter ring poisoned").dropped)
+        }));
+        out
     }
 
     /// Clone out every track's name and events (test/render seam).
@@ -194,9 +266,24 @@ impl TraceCollector {
             .collect()
     }
 
-    /// Render the collected events as a serialized Perfetto trace.
+    /// Clone out every counter track's name and samples.
+    pub fn counters_snapshot(&self) -> Vec<(String, Vec<(u64, u64)>)> {
+        let counters = self.counters.read().expect("trace counter registry poisoned");
+        counters
+            .iter()
+            .map(|t| {
+                (
+                    t.name.clone(),
+                    t.ring.lock().expect("trace counter ring poisoned").samples.clone(),
+                )
+            })
+            .collect()
+    }
+
+    /// Render the collected events (slices + counters) as a serialized
+    /// Perfetto trace.
     pub fn render(&self) -> Vec<u8> {
-        perfetto::render(&self.snapshot())
+        perfetto::render_with_counters(&self.snapshot(), &self.counters_snapshot())
     }
 
     /// Render and write the trace to `path`.
@@ -240,6 +327,50 @@ mod tests {
         c.record_many((0..TRACK_CAPACITY + 10).map(ev).collect());
         assert_eq!(c.snapshot()[0].1.len(), TRACK_CAPACITY);
         assert_eq!(c.dropped(), 10);
+    }
+
+    #[test]
+    fn counter_rings_are_bounded_and_separate_from_slices() {
+        let c = TraceCollector::new();
+        let _slice = c.register_track("shard 0");
+        let q = c.register_counter_track("shard 0 queue");
+        for i in 0..TRACK_CAPACITY + 7 {
+            c.record_counter(q, i as u64, (i % 5) as u64);
+        }
+        // Counter series never leak into the slice snapshot (the
+        // per-request accounting tests count snapshot events exactly).
+        assert_eq!(c.snapshot().len(), 1);
+        assert!(c.snapshot()[0].1.is_empty());
+        let counters = c.counters_snapshot();
+        assert_eq!(counters.len(), 1);
+        assert_eq!(counters[0].0, "shard 0 queue");
+        assert_eq!(counters[0].1.len(), TRACK_CAPACITY);
+        assert_eq!(c.dropped(), 7);
+        let by_track = c.dropped_by_track();
+        assert_eq!(by_track.len(), 2);
+        assert_eq!(by_track[0], ("shard 0".to_string(), 0));
+        assert_eq!(by_track[1], ("shard 0 queue".to_string(), 7));
+    }
+
+    #[test]
+    fn render_includes_counter_tracks() {
+        let c = TraceCollector::new();
+        let t = c.register_track("shard 0");
+        let q = c.register_counter_track("shard 0 queue");
+        c.record(TraceEvent {
+            track: t,
+            name: "batch m".into(),
+            t0_us: 5,
+            t1_us: 9,
+            args: Vec::new(),
+        });
+        c.record_counter(q, 5, 2);
+        c.record_counter(q, 9, 0);
+        let st = stat(&c.render()).unwrap();
+        assert_eq!(st.track_descriptors, 3); // process + slice + counter
+        assert_eq!(st.slice_begins, 1);
+        assert_eq!(st.slice_ends, 1);
+        assert_eq!(st.counters, 2);
     }
 
     #[test]

@@ -16,12 +16,15 @@
 //! | TrackDescriptor   | name                         | 2      | string    |
 //! | TrackDescriptor   | process                      | 3      | len-delim |
 //! | TrackDescriptor   | parent_uuid                  | 5      | varint    |
+//! | TrackDescriptor   | counter                      | 8      | len-delim |
 //! | ProcessDescriptor | pid                          | 1      | varint    |
 //! | ProcessDescriptor | process_name                 | 6      | string    |
 //! | TrackEvent        | debug_annotations            | 4      | len-delim |
-//! | TrackEvent        | type (1=begin 2=end 3=inst)  | 9      | varint    |
+//! | TrackEvent        | type (1=begin 2=end 3=inst,  | 9      | varint    |
+//! |                   |  4=counter)                  |        |           |
 //! | TrackEvent        | track_uuid                   | 11     | varint    |
 //! | TrackEvent        | name                         | 23     | string    |
+//! | TrackEvent        | counter_value                | 30     | varint    |
 //! | DebugAnnotation   | uint_value                   | 3      | varint    |
 //! | DebugAnnotation   | string_value                 | 6      | string    |
 //! | DebugAnnotation   | name                         | 10     | string    |
@@ -145,6 +148,18 @@ fn event_packet(
 /// ties among BEGINs open the longest slice first, and ties among ENDs
 /// close the innermost (latest-begun) slice first.
 pub fn render(tracks: &[(String, Vec<TraceEvent>)]) -> Vec<u8> {
+    render_with_counters(tracks, &[])
+}
+
+/// [`render`] plus counter tracks: each `(name, samples)` entry becomes
+/// one counter-typed track (TrackDescriptor with an empty
+/// CounterDescriptor sub-message) whose `(t_us, value)` samples are
+/// emitted as TYPE_COUNTER track events in timestamp order.  With an
+/// empty `counters` slice the output is byte-identical to [`render`].
+pub fn render_with_counters(
+    tracks: &[(String, Vec<TraceEvent>)],
+    counters: &[(String, Vec<(u64, u64)>)],
+) -> Vec<u8> {
     let mut out = Vec::with_capacity(4096);
 
     // Synthetic process track parenting every real track.
@@ -161,6 +176,18 @@ pub fn render(tracks: &[(String, Vec<TraceEvent>)]) -> Vec<u8> {
         put_u64(&mut desc, 1, track_uuid(i));
         put_str(&mut desc, 2, name);
         put_u64(&mut desc, 5, PROCESS_UUID);
+        descriptor_packet(&mut out, &desc, false);
+    }
+
+    // Counter tracks take the uuid range after the slice tracks.
+    for (i, (name, _)) in counters.iter().enumerate() {
+        let mut desc = Vec::new();
+        put_u64(&mut desc, 1, track_uuid(tracks.len() + i));
+        put_str(&mut desc, 2, name);
+        put_u64(&mut desc, 5, PROCESS_UUID);
+        // Empty CounterDescriptor: presence is what marks the track as
+        // a counter track in the Perfetto UI.
+        put_msg(&mut desc, 8, &[]);
         descriptor_packet(&mut out, &desc, false);
     }
 
@@ -186,7 +213,29 @@ pub fn render(tracks: &[(String, Vec<TraceEvent>)]) -> Vec<u8> {
             }
         }
     }
+
+    for (i, (_, samples)) in counters.iter().enumerate() {
+        let uuid = track_uuid(tracks.len() + i);
+        let mut sorted = samples.clone();
+        sorted.sort_unstable();
+        for (t_us, value) in sorted {
+            counter_packet(&mut out, t_us, uuid, value);
+        }
+    }
     out
+}
+
+/// TYPE_COUNTER event: the track's value at `t_us`.
+fn counter_packet(out: &mut Vec<u8>, t_us: u64, track_uuid: u64, value: u64) {
+    let mut ev = Vec::with_capacity(16);
+    put_u64(&mut ev, 9, 4); // TYPE_COUNTER
+    put_u64(&mut ev, 11, track_uuid);
+    put_u64(&mut ev, 30, value); // counter_value
+    let mut p = Vec::with_capacity(ev.len() + 16);
+    put_u64(&mut p, 8, t_us.saturating_mul(1000)); // µs clock -> ns
+    put_u64(&mut p, 10, SEQUENCE_ID);
+    put_msg(&mut p, 11, &ev);
+    packet(out, &p);
 }
 
 fn track_uuid(index: usize) -> u64 {
@@ -204,6 +253,7 @@ pub struct TraceStat {
     pub slice_begins: u64,
     pub slice_ends: u64,
     pub instants: u64,
+    pub counters: u64,
 }
 
 struct Scanner<'a> {
@@ -300,6 +350,7 @@ pub fn stat(bytes: &[u8]) -> Result<TraceStat, String> {
                                 1 => st.slice_begins += 1,
                                 2 => st.slice_ends += 1,
                                 3 => st.instants += 1,
+                                4 => st.counters += 1,
                                 t => return Err(format!("unknown track event type {t}")),
                             }
                         } else {
@@ -312,6 +363,60 @@ pub fn stat(bytes: &[u8]) -> Result<TraceStat, String> {
         }
     }
     Ok(st)
+}
+
+/// Per-track event counts from a serialized trace: one `(name, events)`
+/// entry per *named* track descriptor, in descriptor order.  The
+/// synthetic process descriptor has no name and is skipped; events on a
+/// uuid without a named descriptor are ignored (use [`stat`] first —
+/// it rejects structurally broken traces).
+pub fn stat_by_track(bytes: &[u8]) -> Result<Vec<(String, u64)>, String> {
+    let mut s = Scanner { b: bytes, i: 0 };
+    let mut tracks: Vec<(u64, String, u64)> = Vec::new();
+    while let Some((field, wire)) = s.key()? {
+        if field != 1 || wire != 2 {
+            return Err(format!("unexpected top-level field {field} (wire {wire})"));
+        }
+        let mut p = Scanner { b: s.bytes()?, i: 0 };
+        while let Some((pf, pw)) = p.key()? {
+            match (pf, pw) {
+                (60, 2) => {
+                    let mut d = Scanner { b: p.bytes()?, i: 0 };
+                    let (mut uuid, mut name) = (None, None);
+                    while let Some((df, dw)) = d.key()? {
+                        match (df, dw) {
+                            (1, 0) => uuid = Some(d.varint()?),
+                            (2, 2) => {
+                                name = Some(String::from_utf8_lossy(d.bytes()?).into_owned());
+                            }
+                            (_, w) => d.skip(w)?,
+                        }
+                    }
+                    if let (Some(u), Some(n)) = (uuid, name) {
+                        tracks.push((u, n, 0));
+                    }
+                }
+                (11, 2) => {
+                    let mut ev = Scanner { b: p.bytes()?, i: 0 };
+                    let mut uuid = None;
+                    while let Some((ef, ew)) = ev.key()? {
+                        if (ef, ew) == (11, 0) {
+                            uuid = Some(ev.varint()?);
+                        } else {
+                            ev.skip(ew)?;
+                        }
+                    }
+                    if let Some(u) = uuid {
+                        if let Some(t) = tracks.iter_mut().find(|(tu, _, _)| *tu == u) {
+                            t.2 += 1;
+                        }
+                    }
+                }
+                (_, w) => p.skip(w)?,
+            }
+        }
+    }
+    Ok(tracks.into_iter().map(|(_, n, c)| (n, c)).collect())
 }
 
 #[cfg(test)]
@@ -354,6 +459,78 @@ mod tests {
         assert_eq!(st.slice_ends, 3);
         assert_eq!(st.instants, 0);
         assert_eq!(st.packets, 9);
+    }
+
+    #[test]
+    fn counter_tracks_render_and_stat() {
+        let tracks = vec![("shard 0".to_string(), vec![ev("batch a", 10, 20)])];
+        let counters =
+            vec![("shard 0 queue".to_string(), vec![(12u64, 1u64), (5, 3), (9, 2)])];
+        let bytes = render_with_counters(&tracks, &counters);
+        let st = stat(&bytes).unwrap();
+        // process + slice track + counter track descriptors.
+        assert_eq!(st.track_descriptors, 3);
+        assert_eq!(st.slice_begins, 1);
+        assert_eq!(st.slice_ends, 1);
+        assert_eq!(st.counters, 3);
+        assert_eq!(st.packets, 3 + 2 + 3);
+        // Counter samples are emitted in timestamp order regardless of
+        // recording order: decode the counter packets' timestamps.
+        let mut ts_seen = Vec::new();
+        let mut s = Scanner { b: &bytes, i: 0 };
+        while let Some((_, _)) = s.key().unwrap() {
+            let mut p = Scanner { b: s.bytes().unwrap(), i: 0 };
+            let (mut ts, mut is_counter) = (0u64, false);
+            while let Some((pf, pw)) = p.key().unwrap() {
+                match (pf, pw) {
+                    (8, 0) => ts = p.varint().unwrap(),
+                    (11, 2) => {
+                        let mut ev = Scanner { b: p.bytes().unwrap(), i: 0 };
+                        while let Some((ef, ew)) = ev.key().unwrap() {
+                            if (ef, ew) == (9, 0) {
+                                is_counter = ev.varint().unwrap() == 4;
+                            } else {
+                                ev.skip(ew).unwrap();
+                            }
+                        }
+                    }
+                    (_, w) => p.skip(w).unwrap(),
+                }
+            }
+            if is_counter {
+                ts_seen.push(ts);
+            }
+        }
+        assert_eq!(ts_seen, vec![5_000, 9_000, 12_000]);
+    }
+
+    #[test]
+    fn stat_by_track_splits_events_per_named_track() {
+        let tracks = vec![
+            ("shard 0".to_string(), vec![ev("batch a", 10, 20), ev("batch b", 30, 40)]),
+            ("shard 0 req".to_string(), vec![ev("req a", 10, 18)]),
+        ];
+        let counters = vec![("shard 0 queue".to_string(), vec![(5u64, 3u64), (9, 2)])];
+        let by_track = stat_by_track(&render_with_counters(&tracks, &counters)).unwrap();
+        // Slice tracks count begin + end marks; counter tracks count samples.
+        assert_eq!(
+            by_track,
+            vec![
+                ("shard 0".to_string(), 4),
+                ("shard 0 req".to_string(), 2),
+                ("shard 0 queue".to_string(), 2),
+            ]
+        );
+        assert_eq!(stat_by_track(&[]).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn render_with_no_counters_is_byte_identical_to_render() {
+        let tracks = vec![
+            ("shard 0".to_string(), vec![ev("batch a", 10, 20), ev("batch b", 30, 40)]),
+            ("shard 0 req".to_string(), vec![ev("req a", 10, 18)]),
+        ];
+        assert_eq!(render_with_counters(&tracks, &[]), render(&tracks));
     }
 
     #[test]

@@ -124,6 +124,7 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
 pub struct LogHist {
     counts: Vec<u64>,
     total: u64,
+    sum: u64,
 }
 
 /// Sub-buckets per octave (as a power of two): 3 ⇒ 8 sub-buckets.
@@ -158,10 +159,16 @@ impl LogHist {
         }
         self.counts[b] += 1;
         self.total += 1;
+        self.sum = self.sum.saturating_add(v);
     }
 
     pub fn count(&self) -> u64 {
         self.total
+    }
+
+    /// Sum of all recorded values (exact, unlike the bucketed counts).
+    pub fn sum(&self) -> u64 {
+        self.sum
     }
 
     pub fn merge(&mut self, other: &LogHist) {
@@ -172,6 +179,26 @@ impl LogHist {
             *a += b;
         }
         self.total += other.total;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// `(upper_bound, cumulative_count)` per occupied bucket, in
+    /// ascending order — the Prometheus histogram exposition shape.
+    /// Bucket `b` spans `[bucket_lo(b), bucket_lo(b+1))`, so its `le`
+    /// upper bound is the *next* bucket's lower bound; every recorded
+    /// value in the bucket is `< bucket_lo(b + 1)`, making the
+    /// cumulative counts exact for these boundaries.
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            out.push((Self::bucket_lo(b + 1), cum));
+        }
+        out
     }
 
     /// p-th percentile as the lower bound of the bucket holding the
@@ -349,6 +376,26 @@ mod tests {
         // Monotone in p.
         assert!(a.percentile(99.0) >= a.percentile(50.0));
         assert!(LogHist::default().percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn loghist_sum_and_cumulative_buckets() {
+        let mut h = LogHist::default();
+        for v in [1u64, 2, 2, 100, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.sum(), 1105);
+        let buckets = h.cumulative_buckets();
+        let (mut prev_le, mut prev_c) = (0u64, 0u64);
+        for &(le, c) in &buckets {
+            assert!(le > prev_le, "le bounds not increasing: {le} after {prev_le}");
+            assert!(c >= prev_c, "cumulative counts decreased");
+            (prev_le, prev_c) = (le, c);
+        }
+        assert_eq!(prev_c, h.count());
+        // The boundaries are exact: exactly 3 samples are <= 8 (the
+        // first octave boundary above 2), and all 5 are <= the top.
+        assert!(buckets.iter().any(|&(le, c)| le <= 8 && c == 3));
     }
 
     #[test]

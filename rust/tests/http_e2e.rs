@@ -213,6 +213,86 @@ fn saturated_queue_returns_429_with_retry_after_never_hangs() {
     assert!(stats.peak_queued <= depth);
 }
 
+/// `/metrics` exports the per-ticket latency `LogHist`s as real
+/// Prometheus histograms and the executor payload traffic as labeled
+/// counters.  The scrape is *parsed*, not just substring-matched: bucket
+/// `le` bounds must ascend, cumulative counts must be monotone and end
+/// at `_count`, and the `+Inf` bucket must equal `_count` exactly.
+#[test]
+fn metrics_scrape_parses_as_prometheus_histograms() {
+    let server = Server::start(registry(42), BatchPolicy::default()).unwrap();
+    let http =
+        HttpServer::bind("127.0.0.1:0", Arc::new(server), HttpOptions::default()).unwrap();
+    let addr = http.local_addr();
+    let mut conn = HttpClient::connect(addr).unwrap();
+
+    let served = 5usize;
+    let rows_per_req = 2u32;
+    let mut rng = Pcg64::new(43);
+    for i in 0..served {
+        let x: Vec<f32> =
+            (0..rows_per_req as usize * D_WIDE).map(|_| rng.normal_f32()).collect();
+        let r = conn
+            .post_json("/v1/models/wide/infer", &infer_body(&x, rows_per_req))
+            .unwrap();
+        assert_eq!(r.status, 200, "req {i}: {}", r.body_str());
+    }
+
+    let scrape = conn.get("/metrics").unwrap().body_str().into_owned();
+
+    // Traffic counters: rows * d * 4 bytes per direction, exactly.
+    let total_rows = served as u64 * rows_per_req as u64;
+    for stream in ["in", "out"] {
+        let line = format!(
+            "flashkat_traffic_bytes_total{{model=\"wide\",stream=\"{stream}\"}} {}",
+            total_rows * D_WIDE as u64 * 4
+        );
+        assert!(scrape.contains(&line), "missing {line:?} in\n{scrape}");
+    }
+
+    for metric in ["flashkat_queue_wait_us", "flashkat_exec_us"] {
+        assert!(
+            scrape.contains(&format!("# TYPE {metric} histogram")),
+            "{metric} lacks a TYPE line:\n{scrape}"
+        );
+        // Parse every wide-model bucket line into (le, cumulative).
+        let prefix = format!("{metric}_bucket{{model=\"wide\",le=\"");
+        let mut buckets: Vec<(f64, u64)> = Vec::new();
+        for line in scrape.lines() {
+            let Some(rest) = line.strip_prefix(&prefix) else { continue };
+            let (le_str, count_str) = rest.split_once("\"} ").expect("bucket line shape");
+            let le =
+                if le_str == "+Inf" { f64::INFINITY } else { le_str.parse::<f64>().unwrap() };
+            buckets.push((le, count_str.parse::<u64>().unwrap()));
+        }
+        assert!(buckets.len() >= 2, "{metric}: at least one finite bucket plus +Inf");
+        for w in buckets.windows(2) {
+            assert!(w[0].0 < w[1].0, "{metric}: le bounds not ascending: {buckets:?}");
+            assert!(w[1].1 >= w[0].1, "{metric}: cumulative counts decreased: {buckets:?}");
+        }
+        let (last_le, last_cum) = *buckets.last().unwrap();
+        assert_eq!(last_le, f64::INFINITY, "{metric}: final bucket must be +Inf");
+        assert_eq!(last_cum, served as u64, "{metric}: +Inf bucket counts every ticket");
+        assert!(
+            scrape.contains(&format!("{metric}_count{{model=\"wide\"}} {served}")),
+            "{metric}_count:\n{scrape}"
+        );
+        assert!(
+            scrape.contains(&format!("{metric}_sum{{model=\"wide\"}}")),
+            "{metric}_sum:\n{scrape}"
+        );
+    }
+    // The untouched model exports empty histograms (count 0), not nothing
+    // — scrapers want stable series.
+    assert!(
+        scrape.contains("flashkat_exec_us_count{model=\"narrow\"} 0"),
+        "idle model still exports:\n{scrape}"
+    );
+
+    let stats = http.shutdown().expect("stats");
+    assert_eq!(stats.total().requests, served);
+}
+
 /// Protocol-level rejects: malformed bodies, unknown models, bad
 /// routes/methods, oversized payloads — each the right status, and the
 /// server keeps serving afterwards.

@@ -334,6 +334,58 @@ fn dispatched_backward_acc_bitwise_matches_tile_acc_including_masked_tails() {
     }
 }
 
+/// The `probe` feature's acceptance contract (DESIGN.md §17): compiling
+/// the traffic counters in must not perturb a single bit of any kernel
+/// output, and the counters themselves must actually move.  Deltas are
+/// asserted as monotone lower bounds, never exact totals — other tests
+/// run concurrently and the counters are process-global.
+#[cfg(feature = "probe")]
+#[test]
+fn probed_kernels_are_bit_identical_and_counters_advance() {
+    use flashkat::probe::{self, Phase, Stream};
+    use flashkat::rational::forward;
+
+    let (rows, d, n_g) = (37usize, 48usize, 4usize);
+    let mut rng = Pcg64::new(909);
+    let x: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+    let dout: Vec<f32> = (0..rows * d).map(|_| rng.normal_f32()).collect();
+    let c = Coeffs::<f32>::randn(n_g, 6, 4, &mut rng);
+
+    assert!(flashkat::probe::Snapshot::enabled());
+
+    let base = probe::snapshot();
+    let y0 = forward(&x, rows, d, &c);
+    let y1 = forward(&x, rows, d, &c);
+    let strat = Strategy::BlockTree { s_block: 8 };
+    let (dx0, da0, db0) = backward(&x, &dout, rows, d, &c, strat);
+    let (dx1, da1, db1) = backward(&x, &dout, rows, d, &c, strat);
+    let delta = probe::snapshot().delta_since(&base);
+
+    // Bit identity across repeated probed runs.
+    for (u, v) in y0.iter().zip(&y1) {
+        assert_eq!(u.to_bits(), v.to_bits(), "probed forward not deterministic");
+    }
+    for (got, want) in [(&dx0, &dx1), (&da0, &da1), (&db0, &db1)] {
+        for (u, v) in got.iter().zip(want.iter()) {
+            assert_eq!(u.to_bits(), v.to_bits(), "probed backward not deterministic");
+        }
+    }
+
+    // The workload above logically moves at least 2 forward passes of x
+    // in and y out, and 2 backward passes of x+dout in and dx out; the
+    // process-global counters may only ever exceed that.
+    let row_bytes = (rows * d * 4) as u64;
+    assert!(delta.loaded(Phase::Forward, Stream::X) >= 2 * row_bytes, "{delta:?}");
+    assert!(delta.stored(Phase::Forward, Stream::Y) >= 2 * row_bytes, "{delta:?}");
+    assert!(delta.loaded(Phase::Forward, Stream::Coeffs) > 0, "{delta:?}");
+    assert!(delta.loaded(Phase::Backward, Stream::X) >= 2 * row_bytes, "{delta:?}");
+    assert!(delta.loaded(Phase::Backward, Stream::Dout) >= 2 * row_bytes, "{delta:?}");
+    assert!(delta.stored(Phase::Backward, Stream::Dx) >= 2 * row_bytes, "{delta:?}");
+    assert!(delta.stored(Phase::Reduce, Stream::Partials) > 0, "{delta:?}");
+    assert!(delta.phase_bytes(Phase::Forward) > 0 && delta.phase_bytes(Phase::Backward) > 0);
+    assert!(delta.total_bytes() >= delta.phase_bytes(Phase::Forward));
+}
+
 #[test]
 fn dispatched_backward_acc_bitwise_matches_tile_acc_f64_tails() {
     // Same contract in f64 (lane count 4): the acceptance criterion is

@@ -536,6 +536,86 @@ fn prop_wire_infer_messages_round_trip_random_floats_bit_exactly() {
 }
 
 #[test]
+fn prop_loghist_percentile_within_relative_error_envelope() {
+    // For ANY sample stream and ANY p, the log-bucketed percentile is the
+    // bucket lower bound of the true nearest-rank sample: it never
+    // over-reads, and under-reads by at most one sub-bucket width (≤
+    // 12.5% with 8 sub-buckets per octave; exact below 8).
+    use flashkat::util::stats::LogHist;
+
+    cases(40, |seed, rng| {
+        let n = 1 + rng.below(500);
+        let mut h = LogHist::default();
+        let mut raw: Vec<u64> = (0..n)
+            .map(|_| {
+                // Wide log-range values: anything from sub-octave to ~2^64.
+                rng.next_u64() >> rng.below(60)
+            })
+            .collect();
+        for &v in &raw {
+            h.record(v);
+        }
+        raw.sort_unstable();
+        for p in [0.0, 1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+            let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
+            let exact = raw[rank - 1];
+            let got = h.percentile(p);
+            assert!(got.is_finite(), "seed {seed} p={p}");
+            let got = got as u64;
+            assert!(got <= exact, "seed {seed} p={p}: {got} over-reads exact {exact}");
+            assert!(
+                exact - got <= exact / 8,
+                "seed {seed} p={p}: {got} under-reads {exact} beyond one sub-bucket"
+            );
+            if exact < 8 {
+                assert_eq!(got, exact, "seed {seed} p={p}: sub-octave values are exact");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_loghist_merge_is_order_independent() {
+    // merge is element-wise counter addition, so ANY partition of a
+    // stream into shards, merged in ANY order, must reproduce the
+    // histogram of the whole stream — counts, sums, buckets, and every
+    // percentile (this is what makes the per-shard `/metrics` aggregation
+    // sound).
+    use flashkat::util::stats::LogHist;
+
+    cases(30, |seed, rng| {
+        let n = 1 + rng.below(300);
+        let shards = 1 + rng.below(5);
+        let samples: Vec<u64> = (0..n).map(|_| rng.next_u64() >> rng.below(60)).collect();
+        let mut whole = LogHist::default();
+        let mut parts = vec![LogHist::default(); shards];
+        for &v in &samples {
+            whole.record(v);
+            parts[rng.below(shards)].record(v);
+        }
+        // Forward merge order vs reverse merge order vs the unsharded
+        // histogram: all three identical.
+        let mut fwd = LogHist::default();
+        for p in &parts {
+            fwd.merge(p);
+        }
+        let mut rev = LogHist::default();
+        for p in parts.iter().rev() {
+            rev.merge(p);
+        }
+        assert_eq!(fwd, rev, "seed {seed}: merge order changed the histogram");
+        assert_eq!(fwd, whole, "seed {seed}: sharded merge != unsharded record");
+        assert_eq!(fwd.count(), n as u64, "seed {seed}");
+        assert_eq!(fwd.sum(), whole.sum(), "seed {seed}");
+        assert_eq!(fwd.cumulative_buckets(), whole.cumulative_buckets(), "seed {seed}");
+        for p in [50.0, 95.0, 99.0] {
+            let (a, b) = (fwd.percentile(p), whole.percentile(p));
+            assert!(a == b || (a.is_nan() && b.is_nan()), "seed {seed} p={p}: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
 fn prop_cached_runs_partition_counters_under_any_dup_mix() {
     // For ANY duplication ratio × shard count × cache budget (from
     // "everything fits" down to "constant eviction"), a cached run

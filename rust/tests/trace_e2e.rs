@@ -184,6 +184,73 @@ fn assert_transport_trace(
     assert!(st.track_descriptors > 3, "shard + request + handler tracks expected");
 }
 
+/// Counter tracks (DESIGN.md §17): a traced sharded run samples every
+/// shard's queue depth and cumulative traffic bytes as Perfetto COUNTER
+/// tracks, the rendered bytes carry them as counter packets, and the
+/// per-track scan `flashkat trace-stat` uses sees every named track.
+#[test]
+fn traced_sharded_run_emits_counter_tracks_per_shard() {
+    use flashkat::trace::stat_by_track;
+
+    let shards = 2usize;
+    let cfg = LoadConfig {
+        requests: 60,
+        concurrency: 6,
+        models: vec![ModelSpec::new("wide", 64, 8), ModelSpec::new("narrow", 32, 8)],
+        ..Default::default()
+    };
+    let policy = BatchPolicy { max_batch: 8, deadline_us: 200, queue_depth: 64, eager: true };
+    let tracer = Arc::new(TraceCollector::new());
+    let res = loadgen::run_sharded_traced(&cfg, policy, "counters", shards, tracer.clone())
+        .unwrap();
+    assert_eq!(res.errors, 0);
+
+    // ≥1 counter track per shard, each with ≥1 sample; traffic samples
+    // are cumulative, so they must be non-decreasing in time.
+    let counters = tracer.counters_snapshot();
+    for s in 0..shards {
+        for kind in ["queue", "traffic bytes"] {
+            let name = format!("shard {s} {kind}");
+            let (_, samples) = counters
+                .iter()
+                .find(|(n, _)| *n == name)
+                .unwrap_or_else(|| panic!("missing counter track {name:?}: {counters:?}"));
+            assert!(!samples.is_empty(), "{name}: no samples");
+            if kind == "traffic bytes" {
+                let mut sorted = samples.clone();
+                sorted.sort_by_key(|&(t, _)| t);
+                for w in sorted.windows(2) {
+                    assert!(w[1].1 >= w[0].1, "{name}: cumulative counter decreased");
+                }
+                assert!(sorted.last().unwrap().1 > 0, "{name}: no traffic counted");
+            }
+        }
+    }
+    let total_samples: usize = counters.iter().map(|(_, s)| s.len()).sum();
+
+    // The rendered file round-trips: counter packets are counted by the
+    // same scan `flashkat trace-stat` runs, and the per-track split sees
+    // every slice and counter track by name.
+    let bytes = tracer.render();
+    let st = stat(&bytes).expect("rendered trace parses");
+    assert_eq!(st.counters as usize, total_samples, "one counter packet per sample");
+    assert!(st.counters > 0);
+    assert_eq!(st.slice_begins, st.slice_ends);
+
+    let by_track = stat_by_track(&bytes).expect("per-track scan parses");
+    for s in 0..shards {
+        for kind in ["queue", "traffic bytes"] {
+            let name = format!("shard {s} {kind}");
+            let (_, events) = by_track
+                .iter()
+                .find(|(n, _)| *n == name)
+                .unwrap_or_else(|| panic!("{name:?} missing from stat_by_track: {by_track:?}"));
+            assert!(*events > 0, "{name}: counter track rendered no events");
+        }
+    }
+    assert_eq!(tracer.dropped(), 0);
+}
+
 #[test]
 fn traced_http_leg_records_request_and_handler_slices() {
     assert_transport_trace(
