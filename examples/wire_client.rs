@@ -41,13 +41,18 @@ fn main() -> Result<()> {
     // The local twin of the server's executor: same seed, same spec.
     let mut reference = loadgen::executors(&cfg)?.remove(0);
 
+    // All calls go through the reconnect helper: a dropped keep-alive
+    // (server restarted between probes, router failed a backend over
+    // mid-conversation) heals with a capped-backoff redial instead of
+    // failing the probe — the same discipline the route tier's
+    // connection pool uses.
     let mut client = WireClient::connect(addr)?;
-    client.ping(0xf1a5_4a7).context("ping")?;
+    client.call_reconnecting(3, |c| c.ping(0xf1a5_4a7)).context("ping")?;
 
     let mut want = Vec::new();
     for id in 0..requests {
         let (_, rows, x) = loadgen::request(&cfg, id);
-        let resp = match client.infer(&name, &x, rows)? {
+        let resp = match client.call_reconnecting(3, |c| c.infer(&name, &x, rows))? {
             Ok(resp) => resp,
             Err(e) => bail!("request {id}: server answered {e}"),
         };
@@ -59,8 +64,9 @@ fn main() -> Result<()> {
         }
     }
 
-    // The binary stats frame must account for what we just sent.
-    let stats = client.stats().context("stats")?;
+    // The binary stats frame must account for what we just sent.  When
+    // the peer is a router, this is the tier-wide merged view.
+    let stats = client.call_reconnecting(3, |c| c.stats()).context("stats")?;
     let served = stats
         .models
         .iter()

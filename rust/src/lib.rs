@@ -30,6 +30,7 @@ pub mod net;
 pub mod probe;
 pub mod rational;
 pub mod report;
+pub mod route;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

@@ -602,6 +602,75 @@ fn cmd_serve_bench_inner(args: &Args) -> Result<()> {
             fields.push(("tracing".to_string(), section));
         }
     };
+    if args.flag("policy").is_some() && args.flag("nodes").is_none() {
+        bail!("--policy only applies with --nodes (or the route command)");
+    }
+
+    // --nodes N: the flashroute multi-node scaling comparison (DESIGN.md
+    // §18).  Two legs — the identical seeded workload through a router
+    // over 1 backend node and over N nodes, every node carrying the full
+    // replicated registry — plus a serial bit-identity replay through
+    // the router against the unbatched oracle.  Writes BENCH_route.json
+    // with the scaling-efficiency block.
+    if args.flag("nodes").is_some() {
+        use flashkat::route::RoutePolicy;
+        let nodes = args.flag_usize("nodes", 2)?;
+        if nodes < 2 {
+            bail!("--nodes wants at least 2 (the 1-node leg runs automatically for comparison)");
+        }
+        if cache_mode {
+            bail!("--nodes and --cache-bytes are mutually exclusive (bench the cache on one node)");
+        }
+        if args.flag_bool("http") || args.flag_bool("wire") {
+            bail!("--nodes runs its own wire legs through the router; drop --http/--wire");
+        }
+        if autotune {
+            bail!("--nodes and --autotune are mutually exclusive (autotune a single node first)");
+        }
+        if args.flag("pipeline").is_some() {
+            bail!("--nodes benches the rational registry; --pipeline has no routed path yet");
+        }
+        if trace_out.is_some() {
+            bail!("--trace-out and --nodes are mutually exclusive (trace `flashkat route` instead)");
+        }
+        let policy_s = args.flag_str("policy", "ring");
+        let route_policy = RoutePolicy::parse(policy_s)
+            .with_context(|| format!("--policy {policy_s:?} (want ring or least-loaded)"))?;
+        cfg.models = serve_model_specs(args)?;
+        let shards = args.flag_usize("shards", 2)?.clamp(1, cfg.models.len());
+        let single = loadgen::run_route(&cfg, policy, "route-1node", shards, 1, route_policy)?;
+        let multi = loadgen::run_route(
+            &cfg,
+            policy,
+            &format!("route-{nodes}nodes"),
+            shards,
+            nodes,
+            route_policy,
+        )?;
+        let identical = loadgen::verify_route_bit_identity(&cfg, policy, shards, nodes)?;
+        print!(
+            "{}",
+            report::serve_route(&single, &multi, nodes, shards, route_policy.label(), identical)
+        );
+        // One grep-able verdict line for CI.
+        println!("route gate: bit identity {}", if identical { "PASS" } else { "FAIL" });
+        let out = args.flag_str("out", "BENCH_route.json");
+        let json = loadgen::route_bench_json(
+            &cfg,
+            shards,
+            nodes,
+            route_policy.label(),
+            &single,
+            &multi,
+            identical,
+        );
+        std::fs::write(out, json.to_string()).with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+        if !identical {
+            bail!("routed replay diverged from the unbatched oracle");
+        }
+        return Ok(());
+    }
 
     // --cache-bytes: the content-addressed forward cache comparison.
     // Six legs — in-process, loopback HTTP, and flashwire, each run
@@ -804,7 +873,7 @@ fn cmd_serve_bench_inner(args: &Args) -> Result<()> {
     // single-server).
     if args.flag("shards").is_some() {
         bail!(
-            "--shards only applies with --http/--wire/--cache-bytes (or the serve-http/serve-wire commands)"
+            "--shards only applies with --http/--wire/--cache-bytes/--nodes (or the serve-http/serve-wire commands)"
         );
     }
     // Autotune sweep grid: the defaults plus any explicitly requested
@@ -1098,6 +1167,89 @@ fn cmd_serve_wire(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Stand up the flashroute multi-node router tier (DESIGN.md §18) and
+/// run until SIGTERM/SIGINT: `flashkat route --port P --backends
+/// HOST:PORT,HOST:PORT,...`.  ONE front port accepts both flashwire and
+/// HTTP clients (each connection is protocol-sniffed on its first two
+/// bytes) and fans requests out across the backend serve-wire processes:
+/// consistent-hash routing by model name (`--policy least-loaded` ranks
+/// the failover order by live backend load instead), Ping-probed health
+/// circuits with half-open recovery, and shed-aware failover that honors
+/// the backends' typed queue-full/draining retry hints.
+fn cmd_route(args: &Args) -> Result<()> {
+    use flashkat::route::{RouteOptions, RoutePolicy, RouteServer};
+    use flashkat::wire::WireLimits;
+    use std::io::Write as _;
+    use std::net::ToSocketAddrs as _;
+    use std::sync::atomic::Ordering;
+
+    let host = args.flag_str("addr", "127.0.0.1");
+    let port = args.flag_u16("port", 8082)?;
+    let raw = args
+        .flag("backends")
+        .context("route needs --backends HOST:PORT[,HOST:PORT,...]")?;
+    let mut backends = Vec::new();
+    for tok in raw.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let addr = tok
+            .to_socket_addrs()
+            .with_context(|| format!("resolving backend {tok:?}"))?
+            .next()
+            .with_context(|| format!("backend {tok:?} resolved to no address"))?;
+        backends.push(addr);
+    }
+    if backends.is_empty() {
+        bail!("--backends lists no addresses");
+    }
+    let policy_s = args.flag_str("policy", "ring");
+    let policy = RoutePolicy::parse(policy_s)
+        .with_context(|| format!("--policy {policy_s:?} (want ring or least-loaded)"))?;
+    let tracer = args
+        .flag("trace-out")
+        .map(|_| std::sync::Arc::new(flashkat::trace::TraceCollector::new()));
+    let opts = RouteOptions {
+        conn_threads: args.flag_usize("conn-threads", 8)?.max(1),
+        backlog: args.flag_usize("backlog", 64)?.max(1),
+        limits: WireLimits {
+            max_payload_bytes: args.flag_usize("max-payload-bytes", 8 * 1024 * 1024)?.max(1),
+            ..Default::default()
+        },
+        policy,
+        probe_interval: std::time::Duration::from_millis(
+            args.flag_u64("probe-interval-ms", 200)?.max(1),
+        ),
+        fail_threshold: args.flag_u32("fail-threshold", 3)?.max(1),
+        down_cooldown: args.flag_u32("down-cooldown", 2)?.max(1),
+        tracer: tracer.clone(),
+    };
+    let n = backends.len();
+    let router = RouteServer::bind(&format!("{host}:{port}"), backends, opts)?;
+    println!(
+        "listening on flashwire://{} ({n} backends, policy {})",
+        router.local_addr(),
+        policy.label()
+    );
+    println!(
+        "same port speaks HTTP: POST /v1/models/<name>/infer, GET /healthz /metrics (flashkat_route_*)"
+    );
+    // The bound-port line is scraped by scripts (CI starts us with
+    // --port 0); a piped stdout is block-buffered, so flush explicitly.
+    std::io::stdout().flush().ok();
+    let stop = flashkat::net::install_signal_handler();
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("signal received; draining in-flight requests...");
+    let stats = router.shutdown().expect("first shutdown collects stats");
+    println!(
+        "drained cleanly: {} replies forwarded, {} failovers ({} transport failures) across {} backends",
+        stats.forwarded, stats.retried, stats.failed, stats.backends
+    );
+    if let (Some(t), Some(path)) = (&tracer, args.flag("trace-out")) {
+        write_trace(t, path)?;
+    }
+    Ok(())
+}
+
 /// Sanity-scan a Perfetto trace written by `--trace-out`: `flashkat
 /// trace-stat PATH`.  Walks the packet stream with the same varint/field
 /// decoder the renderer is tested against, prints the counts, and fails
@@ -1259,6 +1411,7 @@ fn main() -> Result<()> {
         "serve-bench" => cmd_serve_bench(&args),
         "serve-http" => cmd_serve_http(&args),
         "serve-wire" => cmd_serve_wire(&args),
+        "route" => cmd_route(&args),
         "trace-stat" => cmd_trace_stat(&args),
         "selfcheck" => cmd_selfcheck(&args),
         "flops" => {
@@ -1268,7 +1421,7 @@ fn main() -> Result<()> {
         "" | "help" | "--help" => {
             println!(
                 "flashkat — FlashKAT reproduction (see DESIGN.md)\n\n\
-                 usage: flashkat <report|train|profile|profile-kernel|serve-bench|serve-http|serve-wire|trace-stat|selfcheck|flops> [flags]\n\
+                 usage: flashkat <report|train|profile|profile-kernel|serve-bench|serve-http|serve-wire|route|trace-stat|selfcheck|flops> [flags]\n\
                  \x20 report <fig1|table1|table2|fig2|fig3|table3|table4|table5|configs|all>\n\
                  \x20 train  [--model kat_micro|vit_micro|kat_micro_katbwd] [--steps N] [--ckpt PATH]\n\
                  \x20 profile [--kernel fwd|kat|flash] [--loops N] [--gpu 4060ti|h200]\n\
@@ -1290,6 +1443,9 @@ fn main() -> Result<()> {
                  \x20              heavy workload + bit-identity gate; writes BENCH_cache.json)\n\
                  \x20             [--dup-frac F]  (fraction of requests replaying a prior request's\n\
                  \x20              exact bytes; defaults 0.5 with --cache-bytes, else 0)\n\
+                 \x20             [--nodes N [--shards N] [--policy ring|least-loaded]]  (flashroute\n\
+                 \x20              scaling: 1-node vs N-node tier through the router, bit-identity\n\
+                 \x20              gate; writes BENCH_route.json with the efficiency block)\n\
                  \x20             [--seed N] [--out PATH] [--trace-out PATH]\n\
                  \x20             [--profile]  (print kernel traffic-probe totals after the run;\n\
                  \x20              needs a build with --features probe)\n\
@@ -1310,6 +1466,13 @@ fn main() -> Result<()> {
                  \x20             [--trace-out PATH]  (write a Perfetto trace on drain)\n\
                  \x20             (flashwire length-prefixed binary frontend, DESIGN.md \u{a7}13;\n\
                  \x20              runs until SIGTERM, then drains)\n\
+                 \x20 route      --backends HOST:PORT,... [--addr A] [--port P|0]\n\
+                 \x20             [--policy ring|least-loaded] [--conn-threads N] [--backlog N]\n\
+                 \x20             [--probe-interval-ms N] [--fail-threshold N] [--down-cooldown N]\n\
+                 \x20             [--max-payload-bytes N] [--trace-out PATH]\n\
+                 \x20             (flashroute multi-node tier, DESIGN.md \u{a7}18: one front port for\n\
+                 \x20              wire AND http clients, consistent-hash fan-out over serve-wire\n\
+                 \x20              backends, Ping-probed health failover; runs until SIGTERM)\n\
                  \x20 trace-stat [--json] PATH   -- scan a Perfetto trace written by --trace-out\n\
                  \x20             and print packet/slice/counter counts plus per-track event\n\
                  \x20             counts (non-empty + balanced, else exit 1; --json emits one\n\

@@ -344,6 +344,17 @@ fn render_metrics(server: &Server, metrics: &HttpMetrics) -> String {
     for (s, peak) in stats.shard_peaks.iter().enumerate() {
         out.push_str(&format!("flashkat_serve_peak_queued{{shard=\"{s}\"}} {peak}\n"));
     }
+    // The same live load signal StatsResponse v2 puts on the wire, so
+    // an HTTP scrape and a router's least-loaded ranking read one truth.
+    let loads = server.shard_loads();
+    out.push_str("# TYPE flashkat_serve_queue_depth gauge\n");
+    for (s, (queued, _)) in loads.iter().enumerate() {
+        out.push_str(&format!("flashkat_serve_queue_depth{{shard=\"{s}\"}} {queued}\n"));
+    }
+    out.push_str("# TYPE flashkat_serve_inflight gauge\n");
+    for (s, (_, in_flight)) in loads.iter().enumerate() {
+        out.push_str(&format!("flashkat_serve_inflight{{shard=\"{s}\"}} {in_flight}\n"));
+    }
     // Content-addressed result cache counters — present only when the
     // server was started with a cache (`--cache-bytes > 0`), so an
     // uncached scrape is byte-identical to before the cache existed.

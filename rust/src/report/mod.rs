@@ -462,6 +462,53 @@ pub fn serve_wire(
     out
 }
 
+/// Multi-node scaling report: the identical seeded workload through a
+/// 1-node route tier and an N-node tier (same router hop both times),
+/// with the scaling-efficiency verdict and the bit-identity gate — the
+/// `BENCH_route.json` acceptance view (DESIGN.md §18).
+pub fn serve_route(
+    single: &crate::serve::BenchResult,
+    multi: &crate::serve::BenchResult,
+    nodes: usize,
+    shards: usize,
+    policy_label: &str,
+    identical: bool,
+) -> String {
+    let mut out = hdr("Serve: flashroute multi-node tier vs single node");
+    out.push_str(&format!(
+        "nodes: {nodes}, shards/node: {shards}, policy: {policy_label}\n"
+    ));
+    out.push_str(&serve_header("tier"));
+    for r in [single, multi] {
+        out.push_str(&serve_row(r));
+    }
+    let efficiency =
+        multi.throughput_rps / (nodes as f64 * single.throughput_rps).max(1e-9);
+    out.push_str(&format!(
+        "scaling: {} -> {} img/s across {nodes} nodes, efficiency {} (1.00x = perfect)\n",
+        single.throughput_rps.round(),
+        multi.throughput_rps.round(),
+        ratio_cell(efficiency),
+    ));
+    out.push_str(&format!(
+        "bit-identity through the router: {}\n",
+        if identical { "OK" } else { "FAILED" }
+    ));
+    if single.errors + multi.errors > 0 {
+        out.push_str(&format!(
+            "errors: 1-node {}, {nodes}-node {}\n",
+            single.errors, multi.errors
+        ));
+    }
+    if single.retries + multi.retries + single.failovers + multi.failovers > 0 {
+        out.push_str(&format!(
+            "shed retries: 1-node {}, {nodes}-node {}; router failovers: 1-node {}, {nodes}-node {}\n",
+            single.retries, multi.retries, single.failovers, multi.failovers
+        ));
+    }
+    out
+}
+
 /// Cached-vs-uncached report per transport over the same
 /// duplicate-heavy seeded workload — the `BENCH_cache.json` acceptance
 /// view (`serve-bench --cache-bytes`).  Hit-rate and speedup cells are

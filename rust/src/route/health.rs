@@ -1,0 +1,200 @@
+//! Per-backend health state machine (DESIGN.md §18): a circuit breaker
+//! driven by two inputs — forwarding outcomes and the prober's
+//! Ping/Pong round trips — with no clock of its own.
+//!
+//! ```text
+//!             consecutive failures >= threshold
+//!        Up ────────────────────────────────────► Down
+//!        ▲                                          │
+//!        │ success                                  │ `cooldown` probe
+//!        │                                          │ ticks elapse
+//!        └──────────── HalfOpen ◄───────────────────┘
+//!            (one trial: success → Up, failure → Down)
+//! ```
+//!
+//! Time is passed in by the caller as *probe ticks* ([`HealthMachine::tick`]
+//! once per prober interval), so the machine is a pure value: every
+//! transition is unit-testable without sleeping, and the router's
+//! observed behavior is a deterministic function of the outcome
+//! sequence.  Transitions are returned to the caller (not counted here)
+//! so the router can feed its `flashkat_route_health_transitions_total`
+//! counters without the machine knowing metrics exist.
+
+/// Availability state of one backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Serving traffic normally.
+    Up,
+    /// Circuit open: receives no traffic until the cooldown elapses.
+    Down,
+    /// Cooldown over: eligible for one trial (a probe ping or a real
+    /// request) that decides Up vs back to Down.
+    HalfOpen,
+}
+
+impl HealthState {
+    /// Prometheus label value.
+    pub fn label(self) -> &'static str {
+        match self {
+            HealthState::Up => "up",
+            HealthState::Down => "down",
+            HealthState::HalfOpen => "half-open",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct HealthMachine {
+    state: HealthState,
+    /// Consecutive failures while `Up`.
+    fails: u32,
+    /// Failures that open the circuit.
+    threshold: u32,
+    /// Probe ticks to sit `Down` before `HalfOpen`.
+    cooldown: u32,
+    /// Ticks spent `Down` so far.
+    ticks_down: u32,
+}
+
+impl HealthMachine {
+    /// Starts `Up` (optimistic: the first request is the first probe —
+    /// a dead backend fails it and trips the threshold like any other
+    /// failure run).  `threshold` and `cooldown` are clamped to ≥ 1.
+    pub fn new(threshold: u32, cooldown: u32) -> HealthMachine {
+        HealthMachine {
+            state: HealthState::Up,
+            fails: 0,
+            threshold: threshold.max(1),
+            cooldown: cooldown.max(1),
+            ticks_down: 0,
+        }
+    }
+
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    /// Whether the router may send this backend traffic: `Up` always,
+    /// `HalfOpen` as the trial request.
+    pub fn available(&self) -> bool {
+        !matches!(self.state, HealthState::Down)
+    }
+
+    /// A successful round trip (forwarded request or probe pong).
+    /// Returns the new state iff this changed it.
+    pub fn on_success(&mut self) -> Option<HealthState> {
+        self.fails = 0;
+        match self.state {
+            HealthState::Up => None,
+            // A success while Down can only come from a request already
+            // in flight when the circuit opened — it is still evidence
+            // the backend lives, so it closes the circuit like a trial.
+            HealthState::HalfOpen | HealthState::Down => {
+                self.state = HealthState::Up;
+                Some(HealthState::Up)
+            }
+        }
+    }
+
+    /// A failed round trip.  Returns the new state iff this changed it.
+    pub fn on_failure(&mut self) -> Option<HealthState> {
+        match self.state {
+            HealthState::Up => {
+                self.fails += 1;
+                if self.fails >= self.threshold {
+                    self.state = HealthState::Down;
+                    self.ticks_down = 0;
+                    Some(HealthState::Down)
+                } else {
+                    None
+                }
+            }
+            // The trial failed: back to the start of the cooldown.
+            HealthState::HalfOpen => {
+                self.state = HealthState::Down;
+                self.ticks_down = 0;
+                Some(HealthState::Down)
+            }
+            HealthState::Down => {
+                self.ticks_down = 0;
+                None
+            }
+        }
+    }
+
+    /// One prober interval elapsed.  Advances `Down` toward `HalfOpen`;
+    /// returns the new state iff this changed it.
+    pub fn tick(&mut self) -> Option<HealthState> {
+        if self.state == HealthState::Down {
+            self.ticks_down += 1;
+            if self.ticks_down >= self.cooldown {
+                self.state = HealthState::HalfOpen;
+                return Some(HealthState::HalfOpen);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failures_below_threshold_keep_the_backend_up() {
+        let mut m = HealthMachine::new(3, 2);
+        assert_eq!(m.on_failure(), None);
+        assert_eq!(m.on_failure(), None);
+        assert!(m.available());
+        // A success resets the consecutive-failure run.
+        assert_eq!(m.on_success(), None);
+        assert_eq!(m.on_failure(), None);
+        assert_eq!(m.on_failure(), None);
+        assert_eq!(m.state(), HealthState::Up);
+    }
+
+    #[test]
+    fn threshold_failures_open_the_circuit() {
+        let mut m = HealthMachine::new(3, 2);
+        m.on_failure();
+        m.on_failure();
+        assert_eq!(m.on_failure(), Some(HealthState::Down));
+        assert!(!m.available());
+        // Further failures while Down change nothing.
+        assert_eq!(m.on_failure(), None);
+        assert_eq!(m.state(), HealthState::Down);
+    }
+
+    #[test]
+    fn cooldown_ticks_half_open_then_trial_decides() {
+        let mut m = HealthMachine::new(1, 2);
+        assert_eq!(m.on_failure(), Some(HealthState::Down));
+        assert_eq!(m.tick(), None);
+        assert_eq!(m.tick(), Some(HealthState::HalfOpen));
+        assert!(m.available(), "half-open gets the trial request");
+        // Trial failure: straight back down, cooldown restarts.
+        assert_eq!(m.on_failure(), Some(HealthState::Down));
+        assert_eq!(m.tick(), None);
+        assert_eq!(m.tick(), Some(HealthState::HalfOpen));
+        // Trial success: circuit closes.
+        assert_eq!(m.on_success(), Some(HealthState::Up));
+        assert_eq!(m.state(), HealthState::Up);
+        // Ticks while Up are no-ops.
+        assert_eq!(m.tick(), None);
+    }
+
+    #[test]
+    fn late_success_while_down_closes_the_circuit() {
+        let mut m = HealthMachine::new(1, 10);
+        m.on_failure();
+        assert_eq!(m.state(), HealthState::Down);
+        assert_eq!(m.on_success(), Some(HealthState::Up));
+    }
+
+    #[test]
+    fn degenerate_knobs_clamp_to_one() {
+        let mut m = HealthMachine::new(0, 0);
+        assert_eq!(m.on_failure(), Some(HealthState::Down), "threshold clamps to 1");
+        assert_eq!(m.tick(), Some(HealthState::HalfOpen), "cooldown clamps to 1");
+    }
+}

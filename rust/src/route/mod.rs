@@ -1,0 +1,39 @@
+//! flashroute: a replicated multi-node serving tier over flashwire
+//! (DESIGN.md §18).
+//!
+//! `flashkat route` binds ONE front port and fans client traffic out
+//! across N backend `serve-wire` processes.  The tier exists for the
+//! same reason the paper's kernels do: throughput past what one node's
+//! memory bandwidth can serve, without changing what any byte means —
+//! the router relays infer payloads and replies *verbatim*, so the
+//! bit-identity gate (`serve-bench --nodes N`) holds through the hop by
+//! construction.
+//!
+//! Four pieces, each independently testable:
+//!
+//! - [`ring`] — deterministic consistent-hash ring keyed by model name:
+//!   near-uniform balance, ~1/N remapping on membership change, and a
+//!   total failover order ([`HashRing::successors`]) per key.
+//! - [`health`] — per-backend circuit breaker (Up → Down on consecutive
+//!   failures, Down → HalfOpen after a probe-tick cooldown, one trial
+//!   decides), a pure value driven by the prober and by forwarding
+//!   outcomes.
+//! - [`pool`] — keep-alive [`crate::wire::WireClient`] pools per
+//!   backend with poison-aware checkout and reconnect-on-checkout.
+//! - [`server`] — the frontend: protocol-sniffing accept path (flashwire
+//!   magic vs HTTP on the same port), failover forwarding that honors
+//!   the typed `queue-full`/`draining` shed taxonomy, a Ping prober, a
+//!   merged stats view, `flashkat_route_*` Prometheus counters, and
+//!   "route-N" Perfetto tracks.
+
+pub mod health;
+pub mod pool;
+pub mod ring;
+pub mod server;
+
+pub use health::{HealthMachine, HealthState};
+pub use pool::BackendPool;
+pub use ring::HashRing;
+pub use server::{
+    RouteDrainStats, RouteMetrics, RouteOptions, RoutePolicy, RouteServer,
+};

@@ -1,0 +1,72 @@
+//! Pooled keep-alive [`WireClient`] connections, one idle list per
+//! backend (DESIGN.md §18).
+//!
+//! The router's handler threads check a connection out, run one round
+//! trip, and put it back — so steady-state forwarding pays zero
+//! connection setup, which is the same economy the per-thread clients
+//! buy the bench.  Poison discipline: a `WireClient` that failed
+//! mid-frame marks itself broken ([`WireClient::is_broken`]); the pool
+//! never returns a broken connection to the idle list, and checkout
+//! runs the caller's op through [`WireClient::call_reconnecting`], so a
+//! stale pooled connection (backend restarted, keep-alive dropped)
+//! heals itself with one capped-backoff redial instead of surfacing as
+//! a spurious failover.
+
+use std::net::SocketAddr;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::wire::{WireClient, WireLimits};
+
+/// Idle connections kept per backend; beyond this, returned connections
+/// are dropped (closed) rather than hoarded.
+const MAX_IDLE_PER_BACKEND: usize = 32;
+
+pub struct BackendPool {
+    addrs: Vec<SocketAddr>,
+    limits: WireLimits,
+    idle: Vec<Mutex<Vec<WireClient>>>,
+}
+
+impl BackendPool {
+    pub fn new(addrs: Vec<SocketAddr>, limits: WireLimits) -> BackendPool {
+        let idle = addrs.iter().map(|_| Mutex::new(Vec::new())).collect();
+        BackendPool { addrs, limits, idle }
+    }
+
+    pub fn addrs(&self) -> &[SocketAddr] {
+        &self.addrs
+    }
+
+    /// Check out a pooled (or freshly dialed) connection to backend
+    /// `backend`, run `op` through the reconnect helper with `attempts`
+    /// total tries, and return the connection to the idle list if it is
+    /// still healthy.  `Err` means the backend is unreachable as far as
+    /// `attempts` redials could tell — the caller's cue to fail over.
+    pub fn with_conn<T>(
+        &self,
+        backend: usize,
+        attempts: usize,
+        op: impl FnMut(&mut WireClient) -> Result<T>,
+    ) -> Result<T> {
+        let pooled = self.idle[backend].lock().unwrap().pop();
+        let mut client = match pooled {
+            Some(c) => c,
+            None => WireClient::connect_with_limits(self.addrs[backend], self.limits)?,
+        };
+        let res = client.call_reconnecting(attempts, op);
+        if res.is_ok() && !client.is_broken() {
+            let mut idle = self.idle[backend].lock().unwrap();
+            if idle.len() < MAX_IDLE_PER_BACKEND {
+                idle.push(client);
+            }
+        }
+        res
+    }
+
+    /// Idle connections currently pooled for `backend` (diagnostics).
+    pub fn idle_count(&self, backend: usize) -> usize {
+        self.idle[backend].lock().unwrap().len()
+    }
+}

@@ -1,0 +1,237 @@
+//! Consistent-hash ring over backend indices (DESIGN.md §18).
+//!
+//! Each backend owns [`VNODES`] pseudo-random points on a `u64` ring;
+//! a key routes to the backend owning the first point at or clockwise
+//! of the key's own hash.  The classic consequences, both proven by the
+//! property tests below:
+//!
+//! - **Balance**: with enough virtual nodes, every backend owns a
+//!   near-equal arc of the ring, so random keys spread near-uniformly.
+//! - **Minimal remapping**: adding or removing one backend only moves
+//!   the keys whose successor point belonged to that backend — an
+//!   expected `1/N` of the keyspace — while every other key keeps its
+//!   assignment.  That is what makes the router's model → backend map
+//!   stable across membership changes (a rehash-everything scheme would
+//!   dump every model's warm batcher state on every join).
+//!
+//! The hash is FNV-1a/64 finished with a splitmix64 mix — deterministic
+//! across runs and platforms (no `RandomState`), which the bit-identity
+//! discipline requires: the same seeded workload must route the same
+//! way on every machine.
+
+/// Virtual nodes per backend.  64 keeps the worst observed share within
+/// ~2x of fair for small clusters (see `keys_balance_across_backends`)
+/// at a ring size of `64 * N` points — binary-searched, so lookup cost
+/// is log2(64N).
+pub const VNODES: usize = 64;
+
+/// FNV-1a 64-bit over `s`, finished with splitmix64.  FNV alone is weak
+/// in its low bits for short suffix-varying strings (exactly our
+/// `"backend-3#17"` vnode labels); the splitmix finisher avalanches
+/// every input bit across the word.
+fn hash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    // splitmix64 finisher.
+    h = h.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = h;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// The ring: `(point, backend)` pairs sorted by point.
+#[derive(Clone, Debug)]
+pub struct HashRing {
+    points: Vec<(u64, usize)>,
+    backends: usize,
+}
+
+impl HashRing {
+    /// A ring over backends `0..backends`.  An empty ring is legal
+    /// (routes nothing) so callers can build before discovery.
+    pub fn new(backends: usize) -> HashRing {
+        let mut points = Vec::with_capacity(backends * VNODES);
+        for b in 0..backends {
+            for v in 0..VNODES {
+                points.push((hash(&format!("backend-{b}#{v}")), b));
+            }
+        }
+        // Ties (a 64-bit collision) are broken by backend index purely
+        // for determinism; they are astronomically unlikely.
+        points.sort_unstable();
+        HashRing { points, backends }
+    }
+
+    /// Number of backends on the ring.
+    pub fn backends(&self) -> usize {
+        self.backends
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.backends == 0
+    }
+
+    /// The backend owning `key`, or `None` on an empty ring.
+    pub fn route(&self, key: &str) -> Option<usize> {
+        self.successors(key).first().copied()
+    }
+
+    /// Every backend in ring order starting at `key`'s owner — the
+    /// failover sequence: the router tries index 0, then 1, ... so a
+    /// dead owner's keys land deterministically on the next arc.
+    pub fn successors(&self, key: &str) -> Vec<usize> {
+        if self.points.is_empty() {
+            return Vec::new();
+        }
+        let h = hash(key);
+        let start = self.points.partition_point(|&(p, _)| p < h) % self.points.len();
+        let mut seen = vec![false; self.backends];
+        let mut out = Vec::with_capacity(self.backends);
+        for i in 0..self.points.len() {
+            let (_, b) = self.points[(start + i) % self.points.len()];
+            if !seen[b] {
+                seen[b] = true;
+                out.push(b);
+                if out.len() == self.backends {
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Random plausible model names, deterministic per seed.
+    fn names(seed: u64, n: usize) -> Vec<String> {
+        let mut rng = Pcg64::new(seed);
+        (0..n)
+            .map(|i| {
+                let len = 3 + rng.below(12) as usize;
+                let tail: String = (0..len)
+                    .map(|_| char::from(b'a' + rng.below(26) as u8))
+                    .collect();
+                format!("{tail}-{i}")
+            })
+            .collect()
+    }
+
+    #[test]
+    fn keys_balance_across_backends() {
+        // Property: over random model-name sets, every backend's share
+        // stays within [mean/2, 2*mean] — the bound VNODES buys.
+        for seed in [3, 17, 92] {
+            for backends in [2usize, 3, 5, 8] {
+                let ring = HashRing::new(backends);
+                let keys = names(seed, 8000);
+                let mut counts = vec![0usize; backends];
+                for k in &keys {
+                    counts[ring.route(k).unwrap()] += 1;
+                }
+                let mean = keys.len() / backends;
+                for (b, &c) in counts.iter().enumerate() {
+                    assert!(
+                        c >= mean / 2 && c <= mean * 2,
+                        "seed {seed}: backend {b}/{backends} got {c} of {} keys (mean {mean})",
+                        keys.len()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn join_moves_only_about_one_nth_of_keys() {
+        // Property: growing N → N+1 backends moves ~1/(N+1) of keys —
+        // all onto the new backend — and every unmoved key keeps its
+        // owner exactly.
+        for n in [2usize, 4, 7] {
+            let before = HashRing::new(n);
+            let after = HashRing::new(n + 1);
+            let keys = names(41, 6000);
+            let mut moved = 0usize;
+            for k in &keys {
+                let (a, b) = (before.route(k).unwrap(), after.route(k).unwrap());
+                if a != b {
+                    moved += 1;
+                    assert_eq!(b, n, "a moved key must land on the joining backend");
+                }
+            }
+            let expected = keys.len() / (n + 1);
+            assert!(
+                moved <= expected * 2,
+                "join {n}->{}: {moved} keys moved, expected ~{expected}",
+                n + 1
+            );
+            assert!(moved >= expected / 3, "join {n}->{}: only {moved} moved", n + 1);
+        }
+    }
+
+    #[test]
+    fn leave_strands_only_the_leavers_keys() {
+        // Property: shrinking N → N-1 (dropping the last backend) only
+        // remaps keys the leaver owned; survivors keep every key.
+        for n in [3usize, 5, 8] {
+            let before = HashRing::new(n);
+            let after = HashRing::new(n - 1);
+            let keys = names(77, 6000);
+            let mut remapped = 0usize;
+            for k in &keys {
+                let a = before.route(k).unwrap();
+                let b = after.route(k).unwrap();
+                if a == n - 1 {
+                    remapped += 1;
+                    assert_ne!(b, n - 1);
+                } else {
+                    assert_eq!(a, b, "a survivor's key must not move on leave");
+                }
+            }
+            let expected = keys.len() / n;
+            assert!(
+                remapped <= expected * 2 && remapped >= expected / 3,
+                "leave {n}->{}: {remapped} keys remapped, expected ~{expected}",
+                n - 1
+            );
+        }
+    }
+
+    #[test]
+    fn successors_start_at_the_owner_and_cover_every_backend() {
+        let ring = HashRing::new(5);
+        for k in names(9, 200) {
+            let succ = ring.successors(&k);
+            assert_eq!(succ.len(), 5);
+            assert_eq!(succ[0], ring.route(&k).unwrap());
+            let mut sorted = succ.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3, 4], "distinct cover of all backends");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_backend_rings_are_well_defined() {
+        assert!(HashRing::new(0).route("m").is_none());
+        assert!(HashRing::new(0).successors("m").is_empty());
+        let one = HashRing::new(1);
+        assert_eq!(one.route("anything"), Some(0));
+        assert_eq!(one.successors("anything"), vec![0]);
+    }
+
+    #[test]
+    fn routing_is_deterministic_across_ring_instances() {
+        let a = HashRing::new(4);
+        let b = HashRing::new(4);
+        for k in names(123, 500) {
+            assert_eq!(a.route(&k), b.route(&k));
+            assert_eq!(a.successors(&k), b.successors(&k));
+        }
+    }
+}

@@ -1,0 +1,1195 @@
+//! The flashroute frontend: one listening port fanning client traffic
+//! out across N backend `serve-wire` processes (DESIGN.md §18).
+//!
+//! Thread layout is the same proven shape as both single-process
+//! frontends (one accept thread → bounded [`ConnQueue`] → fixed handler
+//! pool), with one addition: a prober thread driving the per-backend
+//! [`HealthMachine`]s over Ping/Pong frames.  Each handler connection
+//! is **protocol-sniffed**: the first two bytes decide flashwire
+//! (`b"FW"` magic) vs HTTP, and the consumed bytes are replayed through
+//! a rewind reader, so wire clients and HTTP clients share the front
+//! port — the router hop is invisible to both.
+//!
+//! Forwarding relays frames *verbatim*: an `InferRequest` payload is
+//! routed by [`InferRequest::peek_model`] (the leading name field) and
+//! the backend's reply bytes are written back unmodified, so the
+//! router can never perturb f32 bits — bit-identity through the extra
+//! hop is structural, not re-proven per value.  Failover honors the
+//! typed error taxonomy: `queue-full`/`backlog`/`draining`/`timeout`
+//! frames from a backend mean "try the next healthy backend after the
+//! retry hint"; every other typed error is deterministic (bad shape,
+//! unknown model) and is relayed to the client at once, because a
+//! replica would reject it identically.
+
+use std::collections::HashMap;
+use std::io::{BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::health::{HealthMachine, HealthState};
+use super::pool::BackendPool;
+use super::ring::HashRing;
+use crate::net::http::{self, HttpResponse, ReadOutcome};
+use crate::net::listener::{ConnQueue, HandlerTrace};
+use crate::trace::TraceCollector;
+use crate::util::json::Json;
+use crate::wire::frame::{read_frame, write_frame, BadKind, FrameOutcome, MsgType, WireLimits};
+use crate::wire::proto::{
+    decode_ping, ErrCode, InferRequest, InferResponse, ShardLoad, StatsResponse, WireError,
+};
+use crate::wire::MAGIC;
+
+/// Backend-selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Consistent-hash ring keyed by model name: one model's traffic
+    /// lands on one backend (warm batcher, coalescible batches), and
+    /// membership changes move ~1/N of the keyspace.
+    Ring,
+    /// Rank the ring's failover order by each backend's live load
+    /// (queued + in-flight from the `StatsResponse` v2 tail, polled by
+    /// the prober) — same candidates, least-loaded first.
+    LeastLoaded,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "ring" => Some(RoutePolicy::Ring),
+            "least-loaded" => Some(RoutePolicy::LeastLoaded),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            RoutePolicy::Ring => "ring",
+            RoutePolicy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// Router tuning knobs (mirrors `WireOptions` plus the health/probe
+/// layer).
+#[derive(Clone)]
+pub struct RouteOptions {
+    /// Connection-handler threads (max concurrent client connections).
+    pub conn_threads: usize,
+    /// Accepted-but-unclaimed connections held before door shedding.
+    pub backlog: usize,
+    pub limits: WireLimits,
+    pub policy: RoutePolicy,
+    /// Prober cadence: one Ping round trip per backend per interval,
+    /// and one cooldown tick for Down backends.
+    pub probe_interval: Duration,
+    /// Consecutive failures that open a backend's circuit.
+    pub fail_threshold: u32,
+    /// Probe intervals a Down backend sits out before its half-open
+    /// trial.
+    pub down_cooldown: u32,
+    /// Optional collector: each handler thread registers a "route-{i}"
+    /// track and every forwarded infer gets a span minted at the router
+    /// admission edge, so the hop is visible in the same Perfetto
+    /// timeline as everything else.
+    pub tracer: Option<Arc<TraceCollector>>,
+}
+
+impl Default for RouteOptions {
+    fn default() -> Self {
+        Self {
+            conn_threads: 8,
+            backlog: 64,
+            limits: WireLimits::default(),
+            policy: RoutePolicy::Ring,
+            probe_interval: Duration::from_millis(200),
+            fail_threshold: 3,
+            down_cooldown: 2,
+            tracer: None,
+        }
+    }
+}
+
+/// Router-layer counters, all per-backend — the `flashkat_route_*`
+/// Prometheus families.
+pub struct RouteMetrics {
+    pub connections: AtomicU64,
+    forwarded: Vec<AtomicU64>,
+    failed: Vec<AtomicU64>,
+    retried: Vec<AtomicU64>,
+    /// Health transitions by target state: [to_up, to_half_open, to_down].
+    transitions: Vec<[AtomicU64; 3]>,
+}
+
+fn zeroed(n: usize) -> Vec<AtomicU64> {
+    (0..n).map(|_| AtomicU64::new(0)).collect()
+}
+
+impl RouteMetrics {
+    fn new(backends: usize) -> RouteMetrics {
+        RouteMetrics {
+            connections: AtomicU64::new(0),
+            forwarded: zeroed(backends),
+            failed: zeroed(backends),
+            retried: zeroed(backends),
+            transitions: (0..backends)
+                .map(|_| std::array::from_fn(|_| AtomicU64::new(0)))
+                .collect(),
+        }
+    }
+
+    fn record_transition(&self, backend: usize, to: HealthState) {
+        let slot = match to {
+            HealthState::Up => 0,
+            HealthState::HalfOpen => 1,
+            HealthState::Down => 2,
+        };
+        self.transitions[backend][slot].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Replies relayed from `backend` (success or deterministic typed
+    /// error — anything the client got an answer for).
+    pub fn forwarded(&self, backend: usize) -> u64 {
+        self.forwarded[backend].load(Ordering::Relaxed)
+    }
+
+    /// Transport-level failures talking to `backend` (each one advanced
+    /// the failover loop).
+    pub fn failed(&self, backend: usize) -> u64 {
+        self.failed[backend].load(Ordering::Relaxed)
+    }
+
+    /// Shed-class typed errors from `backend` that triggered a retry on
+    /// the next candidate.
+    pub fn retried(&self, backend: usize) -> u64 {
+        self.retried[backend].load(Ordering::Relaxed)
+    }
+
+    /// Health transitions of `backend` as (to_up, to_half_open, to_down).
+    pub fn health_transitions(&self, backend: usize) -> (u64, u64, u64) {
+        let t = &self.transitions[backend];
+        (
+            t[0].load(Ordering::Relaxed),
+            t[1].load(Ordering::Relaxed),
+            t[2].load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn total_forwarded(&self) -> u64 {
+        self.forwarded.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn total_failed(&self) -> u64 {
+        self.failed.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total failover events: shed-class typed errors plus transport
+    /// failures — every time a request had to move to another backend.
+    pub fn total_retried(&self) -> u64 {
+        self.retried.iter().map(|c| c.load(Ordering::Relaxed)).sum::<u64>()
+            + self.total_failed()
+    }
+}
+
+/// Everything the handler threads and the prober share.
+struct RouteCore {
+    pool: BackendPool,
+    ring: HashRing,
+    policy: RoutePolicy,
+    health: Vec<Mutex<HealthMachine>>,
+    /// Last load sample per backend (queued + in-flight summed over its
+    /// shards); `u64::MAX` = never sampled, ranks last.
+    loads: Vec<AtomicU64>,
+    /// Model name → d_in, learned from backend stats — lets the HTTP
+    /// bridge default `rows` like the direct frontend does.
+    widths: Mutex<HashMap<String, u32>>,
+    metrics: Arc<RouteMetrics>,
+}
+
+impl RouteCore {
+    fn backends(&self) -> usize {
+        self.health.len()
+    }
+
+    fn on_success(&self, backend: usize) {
+        if let Some(to) = self.health[backend].lock().unwrap().on_success() {
+            self.metrics.record_transition(backend, to);
+        }
+    }
+
+    fn on_failure(&self, backend: usize) {
+        if let Some(to) = self.health[backend].lock().unwrap().on_failure() {
+            self.metrics.record_transition(backend, to);
+        }
+    }
+
+    fn available(&self, backend: usize) -> bool {
+        self.health[backend].lock().unwrap().available()
+    }
+
+    /// Failover order for `model`: the ring's successor walk, filtered
+    /// to available backends, least-loaded-first under that policy.
+    /// When the filter empties the list (every circuit open), the full
+    /// ring order is used instead — trying a probably-dead backend and
+    /// relaying its typed answer beats inventing one.
+    fn candidates(&self, model: &str) -> Vec<usize> {
+        let ring_order = self.ring.successors(model);
+        let mut order: Vec<usize> =
+            ring_order.iter().copied().filter(|&b| self.available(b)).collect();
+        if order.is_empty() {
+            order = ring_order;
+        }
+        if self.policy == RoutePolicy::LeastLoaded {
+            // Stable sort: ring position stays the tiebreak, so equal
+            // loads degrade to plain ring routing.
+            order.sort_by_key(|&b| self.loads[b].load(Ordering::Relaxed));
+        }
+        order
+    }
+
+    /// Record what a fresh stats snapshot teaches: the live load and
+    /// every model's input width.
+    fn learn(&self, backend: usize, stats: &StatsResponse) {
+        self.loads[backend].store(stats.total_load(), Ordering::Relaxed);
+        let mut widths = self.widths.lock().unwrap();
+        for m in &stats.models {
+            widths.entry(m.name.clone()).or_insert(m.d_in);
+        }
+    }
+}
+
+/// Final counters returned by [`RouteServer::shutdown`].
+#[derive(Clone, Copy, Debug)]
+pub struct RouteDrainStats {
+    pub forwarded: u64,
+    pub failed: u64,
+    pub retried: u64,
+    pub backends: usize,
+}
+
+pub struct RouteServer {
+    addr: SocketAddr,
+    core: Arc<RouteCore>,
+    stop: Arc<AtomicBool>,
+    queue: Arc<ConnQueue>,
+    limits: WireLimits,
+    threads: Mutex<Option<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl RouteServer {
+    /// Bind `addr` (port 0 → ephemeral) in front of `backends` and
+    /// start the accept thread, the handler pool, and the prober.
+    pub fn bind(
+        addr: &str,
+        backends: Vec<SocketAddr>,
+        opts: RouteOptions,
+    ) -> Result<RouteServer> {
+        if backends.is_empty() {
+            anyhow::bail!("router needs at least one backend");
+        }
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr().context("reading bound address")?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+
+        let n = backends.len();
+        let metrics = Arc::new(RouteMetrics::new(n));
+        let core = Arc::new(RouteCore {
+            pool: BackendPool::new(backends, opts.limits),
+            ring: HashRing::new(n),
+            policy: opts.policy,
+            health: (0..n)
+                .map(|_| Mutex::new(HealthMachine::new(opts.fail_threshold, opts.down_cooldown)))
+                .collect(),
+            loads: (0..n).map(|_| AtomicU64::new(u64::MAX)).collect(),
+            widths: Mutex::new(HashMap::new()),
+            metrics,
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(ConnQueue::new(opts.backlog));
+
+        let mut threads = Vec::with_capacity(opts.conn_threads.max(1) + 2);
+        {
+            let (stop, queue, core) = (stop.clone(), queue.clone(), core.clone());
+            threads.push(
+                std::thread::Builder::new()
+                    .name("flashkat-route-accept".into())
+                    .spawn(move || accept_loop(&listener, &queue, &stop, &core))
+                    .context("spawning accept thread")?,
+            );
+        }
+        {
+            let (stop, core) = (stop.clone(), core.clone());
+            let interval = opts.probe_interval;
+            let spawned = std::thread::Builder::new()
+                .name("flashkat-route-probe".into())
+                .spawn(move || probe_loop(&core, &stop, interval));
+            match spawned {
+                Ok(handle) => threads.push(handle),
+                Err(e) => {
+                    stop.store(true, Ordering::SeqCst);
+                    for t in threads {
+                        let _ = t.join();
+                    }
+                    anyhow::bail!("spawning prober thread: {e}");
+                }
+            }
+        }
+        for i in 0..opts.conn_threads.max(1) {
+            let (stop_t, queue, core) = (stop.clone(), queue.clone(), core.clone());
+            let limits = opts.limits;
+            // One "route-{i}" track per handler thread — the serial-
+            // writer discipline every frontend uses, so span IDs survive
+            // the extra hop into the same trace timeline.
+            let trace = opts.tracer.as_ref().map(|t| HandlerTrace {
+                tracer: t.clone(),
+                track: t.register_track(&format!("route-{i}")),
+            });
+            let tracer = opts.tracer.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("flashkat-route-{i}"))
+                .spawn(move || {
+                    handler_loop(&queue, &core, &limits, &stop_t, trace.as_ref(), tracer.as_ref())
+                });
+            match spawned {
+                Ok(handle) => threads.push(handle),
+                Err(e) => {
+                    stop.store(true, Ordering::SeqCst);
+                    for t in threads {
+                        let _ = t.join();
+                    }
+                    anyhow::bail!("spawning handler thread {i}: {e}");
+                }
+            }
+        }
+        Ok(RouteServer {
+            addr: local,
+            core,
+            stop,
+            queue,
+            limits: opts.limits,
+            threads: Mutex::new(Some(threads)),
+        })
+    }
+
+    /// The actually-bound address (resolves `--port 0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> &Arc<RouteMetrics> {
+        &self.core.metrics
+    }
+
+    /// Current health state of each backend.
+    pub fn backend_states(&self) -> Vec<HealthState> {
+        self.core.health.iter().map(|h| h.lock().unwrap().state()).collect()
+    }
+
+    /// Graceful drain (idempotent): stop accepting, let in-flight
+    /// exchanges finish, join every thread, answer stragglers in the
+    /// hand-off queue, and return the final counters on the call that
+    /// performed the drain.
+    pub fn shutdown(&self) -> Option<RouteDrainStats> {
+        let threads = self.threads.lock().unwrap().take()?;
+        self.stop.store(true, Ordering::SeqCst);
+        for t in threads {
+            let _ = t.join();
+        }
+        while let Some(stream) = self.queue.pop(Duration::from_millis(1)) {
+            handle_connection(stream, &self.core, &self.limits, &self.stop, None, None);
+        }
+        let m = &self.core.metrics;
+        Some(RouteDrainStats {
+            forwarded: m.total_forwarded(),
+            failed: m.total_failed(),
+            retried: m.total_retried(),
+            backends: self.core.backends(),
+        })
+    }
+}
+
+impl Drop for RouteServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, queue: &ConnQueue, stop: &AtomicBool, core: &RouteCore) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                core.metrics.connections.fetch_add(1, Ordering::Relaxed);
+                if let Err(mut stream) = queue.push(stream) {
+                    // Door shed.  The protocol is unknown pre-sniff, so
+                    // the door speaks flashwire (the latency-critical
+                    // clients); the retry hint is what the loadgen's
+                    // Backlog-aware backoff consumes.
+                    let err = WireError::new(ErrCode::Backlog, "router backlog full")
+                        .with_retry_after(crate::wire::server::SHED_RETRY_AFTER_MILLIS);
+                    let _ = write_frame(&mut stream, MsgType::Error, &err.encode());
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// One Ping round trip per backend per interval (single attempt — the
+/// probe *is* the retry mechanism), driving each machine's transitions;
+/// under least-loaded, a stats poll rides along to refresh the load
+/// ranking.
+fn probe_loop(core: &RouteCore, stop: &AtomicBool, interval: Duration) {
+    let mut token: u64 = 0x0f1a_5470_0000_0000;
+    while !stop.load(Ordering::SeqCst) {
+        for b in 0..core.backends() {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            // Cooldown ticks only advance Down machines; Up/HalfOpen
+            // get the actual ping.
+            let due = {
+                let mut m = core.health[b].lock().unwrap();
+                if let Some(to) = m.tick() {
+                    core.metrics.record_transition(b, to);
+                }
+                m.available()
+            };
+            if !due {
+                continue;
+            }
+            token = token.wrapping_add(1);
+            let t = token;
+            match core.pool.with_conn(b, 1, |c| c.ping(t)) {
+                Ok(()) => {
+                    core.on_success(b);
+                    if core.policy == RoutePolicy::LeastLoaded {
+                        if let Ok(stats) = core.pool.with_conn(b, 1, |c| c.stats()) {
+                            core.learn(b, &stats);
+                        }
+                    }
+                }
+                Err(_) => core.on_failure(b),
+            }
+        }
+        // Sleep in short slices so drain is never stuck behind a long
+        // probe interval.
+        let mut left = interval;
+        while left > Duration::ZERO && !stop.load(Ordering::SeqCst) {
+            let nap = left.min(Duration::from_millis(20));
+            std::thread::sleep(nap);
+            left = left.saturating_sub(nap);
+        }
+    }
+}
+
+fn handler_loop(
+    queue: &ConnQueue,
+    core: &RouteCore,
+    limits: &WireLimits,
+    stop: &AtomicBool,
+    trace: Option<&HandlerTrace>,
+    tracer: Option<&Arc<TraceCollector>>,
+) {
+    loop {
+        let Some(stream) = queue.pop(Duration::from_millis(50)) else {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            continue;
+        };
+        handle_connection(stream, core, limits, stop, trace, tracer);
+        if stop.load(Ordering::SeqCst) {
+            while let Some(stream) = queue.pop(Duration::from_millis(1)) {
+                handle_connection(stream, core, limits, stop, trace, tracer);
+            }
+            return;
+        }
+    }
+}
+
+/// A reader that replays the sniffed prefix bytes before the live
+/// stream — both protocol parsers see the byte stream from offset 0.
+struct Rewind<R> {
+    prefix: [u8; 2],
+    pos: usize,
+    inner: R,
+}
+
+impl<R: Read> Read for Rewind<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos < self.prefix.len() {
+            let n = buf.len().min(self.prefix.len() - self.pos);
+            buf[..n].copy_from_slice(&self.prefix[self.pos..self.pos + n]);
+            self.pos += n;
+            return Ok(n);
+        }
+        self.inner.read(buf)
+    }
+}
+
+/// Read the two sniff bytes, tolerating read-timeout ticks like the
+/// frame reader does.  `Ok(None)` = clean close before any byte.
+fn sniff(
+    stream: &mut TcpStream,
+    stop: &AtomicBool,
+    max_ticks: usize,
+) -> std::io::Result<Option<[u8; 2]>> {
+    let mut buf = [0u8; 2];
+    let mut got = 0usize;
+    let mut ticks = 0usize;
+    while got < 2 {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err(std::io::ErrorKind::UnexpectedEof.into()),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                ticks += 1;
+                if ticks > max_ticks || stop.load(Ordering::SeqCst) {
+                    return Err(e);
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some(buf))
+}
+
+/// Serve one sniffed connection until close, protocol error, or drain.
+fn handle_connection(
+    stream: TcpStream,
+    core: &RouteCore,
+    limits: &WireLimits,
+    stop: &AtomicBool,
+    trace: Option<&HandlerTrace>,
+    tracer: Option<&Arc<TraceCollector>>,
+) {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_millis(50))).ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut stream = stream;
+    let prefix = match sniff(&mut stream, stop, limits.max_stall_ticks) {
+        Ok(Some(p)) => p,
+        _ => return,
+    };
+    let mut reader = BufReader::new(Rewind { prefix, pos: 0, inner: stream });
+    if prefix == MAGIC {
+        serve_wire_conn(&mut reader, &mut writer, core, limits, stop, trace, tracer);
+    } else {
+        serve_http_conn(&mut reader, &mut writer, core, stop, trace, tracer);
+    }
+}
+
+// ---- flashwire side ---------------------------------------------------
+
+/// The relay's answer to one frame: the bytes to write back, whether
+/// the connection survives, and the typed code (for tracing).
+struct Relay {
+    msg_type: MsgType,
+    payload: Vec<u8>,
+    keep: bool,
+    code: Option<ErrCode>,
+    span_id: Option<u64>,
+}
+
+impl Relay {
+    fn err(e: WireError) -> Relay {
+        Relay {
+            msg_type: MsgType::Error,
+            code: Some(e.code),
+            payload: e.encode(),
+            keep: true,
+            span_id: None,
+        }
+    }
+
+    fn fatal(e: WireError) -> Relay {
+        Relay { keep: false, ..Relay::err(e) }
+    }
+}
+
+fn serve_wire_conn(
+    reader: &mut impl std::io::BufRead,
+    writer: &mut impl Write,
+    core: &RouteCore,
+    limits: &WireLimits,
+    stop: &AtomicBool,
+    trace: Option<&HandlerTrace>,
+    tracer: Option<&Arc<TraceCollector>>,
+) {
+    loop {
+        let outcome = match read_frame(reader, limits, stop) {
+            Ok(o) => o,
+            Err(_) => return,
+        };
+        match outcome {
+            FrameOutcome::Closed => return,
+            FrameOutcome::Bad { kind, msg } => {
+                let code = match kind {
+                    BadKind::Malformed => ErrCode::BadFrame,
+                    BadKind::Timeout => ErrCode::RequestTimeout,
+                };
+                let _ = write_frame(writer, MsgType::Error, &WireError::new(code, msg).encode());
+                return;
+            }
+            FrameOutcome::Ok(frame) => {
+                let msg_type = frame.msg_type;
+                let t0 = trace.map(|tr| tr.tracer.now_us());
+                let relay = dispatch_wire(frame.msg_type, &frame.payload, core, tracer);
+                if let (Some(tr), Some(t0)) = (trace, t0) {
+                    let status = relay.code.map(|c| c as u64).unwrap_or(0);
+                    tr.record(format!("route {msg_type:?}"), t0, status, relay.span_id);
+                }
+                let keep = relay.keep && !stop.load(Ordering::SeqCst);
+                if write_frame(writer, relay.msg_type, &relay.payload).is_err() || !keep {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn dispatch_wire(
+    msg_type: MsgType,
+    payload: &[u8],
+    core: &RouteCore,
+    tracer: Option<&Arc<TraceCollector>>,
+) -> Relay {
+    match msg_type {
+        // The router answers pings itself: a client probing the front
+        // port is asking about the tier it talks to, and the prober
+        // owns backend liveness.
+        MsgType::Ping => match decode_ping(payload) {
+            Ok(token) => Relay {
+                msg_type: MsgType::Pong,
+                payload: token.to_vec(),
+                keep: true,
+                code: None,
+                span_id: None,
+            },
+            Err(msg) => Relay::err(WireError::new(ErrCode::BadMsg, msg)),
+        },
+        MsgType::StatsRequest => {
+            if !payload.is_empty() {
+                let e = WireError::new(ErrCode::BadMsg, "StatsRequest carries no payload");
+                return Relay::err(e);
+            }
+            match fanout_stats(core) {
+                Some(stats) => Relay {
+                    msg_type: MsgType::StatsResponse,
+                    payload: stats.encode(),
+                    keep: true,
+                    code: None,
+                    span_id: None,
+                },
+                None => Relay::err(WireError::new(
+                    ErrCode::Draining,
+                    "no healthy backend answered stats",
+                )),
+            }
+        }
+        MsgType::InferRequest => forward_infer(payload, core, tracer),
+        MsgType::InferResponse | MsgType::StatsResponse | MsgType::Pong | MsgType::Error => {
+            Relay::fatal(WireError::new(
+                ErrCode::BadMsg,
+                format!("{msg_type:?} is a server-to-client msg-type"),
+            ))
+        }
+    }
+}
+
+/// Backoff before retrying on the next candidate after a shed-class
+/// typed error: honor the backend's `retry_after_millis` hint, capped
+/// so a handler thread is never parked long (the same 5ms cap as
+/// `loadgen::shed_backoff`); no hint backs off a token 200µs.
+fn failover_backoff(hint_millis: u32) -> Duration {
+    const CAP: Duration = Duration::from_millis(5);
+    if hint_millis > 0 {
+        Duration::from_millis(hint_millis as u64).min(CAP)
+    } else {
+        Duration::from_micros(200)
+    }
+}
+
+/// Is this typed error an invitation to try a replica?  Everything else
+/// (bad shape, unknown model, bad frame...) is deterministic: a second
+/// backend with the same registry would answer identically.
+fn is_shed(code: ErrCode) -> bool {
+    matches!(
+        code,
+        ErrCode::QueueFull | ErrCode::Backlog | ErrCode::Draining | ErrCode::Timeout
+    )
+}
+
+/// Peek the rows field behind the leading name — only for span
+/// annotations, so a short payload degrades to 0 instead of erroring
+/// (the backend will reject it with the authoritative message).
+fn peek_rows(payload: &[u8]) -> u32 {
+    if payload.len() < 2 {
+        return 0;
+    }
+    let n = u16::from_le_bytes([payload[0], payload[1]]) as usize;
+    let off = 2 + n;
+    match payload.get(off..off + 4) {
+        Some(b) => u32::from_le_bytes([b[0], b[1], b[2], b[3]]),
+        None => 0,
+    }
+}
+
+/// The heart of the tier: route by model name, walk the failover order,
+/// relay the first real answer verbatim.
+fn forward_infer(payload: &[u8], core: &RouteCore, tracer: Option<&Arc<TraceCollector>>) -> Relay {
+    let model = match InferRequest::peek_model(payload) {
+        Ok(m) => m,
+        Err(msg) => return Relay::err(WireError::new(ErrCode::BadMsg, msg)),
+    };
+    let span = tracer.map(|t| t.mint(&model, peek_rows(payload)));
+    let span_id = span.as_ref().map(|s| s.span_id);
+    let order = core.candidates(&model);
+    let mut last_shed: Option<WireError> = None;
+    let n = order.len();
+    for (attempt, b) in order.into_iter().enumerate() {
+        let res = core.pool.with_conn(b, 2, |c| c.round_trip(MsgType::InferRequest, payload));
+        let frame = match res {
+            Ok(f) => f,
+            Err(_) => {
+                // Transport failure: the backend never answered — feed
+                // the health machine and move on.  The request is never
+                // lost: either a replica answers or the client gets the
+                // typed no-backend error below.
+                core.on_failure(b);
+                core.metrics.failed[b].fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+        };
+        core.on_success(b);
+        if frame.msg_type == MsgType::Error {
+            if let Ok(e) = WireError::decode(&frame.payload) {
+                if is_shed(e.code) {
+                    core.metrics.retried[b].fetch_add(1, Ordering::Relaxed);
+                    if attempt + 1 < n {
+                        std::thread::sleep(failover_backoff(e.retry_after_millis));
+                    }
+                    last_shed = Some(e);
+                    continue;
+                }
+            }
+            // Deterministic typed error (or an undecodable one): relay
+            // the backend's bytes — it is the authoritative answer.
+            core.metrics.forwarded[b].fetch_add(1, Ordering::Relaxed);
+            let code = WireError::decode(&frame.payload).ok().map(|e| e.code);
+            return Relay {
+                msg_type: frame.msg_type,
+                payload: frame.payload,
+                keep: true,
+                code,
+                span_id,
+            };
+        }
+        core.metrics.forwarded[b].fetch_add(1, Ordering::Relaxed);
+        return Relay {
+            msg_type: frame.msg_type,
+            payload: frame.payload,
+            keep: true,
+            code: None,
+            span_id,
+        };
+    }
+    // Every candidate shed or failed: relay the last shed verdict (it
+    // carries the freshest retry hint) or synthesize the no-backend one.
+    let e = last_shed.unwrap_or_else(|| {
+        WireError::new(ErrCode::Draining, format!("no reachable backend for model {model:?}"))
+            .with_retry_after(crate::wire::server::SHED_RETRY_AFTER_MILLIS)
+    });
+    Relay { span_id, ..Relay::err(e) }
+}
+
+/// Fan a StatsRequest out to every available backend and merge, so a
+/// client's stats view through the router covers the whole tier.
+fn fanout_stats(core: &RouteCore) -> Option<StatsResponse> {
+    let mut parts = Vec::new();
+    for b in 0..core.backends() {
+        if !core.available(b) {
+            continue;
+        }
+        match core.pool.with_conn(b, 1, |c| c.stats()) {
+            Ok(stats) => {
+                core.on_success(b);
+                core.learn(b, &stats);
+                parts.push(stats);
+            }
+            Err(_) => core.on_failure(b),
+        }
+    }
+    if parts.is_empty() {
+        None
+    } else {
+        Some(merge_stats(parts))
+    }
+}
+
+/// Merge per-backend stats: per-model counters sum by name (widths from
+/// the first sighting), shard axes concatenate backend-major — N
+/// backends of S shards read as N*S shards, which is what they are.
+pub(crate) fn merge_stats(parts: Vec<StatsResponse>) -> StatsResponse {
+    let mut models: Vec<crate::wire::StatsModel> = Vec::new();
+    let mut shard_peaks: Vec<u64> = Vec::new();
+    let mut shard_loads: Vec<ShardLoad> = Vec::new();
+    for part in parts {
+        for m in part.models {
+            match models.iter_mut().find(|o| o.name == m.name) {
+                Some(o) => {
+                    o.requests += m.requests;
+                    o.rows += m.rows;
+                    o.batches += m.batches;
+                    o.failed += m.failed;
+                }
+                None => models.push(m),
+            }
+        }
+        shard_peaks.extend(part.shard_peaks);
+        shard_loads.extend(part.shard_loads);
+    }
+    StatsResponse { models, shard_peaks, shard_loads }
+}
+
+// ---- HTTP side --------------------------------------------------------
+
+fn serve_http_conn(
+    reader: &mut impl std::io::BufRead,
+    writer: &mut impl Write,
+    core: &RouteCore,
+    stop: &AtomicBool,
+    trace: Option<&HandlerTrace>,
+    tracer: Option<&Arc<TraceCollector>>,
+) {
+    let limits = http::Limits::default();
+    loop {
+        let outcome = match http::read_request(reader, &limits, stop) {
+            Ok(o) => o,
+            Err(_) => return,
+        };
+        match outcome {
+            ReadOutcome::Closed => return,
+            ReadOutcome::Bad { status, msg } => {
+                let resp = HttpResponse::json(
+                    status,
+                    &Json::Obj(vec![("error".to_string(), Json::Str(msg))]),
+                );
+                let _ = resp.write(writer, false);
+                return;
+            }
+            ReadOutcome::Ok(req) => {
+                let t0 = trace.map(|tr| tr.tracer.now_us());
+                let resp = handle_http(&req, core, tracer);
+                if let (Some(tr), Some(t0)) = (trace, t0) {
+                    tr.record(
+                        format!("route {} {}", req.method, req.path()),
+                        t0,
+                        resp.status as u64,
+                        resp.span_id,
+                    );
+                }
+                let keep = req.keep_alive() && !stop.load(Ordering::SeqCst);
+                if resp.write(writer, keep).is_err() || !keep {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn http_error(status: u16, msg: &str) -> HttpResponse {
+    HttpResponse::json(status, &Json::Obj(vec![("error".to_string(), Json::Str(msg.to_string()))]))
+}
+
+fn handle_http(
+    req: &http::Request,
+    core: &RouteCore,
+    tracer: Option<&Arc<TraceCollector>>,
+) -> HttpResponse {
+    let segments: Vec<&str> = req.path().split('/').filter(|s| !s.is_empty()).collect();
+    match segments.as_slice() {
+        ["healthz"] => match req.method.as_str() {
+            "GET" => HttpResponse::text(200, "ok\n"),
+            _ => http_error(405, "healthz supports GET"),
+        },
+        ["metrics"] => match req.method.as_str() {
+            "GET" => HttpResponse::text(200, render_route_metrics(core)),
+            _ => http_error(405, "metrics supports GET"),
+        },
+        ["v1", "models", name, "infer"] => match req.method.as_str() {
+            "POST" => http_infer(req, core, name, tracer),
+            _ => http_error(405, "infer supports POST"),
+        },
+        _ => http_error(404, &format!("no route for {}", req.path())),
+    }
+}
+
+/// HTTP → wire bridge: parse the same JSON body the direct frontend
+/// takes, encode a wire InferRequest, run it through the identical
+/// failover path, and translate the typed outcome back to a status via
+/// [`ErrCode::http_equiv`].  The JSON reply carries `y`/`batch_size`/
+/// `cause` (the wire response has no per-request timing block — that
+/// telemetry lives in the backend's own trace).
+fn http_infer(
+    req: &http::Request,
+    core: &RouteCore,
+    name: &str,
+    tracer: Option<&Arc<TraceCollector>>,
+) -> HttpResponse {
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => return http_error(400, "body is not UTF-8"),
+    };
+    let body = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => return http_error(400, &format!("bad JSON body: {e}")),
+    };
+    let Some(x_json) = body.get("x").and_then(Json::as_arr) else {
+        return http_error(400, "body needs an \"x\" array of numbers");
+    };
+    let mut x = Vec::with_capacity(x_json.len());
+    for v in x_json {
+        match v.as_f64().map(|f| f as f32) {
+            Some(f) if f.is_finite() => x.push(f),
+            _ => return http_error(400, "\"x\" must contain only finite numbers"),
+        }
+    }
+    let rows = match body.get("rows") {
+        Some(v) => match v.as_usize().and_then(|n| u32::try_from(n).ok()) {
+            Some(n) if n > 0 => n,
+            _ => return http_error(400, "\"rows\" must be a positive integer"),
+        },
+        None => {
+            // The router has no registry of its own; widths are learned
+            // from backend stats (one lazy fan-out on first sight).
+            let d_in = core.widths.lock().unwrap().get(name).copied();
+            let d_in = match d_in {
+                Some(w) => Some(w),
+                None => {
+                    fanout_stats(core);
+                    core.widths.lock().unwrap().get(name).copied()
+                }
+            };
+            let Some(d_in) = d_in else {
+                return http_error(404, &format!("unknown model {name:?}"));
+            };
+            let d_in = d_in as usize;
+            if x.is_empty() || x.len() % d_in != 0 {
+                return http_error(
+                    400,
+                    &format!("x has {} values, not a positive multiple of d_in={d_in}", x.len()),
+                );
+            }
+            (x.len() / d_in) as u32
+        }
+    };
+    if x.len() % rows as usize != 0 {
+        return http_error(400, &format!("x has {} values, not {rows} whole rows", x.len()));
+    }
+    let dim = (x.len() / rows as usize) as u32;
+    let payload = InferRequest::encode_parts(name, rows, dim, &x);
+    let relay = forward_infer(&payload, core, tracer);
+    match relay.msg_type {
+        MsgType::InferResponse => match InferResponse::decode(&relay.payload) {
+            Ok(resp) => {
+                if resp.y.iter().any(|v| !v.is_finite()) {
+                    return http_error(500, "model produced non-finite values");
+                }
+                let y: Vec<Json> = resp.y.iter().map(|&v| Json::Num(v as f64)).collect();
+                let mut fields = vec![
+                    ("y".to_string(), Json::Arr(y)),
+                    ("batch_size".to_string(), Json::Int(resp.batch_size as i64)),
+                    ("cause".to_string(), Json::Str(resp.cause.label().to_string())),
+                ];
+                if let Some(id) = relay.span_id {
+                    fields.push(("span_id".to_string(), Json::Int(id as i64)));
+                }
+                HttpResponse::json(200, &Json::Obj(fields)).with_span(relay.span_id)
+            }
+            Err(e) => http_error(502, &format!("bad InferResponse from backend: {e}")),
+        },
+        MsgType::Error => match WireError::decode(&relay.payload) {
+            Ok(e) => {
+                let mut resp = http_error(e.code.http_equiv(), &e.message);
+                if e.retry_after_millis > 0 {
+                    // HTTP Retry-After speaks whole seconds; round up.
+                    let secs = e.retry_after_millis.div_ceil(1000).max(1);
+                    resp = resp.with_header("retry-after", secs.to_string());
+                }
+                resp.with_span(relay.span_id)
+            }
+            Err(e) => http_error(502, &format!("bad Error frame from backend: {e}")),
+        },
+        other => http_error(502, &format!("unexpected {other:?} reply from backend")),
+    }
+}
+
+fn render_route_metrics(core: &RouteCore) -> String {
+    let m = &core.metrics;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "# TYPE flashkat_route_connections_total counter\nflashkat_route_connections_total {}\n",
+        m.connections.load(Ordering::Relaxed)
+    ));
+    for (metric, help, pick) in [
+        (
+            "flashkat_route_forwarded_total",
+            "replies relayed from each backend (answers, including deterministic typed errors)",
+            RouteMetrics::forwarded as fn(&RouteMetrics, usize) -> u64,
+        ),
+        (
+            "flashkat_route_failed_total",
+            "transport failures per backend (connection refused/reset mid-exchange)",
+            RouteMetrics::failed,
+        ),
+        (
+            "flashkat_route_retried_total",
+            "shed-class typed errors per backend that moved the request to the next candidate",
+            RouteMetrics::retried,
+        ),
+    ] {
+        out.push_str(&format!("# HELP {metric} {help}\n# TYPE {metric} counter\n"));
+        for b in 0..core.backends() {
+            out.push_str(&format!("{metric}{{backend=\"{b}\"}} {}\n", pick(m, b)));
+        }
+    }
+    out.push_str(
+        "# HELP flashkat_route_health_transitions_total backend circuit transitions by target state\n# TYPE flashkat_route_health_transitions_total counter\n",
+    );
+    for b in 0..core.backends() {
+        let (up, half, down) = m.health_transitions(b);
+        for (state, v) in [("up", up), ("half-open", half), ("down", down)] {
+            out.push_str(&format!(
+                "flashkat_route_health_transitions_total{{backend=\"{b}\",to=\"{state}\"}} {v}\n"
+            ));
+        }
+    }
+    out.push_str("# TYPE flashkat_route_backend_up gauge\n");
+    for (b, h) in core.health.iter().enumerate() {
+        let up = matches!(h.lock().unwrap().state(), HealthState::Up | HealthState::HalfOpen);
+        out.push_str(&format!("flashkat_route_backend_up{{backend=\"{b}\"}} {}\n", up as u8));
+    }
+    out.push_str("# TYPE flashkat_route_backend_load gauge\n");
+    for (b, l) in core.loads.iter().enumerate() {
+        let v = l.load(Ordering::Relaxed);
+        if v != u64::MAX {
+            out.push_str(&format!("flashkat_route_backend_load{{backend=\"{b}\"}} {v}\n"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::StatsModel;
+
+    #[test]
+    fn policy_parses_its_two_names() {
+        assert_eq!(RoutePolicy::parse("ring"), Some(RoutePolicy::Ring));
+        assert_eq!(RoutePolicy::parse("least-loaded"), Some(RoutePolicy::LeastLoaded));
+        assert_eq!(RoutePolicy::parse("round-robin"), None);
+        assert_eq!(RoutePolicy::Ring.label(), "ring");
+        assert_eq!(RoutePolicy::LeastLoaded.label(), "least-loaded");
+    }
+
+    #[test]
+    fn failover_backoff_honors_and_caps_the_hint() {
+        assert_eq!(failover_backoff(0), Duration::from_micros(200));
+        assert_eq!(failover_backoff(2), Duration::from_millis(2));
+        assert_eq!(failover_backoff(60_000), Duration::from_millis(5), "capped");
+    }
+
+    #[test]
+    fn shed_classification_matches_the_failover_table() {
+        for code in ErrCode::ALL {
+            let shed = is_shed(code);
+            let expect = matches!(
+                code,
+                ErrCode::QueueFull | ErrCode::Backlog | ErrCode::Draining | ErrCode::Timeout
+            );
+            assert_eq!(shed, expect, "{code:?}");
+        }
+    }
+
+    #[test]
+    fn merge_sums_models_and_concatenates_shard_axes() {
+        let a = StatsResponse {
+            models: vec![StatsModel {
+                name: "m".into(),
+                d_in: 8,
+                d_out: 8,
+                requests: 3,
+                rows: 5,
+                batches: 2,
+                failed: 1,
+            }],
+            shard_peaks: vec![4],
+            shard_loads: vec![ShardLoad { queued: 1, in_flight: 1 }],
+        };
+        let b = StatsResponse {
+            models: vec![
+                StatsModel {
+                    name: "m".into(),
+                    d_in: 8,
+                    d_out: 8,
+                    requests: 7,
+                    rows: 9,
+                    batches: 4,
+                    failed: 0,
+                },
+                StatsModel {
+                    name: "other".into(),
+                    d_in: 4,
+                    d_out: 4,
+                    requests: 1,
+                    rows: 1,
+                    batches: 1,
+                    failed: 0,
+                },
+            ],
+            shard_peaks: vec![2, 0],
+            shard_loads: vec![ShardLoad { queued: 0, in_flight: 2 }, ShardLoad::default()],
+        };
+        let merged = merge_stats(vec![a, b]);
+        assert_eq!(merged.models.len(), 2);
+        let m = merged.models.iter().find(|m| m.name == "m").unwrap();
+        assert_eq!((m.requests, m.rows, m.batches, m.failed), (10, 14, 6, 1));
+        assert_eq!(merged.shard_peaks, vec![4, 2, 0]);
+        assert_eq!(merged.shard_loads.len(), 3);
+        assert_eq!(merged.total_load(), 4);
+    }
+
+    #[test]
+    fn peek_rows_degrades_to_zero_on_short_payloads() {
+        let p = InferRequest::encode_parts("abc", 17, 2, &[0.0; 34]);
+        assert_eq!(peek_rows(&p), 17);
+        assert_eq!(peek_rows(&p[..4]), 0);
+        assert_eq!(peek_rows(&[]), 0);
+    }
+
+    #[test]
+    fn rewind_replays_the_prefix_then_the_stream() {
+        let inner: &[u8] = b"cdef";
+        let mut r = Rewind { prefix: [b'a', b'b'], pos: 0, inner };
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        assert_eq!(out, b"abcdef");
+    }
+}

@@ -229,6 +229,11 @@ pub struct BenchResult {
     /// from `errors` (requests that ultimately failed).  Always 0 for
     /// the in-process transport, which blocks at admission instead.
     pub retries: usize,
+    /// Router-side failover events during this leg (shed-class typed
+    /// errors plus transport failures that moved a request to another
+    /// backend) — read from the route tier's counters, 0 for every
+    /// direct transport.
+    pub failovers: usize,
     /// Server-wide executor totals.
     pub exec: ExecStats,
     pub peak_queued: usize,
@@ -296,6 +301,7 @@ impl BenchResult {
             ("max_ms".to_string(), Json::Num(self.max_ms)),
             ("errors".to_string(), Json::Int(self.errors as i64)),
             ("shed_retries".to_string(), Json::Int(self.retries as i64)),
+            ("failovers".to_string(), Json::Int(self.failovers as i64)),
             ("peak_queued".to_string(), Json::Int(self.peak_queued as i64)),
         ];
         fields.extend(exec_json(&self.exec));
@@ -548,6 +554,7 @@ fn aggregate(
         max_ms: all.last().copied().unwrap_or(f64::NAN) * 1e3,
         errors,
         retries: 0,
+        failovers: 0,
         exec,
         peak_queued: stats.peak_queued,
         per_model,
@@ -727,7 +734,7 @@ fn run_http_inner(
 /// matches [`run_http`]'s exactly — payload generation outside, encode
 /// → TCP → decode → admit → respond inside — so the three records
 /// (in-process, HTTP/JSON, flashwire) differ only in transport.
-/// `QueueFull` error frames are retried with the same
+/// `QueueFull`/`Backlog` error frames are retried with the same
 /// [`shed_backoff`] policy, honoring the frame's typed
 /// retry-after-millis hint.
 pub fn run_wire(
@@ -826,7 +833,14 @@ fn run_wire_inner(
                         ok = true;
                         break;
                     }
-                    Ok(Err(e)) if e.code == ErrCode::QueueFull => {
+                    // `Backlog` joins `QueueFull` in the retry arm: a
+                    // router's accept-door shed and its exhausted-
+                    // failover verdict both arrive as `Backlog`/
+                    // `Draining`-class frames carrying the same
+                    // retry-after hint a direct server sends — the
+                    // client's backoff must not depend on whether a
+                    // router sits in between.
+                    Ok(Err(e)) if matches!(e.code, ErrCode::QueueFull | ErrCode::Backlog) => {
                         retries.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                         let hint = (e.retry_after_millis > 0)
                             .then_some(e.retry_after_millis as u64);
@@ -1262,6 +1276,275 @@ pub fn cache_bench_json(
     ])
 }
 
+/// Fold per-node [`ServeStats`] into one tier-wide snapshot: all nodes
+/// share the registry (same specs, same seeds), so per-model counters
+/// merge by registry position; shard peaks concatenate node-major.
+fn merge_serve_stats(parts: Vec<ServeStats>) -> ServeStats {
+    let mut out = ServeStats::default();
+    for part in parts {
+        if out.per_model.is_empty() {
+            out.per_model = part.per_model;
+        } else {
+            for (o, p) in out.per_model.iter_mut().zip(&part.per_model) {
+                o.stats.merge(&p.stats);
+            }
+        }
+        out.shard_peaks.extend(part.shard_peaks);
+        out.peak_queued = out.peak_queued.max(part.peak_queued);
+    }
+    out
+}
+
+/// Spawn `nodes` loopback backend wire servers, each carrying the FULL
+/// seeded registry.  Replication (not partitioning) is deliberate: the
+/// ring decides which node *normally* serves a model, but failover only
+/// works if any node *can* serve any model — and identical per-spec
+/// coefficient seeds make every replica bit-identical, which is what
+/// lets the router treat them as interchangeable.
+fn spawn_backend_nodes(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    shards: usize,
+    nodes: usize,
+) -> Result<Vec<crate::wire::WireServer>> {
+    use crate::wire::{WireOptions, WireServer};
+    (0..nodes)
+        .map(|i| {
+            let server = std::sync::Arc::new(Server::start_configured(
+                executors(cfg)?,
+                policy,
+                shards,
+                None,
+                0,
+            )?);
+            WireServer::bind(
+                "127.0.0.1:0",
+                server,
+                // Headroom over the router's handler pool plus the
+                // prober, so a node never door-sheds the tier's own
+                // traffic during the bench.
+                WireOptions { conn_threads: (cfg.concurrency + 2).max(8), ..Default::default() },
+            )
+            .with_context(|| format!("binding backend node {i}"))
+        })
+        .collect()
+}
+
+/// Run the seeded workload **through the route tier**: `nodes` backend
+/// wire servers behind one [`crate::route::RouteServer`], clients
+/// talking only to the front port.  Workload, timed window, and retry
+/// policy are identical to [`run_wire`]'s, so comparing the two records
+/// isolates the router hop; comparing `nodes = 1` against `nodes = N`
+/// (same front door both times) isolates horizontal scaling.  Returns
+/// the bench record with `failovers` filled from the router's counters.
+pub fn run_route(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    label: &str,
+    shards: usize,
+    nodes: usize,
+    route_policy: crate::route::RoutePolicy,
+) -> Result<BenchResult> {
+    use crate::route::{RouteOptions, RouteServer};
+    use crate::wire::{ErrCode, WireClient};
+
+    if cfg.requests == 0 || cfg.concurrency == 0 {
+        bail!("load config needs at least one request and one client");
+    }
+    if cfg.models.is_empty() {
+        bail!("load config needs at least one model spec");
+    }
+    if nodes == 0 {
+        bail!("route bench needs at least one node");
+    }
+    let backends = spawn_backend_nodes(cfg, policy, shards, nodes)?;
+    let addrs: Vec<_> = backends.iter().map(|b| b.local_addr()).collect();
+    let router = RouteServer::bind(
+        "127.0.0.1:0",
+        addrs,
+        RouteOptions {
+            conn_threads: cfg.concurrency.max(1),
+            policy: route_policy,
+            ..Default::default()
+        },
+    )?;
+    let addr = router.local_addr();
+
+    let retries = std::sync::atomic::AtomicUsize::new(0);
+    let (wall_secs, per_client) = drive(cfg, || {
+        let retries = &retries;
+        let mut conn = WireClient::connect(addr).ok();
+        move |id| {
+            let (model, rows, x) = request(cfg, id);
+            let name = cfg.models[model].name.as_str();
+            let ts = Instant::now();
+            let payload = match WireClient::encode_infer(name, &x, rows) {
+                Ok(p) => p,
+                Err(_) => return (model, Err(())),
+            };
+            let mut ok = false;
+            for _attempt in 0..1000 {
+                if conn.is_none() {
+                    match WireClient::connect(addr) {
+                        Ok(c) => conn = Some(c),
+                        Err(_) => break,
+                    }
+                }
+                let c = conn.as_mut().expect("connection established above");
+                match c.infer_encoded(&payload) {
+                    Ok(Ok(_resp)) => {
+                        ok = true;
+                        break;
+                    }
+                    Ok(Err(e)) if matches!(e.code, ErrCode::QueueFull | ErrCode::Backlog) => {
+                        retries.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        let hint = (e.retry_after_millis > 0)
+                            .then_some(e.retry_after_millis as u64);
+                        std::thread::sleep(shed_backoff(hint));
+                    }
+                    Ok(Err(_)) => break,
+                    Err(_) => {
+                        conn = None;
+                    }
+                }
+            }
+            (model, if ok { Ok(ts.elapsed().as_secs_f64()) } else { Err(()) })
+        }
+    });
+    let failovers = router.metrics().total_retried();
+    router.shutdown();
+    let stats = merge_serve_stats(
+        backends.iter().map(|b| b.shutdown().expect("first shutdown")).collect(),
+    );
+    let mut res = aggregate(cfg, policy, label, wall_secs, per_client, &stats);
+    res.retries = retries.into_inner();
+    res.failovers = failovers as usize;
+    Ok(res)
+}
+
+/// The route tier's bit-identity gate: replay the whole seeded workload
+/// serially through a router over `nodes` replicas and compare every
+/// response `to_bits()`-exact against the unbatched executor oracle —
+/// the same ground truth as [`verify_cached_bit_identity`], now also
+/// covering the relay path (sniff, failover, verbatim frame copy).
+pub fn verify_route_bit_identity(
+    cfg: &LoadConfig,
+    policy: BatchPolicy,
+    shards: usize,
+    nodes: usize,
+) -> Result<bool> {
+    use crate::route::{RouteOptions, RouteServer};
+    use crate::wire::{ErrCode, WireClient};
+
+    if cfg.requests == 0 {
+        bail!("load config needs at least one request");
+    }
+    if cfg.models.is_empty() {
+        bail!("load config needs at least one model spec");
+    }
+    if nodes == 0 {
+        bail!("route identity gate needs at least one node");
+    }
+
+    // Oracle: each request's rows through bare executors, unbatched.
+    let mut oracle = executors(cfg)?;
+    let mut y = Vec::new();
+    let mut want: Vec<Vec<u32>> = Vec::with_capacity(cfg.requests);
+    for id in 0..cfg.requests as u64 {
+        let (model, rows, x) = request(cfg, id);
+        oracle[model]
+            .run(&x, rows as usize, &mut y)
+            .with_context(|| format!("oracle forward for request {id}"))?;
+        want.push(y.iter().map(|v| v.to_bits()).collect());
+    }
+
+    let backends = spawn_backend_nodes(cfg, policy, shards, nodes)?;
+    let addrs: Vec<_> = backends.iter().map(|b| b.local_addr()).collect();
+    let router = RouteServer::bind("127.0.0.1:0", addrs, RouteOptions::default())?;
+    let mut conn = WireClient::connect(router.local_addr())?;
+    let mut identical = true;
+    for id in 0..cfg.requests as u64 {
+        let (model, rows, x) = request(cfg, id);
+        let mut ok = false;
+        for _attempt in 0..100 {
+            match conn.infer(cfg.models[model].name.as_str(), &x, rows) {
+                Ok(Ok(resp)) => {
+                    let w = &want[id as usize];
+                    ok = resp.y.len() == w.len()
+                        && resp.y.iter().zip(w).all(|(v, b)| v.to_bits() == *b);
+                    break;
+                }
+                Ok(Err(e)) if matches!(e.code, ErrCode::QueueFull | ErrCode::Backlog) => {
+                    let hint =
+                        (e.retry_after_millis > 0).then_some(e.retry_after_millis as u64);
+                    std::thread::sleep(shed_backoff(hint));
+                }
+                _ => break,
+            }
+        }
+        identical &= ok;
+    }
+    router.shutdown();
+    for b in &backends {
+        let _ = b.shutdown();
+    }
+    Ok(identical)
+}
+
+/// The `BENCH_route.json` artifact: the identical seeded workload
+/// through a 1-node tier and an `nodes`-node tier (same router hop both
+/// times), the scaling-efficiency verdict, and the bit-identity gate.
+/// `efficiency` is `throughput_N / (N × throughput_1)` — 1.0 is perfect
+/// horizontal scaling, and the denominator guard keeps a degenerate
+/// zero-throughput leg from minting an infinite ratio.
+pub fn route_bench_json(
+    cfg: &LoadConfig,
+    shards: usize,
+    nodes: usize,
+    policy_label: &str,
+    single: &BenchResult,
+    multi: &BenchResult,
+    identical: bool,
+) -> Json {
+    let per_node = |n: usize, r: &BenchResult| {
+        Json::Obj(vec![
+            ("nodes".to_string(), Json::Int(n as i64)),
+            ("p50_ms".to_string(), Json::Num(r.p50_ms)),
+            ("p99_ms".to_string(), Json::Num(r.p99_ms)),
+            ("throughput_rps".to_string(), Json::Num(r.throughput_rps)),
+            ("shed_retries".to_string(), Json::Int(r.retries as i64)),
+            ("failovers".to_string(), Json::Int(r.failovers as i64)),
+        ])
+    };
+    Json::Obj(vec![
+        ("bench".to_string(), Json::Str("serve_route".to_string())),
+        ("config".to_string(), config_json(cfg)),
+        ("shards".to_string(), Json::Int(shards as i64)),
+        ("policy".to_string(), Json::Str(policy_label.to_string())),
+        ("bit_identity".to_string(), Json::Bool(identical)),
+        (
+            "scaling".to_string(),
+            Json::Obj(vec![
+                ("nodes".to_string(), Json::Int(nodes as i64)),
+                ("throughput_1_rps".to_string(), Json::Num(single.throughput_rps)),
+                ("throughput_n_rps".to_string(), Json::Num(multi.throughput_rps)),
+                (
+                    "efficiency".to_string(),
+                    Json::Num(
+                        multi.throughput_rps
+                            / (nodes as f64 * single.throughput_rps).max(1e-9),
+                    ),
+                ),
+                (
+                    "per_node".to_string(),
+                    Json::Arr(vec![per_node(1, single), per_node(nodes, multi)]),
+                ),
+            ]),
+        ),
+        ("results".to_string(), Json::Arr(vec![single.to_json(), multi.to_json()])),
+    ])
+}
+
 fn config_json(cfg: &LoadConfig) -> Json {
     let models: Vec<Json> = cfg
         .models
@@ -1612,6 +1895,37 @@ mod tests {
         assert!(cmp.get("flashwire").unwrap().get("bytes_per_request").is_some());
         assert!(cmp.get("wire_vs_json").unwrap().get("bytes_ratio").is_some());
         assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    /// Route-mode smoke: the workload through a 2-node tier serves
+    /// everything, the merged counters account for every request, the
+    /// serial replay is bit-identical through the router, and the
+    /// artifact carries the scaling block.
+    #[test]
+    fn route_mode_run_serves_and_stays_bit_identical() {
+        let cfg = LoadConfig {
+            requests: 40,
+            concurrency: 4,
+            models: vec![ModelSpec::new("wide", 64, 8), ModelSpec::new("narrow", 16, 4)],
+            ..Default::default()
+        };
+        let policy = BatchPolicy { max_batch: 8, ..Default::default() };
+        let res = run_route(&cfg, policy, "route smoke", 2, 2, crate::route::RoutePolicy::Ring)
+            .unwrap();
+        assert_eq!(res.errors, 0, "all requests served through the router");
+        assert_eq!(res.exec.requests, 40, "tier-wide merged counters");
+        assert_eq!(res.exec.failed, 0);
+        assert!(res.throughput_rps > 0.0);
+        assert!(verify_route_bit_identity(&cfg, policy, 2, 2).unwrap());
+        let j = route_bench_json(&cfg, 2, 2, "ring", &res, &res, true);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("serve_route"));
+        assert_eq!(back.get("bit_identity").unwrap().as_bool(), Some(true));
+        let scaling = back.get("scaling").unwrap();
+        assert_eq!(scaling.get("nodes").unwrap().as_usize(), Some(2));
+        let eff = scaling.get("efficiency").unwrap().as_f64().unwrap();
+        assert_eq!(eff, 0.5, "same record on both legs => throughput_n == throughput_1");
+        assert_eq!(scaling.get("per_node").unwrap().as_arr().unwrap().len(), 2);
     }
 
     /// The binary encoding must be strictly smaller than JSON for

@@ -28,6 +28,7 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -152,6 +153,12 @@ struct Shard {
     /// Live per-executor counters (shard-local registry order), updated
     /// once per executed batch — the `/metrics` feed.
     stats: Mutex<Vec<ExecStats>>,
+    /// Requests popped from the queue but not yet replied to (the batch
+    /// currently inside the executor).  Together with the live queue
+    /// depth this is the load signal `StatsResponse` v2 exports for the
+    /// router's least-loaded policy; an atomic so readers never touch
+    /// the state mutex on the executor hot path.
+    in_flight: AtomicUsize,
 }
 
 /// The two trace tracks owned by one shard: batch slices on one, the
@@ -306,6 +313,7 @@ impl Server {
                 space: Condvar::new(),
                 work: Condvar::new(),
                 stats: Mutex::new(vec![ExecStats::default(); n as usize]),
+                in_flight: AtomicUsize::new(0),
             })
             .collect();
         let shard_tracks = match &tracer {
@@ -420,6 +428,22 @@ impl Server {
             .iter()
             .map(|s| s.state.lock().unwrap().batcher.queued())
             .sum()
+    }
+
+    /// Live `(queue_depth, in_flight)` per shard: requests admitted but
+    /// not yet popped, and requests inside the executor but not yet
+    /// replied to.  This is the load signal `StatsResponse` carries in
+    /// its v2 tail (the router's `--policy least-loaded` input) and the
+    /// `/metrics` queue-depth/in-flight gauges.
+    pub fn shard_loads(&self) -> Vec<(usize, usize)> {
+        self.shared
+            .shards
+            .iter()
+            .map(|s| {
+                let queued = s.state.lock().unwrap().batcher.queued();
+                (queued, s.in_flight.load(Ordering::Relaxed))
+            })
+            .collect()
     }
 
     /// Live counter snapshot: per-model stats recorded after every
@@ -814,6 +838,9 @@ fn execute(
     scratch: &mut Scratch,
 ) {
     let shard = &shared.shards[shard_idx];
+    // In-flight gauge: covers the whole executor occupancy, assembly
+    // through reply fan-out (queue depth stops counting these at pop).
+    shard.in_flight.fetch_add(jobs.len(), Ordering::Relaxed);
     let idx = batch.key.model as usize;
     let exec = &mut executors[idx];
     let d_in = exec.d_in();
@@ -912,6 +939,7 @@ fn execute(
         if let Some(t) = tracer {
             t.record_many(events);
         }
+        shard.in_flight.fetch_sub(size, Ordering::Relaxed);
         return;
     }
 
@@ -954,6 +982,7 @@ fn execute(
             .resp
             .send(Ok(Response { y, batch_size: size, cause: batch.cause, timing, span_id }));
     }
+    shard.in_flight.fetch_sub(size, Ordering::Relaxed);
     if let Some(t) = tracer {
         t.record_many(events);
     }

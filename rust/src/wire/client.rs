@@ -60,6 +60,58 @@ impl WireClient {
         self.addr
     }
 
+    /// Whether an earlier frame failure poisoned this connection (see
+    /// [`Self::call_reconnecting`] for the recovery path).
+    pub fn is_broken(&self) -> bool {
+        self.broken
+    }
+
+    /// Run `op` against this client, reconnecting with capped
+    /// exponential backoff on transport failure — up to `attempts`
+    /// tries total.  This is the one reconnect loop every caller used
+    /// to hand-roll: any `Err` from `op` poisons the connection
+    /// ([`Self::round_trip`]), so the helper replaces the whole client
+    /// (`connect_with_limits` to the same address and limits) and
+    /// retries.  Typed server answers (`Ok(Err(WireError))` from
+    /// [`Self::infer_encoded`], say) are successes here: the connection
+    /// is healthy and retrying is the *caller's* policy decision.
+    ///
+    /// Backoff between attempts is `1ms << tries`, capped at 100ms —
+    /// enough for a backend restart to win the race, small enough that
+    /// a router's failover path is never stalled behind it.
+    pub fn call_reconnecting<T>(
+        &mut self,
+        attempts: usize,
+        mut op: impl FnMut(&mut WireClient) -> Result<T>,
+    ) -> Result<T> {
+        const BACKOFF_CAP: Duration = Duration::from_millis(100);
+        let attempts = attempts.max(1);
+        let mut last: Option<anyhow::Error> = None;
+        for tries in 0..attempts {
+            if tries > 0 || self.broken {
+                if tries > 0 {
+                    let backoff = Duration::from_millis(1u64 << tries.min(16));
+                    std::thread::sleep(backoff.min(BACKOFF_CAP));
+                }
+                match Self::connect_with_limits(self.addr, self.limits) {
+                    Ok(fresh) => *self = fresh,
+                    Err(e) => {
+                        last = Some(e);
+                        continue;
+                    }
+                }
+            }
+            match op(self) {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.expect("at least one attempt ran").context(format!(
+            "giving up on {} after {attempts} attempt(s)",
+            self.addr
+        )))
+    }
+
     /// Validate and pre-encode one infer request's frame payload.  `x`
     /// must hold `rows` full rows; the row width is derived as
     /// `x.len() / rows`.  Callers that may resend — the bench's
@@ -153,7 +205,11 @@ impl WireClient {
     /// the stream position unknowable, so it poisons the connection:
     /// further calls fail fast instead of parsing stale mid-frame bytes
     /// as a header.  Callers reconnect (as the bench's retry loop does).
-    fn round_trip(&mut self, msg_type: MsgType, payload: &[u8]) -> Result<Frame> {
+    /// `pub(crate)` so the router tier can relay a request's payload
+    /// verbatim and hand the reply frame back byte-for-byte — decoding
+    /// and re-encoding megabytes of f32 rows per hop is exactly the
+    /// data-movement tax the protocol exists to avoid.
+    pub(crate) fn round_trip(&mut self, msg_type: MsgType, payload: &[u8]) -> Result<Frame> {
         if self.broken {
             bail!("connection desynced by an earlier frame failure; reconnect");
         }

@@ -38,6 +38,6 @@ pub mod server;
 pub use client::WireClient;
 pub use frame::{Frame, FrameOutcome, MsgType, WireLimits, HEADER_LEN, MAGIC, VERSION};
 pub use proto::{
-    ErrCode, InferRequest, InferResponse, StatsModel, StatsResponse, WireError,
+    ErrCode, InferRequest, InferResponse, ShardLoad, StatsModel, StatsResponse, WireError,
 };
 pub use server::{WireMetrics, WireOptions, WireServer};

@@ -165,14 +165,37 @@ pub struct StatsModel {
     pub failed: u64,
 }
 
+/// Live per-shard load sample — the v2 `StatsResponse` tail that gives
+/// the router's `--policy least-loaded` a real signal: requests admitted
+/// but not yet popped (`queued`) and requests inside the executor but
+/// not yet replied to (`in_flight`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct ShardLoad {
+    pub queued: u64,
+    pub in_flight: u64,
+}
+
 #[derive(Clone, Debug, PartialEq, Eq, Default)]
 pub struct StatsResponse {
     pub models: Vec<StatsModel>,
     pub shard_peaks: Vec<u64>,
+    /// v2 extension (empty on v1 payloads): one live load sample per
+    /// shard, in `shard_peaks` order.  Encoded as an optional tail so a
+    /// v2 decoder still reads v1 payloads; see [`StatsResponse::decode`].
+    pub shard_loads: Vec<ShardLoad>,
 }
 
 impl StatsResponse {
     pub fn from_stats(stats: &ServeStats) -> StatsResponse {
+        Self::from_stats_with_loads(stats, &[])
+    }
+
+    /// [`Self::from_stats`] plus the live `(queued, in_flight)` samples
+    /// from [`Server::shard_loads`] — what the wire server attaches so
+    /// routers can rank backends by load.
+    ///
+    /// [`Server::shard_loads`]: crate::serve::Server::shard_loads
+    pub fn from_stats_with_loads(stats: &ServeStats, loads: &[(usize, usize)]) -> StatsResponse {
         StatsResponse {
             models: stats
                 .per_model
@@ -188,7 +211,17 @@ impl StatsResponse {
                 })
                 .collect(),
             shard_peaks: stats.shard_peaks.iter().map(|&p| p as u64).collect(),
+            shard_loads: loads
+                .iter()
+                .map(|&(q, f)| ShardLoad { queued: q as u64, in_flight: f as u64 })
+                .collect(),
         }
+    }
+
+    /// Total outstanding work across shards — the scalar a least-loaded
+    /// chooser ranks backends by.
+    pub fn total_load(&self) -> u64 {
+        self.shard_loads.iter().map(|l| l.queued + l.in_flight).sum()
     }
 }
 
@@ -331,6 +364,14 @@ impl InferRequest {
         c.done("InferRequest")?;
         Ok(InferRequest { model, rows, dim, x })
     }
+
+    /// Read just the leading model name — the routing key.  A relay that
+    /// forwards the payload verbatim never parses the float bulk (that
+    /// is the backend's job, and re-encoding an MB of rows per hop is
+    /// exactly the data-movement tax this codebase exists to avoid).
+    pub fn peek_model(p: &[u8]) -> Result<String, String> {
+        Cur::new(p).str16("model name")
+    }
 }
 
 impl InferResponse {
@@ -410,6 +451,16 @@ impl StatsResponse {
         for &p in &self.shard_peaks {
             out.extend_from_slice(&p.to_le_bytes());
         }
+        // v2 tail, appended only when there are load samples: a v1
+        // payload and a v2 payload with no loads are byte-identical, so
+        // old round-trip expectations hold.
+        if !self.shard_loads.is_empty() {
+            out.extend_from_slice(&(self.shard_loads.len() as u32).to_le_bytes());
+            for l in &self.shard_loads {
+                out.extend_from_slice(&l.queued.to_le_bytes());
+                out.extend_from_slice(&l.in_flight.to_le_bytes());
+            }
+        }
         out
     }
 
@@ -432,15 +483,32 @@ impl StatsResponse {
             models.push(StatsModel { name, d_in, d_out, requests, rows, batches, failed });
         }
         let n_shards = c.u32("shard count")?;
-        if n_shards as u64 * 8 != c.remaining() as u64 {
+        // `>` not `!=`: a v2 payload legitimately carries a load tail
+        // after the peaks, so only truncation is rejected here.
+        if n_shards as u64 * 8 > c.remaining() as u64 {
             return Err(format!("shard count {n_shards} does not match the payload"));
         }
         let mut shard_peaks = Vec::with_capacity(n_shards as usize);
         for _ in 0..n_shards {
             shard_peaks.push(c.u64("shard peak")?);
         }
+        // v1 payloads end here; a v2 tail is a counted list of
+        // (queued, in_flight) u64 pairs, strict like everything else.
+        let mut shard_loads = Vec::new();
+        if c.remaining() > 0 {
+            let n_loads = c.u32("shard load count")?;
+            if n_loads as u64 * 16 != c.remaining() as u64 {
+                return Err(format!("shard load count {n_loads} does not match the payload"));
+            }
+            shard_loads.reserve(n_loads as usize);
+            for _ in 0..n_loads {
+                let queued = c.u64("shard queued")?;
+                let in_flight = c.u64("shard in-flight")?;
+                shard_loads.push(ShardLoad { queued, in_flight });
+            }
+        }
         c.done("StatsResponse")?;
-        Ok(StatsResponse { models, shard_peaks })
+        Ok(StatsResponse { models, shard_peaks, shard_loads })
     }
 }
 
@@ -556,12 +624,57 @@ mod tests {
                 },
             ],
             shard_peaks: vec![3, 0],
+            shard_loads: Vec::new(),
         };
         assert_eq!(StatsResponse::decode(&s.encode()).unwrap(), s);
         // A count larger than the payload is rejected up front.
         let mut lying = 100u32.to_le_bytes().to_vec();
         lying.extend_from_slice(&[0u8; 8]);
         assert!(StatsResponse::decode(&lying).is_err());
+    }
+
+    #[test]
+    fn stats_response_v2_load_tail_round_trips_and_v1_still_decodes() {
+        let mut s = StatsResponse {
+            models: vec![StatsModel {
+                name: "m".into(),
+                d_in: 8,
+                d_out: 8,
+                requests: 5,
+                rows: 9,
+                batches: 2,
+                failed: 0,
+            }],
+            shard_peaks: vec![7, 1],
+            shard_loads: vec![
+                ShardLoad { queued: 4, in_flight: 2 },
+                ShardLoad { queued: 0, in_flight: 1 },
+            ],
+        };
+        let enc = s.encode();
+        assert_eq!(StatsResponse::decode(&enc).unwrap(), s);
+        assert_eq!(s.total_load(), 7);
+        // A v1 payload (no tail) decodes with empty loads: backward
+        // compatible with pre-v2 servers.
+        s.shard_loads.clear();
+        let v1 = s.encode();
+        assert!(v1.len() < enc.len());
+        assert_eq!(StatsResponse::decode(&v1).unwrap(), s);
+        // A truncated or lying load tail is rejected, not resized.
+        let mut bad = v1.clone();
+        bad.extend_from_slice(&9u32.to_le_bytes());
+        bad.extend_from_slice(&[0u8; 16]);
+        assert!(StatsResponse::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn peek_model_reads_only_the_routing_key() {
+        let req = InferRequest { model: "wide".into(), rows: 2, dim: 3, x: vec![0.5; 6] };
+        assert_eq!(InferRequest::peek_model(&req.encode()).unwrap(), "wide");
+        // Works on the name alone even if the bulk is truncated — the
+        // relay never validates what only the backend must.
+        assert_eq!(InferRequest::peek_model(&req.encode()[..6]).unwrap(), "wide");
+        assert!(InferRequest::peek_model(&[0x09, 0x00, b'x']).is_err());
     }
 
     #[test]

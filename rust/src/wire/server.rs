@@ -375,7 +375,10 @@ fn dispatch_inner(frame: Frame, server: &Server) -> Reply {
                     "StatsRequest carries no payload",
                 ));
             }
-            let stats = StatsResponse::from_stats(&server.stats());
+            // v2 form: the live (queued, in_flight) tail rides along so
+            // a router's least-loaded policy can rank this backend.
+            let stats =
+                StatsResponse::from_stats_with_loads(&server.stats(), &server.shard_loads());
             Reply::ok(MsgType::StatsResponse, stats.encode())
         }
         MsgType::InferRequest => match InferRequest::decode(&frame.payload) {

@@ -1,0 +1,388 @@
+//! End-to-end: the flashroute tier in front of real `serve-wire`
+//! backends (in-process [`WireServer`]s over identically-seeded
+//! replicated registries).
+//!
+//! Acceptance properties (ISSUE 10):
+//! - responses through the router are **f32 bit-identical** to an
+//!   in-process oracle, across a mixed multi-model registry on 2
+//!   replicas, under concurrent load — and a binary stats request
+//!   through the router returns the merged tier view (per-model
+//!   counters summed, shard axes concatenated);
+//! - killing one backend mid-workload loses **zero** requests: the
+//!   failover path observes the dead node as a transport failure,
+//!   opens its circuit, and every request in both phases is answered
+//!   exactly once, bit-identically — verified by summing the two
+//!   nodes' executor totals;
+//! - the `--policy least-loaded` alternative serves the same bits;
+//! - HTTP and flashwire share the ONE front port via protocol
+//!   sniffing: `/healthz`, a routed JSON infer, and the
+//!   `flashkat_route_*` Prometheus families all answer on the same
+//!   address the binary protocol uses.
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+use flashkat::rational::Coeffs;
+use flashkat::route::{HealthState, RouteOptions, RoutePolicy, RouteServer};
+use flashkat::serve::{BatchPolicy, ModelExecutor, RationalExecutor, Server};
+use flashkat::util::json::Json;
+use flashkat::util::rng::Pcg64;
+use flashkat::wire::{WireClient, WireOptions, WireServer};
+
+const D_WIDE: usize = 96;
+const D_NARROW: usize = 32;
+
+fn registry(seed: u64) -> Vec<Box<dyn ModelExecutor>> {
+    let mut rng = Pcg64::new(seed);
+    let cw = Coeffs::<f32>::randn(8, 6, 4, &mut rng);
+    let cn = Coeffs::<f32>::randn(4, 6, 4, &mut rng);
+    vec![
+        Box::new(RationalExecutor::new("wide", D_WIDE, cw).unwrap()),
+        Box::new(RationalExecutor::new("narrow", D_NARROW, cn).unwrap()),
+    ]
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// One replica: the full registry, rebuilt from the same seed so every
+/// node is bit-for-bit interchangeable — the property failover rests on.
+fn spawn_backend(seed: u64, shards: usize) -> WireServer {
+    let server = Server::start_sharded(
+        registry(seed),
+        BatchPolicy { max_batch: 8, deadline_us: 400, queue_depth: 128, eager: true },
+        shards,
+    )
+    .unwrap();
+    WireServer::bind("127.0.0.1:0", Arc::new(server), WireOptions::default()).unwrap()
+}
+
+/// The same deterministic request stream the direct-wire test uses:
+/// `(seed, stream)` fully determines model choice, row count, and data.
+fn request_for(seed: u64, stream: u64) -> (&'static str, u32, Vec<f32>, u32) {
+    let mut rng = Pcg64::with_stream(seed, stream);
+    let (name, idx, d) =
+        if stream % 2 == 0 { ("wide", 0u32, D_WIDE) } else { ("narrow", 1u32, D_NARROW) };
+    let rows = 1 + rng.below(3) as u32;
+    let x: Vec<f32> = (0..rows as usize * d).map(|_| rng.normal_f32()).collect();
+    (name, idx, x, rows)
+}
+
+/// Headline: concurrent mixed-model traffic through the router over two
+/// replicas, every response compared bit for bit against an
+/// identically-seeded in-process oracle, then the merged stats view.
+#[test]
+fn routed_responses_bit_identical_across_two_replicas() {
+    let seed = 77;
+    let oracle = Server::start(registry(seed), BatchPolicy::default()).unwrap();
+    let backends: Vec<WireServer> = (0..2).map(|_| spawn_backend(seed, 2)).collect();
+    let addrs: Vec<SocketAddr> = backends.iter().map(|b| b.local_addr()).collect();
+    let router = RouteServer::bind(
+        "127.0.0.1:0",
+        addrs,
+        RouteOptions { probe_interval: Duration::from_millis(50), ..Default::default() },
+    )
+    .unwrap();
+    let addr = router.local_addr();
+
+    let clients = 4u64;
+    let reqs_each = 10u64;
+    std::thread::scope(|s| {
+        for client in 0..clients {
+            let oracle = &oracle;
+            s.spawn(move || {
+                let mut conn = WireClient::connect(addr).expect("connect");
+                for i in 0..reqs_each {
+                    let (name, idx, x, rows) = request_for(seed, client * 1000 + i);
+                    let want =
+                        oracle.submit_at(idx, x.clone(), rows).expect("oracle submit").y;
+                    let resp = conn
+                        .infer(name, &x, rows)
+                        .expect("wire transport")
+                        .expect("routed request served");
+                    assert_eq!(
+                        bits(&resp.y),
+                        bits(&want),
+                        "client {client} req {i} ({name}): routed != in-process"
+                    );
+                    assert!(resp.batch_size >= 1);
+                }
+            });
+        }
+    });
+    let n = clients * reqs_each;
+
+    // A stats request through the router is the merged tier view:
+    // per-model counters summed across nodes, shard axes concatenated.
+    let mut conn = WireClient::connect(addr).unwrap();
+    let stats = conn.stats().unwrap();
+    assert_eq!(stats.models.len(), 2, "both models listed once after the merge");
+    let req_sum: u64 = stats.models.iter().map(|m| m.requests).sum();
+    assert_eq!(req_sum, n, "merged per-model requests cover every routed request");
+    assert_eq!(stats.shard_peaks.len(), 4, "2 nodes x 2 shards");
+    assert_eq!(stats.shard_loads.len(), 4, "v2 live-load axis concatenates the same way");
+
+    // No failures anywhere: circuits stayed closed, every reply was a
+    // relayed answer.
+    assert!(router.backend_states().iter().all(|s| *s == HealthState::Up));
+    assert_eq!(router.metrics().total_forwarded(), n);
+    assert_eq!(router.metrics().total_failed(), 0);
+    let drain = router.shutdown().expect("router drain stats");
+    assert_eq!(drain.forwarded, n);
+    assert_eq!(drain.backends, 2);
+
+    // Exactly-once across the tier: the nodes' executor totals sum to
+    // the request count — nothing dropped, nothing double-executed.
+    let mut served = 0usize;
+    for b in &backends {
+        let s = b.shutdown().expect("backend drain stats");
+        served += s.total().requests;
+        assert_eq!(s.total().failed, 0);
+    }
+    assert_eq!(served, n as usize);
+    oracle.shutdown();
+}
+
+/// The failover gate: phase 1 completes against both nodes, then one
+/// node is shut down, then phase 2 runs on the same keep-alive client
+/// connection.  The prober is dormant (60 s interval) and the circuit
+/// opens on one strike, so the kill is observed deterministically by
+/// the forwarding path itself — no probe-timing dependence.  Every
+/// request in both phases must be answered exactly once,
+/// bit-identically, with no client-visible error.
+#[test]
+fn killing_one_backend_mid_workload_loses_no_request() {
+    let seed = 5150;
+    let oracle = Server::start(registry(seed), BatchPolicy::default()).unwrap();
+    let backends: Vec<WireServer> = (0..2).map(|_| spawn_backend(seed, 1)).collect();
+    let addrs: Vec<SocketAddr> = backends.iter().map(|b| b.local_addr()).collect();
+    let router = RouteServer::bind(
+        "127.0.0.1:0",
+        addrs,
+        RouteOptions {
+            probe_interval: Duration::from_secs(60),
+            fail_threshold: 1,
+            down_cooldown: 1000,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let mut conn = WireClient::connect(router.local_addr()).unwrap();
+    let half = 20u64;
+    let send = |conn: &mut WireClient, i: u64| {
+        let (name, idx, x, rows) = request_for(seed, 9000 + i);
+        let want = oracle.submit_at(idx, x.clone(), rows).expect("oracle submit").y;
+        let resp = conn
+            .infer(name, &x, rows)
+            .expect("wire transport")
+            .expect("request served despite the dead node");
+        assert_eq!(bits(&resp.y), bits(&want), "req {i} ({name}): routed != in-process");
+    };
+    for i in 0..half {
+        send(&mut conn, i);
+    }
+
+    // The victim is whichever node the ring actually sent more traffic
+    // to, so the kill provably severs live routes.
+    let m = router.metrics();
+    let victim = if m.forwarded(0) >= m.forwarded(1) { 0usize } else { 1usize };
+    let survivor = 1 - victim;
+    assert!(m.forwarded(victim) > 0, "the victim carried phase-1 traffic");
+    assert_eq!(m.total_forwarded(), half);
+    let victim_stats = backends[victim].shutdown().expect("victim drains cleanly");
+
+    for i in half..2 * half {
+        send(&mut conn, i);
+    }
+
+    // The dead node surfaced as a transport failure, its circuit
+    // opened, and traffic moved — never a lost or duplicated request.
+    assert!(m.failed(victim) >= 1, "the first post-kill forward must fail over");
+    assert_eq!(m.failed(survivor), 0, "the survivor never failed");
+    assert!(m.total_retried() >= 1, "failovers are what serve-bench reports");
+    assert_eq!(router.backend_states()[victim], HealthState::Down);
+    assert_eq!(router.backend_states()[survivor], HealthState::Up);
+    assert_eq!(m.total_forwarded(), 2 * half, "every request got a relayed answer");
+
+    let drain = router.shutdown().expect("router drain stats");
+    assert_eq!(drain.forwarded, 2 * half);
+    let survivor_stats = backends[survivor].shutdown().expect("survivor drains cleanly");
+
+    // Exactly-once accounting: the two executor totals cover every
+    // request between them, with no duplicates and no failures.
+    assert_eq!(
+        victim_stats.total().requests + survivor_stats.total().requests,
+        2 * half as usize,
+        "each request executed on exactly one node"
+    );
+    assert_eq!(victim_stats.total().failed + survivor_stats.total().failed, 0);
+    assert!(
+        survivor_stats.total().requests >= half as usize,
+        "all of phase 2 landed on the survivor"
+    );
+    oracle.shutdown();
+}
+
+/// `--policy least-loaded` routes by live queue depth (sampled by the
+/// prober) with ring order as the tiebreak — and serves the same bits.
+#[test]
+fn least_loaded_policy_serves_the_same_bits() {
+    let seed = 31;
+    let oracle = Server::start(registry(seed), BatchPolicy::default()).unwrap();
+    let backends: Vec<WireServer> = (0..2).map(|_| spawn_backend(seed, 1)).collect();
+    let addrs: Vec<SocketAddr> = backends.iter().map(|b| b.local_addr()).collect();
+    let router = RouteServer::bind(
+        "127.0.0.1:0",
+        addrs,
+        RouteOptions {
+            policy: RoutePolicy::LeastLoaded,
+            probe_interval: Duration::from_millis(25),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = router.local_addr();
+
+    let clients = 3u64;
+    let reqs_each = 10u64;
+    std::thread::scope(|s| {
+        for client in 0..clients {
+            let oracle = &oracle;
+            s.spawn(move || {
+                let mut conn = WireClient::connect(addr).expect("connect");
+                for i in 0..reqs_each {
+                    let (name, idx, x, rows) = request_for(seed, 70_000 + client * 1000 + i);
+                    let want =
+                        oracle.submit_at(idx, x.clone(), rows).expect("oracle submit").y;
+                    let resp = conn
+                        .infer(name, &x, rows)
+                        .expect("wire transport")
+                        .expect("least-loaded request served");
+                    assert_eq!(bits(&resp.y), bits(&want), "client {client} req {i} ({name})");
+                }
+            });
+        }
+    });
+
+    let n = clients * reqs_each;
+    let drain = router.shutdown().expect("router drain stats");
+    assert_eq!(drain.forwarded, n);
+    assert_eq!(drain.failed, 0);
+    let served: usize =
+        backends.iter().map(|b| b.shutdown().expect("drain").total().requests).sum();
+    assert_eq!(served, n as usize);
+    oracle.shutdown();
+}
+
+fn http_roundtrip(addr: SocketAddr, request: String) -> (String, String) {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(request.as_bytes()).unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let sep = buf.find("\r\n\r\n").expect("header/body separator");
+    (buf[..sep].to_string(), buf[sep + 4..].to_string())
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+    http_roundtrip(
+        addr,
+        format!("GET {path} HTTP/1.1\r\nHost: router\r\nConnection: close\r\n\r\n"),
+    )
+}
+
+fn http_post(addr: SocketAddr, path: &str, body: &str) -> (String, String) {
+    http_roundtrip(
+        addr,
+        format!(
+            "POST {path} HTTP/1.1\r\nHost: router\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+/// Protocol sniffing: the SAME front port serves the flashwire binary
+/// protocol and HTTP, distinguished by the first two bytes.  The HTTP
+/// infer reply must carry the oracle's exact f32 bits (f32 → shortest
+/// decimal → f64 → f32 round-trips exactly), and `/metrics` must expose
+/// the `flashkat_route_*` families.
+#[test]
+fn http_and_flashwire_share_the_front_port() {
+    let seed = 8;
+    let oracle = Server::start(registry(seed), BatchPolicy::default()).unwrap();
+    let backends: Vec<WireServer> = (0..2).map(|_| spawn_backend(seed, 1)).collect();
+    let addrs: Vec<SocketAddr> = backends.iter().map(|b| b.local_addr()).collect();
+    let router = RouteServer::bind(
+        "127.0.0.1:0",
+        addrs,
+        RouteOptions { probe_interval: Duration::from_millis(50), ..Default::default() },
+    )
+    .unwrap();
+    let addr = router.local_addr();
+
+    // Binary side: ping answered by the router itself, then an infer.
+    let mut conn = WireClient::connect(addr).unwrap();
+    conn.ping(7).unwrap();
+    let mut rng = Pcg64::new(3);
+    let x: Vec<f32> = (0..2 * D_NARROW).map(|_| rng.normal_f32()).collect();
+    let want = oracle.submit_at(1, x.clone(), 2).expect("oracle submit").y;
+    let resp = conn.infer("narrow", &x, 2).unwrap().unwrap();
+    assert_eq!(bits(&resp.y), bits(&want));
+
+    // HTTP side, same port, raw sockets so the sniff path is what is
+    // actually exercised.
+    let (head, _) = http_get(addr, "/healthz");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+
+    let body = Json::Obj(vec![
+        (
+            "x".to_string(),
+            Json::Arr(x.iter().map(|&v| Json::Num(v as f64)).collect()),
+        ),
+        ("rows".to_string(), Json::Int(2)),
+    ])
+    .to_string();
+    let (head, reply) = http_post(addr, "/v1/models/narrow/infer", &body);
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}\n{reply}");
+    let v = Json::parse(&reply).expect("JSON infer reply");
+    let y: Vec<f32> = v
+        .get("y")
+        .and_then(Json::as_arr)
+        .expect("reply carries y")
+        .iter()
+        .map(|j| j.as_f64().expect("y is numeric") as f32)
+        .collect();
+    assert_eq!(bits(&y), bits(&want), "HTTP reply differs from the oracle bits");
+    assert!(v.get("batch_size").and_then(Json::as_i64).expect("batch_size") >= 1);
+
+    let (head, metrics) = http_get(addr, "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    for family in [
+        "flashkat_route_connections_total",
+        "flashkat_route_forwarded_total",
+        "flashkat_route_failed_total",
+        "flashkat_route_retried_total",
+        "flashkat_route_health_transitions_total",
+        "flashkat_route_backend_up",
+    ] {
+        assert!(metrics.contains(family), "metrics page missing {family}:\n{metrics}");
+    }
+
+    // Unknown paths and wrong methods get typed statuses, and the
+    // router keeps serving both protocols afterwards.
+    let (head, _) = http_get(addr, "/nope");
+    assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+    let (head, _) = http_get(addr, "/v1/models/narrow/infer");
+    assert!(head.starts_with("HTTP/1.1 405"), "{head}");
+    assert!(conn.infer("narrow", &x, 2).unwrap().is_ok());
+
+    router.shutdown();
+    for b in &backends {
+        b.shutdown();
+    }
+    oracle.shutdown();
+}
